@@ -1,0 +1,83 @@
+//! Ablation study over CS-UCB's design choices (DESIGN.md §9):
+//!
+//! * constraint filter off (pure UCB over all servers)
+//! * exploration weight δ sweep
+//! * constraint-slack margin sweep
+//! * penalty term θ on/off (Eq. 6/7)
+//! * vs the clairvoyant oracle (regret denominator)
+//!
+//! Run: cargo run --release --example ablation [-- --requests N]
+
+use perllm::bench::Table;
+use perllm::scheduler::csucb::{CsUcb, CsUcbParams};
+use perllm::scheduler::oracle::Oracle;
+use perllm::scheduler::Scheduler;
+use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
+use perllm::sim::engine::simulate;
+use perllm::workload::generator::{generate, WorkloadConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args
+        .iter()
+        .position(|a| a == "--requests")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4000);
+
+    let trace = generate(
+        &WorkloadConfig::default()
+            .with_requests(n)
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(123),
+    );
+    let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Fluctuating);
+
+    let mut table = Table::new(
+        format!("CS-UCB ablations ({n} requests, fluctuating bandwidth)"),
+        &["variant", "success%", "mean s", "thpt tok/s", "J/succ", "regret"],
+    );
+
+    let mut run = |name: &str, sched: &mut dyn Scheduler| {
+        let rep = simulate(&cfg, &trace, sched);
+        let regret = rep
+            .diagnostics
+            .iter()
+            .find(|(k, _)| k == "cum_regret")
+            .map(|(_, v)| format!("{v:.0}"))
+            .unwrap_or_else(|| "-".into());
+        table.row(&[
+            name.to_string(),
+            format!("{:.1}", rep.success_rate * 100.0),
+            format!("{:.2}", rep.mean_processing_s),
+            format!("{:.0}", rep.throughput_tok_s),
+            format!("{:.1}", rep.energy_per_success_j),
+            regret,
+        ]);
+    };
+
+    let d = CsUcbParams::default();
+
+    run("cs-ucb (paper defaults)", &mut CsUcb::new(6, d));
+    run(
+        "no slack margin",
+        &mut CsUcb::new(6, CsUcbParams { slack_margin: 0.0, ..d }),
+    );
+    run(
+        "no penalty (θ=0)",
+        &mut CsUcb::new(6, CsUcbParams { theta: 0.0, ..d }),
+    );
+    run(
+        "no constraint weight (λ=0)",
+        &mut CsUcb::new(6, CsUcbParams { lambda: 0.0, ..d }),
+    );
+    for delta in [0.05, 0.25, 1.0, 3.0] {
+        run(
+            Box::leak(format!("δ = {delta}").into_boxed_str()),
+            &mut CsUcb::new(6, CsUcbParams { delta, ..d }),
+        );
+    }
+    run("oracle (clairvoyant)", &mut Oracle::new());
+
+    println!("{}", table.render());
+}

@@ -1,0 +1,69 @@
+//! Paper-scale scheduling experiment: replay the paper's evaluation
+//! (§4.2-4.4) — 10,000 diverse services, four schedulers, stable and
+//! fluctuating bandwidth — and print Table-1/Figure-4/5/6-style rows.
+//!
+//! Usage: cargo run --release --example paper_scale_sim [-- --requests N]
+//!                   [--model yi-6b|llama2-7b|llama3-8b|yi-9b] [--seed S]
+
+use perllm::scheduler::{
+    agod::Agod, csucb::CsUcb, fineinfer::FineInfer, rewardless::RewardlessGuidance, Scheduler,
+};
+use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
+use perllm::sim::engine::simulate;
+use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |flag: &str, default: &str| -> String {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    };
+    let n: usize = get("--requests", "10000").parse().expect("bad --requests");
+    let model = get("--model", "llama2-7b");
+    let seed: u64 = get("--seed", "42").parse().expect("bad --seed");
+
+    let trace = generate(
+        &WorkloadConfig::default()
+            .with_requests(n)
+            .with_arrivals(ArrivalProcess::Poisson { rate: 15.0 })
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(seed),
+    );
+
+    for mode in [BandwidthMode::Stable, BandwidthMode::Fluctuating] {
+        println!("\n=== edge model {model}, {mode:?} bandwidth, {n} requests ===");
+        let cfg = ClusterConfig::paper(&model, mode);
+        let cloud = cfg.cloud_index();
+        let ns = cfg.n_servers();
+
+        let mut schedulers: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(FineInfer::new(cloud)),
+            Box::new(Agod::new(ns, seed)),
+            Box::new(RewardlessGuidance::new(ns)),
+            Box::new(CsUcb::with_defaults(ns)),
+        ];
+        let mut baseline_thpt = None;
+        for s in schedulers.iter_mut() {
+            let rep = simulate(&cfg, &trace, s.as_mut());
+            println!("{}", rep.summary_row());
+            println!(
+                "    dropped {} late {} unfinished {}",
+                rep.dropped, rep.late, rep.unfinished
+            );
+            if baseline_thpt.is_none() {
+                baseline_thpt = Some(rep.throughput_tok_s);
+            } else {
+                let r = rep.throughput_tok_s / baseline_thpt.unwrap();
+                println!("    throughput vs FineInfer: {r:.2}x");
+            }
+            for (k, v) in rep.diagnostics {
+                if k == "cum_regret" || k == "regret_bound" || k == "fallback_decisions" {
+                    println!("    {k}: {v:.1}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+"""AOT compile path: JAX -> HLO text artifacts + weight blobs for Rust.
+
+Runs ONCE at build time (``make artifacts``); Python is never on the request
+path. For each deployment size (edge, cloud) this emits:
+
+* ``{size}_prefill.hlo.txt``          — prefill, batch 1
+* ``{size}_decode_b{B}.hlo.txt``      — one decode iteration per batch bucket
+* ``{size}_params.bin``               — trained weights, raw little-endian f32,
+                                        concatenated in jax tree-leaf order
+* ``{size}_manifest.txt``             — one line per weight tensor:
+                                        ``name dtype offset count d0 d1 ...``
+* ``meta.txt``                        — model geometry the Rust engine needs
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Weights are runtime *arguments* (not baked constants) so the HLO stays small
+and the weight blob is a normal deployable artifact; the Rust engine loads
+the blob once and passes the same Literals to every execution.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Decode batch buckets compiled per size. The Rust batcher pads the live
+# request set up to the nearest bucket (vLLM-style shape bucketing under AOT).
+DECODE_BATCHES = [1, 2, 4, 8]
+
+TRAIN_STEPS = {"edge": 500, "cloud": 700}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg: M.ModelConfig, params) -> str:
+    fn = functools.partial(M.prefill, cfg, use_kernel=True)
+
+    def entry(params, tokens, length):
+        return fn(params, tokens, length)
+
+    tok_spec = jax.ShapeDtypeStruct((1, cfg.max_seq), jnp.int32)
+    len_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    p_spec = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+    )
+    return to_hlo_text(jax.jit(entry).lower(p_spec, tok_spec, len_spec))
+
+
+def lower_decode(cfg: M.ModelConfig, params, batch: int) -> str:
+    fn = functools.partial(M.decode_step, cfg, use_kernel=True)
+
+    def entry(params, tokens, pos, kv):
+        return fn(params, tokens, pos, kv)
+
+    tok_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    kv_spec = jax.ShapeDtypeStruct(cfg.kv_shape(batch), jnp.float32)
+    p_spec = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+    )
+    return to_hlo_text(jax.jit(entry).lower(p_spec, tok_spec, pos_spec, kv_spec))
+
+
+def dump_params(out_dir: str, cfg: M.ModelConfig, params) -> None:
+    leaves = M.param_leaves(params)
+    names = M.leaf_names(params)
+    assert len(leaves) == len(names)
+    blob = np.concatenate([np.asarray(x, np.float32).ravel() for x in leaves])
+    blob.astype("<f4").tofile(os.path.join(out_dir, f"{cfg.name}_params.bin"))
+    off = 0
+    lines = []
+    for name, leaf in zip(names, leaves):
+        arr = np.asarray(leaf)
+        dims = " ".join(str(d) for d in arr.shape)
+        lines.append(f"{name} f32 {off} {arr.size} {dims}")
+        off += arr.size
+    with open(os.path.join(out_dir, f"{cfg.name}_manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def write_meta(out_dir: str, curves) -> None:
+    with open(os.path.join(out_dir, "meta.txt"), "w") as f:
+        f.write(f"decode_batches {' '.join(str(b) for b in DECODE_BATCHES)}\n")
+        for cfg in M.CONFIGS.values():
+            f.write(
+                f"model {cfg.name} vocab {cfg.vocab} d_model {cfg.d_model} "
+                f"n_layers {cfg.n_layers} n_heads {cfg.n_heads} "
+                f"max_seq {cfg.max_seq} kv_dim {cfg.kv_dim}\n"
+            )
+        for name, curve in curves.items():
+            pts = " ".join(f"{x:.4f}" for x in curve)
+            f.write(f"loss_curve {name} {pts}\n")
+
+
+def build(out_dir: str, quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    curves = {}
+    for cfg in M.CONFIGS.values():
+        steps = 30 if quick else TRAIN_STEPS[cfg.name]
+        print(f"=== {cfg.name}: training {steps} steps "
+              f"({cfg.param_count():,} params) ===")
+        params, curve = M.train(cfg, steps=steps)
+        curves[cfg.name] = curve
+        dump_params(out_dir, cfg, params)
+
+        print(f"=== {cfg.name}: lowering prefill (S={cfg.max_seq}) ===")
+        text = lower_prefill(cfg, params)
+        with open(os.path.join(out_dir, f"{cfg.name}_prefill.hlo.txt"), "w") as f:
+            f.write(text)
+        print(f"    {len(text):,} chars")
+
+        for b in DECODE_BATCHES:
+            print(f"=== {cfg.name}: lowering decode b{b} ===")
+            text = lower_decode(cfg, params, b)
+            with open(
+                os.path.join(out_dir, f"{cfg.name}_decode_b{b}.hlo.txt"), "w"
+            ) as f:
+                f.write(text)
+            print(f"    {len(text):,} chars")
+
+    write_meta(out_dir, curves)
+    print(f"artifacts written to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny training run (CI smoke, weights undertrained)")
+    args = ap.parse_args()
+    build(args.out_dir, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

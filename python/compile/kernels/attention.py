@@ -1,0 +1,213 @@
+"""L1: Pallas flash-attention kernel (TPU-style, interpret mode).
+
+This is the serving hot spot of the PerLLM stack — the attention contraction
+inside both the prefill and decode paths of the Layer-2 model. The paper's
+testbed runs attention on an A100; the TPU adaptation (DESIGN.md §7) tiles Q
+into VMEM-resident blocks and streams K/V tiles through VMEM with an online
+(numerically stable, single-pass) softmax — the TPU analogue of
+flash-attention's SRAM tiling. Contractions are shaped for the MXU (head-dim
+and block sizes multiples of 8/128 where the model allows).
+
+interpret=True is mandatory on this image: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute. Correctness is checked
+against ``kernels.ref`` by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU systolic-array edge; the q tile is
+# kept small so (block_q x d) + 2 x (block_k x d) + accumulators fit well
+# under the ~16 MiB VMEM budget for every config we ship (see DESIGN.md §8).
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(
+    qpos_ref,
+    kvlen_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    block_k: int,
+    scale: float,
+    causal: bool,
+):
+    """One grid step: one (batch*head, q-tile) pair.
+
+    q_ref: (1, block_q, d) VMEM tile of queries.
+    k_ref/v_ref: (1, S, d) — streamed through in block_k-sized slices by the
+    fori_loop below (on real TPU this loop would be a third grid dimension
+    with VMEM scratch accumulators; for the S <= 512 configs we ship, K/V for
+    one head fit in VMEM outright, so the in-kernel loop is the honest
+    schedule too).
+    qpos_ref/kvlen_ref: (1, 1) absolute position of the first query row and
+    number of valid KV entries — this is how decode (q_len=1 at position p)
+    and padded prefill share one kernel.
+    """
+    q = q_ref[0].astype(jnp.float32) * scale  # (bq, d)
+    bq = q.shape[0]
+    skv = k_ref.shape[1]
+    nk = skv // block_k
+
+    qpos0 = qpos_ref[0, 0]
+    kvlen = kvlen_ref[0, 0]
+    # Absolute row positions: base + this q-tile's offset within the sequence.
+    tile_off = pl.program_id(1) * bq
+    qpos = qpos0 + tile_off + jax.lax.iota(jnp.int32, bq)
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        k = pl.load(k_ref, (0, pl.ds(i * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.ds(i * block_k, block_k), slice(None)))
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+        s = q @ k.T  # (bq, bk) — MXU contraction
+        kpos = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        valid = kpos[None, :] < kvlen
+        if causal:
+            valid = valid & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(valid, s, _NEG_INF)
+        # Online softmax: renormalize the running accumulator by the new max.
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=1)
+        acc_new = acc_prev * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros(q.shape, jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    # Rows whose mask is empty (padding queries) have l == 0; guard the divide.
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_len: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled attention over packed (batch*heads) inputs.
+
+    Args:
+      q: (BH, Sq, d) queries.
+      k, v: (BH, Skv, d) keys/values (may contain padding past ``kv_len``).
+      q_pos: (BH,) int32 — absolute sequence position of q[:, 0, :].
+        Prefill passes zeros; decode passes the per-request write position.
+      kv_len: (BH,) int32 — number of valid KV rows per batch*head.
+      causal: apply causal masking relative to absolute positions.
+
+    Returns:
+      (BH, Sq, d) attention output, same dtype as q.
+    """
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    if sq % block_q != 0:
+        raise ValueError(f"Sq={sq} not divisible by block_q={block_q}")
+    if skv % block_k != 0:
+        raise ValueError(f"Skv={skv} not divisible by block_k={block_k}")
+
+    grid = (bh, sq // block_q)
+    scale = 1.0 / (d**0.5)
+    qpos2 = q_pos.astype(jnp.int32).reshape(bh, 1)
+    kvlen2 = kv_len.astype(jnp.int32).reshape(bh, 1)
+
+    kernel = functools.partial(
+        _attn_kernel, block_k=block_k, scale=scale, causal=causal
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Scalar-per-row metadata rides along as (1,1) tiles.
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+            # Q is tiled along the sequence axis: HBM -> VMEM per grid step.
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            # K/V: whole-head blocks; the kernel streams block_k slices.
+            pl.BlockSpec((1, skv, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, skv, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+    )(qpos2, kvlen2, q, k, v)
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_len: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Multi-head wrapper: (B, H, S, d) -> (B, H, S, d).
+
+    Collapses (B, H) into the packed grid axis the kernel expects and
+    broadcasts the per-batch metadata across heads.
+    """
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, skv, d)
+    vf = v.reshape(b * h, skv, d)
+    qpos_f = jnp.repeat(q_pos.astype(jnp.int32), h)
+    kvlen_f = jnp.repeat(kv_len.astype(jnp.int32), h)
+    out = flash_attention(
+        qf,
+        kf,
+        vf,
+        qpos_f,
+        kvlen_f,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out.reshape(b, h, sq, d)
+
+
+def vmem_bytes(block_q: int, block_k: int, skv: int, d: int, itemsize: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md §8 / §Perf).
+
+    q tile + whole-head K/V + f32 accumulators + softmax stats.
+    """
+    q_tile = block_q * d * itemsize
+    kv = 2 * skv * d * itemsize
+    acc = block_q * d * 4
+    stats = 2 * block_q * 4
+    ptile = block_q * block_k * 4
+    return q_tile + kv + acc + stats + ptile
+
+
+def mxu_utilization_estimate(block_q: int, block_k: int, d: int) -> float:
+    """Fraction of the 128x128 MXU each contraction tile fills (DESIGN.md §8)."""
+    fill = (min(block_q, 128) / 128.0) * (min(block_k, 128) / 128.0)
+    depth = min(d, 128) / 128.0
+    return fill * depth

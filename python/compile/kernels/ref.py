@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for the Pallas attention kernel.
+
+Implements exactly the masking semantics of ``attention.flash_attention``
+(absolute-position causal mask + kv_len padding mask) with a plain softmax,
+so any divergence in the kernel's online-softmax accumulation shows up in
+``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_len: jax.Array,
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    """Reference attention over packed (BH, S, d) inputs.
+
+    Same signature/semantics as ``attention.flash_attention`` minus tiling.
+    """
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / (d**0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    kpos = jnp.arange(skv, dtype=jnp.int32)
+    valid = kpos[None, None, :] < kv_len.astype(jnp.int32)[:, None, None]
+    if causal:
+        qpos = q_pos.astype(jnp.int32)[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+        valid = valid & (kpos[None, None, :] <= qpos[:, :, None])
+    s = jnp.where(valid, s, _NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    # Rows that are fully masked (padding queries) sum to ~0; guard the divide
+    # the same way the kernel does.
+    denom = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bqk,bkd->bqd", p / denom, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mha_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_len: jax.Array,
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    """Multi-head reference: (B, H, S, d) -> (B, H, S, d)."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    out = attention_ref(
+        q.reshape(b * h, sq, d),
+        k.reshape(b * h, skv, d),
+        v.reshape(b * h, skv, d),
+        jnp.repeat(q_pos.astype(jnp.int32), h),
+        jnp.repeat(kv_len.astype(jnp.int32), h),
+        causal=causal,
+    )
+    return out.reshape(b, h, sq, d)

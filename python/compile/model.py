@@ -1,0 +1,386 @@
+"""L2: JAX model — tiny LLaMA-style decoder with KV cache (fwd + bwd).
+
+Two configs ship ("edge" and "cloud"), standing in for the paper's
+edge-deployed Yi-6B/LLaMA2-7B-class models and the cloud-deployed
+LLaMA2-33B (DESIGN.md §2 substitution table). Architecture is the real
+thing at toy scale: token embedding, RMSNorm, rotary position embeddings,
+multi-head attention through the Layer-1 Pallas kernel, SwiGLU MLP, weight
+tying off (separate unembed), byte-level vocabulary (V=256) so the Rust
+tokenizer is a no-op codec.
+
+Two entry points get AOT-lowered by ``aot.py``:
+
+* ``prefill(params, tokens[1,S], length)`` -> (logits[1,V], kv[1,2,L,S,KD])
+* ``decode_step(params, tokens[B], pos[B], kv[B,2,L,S,KD])``
+  -> (logits[B,V], kv')
+
+The KV cache is laid out batch-major so the Rust coordinator can slice one
+request's cache as a single contiguous run of floats when assembling /
+disassembling continuous batches (rust/src/runtime/engine.rs).
+
+``loss_fn``/``train`` exercise the backward path (jax.grad through the
+model) and produce the checked-in artifact weights: a character-level LM
+trained for a few hundred Adam steps on a small embedded corpus, so the
+end-to-end Rust serving example generates text that is visibly non-random.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import mha
+from .kernels.ref import mha_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters for one deployment size."""
+
+    name: str
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 176
+    max_seq: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.d_model
+
+    def kv_shape(self, batch: int) -> Tuple[int, int, int, int, int]:
+        """(B, 2, L, S, KD) — batch-major so per-request caches are contiguous."""
+        return (batch, 2, self.n_layers, self.max_seq, self.kv_dim)
+
+    def param_count(self, params: Dict[str, Any] | None = None) -> int:
+        leaves = jax.tree_util.tree_leaves(params or init_params(self, jax.random.PRNGKey(0)))
+        return sum(int(x.size) for x in leaves)
+
+
+# The two deployment sizes shipped as artifacts. Edge ~ the paper's 6-9B
+# class (small, fast, lower quality), cloud ~ the 33B class (bigger, slower
+# per watt at the edge but higher quality).
+EDGE = ModelConfig(name="edge", d_model=64, n_layers=2, n_heads=4, d_ff=176, max_seq=128)
+CLOUD = ModelConfig(name="cloud", d_model=128, n_layers=4, n_heads=8, d_ff=352, max_seq=256)
+
+CONFIGS: Dict[str, ModelConfig] = {"edge": EDGE, "cloud": CLOUD}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    """Deterministic scaled-normal init, one dict entry per tensor."""
+
+    def nrm(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    params: Dict[str, Any] = {
+        "embed": nrm(keys[0], (v, d), 0.02),
+        "unembed": nrm(keys[1], (d, v), 0.02),
+        "norm_f": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(keys[2 + li], 7)
+        params["layers"].append(
+            {
+                "wq": nrm(lk[0], (d, d), d**-0.5),
+                "wk": nrm(lk[1], (d, d), d**-0.5),
+                "wv": nrm(lk[2], (d, d), d**-0.5),
+                "wo": nrm(lk[3], (d, d), d**-0.5),
+                "w_gate": nrm(lk[4], (d, f), d**-0.5),
+                "w_up": nrm(lk[5], (d, f), d**-0.5),
+                "w_down": nrm(lk[6], (f, d), f**-0.5),
+                "norm_attn": jnp.ones((d,), jnp.float32),
+                "norm_mlp": jnp.ones((d,), jnp.float32),
+            }
+        )
+    return params
+
+
+def _rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, H, S, Dh); pos: (B, S) absolute positions."""
+    b, h, s, dh = x.shape
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[:, None, :, None] * freqs[None, None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)  # (B,1,S,half)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attn_block(
+    cfg: ModelConfig,
+    lp: Dict[str, jax.Array],
+    x: jax.Array,
+    pos: jax.Array,
+    k_all: jax.Array,
+    v_all: jax.Array,
+    kv_len: jax.Array,
+    q_pos: jax.Array,
+    *,
+    causal: bool,
+    use_kernel: bool,
+) -> jax.Array:
+    """Shared attention block. x: (B, S, d); k_all/v_all: (B, Skv, d)."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    skv = k_all.shape[1]
+
+    def split(t, sl):
+        return t.reshape(b, sl, h, dh).transpose(0, 2, 1, 3)  # (B,H,S,Dh)
+
+    q = split(x @ lp["wq"], s)
+    q = _rope(q, pos, cfg.rope_theta)
+    kh = split(k_all, skv)
+    vh = split(v_all, skv)
+    attn = mha if use_kernel else mha_ref
+    out = attn(q, kh, vh, q_pos, kv_len, causal=causal)  # (B,H,S,Dh)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ lp["wo"]
+
+
+def _mlp(lp: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ lp["w_gate"]) * (x @ lp["w_up"])) @ lp["w_down"]
+
+
+def forward_full(
+    cfg: ModelConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,
+    *,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Teacher-forcing forward over (B, S) tokens -> (B, S, V) logits.
+
+    Used for training (bwd via jax.grad) and as the KV-cache equivalence
+    oracle in tests. Defaults to the jnp reference attention because
+    interpret-mode Pallas inside a training loop is needlessly slow; the two
+    paths are asserted equal in python/tests/test_kernel.py.
+    """
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q_pos = jnp.zeros((b,), jnp.int32)
+    kv_len = jnp.full((b,), s, jnp.int32)
+    x = params["embed"][tokens]
+    for lp in params["layers"]:
+        xn = _rmsnorm(x, lp["norm_attn"])
+        k_all = _rope(
+            (xn @ lp["wk"]).reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3),
+            pos,
+            cfg.rope_theta,
+        ).transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        v_all = xn @ lp["wv"]
+        x = x + _attn_block(
+            cfg, lp, xn, pos, k_all, v_all, kv_len, q_pos,
+            causal=True, use_kernel=use_kernel,
+        )
+        x = x + _mlp(lp, _rmsnorm(x, lp["norm_mlp"]))
+    x = _rmsnorm(x, params["norm_f"])
+    return x @ params["unembed"]
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,
+    length: jax.Array,
+    *,
+    use_kernel: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Process a padded prompt. tokens: (1, S=cfg.max_seq); length: () int32.
+
+    Returns (next-token logits (1, V), kv cache (1, 2, L, S, KD)). Rows past
+    ``length`` in the cache hold garbage and are masked out by kv_len at
+    decode time.
+    """
+    b, s = tokens.shape
+    assert s == cfg.max_seq, (s, cfg.max_seq)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q_pos = jnp.zeros((b,), jnp.int32)
+    kv_len = jnp.full((b,), s, jnp.int32)  # causal mask handles the rest
+    x = params["embed"][tokens]
+    ks: List[jax.Array] = []
+    vs: List[jax.Array] = []
+    for lp in params["layers"]:
+        xn = _rmsnorm(x, lp["norm_attn"])
+        k_all = _rope(
+            (xn @ lp["wk"]).reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3),
+            pos,
+            cfg.rope_theta,
+        ).transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        v_all = xn @ lp["wv"]
+        ks.append(k_all)
+        vs.append(v_all)
+        x = x + _attn_block(
+            cfg, lp, xn, pos, k_all, v_all, kv_len, q_pos,
+            causal=True, use_kernel=use_kernel,
+        )
+        x = x + _mlp(lp, _rmsnorm(x, lp["norm_mlp"]))
+    x = _rmsnorm(x, params["norm_f"])
+    logits_all = x @ params["unembed"]  # (1, S, V)
+    last = jnp.take_along_axis(
+        logits_all, (length - 1).reshape(1, 1, 1).astype(jnp.int32), axis=1
+    )[:, 0, :]
+    kv = jnp.stack(
+        [jnp.stack(ks, axis=0), jnp.stack(vs, axis=0)], axis=0
+    )  # (2, L, B, S, KD)
+    kv = kv.transpose(2, 0, 1, 3, 4)  # (B, 2, L, S, KD)
+    return last, kv
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,
+    pos: jax.Array,
+    kv: jax.Array,
+    *,
+    use_kernel: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """One continuous-batching decode iteration.
+
+    tokens: (B,) int32 — the token at position ``pos`` for each request.
+    pos: (B,) int32 — absolute position of that token.
+    kv: (B, 2, L, S, KD) — per-request caches, valid in [0, pos).
+
+    Returns (logits (B, V), updated kv with row ``pos`` written).
+    Padding lanes (dead batch slots) simply carry pos=0 and are ignored by
+    the Rust coordinator.
+    """
+    b = tokens.shape[0]
+    s = cfg.max_seq
+    pos = pos.astype(jnp.int32)
+    x = params["embed"][tokens][:, None, :]  # (B, 1, d)
+    pos2 = pos[:, None]  # (B, 1)
+    kv_len = pos + 1
+    for li, lp in enumerate(params["layers"]):
+        xn = _rmsnorm(x, lp["norm_attn"])
+        k_new = _rope(
+            (xn @ lp["wk"]).reshape(b, 1, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3),
+            pos2,
+            cfg.rope_theta,
+        ).transpose(0, 2, 1, 3).reshape(b, 1, cfg.d_model)
+        v_new = xn @ lp["wv"]
+
+        # Scatter this step's K/V row into each request's cache at `pos`.
+        def put(cache_b, row_b, p):
+            return jax.lax.dynamic_update_slice(cache_b, row_b, (p, 0))
+
+        kv = kv.at[:, 0, li].set(jax.vmap(put)(kv[:, 0, li], k_new, pos))
+        kv = kv.at[:, 1, li].set(jax.vmap(put)(kv[:, 1, li], v_new, pos))
+        x = x + _attn_block(
+            cfg, lp, xn, pos2, kv[:, 0, li], kv[:, 1, li], kv_len, pos,
+            causal=False, use_kernel=use_kernel,
+        )
+        x = x + _mlp(lp, _rmsnorm(x, lp["norm_mlp"]))
+    x = _rmsnorm(x, params["norm_f"])
+    logits = (x @ params["unembed"])[:, 0, :]
+    return logits, kv
+
+
+# --------------------------------------------------------------------------
+# Training (bwd path) — character-level LM on a small embedded corpus.
+# --------------------------------------------------------------------------
+
+CORPUS = (
+    "Edge-cloud collaboration distributes large language model services "
+    "between nearby edge servers and a powerful cloud server. The cloud "
+    "offers high quality inference at high energy cost and congested "
+    "uplinks; the edge answers fast and cheap but with smaller models. "
+    "PerLLM schedules each request to the server that meets its deadline "
+    "at the lowest energy, using a constraint satisfaction upper "
+    "confidence bound bandit over servers. Diverse services ask for chat, "
+    "summaries, translation and code; deadlines range from two to six "
+    "seconds; bandwidth fluctuates by twenty percent. The scheduler "
+    "learns which server completes which service class in time, and the "
+    "regret of its decisions grows only logarithmically. "
+) * 8
+
+
+def batches(cfg: ModelConfig, key: jax.Array, batch: int, seq: int):
+    """Infinite stream of (tokens, targets) char-LM batches from CORPUS."""
+    data = jnp.array(bytearray(CORPUS.encode("utf-8")), jnp.int32)
+    n = data.shape[0] - seq - 1
+    while True:
+        key, sub = jax.random.split(key)
+        starts = jax.random.randint(sub, (batch,), 0, n)
+        idx = starts[:, None] + jnp.arange(seq + 1)[None, :]
+        chunk = data[idx]
+        yield chunk[:, :-1], chunk[:, 1:]
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets) -> jax.Array:
+    logits = forward_full(cfg, params, tokens, use_kernel=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=3e-3, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    mhat_scale = 1.0 / (1 - b1**tf)
+    vhat_scale = 1.0 / (1 - b2**tf)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train(cfg: ModelConfig, steps: int = 400, batch: int = 32, seq: int = 64,
+          seed: int = 0, log_every: int = 100) -> Tuple[Dict[str, Any], List[float]]:
+    """Train the tiny model; returns (params, loss curve). Exercises bwd."""
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key)
+    opt = adam_init(params)
+    stream = batches(cfg, jax.random.PRNGKey(seed + 1), batch, seq)
+
+    @jax.jit
+    def step(params, opt, tokens, targets):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, targets))(params)
+        params, opt = adam_update(params, grads, opt)
+        return params, opt, loss
+
+    curve: List[float] = []
+    for i in range(steps):
+        tokens, targets = next(stream)
+        params, opt, loss = step(params, opt, tokens, targets)
+        if i % log_every == 0 or i == steps - 1:
+            curve.append(float(loss))
+            print(f"[train:{cfg.name}] step {i:4d} loss {float(loss):.4f}")
+    return params, curve
+
+
+def param_leaves(params) -> List[jax.Array]:
+    """Flat leaf order — MUST match the AOT manifest and the Rust loader."""
+    return jax.tree_util.tree_leaves(params)
+
+
+def leaf_names(params) -> List[str]:
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    return [jax.tree_util.keystr(p) for p, _ in paths]

@@ -1,0 +1,182 @@
+"""L1 correctness: Pallas flash-attention kernel vs pure-jnp oracle.
+
+This is the core numeric signal of the compile path: if these pass, the HLO
+the Rust runtime executes computes the same attention as the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (
+    flash_attention,
+    mha,
+    mxu_utilization_estimate,
+    vmem_bytes,
+)
+from compile.kernels.ref import attention_ref, mha_ref
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+@pytest.mark.parametrize("bh,sq,skv,d", [
+    (1, 16, 16, 8),
+    (2, 64, 64, 16),
+    (4, 64, 128, 16),
+    (8, 128, 128, 32),
+    (3, 32, 96, 16),
+])
+def test_prefill_matches_ref(bh, sq, skv, d):
+    q, k, v = rand(1, (bh, sq, d)), rand(2, (bh, skv, d)), rand(3, (bh, skv, d))
+    qpos = jnp.zeros((bh,), jnp.int32)
+    kvlen = jnp.full((bh,), skv, jnp.int32)
+    out = flash_attention(q, k, v, qpos, kvlen, block_q=16, block_k=16)
+    ref = attention_ref(q, k, v, qpos, kvlen)
+    np.testing.assert_allclose(out, ref, atol=ATOL, rtol=RTOL)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(8, 8), (16, 32), (32, 16), (64, 64)])
+def test_block_shape_invariance(block_q, block_k):
+    """Result must not depend on tiling — the schedule is semantics-free."""
+    bh, s, d = 2, 64, 16
+    q, k, v = rand(4, (bh, s, d)), rand(5, (bh, s, d)), rand(6, (bh, s, d))
+    qpos = jnp.zeros((bh,), jnp.int32)
+    kvlen = jnp.full((bh,), s, jnp.int32)
+    out = flash_attention(q, k, v, qpos, kvlen, block_q=block_q, block_k=block_k)
+    ref = attention_ref(q, k, v, qpos, kvlen)
+    np.testing.assert_allclose(out, ref, atol=ATOL, rtol=RTOL)
+
+
+def test_kv_len_masks_padding():
+    """Keys past kv_len must not influence the output at all."""
+    bh, s, d = 2, 32, 8
+    q = rand(7, (bh, 1, d))
+    k, v = rand(8, (bh, s, d)), rand(9, (bh, s, d))
+    kvlen = jnp.array([10, 3], jnp.int32)
+    qpos = kvlen - 1
+    out1 = flash_attention(q, k, v, qpos, kvlen, block_q=1, block_k=8, causal=False)
+    # Scribble over the padding region — output must be identical.
+    k2 = k.at[:, 10:, :].set(999.0)
+    v2 = v.at[:, 10:, :].set(-999.0)
+    k2 = k2.at[1, 3:, :].set(123.0)
+    v2 = v2.at[1, 3:, :].set(-55.0)
+    out2 = flash_attention(q, k2, v2, qpos, kvlen, block_q=1, block_k=8, causal=False)
+    np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+
+def test_causal_mask_exact():
+    """Row i must only attend to keys j <= i (absolute positions)."""
+    bh, s, d = 1, 16, 8
+    q, k, v = rand(10, (bh, s, d)), rand(11, (bh, s, d)), rand(12, (bh, s, d))
+    qpos = jnp.zeros((bh,), jnp.int32)
+    kvlen = jnp.full((bh,), s, jnp.int32)
+    out = flash_attention(q, k, v, qpos, kvlen, block_q=4, block_k=4)
+    # Brute-force per-row softmax
+    for i in range(s):
+        sc = (q[0, i] @ k[0, : i + 1].T) / np.sqrt(d)
+        p = np.exp(sc - sc.max())
+        p /= p.sum()
+        expect = p @ v[0, : i + 1]
+        np.testing.assert_allclose(out[0, i], expect, atol=1e-5, rtol=1e-5)
+
+
+def test_decode_positions():
+    """q_len=1 decode at several absolute positions equals the oracle."""
+    bh, s, d = 4, 64, 16
+    q = rand(13, (bh, 1, d))
+    k, v = rand(14, (bh, s, d)), rand(15, (bh, s, d))
+    pos = jnp.array([0, 17, 40, 63], jnp.int32)
+    out = flash_attention(q, k, v, pos, pos + 1, block_q=1, block_k=16)
+    ref = attention_ref(q, k, v, pos, pos + 1)
+    np.testing.assert_allclose(out, ref, atol=ATOL, rtol=RTOL)
+
+
+def test_mha_wrapper_matches_ref():
+    b, h, s, d = 2, 4, 32, 8
+    q, k, v = rand(16, (b, h, s, d)), rand(17, (b, h, s, d)), rand(18, (b, h, s, d))
+    qpos = jnp.zeros((b,), jnp.int32)
+    kvlen = jnp.full((b,), s, jnp.int32)
+    out = mha(q, k, v, qpos, kvlen, block_q=8, block_k=8)
+    ref = mha_ref(q, k, v, qpos, kvlen)
+    np.testing.assert_allclose(out, ref, atol=ATOL, rtol=RTOL)
+
+
+def test_fully_masked_rows_are_finite():
+    """Padding query rows (empty mask) must produce finite output, not NaN."""
+    bh, s, d = 1, 8, 4
+    q, k, v = rand(19, (bh, s, d)), rand(20, (bh, s, d)), rand(21, (bh, s, d))
+    qpos = jnp.zeros((bh,), jnp.int32)
+    kvlen = jnp.zeros((bh,), jnp.int32)  # nothing valid
+    out = flash_attention(q, k, v, qpos, kvlen, block_q=4, block_k=4, causal=False)
+    assert bool(jnp.isfinite(out).all())
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bh=st.integers(1, 4),
+    sq_blocks=st.integers(1, 4),
+    skv_blocks=st.integers(1, 4),
+    d=st.sampled_from([4, 8, 16, 32]),
+    block=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shape_sweep(bh, sq_blocks, skv_blocks, d, block, causal, seed):
+    """Property: kernel == oracle over a randomized shape/config space."""
+    sq, skv = sq_blocks * block, skv_blocks * block
+    q = rand(seed, (bh, sq, d))
+    k = rand(seed + 1, (bh, skv, d))
+    v = rand(seed + 2, (bh, skv, d))
+    key = jax.random.PRNGKey(seed + 3)
+    kvlen = jax.random.randint(key, (bh,), 1, skv + 1)
+    qpos = jnp.zeros((bh,), jnp.int32)
+    out = flash_attention(q, k, v, qpos, kvlen, block_q=block, block_k=block, causal=causal)
+    ref = attention_ref(q, k, v, qpos, kvlen, causal=causal)
+    np.testing.assert_allclose(out, ref, atol=5e-5, rtol=5e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dtype=st.sampled_from(["float32", "bfloat16"]), seed=st.integers(0, 1000))
+def test_hypothesis_dtype_sweep(dtype, seed):
+    """bf16 inputs (MXU-native) stay close to the f32 oracle."""
+    dt = jnp.dtype(dtype)
+    bh, s, d = 2, 32, 16
+    q = rand(seed, (bh, s, d)).astype(dt)
+    k = rand(seed + 1, (bh, s, d)).astype(dt)
+    v = rand(seed + 2, (bh, s, d)).astype(dt)
+    qpos = jnp.zeros((bh,), jnp.int32)
+    kvlen = jnp.full((bh,), s, jnp.int32)
+    out = flash_attention(q, k, v, qpos, kvlen, block_q=8, block_k=8)
+    ref = attention_ref(q, k, v, qpos, kvlen)
+    tol = 5e-5 if dtype == "float32" else 5e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), atol=tol, rtol=tol
+    )
+
+
+def test_indivisible_block_raises():
+    q = rand(22, (1, 30, 8))
+    k = rand(23, (1, 32, 8))
+    v = rand(24, (1, 32, 8))
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v, jnp.zeros((1,), jnp.int32), jnp.full((1,), 32),
+                        block_q=16, block_k=16)
+
+
+def test_vmem_estimate_under_budget():
+    """Shipped configs must fit the 16 MiB VMEM budget (DESIGN.md §8)."""
+    for skv, d in [(128, 64), (256, 128)]:
+        assert vmem_bytes(64, 64, skv, d) < 16 * 1024 * 1024
+
+
+def test_mxu_estimate_monotone():
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mxu_utilization_estimate(64, 128, 128) == 0.5
+    assert mxu_utilization_estimate(64, 64, 16) < mxu_utilization_estimate(128, 128, 16)

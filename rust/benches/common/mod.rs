@@ -1,0 +1,27 @@
+//! Shared helpers for the paper-figure bench binaries.
+
+use perllm::scheduler::{
+    agod::Agod, csucb::CsUcb, fineinfer::FineInfer, rewardless::RewardlessGuidance, Scheduler,
+};
+use perllm::sim::cluster::ClusterConfig;
+
+/// Trace length: full paper scale is 10 000; default trimmed for bench
+/// wall-time, override with PERLLM_BENCH_REQUESTS=10000 for the record.
+pub fn bench_requests() -> usize {
+    std::env::var("PERLLM_BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2500)
+}
+
+pub const METHODS: [&str; 4] = ["fineinfer", "agod", "rewardless", "cs-ucb"];
+
+pub fn make_scheduler(name: &str, cfg: &ClusterConfig, seed: u64) -> Box<dyn Scheduler> {
+    match name {
+        "fineinfer" => Box::new(FineInfer::new(cfg.cloud_index())),
+        "agod" => Box::new(Agod::new(cfg.n_servers(), seed)),
+        "rewardless" => Box::new(RewardlessGuidance::new(cfg.n_servers())),
+        "cs-ucb" => Box::new(CsUcb::with_defaults(cfg.n_servers())),
+        other => panic!("unknown method {other}"),
+    }
+}

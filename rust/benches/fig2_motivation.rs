@@ -1,0 +1,103 @@
+//! Figure 2 regenerator — the motivation experiment: average processing
+//! time and energy cost per service on cloud-only vs edge-only deployments
+//! as the number of *simultaneously uploaded* services grows. The paper's
+//! cloud curve surges past ~100 concurrent services (shared-uplink
+//! congestion); the edge curve grows with compute saturation instead.
+//!
+//! Run: cargo bench --bench fig2_motivation
+
+mod common;
+
+use perllm::bench::Table;
+use perllm::scheduler::{ClusterView, Decision, Scheduler};
+use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
+use perllm::sim::engine::simulate;
+use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
+use perllm::workload::service::ServiceRequest;
+
+/// Fixed-tier scheduler: everything to the cloud, or round-robin over the
+/// five edges (matching the paper's single-tier measurement setup).
+struct Tier {
+    cloud: bool,
+    next_edge: usize,
+}
+
+impl Scheduler for Tier {
+    fn name(&self) -> &'static str {
+        if self.cloud {
+            "cloud-only"
+        } else {
+            "edge-only"
+        }
+    }
+    fn decide(&mut self, _r: &ServiceRequest, view: &ClusterView) -> Decision {
+        if self.cloud {
+            Decision::now(view.servers.len() - 1)
+        } else {
+            let e = self.next_edge % (view.servers.len() - 1);
+            self.next_edge += 1;
+            Decision::now(e)
+        }
+    }
+}
+
+fn main() {
+    let mut table = Table::new(
+        "Figure 2: cloud vs edge, simultaneous service upload",
+        &[
+            "services", "tier", "mean tx s", "mean infer s", "mean total s",
+            "J/service", "success%",
+        ],
+    );
+    for &n in &[1usize, 10, 50, 100, 300, 600] {
+        let trace = generate(
+            &WorkloadConfig::default()
+                .with_requests(n)
+                .with_arrivals(ArrivalProcess::Simultaneous)
+                .with_deadline_range(2.0, 6.0)
+                .with_seed(2),
+        );
+        // The paper's motivation rig queues every service (no load
+        // shedding) — it measures how bad the wait gets, not how much a
+        // production stack would drop. Lift the queue bounds accordingly.
+        let mut cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        for srv in &mut cfg.servers {
+            srv.queue_limit = 100_000;
+        }
+        for cloud in [true, false] {
+            let mut s = Tier {
+                cloud,
+                next_edge: 0,
+            };
+            let rep = simulate(&cfg, &trace, &mut s);
+            let done: Vec<_> = rep
+                .outcomes
+                .iter()
+                .filter(|o| o.processing_time.is_finite())
+                .collect();
+            let mean = |f: &dyn Fn(&perllm::workload::service::ServiceOutcome) -> f64| {
+                if done.is_empty() {
+                    0.0
+                } else {
+                    done.iter().map(|o| f(o)).sum::<f64>() / done.len() as f64
+                }
+            };
+            table.row(&[
+                n.to_string(),
+                if cloud { "cloud" } else { "edge" }.into(),
+                format!("{:.3}", mean(&|o| o.tx_time)),
+                format!("{:.3}", mean(&|o| o.infer_time)),
+                format!("{:.3}", mean(&|o| o.processing_time)),
+                // Per-service attributed energy (tx + marginal inference),
+                // the paper's Fig-2 per-service metric.
+                format!("{:.1}", mean(&|o| o.energy_j)),
+                format!("{:.1}", rep.success_rate * 100.0),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "paper shape check: cloud total time + J/service surge with scale;\n\
+         edge tx stays ~flat and far below cloud tx; single-service cloud is faster."
+    );
+}

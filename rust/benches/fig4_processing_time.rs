@@ -1,0 +1,45 @@
+//! Figure 4 regenerator — average processing time per service under the
+//! four methods across model deployments, stable and fluctuating
+//! bandwidth. Paper shape: PerLLM lowest everywhere; its advantage grows
+//! under fluctuation.
+//!
+//! Run: cargo bench --bench fig4_processing_time
+
+mod common;
+
+use perllm::bench::Table;
+use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
+use perllm::sim::engine::simulate;
+use perllm::sim::server::EDGE_MODELS;
+use perllm::workload::generator::{generate, WorkloadConfig};
+
+fn main() {
+    let n = common::bench_requests();
+    let trace = generate(
+        &WorkloadConfig::default()
+            .with_requests(n)
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(42),
+    );
+    for mode in [BandwidthMode::Stable, BandwidthMode::Fluctuating] {
+        let mut table = Table::new(
+            format!("Figure 4: mean / p95 processing time (s), {mode:?} bandwidth"),
+            &["model", "FineInfer", "AGOD", "RewardlessGuidance", "PerLLM (CS-UCB)"],
+        );
+        for model in EDGE_MODELS {
+            let cfg = ClusterConfig::paper(model, mode);
+            let mut cells = vec![model.to_string()];
+            for m in common::METHODS {
+                let mut s = common::make_scheduler(m, &cfg, 42);
+                let rep = simulate(&cfg, &trace, s.as_mut());
+                cells.push(format!(
+                    "{:.2} / {:.2}",
+                    rep.mean_processing_s, rep.p95_processing_s
+                ));
+            }
+            table.row(&cells);
+        }
+        println!("{}", table.render());
+    }
+    println!("paper shape: PerLLM lowest mean processing time for every deployment.");
+}

@@ -1,0 +1,76 @@
+//! §Perf micro-benchmarks — the L3 hot paths (DESIGN.md §8):
+//!
+//! * CS-UCB decision latency (must be negligible vs service times)
+//! * DES event throughput (events/s — drives experiment wall time)
+//! * PS-queue operations
+//! * end-to-end simulation wall time per 1 000 requests
+//!
+//! Run: cargo bench --bench micro_hotpath
+
+mod common;
+
+use perllm::bench::{bench_fn, Table};
+use perllm::scheduler::csucb::CsUcb;
+use perllm::scheduler::Scheduler;
+use perllm::sim::cluster::{BandwidthMode, ClusterConfig, ClusterSim};
+use perllm::sim::engine::simulate;
+use perllm::sim::ps::PsQueue;
+use perllm::workload::generator::{generate, WorkloadConfig};
+
+fn main() {
+    let mut rows = Vec::new();
+
+    // 1. Scheduler decision latency on a live-ish view.
+    {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let sim = ClusterSim::new(&cfg);
+        let trace = generate(&WorkloadConfig::default().with_requests(64).with_seed(5));
+        let view = sim.view(&trace[0], 0.0);
+        let mut sched = CsUcb::with_defaults(cfg.n_servers());
+        let mut i = 0usize;
+        rows.push(bench_fn("cs-ucb decide()", 1_000, 100_000, || {
+            let req = &trace[i % trace.len()];
+            std::hint::black_box(sched.decide(req, &view));
+            i += 1;
+        }));
+    }
+
+    // 2. PS queue push/advance/reap cycle.
+    {
+        let mut q = PsQueue::new(16);
+        let mut id = 0u64;
+        rows.push(bench_fn("ps push+advance+reap", 1_000, 100_000, || {
+            q.push(id, 1.0, 0.0);
+            q.advance(0.5, 2.0);
+            std::hint::black_box(q.reap(0.5, 2.0));
+            id += 1;
+        }));
+    }
+
+    // 3. Full DES runs (events/s reported separately).
+    for &n in &[1_000usize, 4_000] {
+        let trace = generate(
+            &WorkloadConfig::default()
+                .with_requests(n)
+                .with_deadline_range(2.0, 6.0)
+                .with_seed(42),
+        );
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Fluctuating);
+        let mut events_per_sec = 0.0;
+        let name = format!("simulate cs-ucb {n} reqs");
+        rows.push(bench_fn(&name, 1, 5, || {
+            let mut s = CsUcb::with_defaults(cfg.n_servers());
+            let rep = simulate(&cfg, &trace, &mut s);
+            events_per_sec = rep.events_per_sec;
+            std::hint::black_box(rep.success_rate);
+        }));
+        println!("  {n} reqs: DES {events_per_sec:.0} events/s");
+    }
+
+    let mut t = Table::new("L3 hot-path micro benches", &["bench"]);
+    let _ = &mut t;
+    println!();
+    for r in &rows {
+        println!("{}", r.row());
+    }
+}

@@ -1,0 +1,45 @@
+//! Table 1 regenerator — average success rate of meeting the personalized
+//! processing-time requirement (D∆ ~ U[2 s, 6 s]) for each edge-model
+//! deployment under the four methods, stable and fluctuating bandwidth.
+//!
+//! Paper row shape: FineInfer ~58 %, AGOD ~66-69 %, RewardlessGuidance
+//! ~71-77 %, PerLLM 97-99 %.
+//!
+//! Run: cargo bench --bench table1_success_rate
+//!      PERLLM_BENCH_REQUESTS=10000 cargo bench --bench table1_success_rate
+
+mod common;
+
+use perllm::bench::Table;
+use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
+use perllm::sim::engine::simulate;
+use perllm::sim::server::EDGE_MODELS;
+use perllm::workload::generator::{generate, WorkloadConfig};
+
+fn main() {
+    let n = common::bench_requests();
+    let trace = generate(
+        &WorkloadConfig::default()
+            .with_requests(n)
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(42),
+    );
+    for mode in [BandwidthMode::Stable, BandwidthMode::Fluctuating] {
+        let mut table = Table::new(
+            format!("Table 1: success rate %, {mode:?} bandwidth ({n} requests)"),
+            &["model", "FineInfer", "AGOD", "RewardlessGuidance", "PerLLM (CS-UCB)"],
+        );
+        for model in EDGE_MODELS {
+            let cfg = ClusterConfig::paper(model, mode);
+            let mut cells = vec![model.to_string()];
+            for m in common::METHODS {
+                let mut s = common::make_scheduler(m, &cfg, 42);
+                let rep = simulate(&cfg, &trace, s.as_mut());
+                cells.push(format!("{:.0}%", rep.success_rate * 100.0));
+            }
+            table.row(&cells);
+        }
+        println!("{}", table.render());
+    }
+    println!("paper: 58 / 66-69 / 71-77 / 97-99 — ordering and rough gaps should match.");
+}

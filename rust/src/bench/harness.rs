@@ -1,0 +1,162 @@
+//! Timing kit + table renderer for the harness-free benches.
+
+use std::time::Instant;
+
+use crate::util::stats::Percentiles;
+
+/// Result of timing one closure.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<36} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn bench_fn(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Percentiles::new();
+    let mut min = f64::INFINITY;
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let ns = t0.elapsed().as_nanos() as f64;
+        samples.push(ns);
+        total += ns;
+        min = min.min(ns);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: total / iters as f64,
+        p50_ns: samples.p50(),
+        p95_ns: samples.p95(),
+        min_ns: min,
+    }
+}
+
+/// Fixed-width table renderer for paper-figure regenerators.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for i in 0..ncol {
+                s.push_str(&format!("{:<w$}  ", cells[i], w = widths[i]));
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_fn("spin", 2, 20, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns);
+        assert!(r.p50_ns <= r.p95_ns);
+        assert!(r.row().contains("spin"));
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5.0e3).contains("µs"));
+        assert!(fmt_ns(5.0e6).contains("ms"));
+        assert!(fmt_ns(5.0e9).contains("s"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "long-header", "c"]);
+        t.row(&["1".into(), "2".into(), "3".into()]);
+        t.row(&["xxx".into(), "y".into(), "zzzz".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_checks_columns() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

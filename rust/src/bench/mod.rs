@@ -1,0 +1,7 @@
+//! Bench harness for `cargo bench` with `harness = false` (no criterion
+//! offline): warmup + timed iterations, robust statistics, and the
+//! paper-style table renderer the per-figure bench binaries share.
+
+pub mod harness;
+
+pub use harness::{bench_fn, BenchResult, Table};

@@ -1,0 +1,252 @@
+//! From-scratch CLI argument parser (no `clap` offline) + the perllm
+//! binary's subcommand definitions.
+//!
+//! Supports: subcommands, `--flag value`, `--flag=value`, boolean flags,
+//! defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declared option.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A parsed command line.
+#[derive(Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: bad number {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Subcommand spec.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        CommandSpec {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Parse this command's arguments (after the subcommand word).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        let mut out = Parsed::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                out.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let Some(opt) = self.opts.iter().find(|o| o.name == name) else {
+                    bail!("unknown option --{name} for `{}` (try --help)", self.name);
+                };
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        bail!("--{name} is a flag and takes no value");
+                    }
+                    out.flags.push(name);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    out.values.insert(name, val);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("perllm {} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let d = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let kind = if o.is_flag { "" } else { " <value>" };
+            s.push_str(&format!("  --{}{kind}\n      {}{d}\n", o.name, o.help));
+        }
+        s
+    }
+}
+
+/// The perllm binary's command set.
+pub fn commands() -> Vec<CommandSpec> {
+    vec![
+        CommandSpec::new("serve", "serve real AOT models with CS-UCB routing")
+            .opt("artifacts", "artifact directory", None)
+            .opt("requests", "number of requests to serve", Some("64"))
+            .opt("edge-workers", "edge engine workers", Some("2"))
+            .opt("max-new-tokens", "generation length", Some("48"))
+            .opt("seed", "rng seed", Some("42"))
+            .opt("scheduler", "cs-ucb|rewardless|fineinfer|agod", Some("cs-ucb")),
+        CommandSpec::new("sim", "paper-scale DES experiment (Table 1 / Figs 4-6)")
+            .opt("requests", "trace length", Some("10000"))
+            .opt("model", "edge model deployment", Some("llama2-7b"))
+            .opt("rate", "arrival rate req/s", Some("15"))
+            .opt("seed", "rng seed", Some("42"))
+            .flag("fluctuating", "±20% bandwidth fluctuation"),
+        CommandSpec::new("version", "print version"),
+    ]
+}
+
+pub fn global_help() -> String {
+    let mut s = String::from("perllm — personalized edge-cloud LLM inference scheduling\n\ncommands:\n");
+    for c in commands() {
+        s.push_str(&format!("  {:<10} {}\n", c.name, c.about));
+    }
+    s.push_str("\nrun `perllm <command> --help` for command options\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CommandSpec {
+        CommandSpec::new("test", "test command")
+            .opt("count", "a number", Some("5"))
+            .opt("name", "a string", None)
+            .flag("verbose", "talk more")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = spec().parse(&args(&[])).unwrap();
+        assert_eq!(p.usize_or("count", 0).unwrap(), 5);
+        assert_eq!(p.get("name"), None);
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = spec().parse(&args(&["--count", "9", "--name=zed"])).unwrap();
+        assert_eq!(p.usize_or("count", 0).unwrap(), 9);
+        assert_eq!(p.get("name"), Some("zed"));
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let p = spec().parse(&args(&["--verbose", "extra1", "extra2"])).unwrap();
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse(&args(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(spec().parse(&args(&["--count"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(spec().parse(&args(&["--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let p = spec().parse(&args(&["--count", "x"])).unwrap();
+        assert!(p.usize_or("count", 0).is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = spec().help();
+        assert!(h.contains("--count"));
+        assert!(h.contains("default: 5"));
+        assert!(!global_help().is_empty());
+    }
+}

@@ -1,0 +1,279 @@
+//! Configuration: a TOML-subset parser (no serde offline) plus typed
+//! experiment/serving configs assembled from key-value sections.
+//!
+//! Supported syntax — enough for real deployment files, nothing exotic:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! key = "string"
+//! n = 42
+//! x = 3.5
+//! flag = true
+//! list = [1, 2, 4]
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Sectioned key-value config.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    /// section -> key -> value; top-level keys live under "".
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section {line:?}", ln + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", ln + 1))?;
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value {v:?}", ln + 1))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let items: Result<Vec<Value>> = inner
+            .split(',')
+            .map(|x| x.trim())
+            .filter(|x| !x.is_empty())
+            .map(parse_value)
+            .collect();
+        return Ok(Value::List(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("unparseable value {s:?}")
+}
+
+/// Typed experiment config assembled from a Config (or defaults).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub requests: usize,
+    pub arrival_rate: f64,
+    pub seed: u64,
+    pub edge_model: String,
+    pub deadline_lo: f64,
+    pub deadline_hi: f64,
+    pub fluctuating: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            requests: 10_000,
+            arrival_rate: 15.0,
+            seed: 42,
+            edge_model: "llama2-7b".into(),
+            deadline_lo: 2.0,
+            deadline_hi: 6.0,
+            fluctuating: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_config(cfg: &Config) -> Self {
+        let d = ExperimentConfig::default();
+        ExperimentConfig {
+            requests: cfg.i64_or("experiment", "requests", d.requests as i64) as usize,
+            arrival_rate: cfg.f64_or("experiment", "arrival_rate", d.arrival_rate),
+            seed: cfg.i64_or("experiment", "seed", d.seed as i64) as u64,
+            edge_model: cfg.str_or("experiment", "edge_model", &d.edge_model),
+            deadline_lo: cfg.f64_or("experiment", "deadline_lo", d.deadline_lo),
+            deadline_hi: cfg.f64_or("experiment", "deadline_hi", d.deadline_hi),
+            fluctuating: cfg.bool_or("experiment", "fluctuating", d.fluctuating),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment definition
+[experiment]
+requests = 500
+arrival_rate = 12.5
+edge_model = "yi-6b"
+fluctuating = true
+seeds = [1, 2, 3]
+note = "has # inside"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.i64_or("experiment", "requests", 0), 500);
+        assert_eq!(cfg.f64_or("experiment", "arrival_rate", 0.0), 12.5);
+        assert_eq!(cfg.str_or("experiment", "edge_model", ""), "yi-6b");
+        assert!(cfg.bool_or("experiment", "fluctuating", false));
+        match cfg.get("experiment", "seeds") {
+            Some(Value::List(xs)) => assert_eq!(xs.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            cfg.str_or("experiment", "note", ""),
+            "has # inside"
+        );
+    }
+
+    #[test]
+    fn typed_config_from_parsed() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let e = ExperimentConfig::from_config(&cfg);
+        assert_eq!(e.requests, 500);
+        assert_eq!(e.edge_model, "yi-6b");
+        assert!(e.fluctuating);
+        // Unset keys fall back to defaults.
+        assert_eq!(e.deadline_lo, 2.0);
+    }
+
+    #[test]
+    fn defaults_on_empty() {
+        let cfg = Config::parse("").unwrap();
+        let e = ExperimentConfig::from_config(&cfg);
+        assert_eq!(e.requests, 10_000);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("k = @@").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let cfg = Config::parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(cfg.get("", "a"), Some(&Value::Int(3)));
+        assert_eq!(cfg.get("", "b"), Some(&Value::Float(3.5)));
+        assert_eq!(cfg.f64_or("", "a", 0.0), 3.0);
+    }
+}

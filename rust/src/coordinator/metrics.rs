@@ -1,0 +1,125 @@
+//! Serving metrics: latency/throughput counters shared between the worker
+//! threads and the leader, plus paper-style report rendering.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Percentiles;
+
+/// Lock-free counters updated by workers; latencies behind a small mutex.
+#[derive(Debug)]
+pub struct ServingMetrics {
+    start: Instant,
+    pub requests_in: AtomicU64,
+    pub requests_done: AtomicU64,
+    pub tokens_out: AtomicU64,
+    pub prefill_steps: AtomicU64,
+    pub decode_steps: AtomicU64,
+    latencies_ms: Mutex<Percentiles>,
+    queue_waits_ms: Mutex<Percentiles>,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        ServingMetrics {
+            start: Instant::now(),
+            requests_in: AtomicU64::new(0),
+            requests_done: AtomicU64::new(0),
+            tokens_out: AtomicU64::new(0),
+            prefill_steps: AtomicU64::new(0),
+            decode_steps: AtomicU64::new(0),
+            latencies_ms: Mutex::new(Percentiles::new()),
+            queue_waits_ms: Mutex::new(Percentiles::new()),
+        }
+    }
+
+    pub fn record_arrival(&self) {
+        self.requests_in.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_completion(&self, latency_ms: f64, queue_wait_ms: f64, tokens: u64) {
+        self.requests_done.fetch_add(1, Ordering::Relaxed);
+        self.tokens_out.fetch_add(tokens, Ordering::Relaxed);
+        self.latencies_ms.lock().unwrap().push(latency_ms);
+        self.queue_waits_ms.lock().unwrap().push(queue_wait_ms);
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        self.tokens_out.load(Ordering::Relaxed) as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    pub fn requests_per_s(&self) -> f64 {
+        self.requests_done.load(Ordering::Relaxed) as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    /// Multi-line human report (the serve_model example prints this).
+    pub fn report(&self) -> String {
+        let mut lat = self.latencies_ms.lock().unwrap();
+        let mut qw = self.queue_waits_ms.lock().unwrap();
+        format!(
+            "requests: {} in / {} done | tokens out: {} | elapsed {:.2}s\n\
+             throughput: {:.1} tok/s, {:.2} req/s\n\
+             latency ms: mean {:.1} p50 {:.1} p95 {:.1} p99 {:.1}\n\
+             queue wait ms: p50 {:.1} p95 {:.1}",
+            self.requests_in.load(Ordering::Relaxed),
+            self.requests_done.load(Ordering::Relaxed),
+            self.tokens_out.load(Ordering::Relaxed),
+            self.elapsed_s(),
+            self.throughput_tok_s(),
+            self.requests_per_s(),
+            lat.mean(),
+            lat.p50(),
+            lat.p95(),
+            lat.p99(),
+            qw.p50(),
+            qw.p95(),
+        )
+    }
+
+    pub fn p95_latency_ms(&self) -> f64 {
+        self.latencies_ms.lock().unwrap().p95()
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.latencies_ms.lock().unwrap().mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = ServingMetrics::new();
+        m.record_arrival();
+        m.record_arrival();
+        m.record_completion(10.0, 1.0, 42);
+        assert_eq!(m.requests_in.load(Ordering::Relaxed), 2);
+        assert_eq!(m.requests_done.load(Ordering::Relaxed), 1);
+        assert_eq!(m.tokens_out.load(Ordering::Relaxed), 42);
+        assert!(m.mean_latency_ms() > 9.9);
+        let rep = m.report();
+        assert!(rep.contains("tokens out: 42"), "{rep}");
+    }
+
+    #[test]
+    fn percentiles_in_report() {
+        let m = ServingMetrics::new();
+        for i in 1..=100 {
+            m.record_completion(i as f64, 0.5, 1);
+        }
+        assert!((m.p95_latency_ms() - 95.05).abs() < 0.5);
+    }
+}

@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: the serving-side realization of the paper's
+//! framework — request routing (CS-UCB over live telemetry), continuous
+//! batching over the AOT engines, paged KV admission control, and
+//! metrics. The DES (sim/) replays the paper's evaluation at scale; this
+//! module serves *real* tokens through the same scheduler.
+
+pub mod batcher;
+pub mod kv;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batcher, GenRequest, GenResult, StepModel};
+pub use kv::{KvPool, KvPoolConfig};
+pub use metrics::ServingMetrics;
+pub use router::{Router, WorkerTelemetry};
+pub use server::{ServeReply, ServeRequest, ServingCluster};

@@ -1,0 +1,245 @@
+//! Live request router: builds a CMAB cluster view from real worker
+//! telemetry and delegates the placement decision to any [`Scheduler`]
+//! (CS-UCB in production, baselines for ablation).
+//!
+//! This is the serving-path twin of the DES's `ClusterSim::view`: the same
+//! decision interface fed by measured statistics (queue depths, EMA step
+//! times) instead of simulated state, so the paper's scheduler runs
+//! unchanged on both substrates.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::scheduler::{ClusterView, Scheduler, ServerView};
+use crate::sim::energy::EnergyWeights;
+use crate::sim::server::ServerKind;
+use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest};
+
+/// Telemetry one worker exposes to the router (all lock-free). Capacity
+/// fields are atomics because the engine loads inside the worker thread
+/// (PJRT handles are not Send) and publishes its real bucket size then.
+#[derive(Debug)]
+pub struct WorkerTelemetry {
+    pub kind: ServerKind,
+    /// Engine capacity: largest compiled decode bucket.
+    pub max_batch: AtomicUsize,
+    /// Bounded admission queue length target.
+    pub queue_cap: AtomicUsize,
+    pub queued: AtomicUsize,
+    pub active: AtomicUsize,
+    /// EMA of per-token decode wall time, microseconds (f64 bits).
+    ema_us_per_token: AtomicU64,
+    /// Energy proxy: joules per generated token (configured, not measured —
+    /// the CPU testbed has no RAPL access; DESIGN.md §2).
+    pub j_per_token: f64,
+    pub tx_j_per_request: f64,
+}
+
+impl WorkerTelemetry {
+    pub fn new(kind: ServerKind, max_batch: usize, queue_cap: usize) -> Self {
+        let (j_tok, tx_j) = match kind {
+            ServerKind::Edge => (0.9, 0.4),
+            ServerKind::Cloud => (4.5, 1.6),
+        };
+        WorkerTelemetry {
+            kind,
+            max_batch: AtomicUsize::new(max_batch),
+            queue_cap: AtomicUsize::new(queue_cap),
+            queued: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            ema_us_per_token: AtomicU64::new(f64::to_bits(2000.0)),
+            j_per_token: j_tok,
+            tx_j_per_request: tx_j,
+        }
+    }
+
+    pub fn record_step_time(&self, us_per_token: f64) {
+        // EMA with alpha 0.2; CAS loop keeps it lock-free.
+        loop {
+            let cur = self.ema_us_per_token.load(Ordering::Relaxed);
+            let cur_f = f64::from_bits(cur);
+            let new_f = 0.8 * cur_f + 0.2 * us_per_token;
+            if self
+                .ema_us_per_token
+                .compare_exchange_weak(cur, f64::to_bits(new_f), Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+
+    pub fn us_per_token(&self) -> f64 {
+        f64::from_bits(self.ema_us_per_token.load(Ordering::Relaxed))
+    }
+}
+
+/// The leader's router: scheduler + live telemetry.
+pub struct Router {
+    scheduler: Box<dyn Scheduler>,
+    pub workers: Vec<Arc<WorkerTelemetry>>,
+    weights: EnergyWeights,
+    decisions: u64,
+    /// Requests routed to each worker and not yet completed — the router's
+    /// own in-flight bookkeeping (worker telemetry lags behind the mailbox,
+    /// exactly the thundering-herd hazard the DES engine also guards
+    /// against; see sim/cluster.rs InFlight).
+    outstanding: Vec<usize>,
+}
+
+impl Router {
+    pub fn new(scheduler: Box<dyn Scheduler>, workers: Vec<Arc<WorkerTelemetry>>) -> Self {
+        Router {
+            outstanding: vec![0; workers.len()],
+            scheduler,
+            workers,
+            weights: EnergyWeights::default(),
+            decisions: 0,
+        }
+    }
+
+    /// Snapshot telemetry into the scheduler-facing view for one request.
+    pub fn view(&self, expected_tokens: usize) -> ClusterView {
+        let servers = self
+            .workers
+            .iter()
+            .zip(&self.outstanding)
+            .map(|(w, &outst)| {
+                // Whichever is larger: what the worker has observed, or what
+                // we know we have sent it (telemetry lags the mailbox).
+                let queued = w.queued.load(Ordering::Relaxed);
+                let active = w.active.load(Ordering::Relaxed);
+                let queued = queued.max(outst.saturating_sub(active));
+                let us_tok = w.us_per_token();
+                // Everyone ahead of us plus ourselves, times per-token time.
+                let inflight_tokens = (queued + active + 1) * expected_tokens;
+                let predicted = inflight_tokens as f64 * us_tok / 1.0e6;
+                let cap = (w.max_batch.load(Ordering::Relaxed)
+                    + w.queue_cap.load(Ordering::Relaxed)) as f64;
+                let used = (queued + active) as f64;
+                ServerView {
+                    kind: w.kind,
+                    predicted_time: predicted,
+                    compute_headroom: (cap - used).max(0.0),
+                    compute_demand: 1.0,
+                    bandwidth_headroom: 1.0e9,
+                    bandwidth_demand: 1.0e6,
+                    tx_energy_est: w.tx_j_per_request,
+                    infer_energy_est: w.j_per_token * expected_tokens as f64,
+                    n_active: active,
+                    n_waiting: queued,
+                    solo_time_est: expected_tokens as f64 * us_tok / 1.0e6,
+                    occupancy: used / cap,
+                }
+            })
+            .collect();
+        ClusterView {
+            now: 0.0,
+            servers,
+            weights: self.weights,
+        }
+    }
+
+    /// Route one request; returns the worker index.
+    pub fn route(&mut self, req: &ServiceRequest) -> usize {
+        self.decisions += 1;
+        let view = self.view((req.prompt_tokens + req.output_tokens) as usize);
+        let d = self.scheduler.decide(req, &view);
+        let w = d.server.min(self.workers.len() - 1);
+        self.outstanding[w] += 1;
+        w
+    }
+
+    /// Feed the realized outcome back to the bandit.
+    pub fn complete(&mut self, outcome: &ServiceOutcome) {
+        if let Some(o) = self.outstanding.get_mut(outcome.server) {
+            *o = o.saturating_sub(1);
+        }
+        let view = self.view(outcome.tokens.max(1) as usize);
+        self.scheduler.feedback(outcome, &view);
+    }
+
+    pub fn diagnostics(&self) -> Vec<(String, f64)> {
+        self.scheduler.diagnostics()
+    }
+
+    /// Helper to build the ServiceRequest the scheduler expects from a raw
+    /// serving request.
+    pub fn service_request(
+        id: u64,
+        class: ServiceClass,
+        prompt_tokens: usize,
+        output_tokens: usize,
+        deadline_s: f64,
+    ) -> ServiceRequest {
+        ServiceRequest {
+            id,
+            class,
+            arrival: 0.0,
+            prompt_tokens: prompt_tokens as u32,
+            output_tokens: output_tokens as u32,
+            deadline: deadline_s,
+            payload_bytes: 4096 + prompt_tokens as u64 * 64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::csucb::CsUcb;
+
+    fn telemetry(kind: ServerKind) -> Arc<WorkerTelemetry> {
+        Arc::new(WorkerTelemetry::new(kind, 4, 8))
+    }
+
+    #[test]
+    fn routes_within_bounds_and_learns() {
+        let workers = vec![telemetry(ServerKind::Edge), telemetry(ServerKind::Cloud)];
+        let mut router = Router::new(Box::new(CsUcb::with_defaults(2)), workers);
+        let req = Router::service_request(1, ServiceClass::Chat, 16, 16, 5.0);
+        for _ in 0..50 {
+            let w = router.route(&req);
+            assert!(w < 2);
+        }
+    }
+
+    #[test]
+    fn view_reflects_telemetry() {
+        let workers = vec![telemetry(ServerKind::Edge), telemetry(ServerKind::Cloud)];
+        workers[0].queued.store(6, Ordering::Relaxed);
+        workers[0].active.store(4, Ordering::Relaxed);
+        workers[0].record_step_time(5000.0);
+        let router = Router::new(Box::new(CsUcb::with_defaults(2)), workers);
+        let view = router.view(32);
+        assert!(view.servers[0].predicted_time > view.servers[1].predicted_time);
+        assert!(view.servers[0].occupancy > view.servers[1].occupancy);
+        assert!(view.servers[0].compute_headroom < view.servers[1].compute_headroom);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let w = telemetry(ServerKind::Edge);
+        for _ in 0..100 {
+            w.record_step_time(1000.0);
+        }
+        assert!((w.us_per_token() - 1000.0).abs() < 50.0);
+    }
+
+    #[test]
+    fn loaded_worker_avoided_under_deadline() {
+        let workers = vec![telemetry(ServerKind::Edge), telemetry(ServerKind::Edge)];
+        // Worker 0 heavily loaded and slow.
+        workers[0].queued.store(12, Ordering::Relaxed);
+        workers[0].record_step_time(50_000.0);
+        let mut router = Router::new(Box::new(CsUcb::with_defaults(2)), workers);
+        let req = Router::service_request(1, ServiceClass::Chat, 16, 16, 2.0);
+        let mut to_1 = 0;
+        for _ in 0..20 {
+            if router.route(&req) == 1 {
+                to_1 += 1;
+            }
+        }
+        assert!(to_1 >= 18, "routed to loaded worker too often: {to_1}");
+    }
+}

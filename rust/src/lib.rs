@@ -1,0 +1,37 @@
+//! # PerLLM
+//!
+//! Personalized inference scheduling with edge-cloud collaboration for
+//! diverse LLM services — a full reproduction of Yang et al. (cs.DC 2024)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: request routing,
+//!   the CS-UCB constraint-satisfaction bandit scheduler (the paper's
+//!   contribution), the published baselines, continuous batching, a KV
+//!   cache manager, and the discrete-event edge-cloud cluster substrate
+//!   that replays the paper's evaluation at 10 k-request scale.
+//! * **Layer 2** — `python/compile/model.py`: a tiny LLaMA-style decoder
+//!   (two deployment sizes), AOT-lowered to HLO text at build time.
+//! * **Layer 1** — `python/compile/kernels/attention.py`: the Pallas
+//!   flash-attention kernel inside that model.
+//!
+//! Python never runs on the request path: `runtime/` loads the AOT HLO
+//! artifacts through the PJRT CPU client (`xla` crate) and serves real
+//! tokens from Rust.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

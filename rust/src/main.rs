@@ -1,0 +1,208 @@
+//! perllm — leader entrypoint.
+//!
+//! `perllm serve`   — serve real AOT models (edge + cloud engines) behind
+//!                    the CS-UCB router, report latency/throughput.
+//! `perllm sim`     — paper-scale DES experiment over all four schedulers.
+//! `perllm version` — build info.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use perllm::cli;
+use perllm::coordinator::server::{ServeRequest, ServingCluster};
+use perllm::runtime::{self, Artifacts, ModelEngine};
+use perllm::scheduler::{
+    agod::Agod, csucb::CsUcb, fineinfer::FineInfer, rewardless::RewardlessGuidance, Scheduler,
+};
+use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
+use perllm::sim::engine::simulate;
+use perllm::sim::server::ServerKind;
+use perllm::util::rng::Rng;
+use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
+use perllm::workload::service::ServiceClass;
+
+fn main() {
+    perllm::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd_name) = args.first() else {
+        print!("{}", cli::global_help());
+        return Ok(());
+    };
+    if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+        print!("{}", cli::global_help());
+        return Ok(());
+    }
+    let Some(spec) = cli::commands().into_iter().find(|c| c.name == cmd_name) else {
+        bail!("unknown command {cmd_name:?}\n{}", cli::global_help());
+    };
+    let rest = &args[1..];
+    if rest.iter().any(|a| a == "--help") {
+        print!("{}", spec.help());
+        return Ok(());
+    }
+    let parsed = spec.parse(rest)?;
+    match spec.name {
+        "version" => {
+            println!("perllm {}", perllm::version());
+            Ok(())
+        }
+        "sim" => cmd_sim(&parsed),
+        "serve" => cmd_serve(&parsed),
+        _ => unreachable!(),
+    }
+}
+
+fn make_scheduler(name: &str, n_servers: usize, cloud: usize, seed: u64) -> Result<Box<dyn Scheduler>> {
+    Ok(match name {
+        "cs-ucb" => Box::new(CsUcb::with_defaults(n_servers)),
+        "fineinfer" => Box::new(FineInfer::new(cloud)),
+        "agod" => Box::new(Agod::new(n_servers, seed)),
+        "rewardless" => Box::new(RewardlessGuidance::new(n_servers)),
+        other => bail!("unknown scheduler {other:?}"),
+    })
+}
+
+fn cmd_sim(p: &cli::Parsed) -> Result<()> {
+    let n = p.usize_or("requests", 10_000)?;
+    let model = p.str_or("model", "llama2-7b");
+    let rate = p.f64_or("rate", 15.0)?;
+    let seed = p.u64_or("seed", 42)?;
+    let mode = if p.flag("fluctuating") {
+        BandwidthMode::Fluctuating
+    } else {
+        BandwidthMode::Stable
+    };
+    let trace = generate(
+        &WorkloadConfig::default()
+            .with_requests(n)
+            .with_arrivals(ArrivalProcess::Poisson { rate })
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(seed),
+    );
+    let cfg = ClusterConfig::paper(&model, mode);
+    println!("perllm sim: {n} requests, edge model {model}, {mode:?} bandwidth, rate {rate}/s");
+    for name in ["fineinfer", "agod", "rewardless", "cs-ucb"] {
+        let mut s = make_scheduler(name, cfg.n_servers(), cfg.cloud_index(), seed)?;
+        let rep = simulate(&cfg, &trace, s.as_mut());
+        println!("{}", rep.summary_row());
+    }
+    Ok(())
+}
+
+fn report_reply(got: &mut usize, sent_prompts: &[&str], r: &perllm::coordinator::ServeReply) {
+    if *got < 4 {
+        println!(
+            "[worker {}] {:?} + {:?} ({} tok, {:.0} ms)",
+            r.worker,
+            sent_prompts.get(r.id as usize).copied().unwrap_or(""),
+            r.text.chars().take(60).collect::<String>(),
+            r.tokens,
+            r.latency_ms
+        );
+    }
+    *got += 1;
+}
+
+fn cmd_serve(p: &cli::Parsed) -> Result<()> {
+    let art_dir = p
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(runtime::default_artifact_dir);
+    let n = p.usize_or("requests", 64)?;
+    let edge_workers = p.usize_or("edge-workers", 2)?;
+    let max_new = p.usize_or("max-new-tokens", 48)?;
+    let seed = p.u64_or("seed", 42)?;
+    let sched_name = p.str_or("scheduler", "cs-ucb");
+
+    println!("loading artifacts from {art_dir:?}");
+    Artifacts::discover(&art_dir)?; // fail fast before spawning workers
+    type Factory = Box<dyn FnOnce() -> Result<ModelEngine> + Send>;
+    let mut engines: Vec<(ServerKind, Factory)> = Vec::new();
+    for _ in 0..edge_workers {
+        let dir = art_dir.clone();
+        engines.push((
+            ServerKind::Edge,
+            Box::new(move || {
+                let arts = Artifacts::discover(&dir)?;
+                ModelEngine::load(&runtime::cpu_client()?, &arts, "edge")
+            }),
+        ));
+    }
+    {
+        let dir = art_dir.clone();
+        engines.push((
+            ServerKind::Cloud,
+            Box::new(move || {
+                let arts = Artifacts::discover(&dir)?;
+                ModelEngine::load(&runtime::cpu_client()?, &arts, "cloud")
+            }),
+        ));
+    }
+    let n_workers = engines.len();
+    println!("{n_workers} workers ({edge_workers} edge + 1 cloud), scheduler {sched_name}");
+
+    let scheduler = make_scheduler(&sched_name, n_workers, n_workers - 1, seed)?;
+    let mut cluster = ServingCluster::start(engines, scheduler, seed)?;
+
+    let prompts = [
+        "Edge-cloud collaboration ",
+        "The scheduler learns ",
+        "Diverse services ask for ",
+        "PerLLM schedules each request ",
+    ];
+    let classes = [
+        ServiceClass::Chat,
+        ServiceClass::Summarize,
+        ServiceClass::Translate,
+        ServiceClass::Code,
+    ];
+    let mut rng = Rng::new(seed);
+    let mut sent_prompts: Vec<&str> = Vec::with_capacity(n);
+    let mut ok = 0usize;
+    let mut got = 0usize;
+    for i in 0..n {
+        let k = rng.index(prompts.len());
+        sent_prompts.push(prompts[k]);
+        cluster.submit(ServeRequest {
+            id: i as u64,
+            prompt: prompts[k].to_string(),
+            max_new_tokens: max_new,
+            deadline_s: rng.uniform(2.0, 6.0),
+            class: classes[k],
+            temperature: 0.8,
+            top_k: 200,
+        })?;
+        // Paced open-loop arrivals so queueing reflects routing, not a
+        // single burst.
+        while let Some(r) = cluster.recv_completion(Duration::from_millis(1)) {
+            if r.met_deadline() {
+                ok += 1;
+            }
+            report_reply(&mut got, &sent_prompts, &r);
+        }
+    }
+    while got < n {
+        let Some(r) = cluster.recv_completion(Duration::from_secs(120)) else {
+            bail!("timed out waiting for completions ({got}/{n})");
+        };
+        if r.met_deadline() {
+            ok += 1;
+        }
+        report_reply(&mut got, &sent_prompts, &r);
+    }
+    println!("\n{}", cluster.metrics.report());
+    println!("deadline success: {:.1}%", 100.0 * ok as f64 / n as f64);
+    for (k, v) in cluster.diagnostics() {
+        println!("  {k}: {v:.2}");
+    }
+    cluster.shutdown();
+    Ok(())
+}

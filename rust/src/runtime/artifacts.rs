@@ -1,0 +1,226 @@
+//! AOT artifact discovery: parse `artifacts/meta.txt` and the per-model
+//! weight manifests emitted by `python/compile/aot.py`.
+//!
+//! Formats (plain text — no serde offline, and greppable by humans):
+//!
+//! ```text
+//! meta.txt:      decode_batches 1 2 4 8
+//!                model edge vocab 256 d_model 64 n_layers 2 n_heads 4 ...
+//!                loss_curve edge 5.58 0.36 ...
+//! manifest:      <name> f32 <offset> <count> <d0> <d1> ...
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Geometry of one AOT-compiled model size.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub kv_dim: usize,
+}
+
+impl ModelMeta {
+    /// Floats in one request's KV cache: 2 (K,V) x L x S x KD.
+    pub fn kv_len(&self) -> usize {
+        2 * self.n_layers * self.max_seq * self.kv_dim
+    }
+}
+
+/// One weight tensor in the flat parameter blob.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub offset: usize,
+    pub count: usize,
+    pub dims: Vec<usize>,
+}
+
+/// Parsed artifact directory.
+#[derive(Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub decode_batches: Vec<usize>,
+    pub models: HashMap<String, ModelMeta>,
+    pub loss_curves: HashMap<String, Vec<f64>>,
+}
+
+impl Artifacts {
+    pub fn discover(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.txt");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} — run `make artifacts` first"))?;
+        let mut decode_batches = Vec::new();
+        let mut models = HashMap::new();
+        let mut loss_curves = HashMap::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("decode_batches") => {
+                    decode_batches = it
+                        .map(|s| s.parse::<usize>().context("bad batch"))
+                        .collect::<Result<_>>()?;
+                }
+                Some("model") => {
+                    let name = it.next().context("model name")?.to_string();
+                    let mut kv: HashMap<&str, usize> = HashMap::new();
+                    while let (Some(k), Some(v)) = (it.next(), it.next()) {
+                        kv.insert(k, v.parse().with_context(|| format!("bad {k}"))?);
+                    }
+                    let get = |k: &str| -> Result<usize> {
+                        kv.get(k).copied().with_context(|| format!("meta missing {k}"))
+                    };
+                    models.insert(
+                        name.clone(),
+                        ModelMeta {
+                            name,
+                            vocab: get("vocab")?,
+                            d_model: get("d_model")?,
+                            n_layers: get("n_layers")?,
+                            n_heads: get("n_heads")?,
+                            max_seq: get("max_seq")?,
+                            kv_dim: get("kv_dim")?,
+                        },
+                    );
+                }
+                Some("loss_curve") => {
+                    let name = it.next().context("curve name")?.to_string();
+                    let pts = it.filter_map(|s| s.parse().ok()).collect();
+                    loss_curves.insert(name, pts);
+                }
+                _ => {}
+            }
+        }
+        if decode_batches.is_empty() || models.is_empty() {
+            bail!("artifacts/meta.txt incomplete: {meta_path:?}");
+        }
+        Ok(Artifacts {
+            dir,
+            decode_batches,
+            models,
+            loss_curves,
+        })
+    }
+
+    pub fn hlo_path(&self, model: &str, kind: &str) -> PathBuf {
+        self.dir.join(format!("{model}_{kind}.hlo.txt"))
+    }
+
+    /// Load the flat little-endian f32 weight blob for a model.
+    pub fn load_params(&self, model: &str) -> Result<Vec<f32>> {
+        let path = self.dir.join(format!("{model}_params.bin"));
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{path:?}: length {} not a multiple of 4", bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Parse the weight manifest (tensor order matches the HLO's parameter
+    /// order, which is jax tree-leaf order).
+    pub fn load_manifest(&self, model: &str) -> Result<Vec<ParamEntry>> {
+        let path = self.dir.join(format!("{model}_manifest.txt"));
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        let mut out = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let name = it.next().with_context(|| format!("{path:?}:{ln}"))?.to_string();
+            let dtype = it.next().context("dtype")?;
+            if dtype != "f32" {
+                bail!("{path:?}:{ln}: unsupported dtype {dtype}");
+            }
+            let offset: usize = it.next().context("offset")?.parse()?;
+            let count: usize = it.next().context("count")?.parse()?;
+            let dims: Vec<usize> = it.map(|d| d.parse().unwrap()).collect();
+            let prod: usize = dims.iter().product::<usize>().max(1);
+            if prod != count {
+                bail!("{path:?}:{ln}: dims {dims:?} != count {count}");
+            }
+            out.push(ParamEntry {
+                name,
+                offset,
+                count,
+                dims,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Artifacts> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        Artifacts::discover(dir).ok()
+    }
+
+    #[test]
+    fn discovers_built_artifacts() {
+        let Some(a) = repo_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(a.models.contains_key("edge"));
+        assert!(a.models.contains_key("cloud"));
+        assert!(!a.decode_batches.is_empty());
+        let edge = &a.models["edge"];
+        assert_eq!(edge.vocab, 256);
+        assert!(edge.kv_len() > 0);
+    }
+
+    #[test]
+    fn manifest_matches_blob() {
+        let Some(a) = repo_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for model in ["edge", "cloud"] {
+            let params = a.load_params(model).unwrap();
+            let manifest = a.load_manifest(model).unwrap();
+            let total: usize = manifest.iter().map(|e| e.count).sum();
+            assert_eq!(total, params.len(), "{model}: manifest vs blob");
+            // Offsets are contiguous and ordered.
+            let mut off = 0;
+            for e in &manifest {
+                assert_eq!(e.offset, off, "{model}/{}", e.name);
+                off += e.count;
+            }
+        }
+    }
+
+    #[test]
+    fn loss_curves_show_training() {
+        let Some(a) = repo_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for (name, curve) in &a.loss_curves {
+            assert!(curve.len() >= 2, "{name}");
+            assert!(
+                curve.last().unwrap() < &(curve[0] * 0.5),
+                "{name}: loss did not drop: {curve:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Artifacts::discover("/nonexistent/path").is_err());
+    }
+}

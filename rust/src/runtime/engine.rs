@@ -1,0 +1,255 @@
+//! Model engine: loads the AOT HLO artifacts through the PJRT CPU client
+//! and serves real prefill/decode steps from Rust — Python is never on
+//! this path.
+//!
+//! One `ModelEngine` per deployment size. Weights live as device-resident
+//! `PjRtBuffer`s created once at load; each step uploads only the small
+//! dynamic inputs (tokens, positions, KV cache) and downloads logits + the
+//! updated KV. Decode is compiled per batch bucket (1, 2, 4, 8); the
+//! batcher pads the live request set up to the nearest bucket with dead
+//! lanes (vLLM-style shape bucketing under AOT constraints).
+
+use anyhow::{anyhow, bail, Result};
+
+use super::artifacts::{Artifacts, ModelMeta};
+
+/// Per-request KV cache: one contiguous `(2, L, S, KD)` f32 block (batch-
+/// major layout in the HLO means request caches concatenate directly).
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub data: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn zeroed(meta: &ModelMeta) -> Self {
+        KvCache {
+            data: vec![0.0; meta.kv_len()],
+        }
+    }
+}
+
+/// A compiled model with resident weights.
+pub struct ModelEngine {
+    pub meta: ModelMeta,
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    /// (batch, executable), ascending by batch.
+    decode_exes: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    /// Device-resident weights, in HLO parameter order.
+    param_bufs: Vec<xla::PjRtBuffer>,
+    /// Step counters (metrics).
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+}
+
+impl ModelEngine {
+    /// Compile `model` ("edge" | "cloud") from an artifact directory on a
+    /// shared PJRT CPU client.
+    pub fn load(client: &xla::PjRtClient, arts: &Artifacts, model: &str) -> Result<Self> {
+        let meta = arts
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model}"))?
+            .clone();
+
+        let compile = |kind: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = arts.hlo_path(model, kind);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
+        };
+
+        let prefill_exe = compile("prefill")?;
+        let mut decode_exes = Vec::new();
+        for &b in &arts.decode_batches {
+            decode_exes.push((b, compile(&format!("decode_b{b}"))?));
+        }
+        decode_exes.sort_by_key(|(b, _)| *b);
+
+        // Upload weights once; they are arguments to every execution.
+        let blob = arts.load_params(model)?;
+        let manifest = arts.load_manifest(model)?;
+        let mut param_bufs = Vec::with_capacity(manifest.len());
+        for e in &manifest {
+            let slice = &blob[e.offset..e.offset + e.count];
+            let dims = if e.dims.is_empty() { vec![e.count] } else { e.dims.clone() };
+            let buf = client
+                .buffer_from_host_buffer::<f32>(slice, &dims, None)
+                .map_err(|e2| anyhow!("uploading {}: {e2:?}", e.name))?;
+            param_bufs.push(buf);
+        }
+
+        Ok(ModelEngine {
+            meta,
+            client: client.clone(),
+            prefill_exe,
+            decode_exes,
+            param_bufs,
+            prefill_steps: 0,
+            decode_steps: 0,
+        })
+    }
+
+    /// Available decode batch buckets (ascending).
+    pub fn batch_buckets(&self) -> Vec<usize> {
+        self.decode_exes.iter().map(|(b, _)| *b).collect()
+    }
+
+    /// Smallest compiled bucket >= n (or the largest bucket if n exceeds
+    /// them all — the caller must then split the batch).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        for (b, _) in &self.decode_exes {
+            if *b >= n {
+                return *b;
+            }
+        }
+        self.decode_exes.last().map(|(b, _)| *b).unwrap_or(1)
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        self.decode_exes.last().map(|(b, _)| *b).unwrap_or(1)
+    }
+
+    /// Run prefill on a prompt (<= max_seq tokens). Returns next-token
+    /// logits and the populated KV cache.
+    pub fn prefill(&mut self, prompt: &[i32]) -> Result<(Vec<f32>, KvCache)> {
+        let s = self.meta.max_seq;
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() > s {
+            bail!("prompt length {} exceeds max_seq {s}", prompt.len());
+        }
+        let mut tokens = vec![0i32; s];
+        tokens[..prompt.len()].copy_from_slice(prompt);
+
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&tokens, &[1, s], None)
+            .map_err(|e| anyhow!("tokens upload: {e:?}"))?;
+        let len_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&[prompt.len() as i32], &[], None)
+            .map_err(|e| anyhow!("len upload: {e:?}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+
+        let result = self
+            .prefill_exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("prefill execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("prefill readback: {e:?}"))?;
+        let (logits_l, kv_l) = lit
+            .to_tuple2()
+            .map_err(|e| anyhow!("prefill tuple: {e:?}"))?;
+        let logits = logits_l
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
+        let kv = kv_l.to_vec::<f32>().map_err(|e| anyhow!("kv: {e:?}"))?;
+        debug_assert_eq!(kv.len(), self.meta.kv_len());
+        self.prefill_steps += 1;
+        Ok((logits, KvCache { data: kv }))
+    }
+
+    /// One continuous-batching decode iteration over `lanes` live requests.
+    ///
+    /// `tokens[i]` is the current token of lane i at absolute position
+    /// `pos[i]`; `kvs[i]` is that lane's cache, updated in place. The batch
+    /// is padded up to the compiled bucket with dead lanes.
+    pub fn decode_batch(
+        &mut self,
+        tokens: &[i32],
+        pos: &[usize],
+        kvs: &mut [&mut KvCache],
+    ) -> Result<Vec<Vec<f32>>> {
+        let n = tokens.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        if pos.len() != n || kvs.len() != n {
+            bail!("lane count mismatch: {n} tokens, {} pos, {} kvs", pos.len(), kvs.len());
+        }
+        if n > self.max_bucket() {
+            bail!("batch {n} exceeds largest compiled bucket {}", self.max_bucket());
+        }
+        for (i, &p) in pos.iter().enumerate() {
+            if p >= self.meta.max_seq {
+                bail!("lane {i}: position {p} >= max_seq {}", self.meta.max_seq);
+            }
+        }
+        let b = self.bucket_for(n);
+        let exe_idx = self
+            .decode_exes
+            .iter()
+            .position(|(bb, _)| *bb == b)
+            .expect("bucket exists");
+
+        let kv_len = self.meta.kv_len();
+        let mut tok_pad = vec![0i32; b];
+        let mut pos_pad = vec![0i32; b];
+        let mut kv_pad = vec![0f32; b * kv_len];
+        for i in 0..n {
+            tok_pad[i] = tokens[i];
+            pos_pad[i] = pos[i] as i32;
+            kv_pad[i * kv_len..(i + 1) * kv_len].copy_from_slice(&kvs[i].data);
+        }
+
+        let meta = &self.meta;
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&tok_pad, &[b], None)
+            .map_err(|e| anyhow!("tok upload: {e:?}"))?;
+        let pos_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&pos_pad, &[b], None)
+            .map_err(|e| anyhow!("pos upload: {e:?}"))?;
+        let kv_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(
+                &kv_pad,
+                &[b, 2, meta.n_layers, meta.max_seq, meta.kv_dim],
+                None,
+            )
+            .map_err(|e| anyhow!("kv upload: {e:?}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.push(&kv_buf);
+
+        let result = self.decode_exes[exe_idx]
+            .1
+            .execute_b(&args)
+            .map_err(|e| anyhow!("decode execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("decode readback: {e:?}"))?;
+        let (logits_l, kv_l) = lit.to_tuple2().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let logits_flat = logits_l.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?;
+        let kv_out = kv_l.to_vec::<f32>().map_err(|e| anyhow!("kv out: {e:?}"))?;
+
+        let v = meta.vocab;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(logits_flat[i * v..(i + 1) * v].to_vec());
+            kvs[i]
+                .data
+                .copy_from_slice(&kv_out[i * kv_len..(i + 1) * kv_len]);
+        }
+        self.decode_steps += 1;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need built artifacts live in rust/tests/runtime_pjrt.rs
+    // (integration, so the PJRT client is only spun up once per binary).
+}

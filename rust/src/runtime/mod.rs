@@ -1,0 +1,27 @@
+//! Runtime layer: loads the build-time AOT artifacts (HLO text + weight
+//! blobs) through the PJRT CPU client (`xla` crate) and serves real model
+//! steps from the Rust request path. See /opt/xla-example/load_hlo for the
+//! interchange pattern; DESIGN.md §3 for why HLO *text* is the format.
+
+pub mod artifacts;
+pub mod engine;
+pub mod tokenizer;
+
+pub use artifacts::{Artifacts, ModelMeta, ParamEntry};
+pub use engine::{KvCache, ModelEngine};
+
+use anyhow::Result;
+
+/// Create the shared PJRT CPU client (one per process).
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))
+}
+
+/// Default artifact directory: `$PERLLM_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("PERLLM_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}

@@ -1,0 +1,115 @@
+//! Byte-level tokenizer + sampling.
+//!
+//! The Layer-2 models use a byte vocabulary (V = 256), so tokenization is
+//! a codec, not a lookup — no external vocabulary files needed offline,
+//! and any UTF-8 prompt round-trips exactly.
+
+use crate::util::rng::Rng;
+
+/// Encode text as i32 byte tokens.
+pub fn encode(text: &str) -> Vec<i32> {
+    text.as_bytes().iter().map(|&b| b as i32).collect()
+}
+
+/// Decode tokens back to text (lossy on invalid UTF-8 boundaries).
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Greedy argmax sampling.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Temperature + top-k sampling (paper §4.1 serves with temperature 0.8,
+/// top-k 200; our byte vocab caps k at 256).
+pub fn sample_topk(logits: &[f32], temperature: f32, k: usize, rng: &mut Rng) -> i32 {
+    if temperature <= 0.0 || k <= 1 {
+        return argmax(logits);
+    }
+    let k = k.min(logits.len());
+    // Partial top-k by index sort (vocab is tiny; simplicity wins).
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    idx.truncate(k);
+    let maxv = logits[idx[0]];
+    let mut probs: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i] - maxv) / temperature) as f64).exp())
+        .collect();
+    let sum: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= sum;
+    }
+    let mut u = rng.f64();
+    for (i, &p) in probs.iter().enumerate() {
+        u -= p;
+        if u <= 0.0 {
+            return idx[i] as i32;
+        }
+    }
+    idx[k - 1] as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_utf8() {
+        let text = "Hello, edge-cloud! ünïcødé";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn encode_is_bytes() {
+        assert_eq!(encode("AB"), vec![65, 66]);
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 2.0, -1.0, 1.9]), 1);
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let mut rng = Rng::new(1);
+        let logits = vec![0.0, 5.0, 1.0];
+        for _ in 0..10 {
+            assert_eq!(sample_topk(&logits, 0.0, 200, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn topk_respects_k() {
+        let mut rng = Rng::new(2);
+        // Only indices 1 and 3 are in the top-2.
+        let logits = vec![0.0, 5.0, 1.0, 4.0];
+        for _ in 0..200 {
+            let t = sample_topk(&logits, 1.0, 2, &mut rng);
+            assert!(t == 1 || t == 3, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn sampling_distribution_follows_logits() {
+        let mut rng = Rng::new(3);
+        let logits = vec![2.0, 0.0];
+        let n = 5000;
+        let ones = (0..n)
+            .filter(|_| sample_topk(&logits, 1.0, 2, &mut rng) == 0)
+            .count();
+        let frac = ones as f64 / n as f64;
+        // softmax(2,0) ≈ (0.88, 0.12)
+        assert!((frac - 0.88).abs() < 0.03, "frac={frac}");
+    }
+}

@@ -1,0 +1,150 @@
+//! AGOD baseline (Du et al., IEEE TMC'24): an **edge-only** offloading
+//! scheme combining a diffusion-model decision generator with deep
+//! reinforcement learning.
+//!
+//! Substitution (DESIGN.md §2): the published AGOD samples offloading
+//! decisions by iteratively denoising from noise, guided by a learned
+//! critic. We reproduce that decision *process* with a tabular critic
+//! Q[class][edge] and an iterative perturb-and-refine sampler: start from a
+//! uniformly random assignment ("pure noise") and, over K denoising steps,
+//! move toward the critic's argmax with temperature decaying per step.
+//! What the paper's evaluation exercises — edge-only placement learned from
+//! reward — is preserved; the diffusion parameterization itself is not
+//! load-bearing for Table 1 / Figs. 4-6.
+
+use super::{ClusterView, Decision, Scheduler};
+use crate::sim::server::ServerKind;
+use crate::util::rng::Rng;
+use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest};
+
+pub struct Agod {
+    /// Q[class][server], only edge entries used.
+    q: Vec<Vec<f64>>,
+    counts: Vec<Vec<u64>>,
+    rng: Rng,
+    /// Denoising steps K.
+    pub steps: usize,
+    /// Learning rate for the critic update.
+    pub lr: f64,
+    decisions: u64,
+}
+
+impl Agod {
+    pub fn new(n_servers: usize, seed: u64) -> Self {
+        Agod {
+            q: vec![vec![0.0; n_servers]; ServiceClass::ALL.len()],
+            counts: vec![vec![0; n_servers]; ServiceClass::ALL.len()],
+            rng: Rng::new(seed),
+            steps: 6,
+            lr: 0.15,
+            decisions: 0,
+        }
+    }
+
+    fn edge_indices(view: &ClusterView) -> Vec<usize> {
+        (0..view.servers.len())
+            .filter(|&j| view.servers[j].kind == ServerKind::Edge)
+            .collect()
+    }
+}
+
+impl Scheduler for Agod {
+    fn name(&self) -> &'static str {
+        "agod (edge-only)"
+    }
+
+    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Decision {
+        self.decisions += 1;
+        let edges = Self::edge_indices(view);
+        assert!(!edges.is_empty(), "AGOD needs edge servers");
+        let class = req.class.index();
+
+        // Denoising chain: start from noise, anneal toward the critic's
+        // preference blended with the instantaneous load signal.
+        let mut current = *self.rng.choose(&edges);
+        for k in 0..self.steps {
+            // Temperature decays 1 -> 0 over the chain.
+            let temp = 1.0 - (k as f64 + 1.0) / self.steps as f64;
+            if self.rng.chance(temp * 0.6) {
+                // Noise step: jump to a random edge.
+                current = *self.rng.choose(&edges);
+            } else {
+                // Guidance step: move to the best edge under critic +
+                // load-balancing tiebreak.
+                current = edges
+                    .iter()
+                    .copied()
+                    .max_by(|&a, &b| {
+                        let va = self.q[class][a] - 0.01 * view.servers[a].n_waiting as f64;
+                        let vb = self.q[class][b] - 0.01 * view.servers[b].n_waiting as f64;
+                        va.partial_cmp(&vb).unwrap()
+                    })
+                    .unwrap_or(current);
+            }
+        }
+        Decision::now(current)
+    }
+
+    fn feedback(&mut self, outcome: &ServiceOutcome, _view: &ClusterView) {
+        let class = outcome.class.index();
+        let j = outcome.server;
+        // Same Eq.-4-shaped reward as CS-UCB (fair comparison).
+        let r = -outcome.energy_j / 1000.0 + 0.5 * outcome.slack().clamp(-2.0, 1.0);
+        self.counts[class][j] += 1;
+        let q = &mut self.q[class][j];
+        *q += self.lr * (r - *q);
+    }
+
+    fn diagnostics(&self) -> Vec<(String, f64)> {
+        vec![("decisions".into(), self.decisions as f64)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::{test_req, test_view};
+    use super::*;
+
+    #[test]
+    fn never_picks_cloud() {
+        // test_view marks server 0 as cloud.
+        let mut s = Agod::new(3, 1);
+        let view = test_view(vec![1.0, 1.0, 1.0]);
+        for _ in 0..100 {
+            let d = s.decide(&test_req(3.0), &view);
+            assert_ne!(d.server, 0, "picked the cloud");
+        }
+    }
+
+    #[test]
+    fn learns_toward_high_reward_edge() {
+        let mut s = Agod::new(3, 2);
+        let view = test_view(vec![1.0, 1.0, 1.0]); // 0=cloud, 1/2=edge
+        let req = test_req(4.0);
+        for _ in 0..300 {
+            let d = s.decide(&req, &view);
+            let energy = if d.server == 1 { 50.0 } else { 900.0 };
+            let o = ServiceOutcome {
+                id: 1,
+                class: req.class,
+                server: d.server,
+                tx_time: 0.05,
+                infer_time: 0.95,
+                processing_time: 1.0,
+                deadline: 4.0,
+                energy_j: energy,
+                tokens: 80,
+                completed_at: 1.0,
+            };
+            s.feedback(&o, &view);
+        }
+        // After training, the critic must prefer edge 1.
+        let mut picks1 = 0;
+        for _ in 0..100 {
+            if s.decide(&req, &view).server == 1 {
+                picks1 += 1;
+            }
+        }
+        assert!(picks1 > 60, "picks1={picks1}");
+    }
+}

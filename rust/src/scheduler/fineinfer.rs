@@ -1,0 +1,74 @@
+//! FineInfer baseline (He, Lu, Alonso — EuroMLSys'24): a **cloud-only**
+//! solution with *deferred continuous batching* — requests are held until
+//! the next batch boundary and dispatched to the cloud together, improving
+//! batch occupancy at the cost of head-of-line latency and leaving the
+//! shared cloud uplink as the bottleneck (hence its Figure-5 throughput
+//! floor in the paper).
+
+use super::{ClusterView, Decision, Scheduler};
+use crate::workload::service::ServiceRequest;
+
+pub struct FineInfer {
+    cloud: usize,
+    /// Deferred-batching window, seconds.
+    pub window_s: f64,
+    decisions: u64,
+}
+
+impl FineInfer {
+    pub fn new(cloud_index: usize) -> Self {
+        FineInfer {
+            cloud: cloud_index,
+            window_s: 0.25,
+            decisions: 0,
+        }
+    }
+}
+
+impl Scheduler for FineInfer {
+    fn name(&self) -> &'static str {
+        "fineinfer (cloud-only)"
+    }
+
+    fn decide(&mut self, _req: &ServiceRequest, view: &ClusterView) -> Decision {
+        self.decisions += 1;
+        // Hold until the next global batch boundary.
+        let phase = view.now % self.window_s;
+        let defer = if phase == 0.0 { 0.0 } else { self.window_s - phase };
+        Decision {
+            server: self.cloud,
+            defer_s: defer,
+        }
+    }
+
+    fn diagnostics(&self) -> Vec<(String, f64)> {
+        vec![("decisions".into(), self.decisions as f64)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::{test_req, test_view};
+    use super::*;
+
+    #[test]
+    fn always_cloud() {
+        let mut s = FineInfer::new(0);
+        let view = test_view(vec![1.0, 0.5]);
+        for _ in 0..10 {
+            assert_eq!(s.decide(&test_req(3.0), &view).server, 0);
+        }
+    }
+
+    #[test]
+    fn defers_to_batch_boundary() {
+        let mut s = FineInfer::new(0);
+        let mut view = test_view(vec![1.0]);
+        view.now = 0.10;
+        let d = s.decide(&test_req(3.0), &view);
+        assert!((d.defer_s - 0.15).abs() < 1e-9, "defer={}", d.defer_s);
+        view.now = 0.25;
+        let d2 = s.decide(&test_req(3.0), &view);
+        assert_eq!(d2.defer_s, 0.0);
+    }
+}

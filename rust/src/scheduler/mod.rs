@@ -1,0 +1,230 @@
+//! Scheduling layer: the paper's contribution (CS-UCB) plus the three
+//! published baselines and a clairvoyant oracle, behind one trait.
+//!
+//! Every scheduler sees the *same* cluster view (same predictors, same
+//! resource snapshots) — differences in the results come from decision
+//! logic, not from information asymmetry.
+
+pub mod agod;
+pub mod csucb;
+pub mod fineinfer;
+pub mod oracle;
+pub mod rewardless;
+
+use crate::sim::energy::EnergyWeights;
+use crate::sim::server::ServerKind;
+use crate::workload::service::{ServiceOutcome, ServiceRequest};
+
+/// Per-candidate-server snapshot handed to the scheduler for one request.
+#[derive(Debug, Clone)]
+pub struct ServerView {
+    pub kind: ServerKind,
+    /// Predicted end-to-end processing time if this request is assigned
+    /// here *now* (upload fair-share + queue wait + stretched service).
+    pub predicted_time: f64,
+    /// Remaining compute units (paper C2 headroom).
+    pub compute_headroom: f64,
+    /// Compute units this request would consume (paper C_i).
+    pub compute_demand: f64,
+    /// Available uplink bandwidth for a new flow, bits/s (paper C3 headroom).
+    pub bandwidth_headroom: f64,
+    /// Bandwidth the request's upload needs to meet its share, bits/s.
+    pub bandwidth_demand: f64,
+    /// Estimated transmission energy for this request, J.
+    pub tx_energy_est: f64,
+    /// Estimated marginal inference energy for this request, J.
+    pub infer_energy_est: f64,
+    /// Batch occupancy right now.
+    pub n_active: usize,
+    pub n_waiting: usize,
+    /// Load-independent estimate: solo transmission + solo service time.
+    /// Methods without a calibrated queueing model (RewardlessGuidance)
+    /// combine this with `occupancy` instead of `predicted_time`.
+    pub solo_time_est: f64,
+    /// Fraction of the server's slots + bounded queue currently occupied.
+    pub occupancy: f64,
+}
+
+/// Cluster snapshot at decision time (the CMAB state space s of §3.2).
+#[derive(Debug, Clone)]
+pub struct ClusterView {
+    pub now: f64,
+    pub servers: Vec<ServerView>,
+    pub weights: EnergyWeights,
+}
+
+impl ClusterView {
+    /// Paper Eq. 3 for a single assignment y = (request → server j): the
+    /// minimum normalized slack across the three constraint families.
+    /// f(y) >= 0 iff C1, C2, C3 all hold.
+    pub fn constraint_satisfaction(&self, req: &ServiceRequest, server: usize) -> f64 {
+        let sv = &self.servers[server];
+        let d = (req.deadline - sv.predicted_time) / req.deadline;
+        let c = if sv.compute_headroom > 0.0 {
+            (sv.compute_headroom - sv.compute_demand) / sv.compute_headroom.max(1e-9)
+        } else {
+            -1.0
+        };
+        let b = if sv.bandwidth_headroom > 0.0 {
+            (sv.bandwidth_headroom - sv.bandwidth_demand) / sv.bandwidth_headroom.max(1e-9)
+        } else {
+            -1.0
+        };
+        d.min(c).min(b)
+    }
+
+    /// Estimated weighted energy cost (Eq. 2 terms) of the assignment.
+    pub fn energy_cost(&self, server: usize) -> f64 {
+        let sv = &self.servers[server];
+        self.weights.w_tran * sv.tx_energy_est + self.weights.w_infer * sv.infer_energy_est
+    }
+
+    /// Servers whose assignment satisfies every constraint (f(y) >= 0).
+    pub fn feasible_servers(&self, req: &ServiceRequest) -> Vec<usize> {
+        self.feasible_servers_with_slack(req, 0.0)
+    }
+
+    /// Servers with at least `margin` normalized slack on the binding
+    /// constraint (f(y) >= margin). A positive margin absorbs the load that
+    /// arrives between admission and completion.
+    pub fn feasible_servers_with_slack(&self, req: &ServiceRequest, margin: f64) -> Vec<usize> {
+        (0..self.servers.len())
+            .filter(|&j| self.constraint_satisfaction(req, j) >= margin)
+            .collect()
+    }
+
+    /// Fallback when no server is feasible: the paper assigns the service
+    /// to "a more resource-rich server" — the one with maximum f(y), i.e.
+    /// the least-violating assignment.
+    pub fn least_violating(&self, req: &ServiceRequest) -> usize {
+        (0..self.servers.len())
+            .max_by(|&a, &b| {
+                self.constraint_satisfaction(req, a)
+                    .partial_cmp(&self.constraint_satisfaction(req, b))
+                    .unwrap()
+            })
+            .expect("non-empty cluster")
+    }
+}
+
+/// A scheduling decision for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    /// Target server index.
+    pub server: usize,
+    /// Hold the request this long before dispatching (deferred batching).
+    pub defer_s: f64,
+}
+
+impl Decision {
+    pub fn now(server: usize) -> Decision {
+        Decision {
+            server,
+            defer_s: 0.0,
+        }
+    }
+}
+
+/// Common interface for PerLLM and baselines.
+pub trait Scheduler: Send {
+    fn name(&self) -> &'static str;
+
+    /// Choose a server for `req` given the current cluster view.
+    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Decision;
+
+    /// Observe the realized outcome of a past decision (bandit feedback).
+    fn feedback(&mut self, _outcome: &ServiceOutcome, _view: &ClusterView) {}
+
+    /// Scheduler-specific diagnostics for reports (e.g. cumulative regret).
+    fn diagnostics(&self) -> Vec<(String, f64)> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::service::ServiceClass;
+
+    pub(crate) fn test_view(predicted: Vec<f64>) -> ClusterView {
+        let servers = predicted
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| ServerView {
+                kind: if i == 0 { ServerKind::Cloud } else { ServerKind::Edge },
+                predicted_time: p,
+                compute_headroom: 2.0,
+                compute_demand: 0.5,
+                bandwidth_headroom: 50.0e6,
+                bandwidth_demand: 1.0e6,
+                tx_energy_est: 1.0,
+                infer_energy_est: 5.0,
+                n_active: 0,
+                n_waiting: 0,
+                solo_time_est: p,
+                occupancy: 0.0,
+            })
+            .collect();
+        ClusterView {
+            now: 0.0,
+            servers,
+            weights: EnergyWeights::default(),
+        }
+    }
+
+    pub(crate) fn test_req(deadline: f64) -> ServiceRequest {
+        ServiceRequest {
+            id: 7,
+            class: ServiceClass::Chat,
+            arrival: 0.0,
+            prompt_tokens: 50,
+            output_tokens: 30,
+            deadline,
+            payload_bytes: 100_000,
+        }
+    }
+
+    #[test]
+    fn fy_positive_iff_all_constraints_hold() {
+        let view = test_view(vec![1.0, 3.0]);
+        let req = test_req(2.0);
+        assert!(view.constraint_satisfaction(&req, 0) >= 0.0);
+        assert!(view.constraint_satisfaction(&req, 1) < 0.0); // misses deadline
+        assert_eq!(view.feasible_servers(&req), vec![0]);
+    }
+
+    #[test]
+    fn fy_detects_compute_violation() {
+        let mut view = test_view(vec![1.0]);
+        view.servers[0].compute_demand = 5.0; // exceeds headroom 2.0
+        let req = test_req(4.0);
+        assert!(view.constraint_satisfaction(&req, 0) < 0.0);
+    }
+
+    #[test]
+    fn fy_detects_bandwidth_violation() {
+        let mut view = test_view(vec![1.0]);
+        view.servers[0].bandwidth_demand = 100.0e6;
+        let req = test_req(4.0);
+        assert!(view.constraint_satisfaction(&req, 0) < 0.0);
+    }
+
+    #[test]
+    fn least_violating_picks_max_fy() {
+        let view = test_view(vec![10.0, 4.0, 8.0]);
+        let req = test_req(2.0); // everyone infeasible
+        assert!(view.feasible_servers(&req).is_empty());
+        assert_eq!(view.least_violating(&req), 1);
+    }
+
+    #[test]
+    fn energy_cost_weighted() {
+        let mut view = test_view(vec![1.0]);
+        view.weights = EnergyWeights {
+            w_tran: 2.0,
+            w_infer: 1.0,
+            w_idle: 1.0,
+        };
+        assert!((view.energy_cost(0) - (2.0 + 5.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,71 @@
+//! Clairvoyant oracle scheduler: lower-bound reference for regret and
+//! ablation studies (not part of the paper's baseline set).
+//!
+//! Uses the cluster's own predictor directly: among deadline-feasible
+//! servers pick the minimum estimated energy; otherwise the fastest. Since
+//! the DES predictor is well-calibrated this is near-optimal per decision,
+//! which is exactly what a regret denominator needs.
+
+use super::{ClusterView, Decision, Scheduler};
+use crate::workload::service::ServiceRequest;
+
+#[derive(Default)]
+pub struct Oracle {
+    decisions: u64,
+}
+
+impl Oracle {
+    pub fn new() -> Self {
+        Oracle::default()
+    }
+}
+
+impl Scheduler for Oracle {
+    fn name(&self) -> &'static str {
+        "oracle (clairvoyant)"
+    }
+
+    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Decision {
+        self.decisions += 1;
+        let feasible = view.feasible_servers(req);
+        let j = if feasible.is_empty() {
+            view.least_violating(req)
+        } else {
+            feasible
+                .into_iter()
+                .min_by(|&a, &b| {
+                    view.energy_cost(a)
+                        .partial_cmp(&view.energy_cost(b))
+                        .unwrap()
+                })
+                .unwrap()
+        };
+        Decision::now(j)
+    }
+
+    fn diagnostics(&self) -> Vec<(String, f64)> {
+        vec![("decisions".into(), self.decisions as f64)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::{test_req, test_view};
+    use super::*;
+
+    #[test]
+    fn picks_cheapest_feasible() {
+        let mut s = Oracle::new();
+        let mut view = test_view(vec![1.0, 1.0]);
+        view.servers[0].infer_energy_est = 50.0;
+        view.servers[1].infer_energy_est = 5.0;
+        assert_eq!(s.decide(&test_req(3.0), &view).server, 1);
+    }
+
+    #[test]
+    fn falls_back_to_fastest_when_infeasible() {
+        let mut s = Oracle::new();
+        let view = test_view(vec![9.0, 7.0]);
+        assert_eq!(s.decide(&test_req(2.0), &view).server, 1);
+    }
+}

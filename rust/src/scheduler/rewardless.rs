@@ -1,0 +1,136 @@
+//! RewardlessGuidance baseline (Fang et al., IEEE VTC'23): edge-cloud
+//! offloading by **active inference** — decisions minimize expected free
+//! energy (risk + ambiguity) computed from the current state, *without*
+//! a reward feedback loop (hence "rewardless").
+//!
+//! Risk: how badly the predicted processing time threatens the deadline,
+//! plus the normalized energy estimate. Ambiguity: epistemic preference
+//! for less-visited (class, server) pairs, decaying with visits. The
+//! method is edge-cloud aware but cannot consolidate experience into
+//! reward estimates, which is exactly the scheduling-quality gap the
+//! paper's evaluation shows against CS-UCB.
+
+use super::{ClusterView, Decision, Scheduler};
+use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest};
+
+pub struct RewardlessGuidance {
+    /// Visit counts per (class, server) — the only state it keeps.
+    visits: Vec<Vec<u64>>,
+    /// Ambiguity weight.
+    pub kappa: f64,
+    /// Energy weight in the risk term.
+    pub rho: f64,
+    decisions: u64,
+}
+
+impl RewardlessGuidance {
+    pub fn new(n_servers: usize) -> Self {
+        RewardlessGuidance {
+            visits: vec![vec![0; n_servers]; ServiceClass::ALL.len()],
+            kappa: 0.4,
+            rho: 0.9,
+            decisions: 0,
+        }
+    }
+
+    /// Expected free energy of assigning `req` to server `j` (lower =
+    /// better).
+    fn efe(&self, req: &ServiceRequest, view: &ClusterView, j: usize) -> f64 {
+        let sv = &view.servers[j];
+        // Risk from nominal expectations stretched by raw occupancy: active
+        // inference sees the current state s (the paper defines the state
+        // as each server's live compute/bandwidth), but has no calibrated
+        // queueing model and no reward learning — the adaptability gap the
+        // paper's evaluation exposes.
+        let pressure = sv.solo_time_est * (1.0 + 0.8 * sv.occupancy) / req.deadline;
+        // No constraint filter and no superlinear deadline aversion — a
+        // preference prior trades time against energy linearly, which is
+        // where it gives ground to CS-UCB's C1-C3 mechanism.
+        let risk = pressure + self.rho * view.energy_cost(j) / 1000.0;
+        // Ambiguity: uncertainty about rarely-visited pairs *reduces* free
+        // energy (exploration drive) — active inference agents seek
+        // information.
+        let v = self.visits[req.class.index()][j] as f64;
+        let ambiguity = -self.kappa / (1.0 + v).sqrt();
+        risk + ambiguity
+    }
+}
+
+impl Scheduler for RewardlessGuidance {
+    fn name(&self) -> &'static str {
+        "rewardless (edge-cloud)"
+    }
+
+    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Decision {
+        self.decisions += 1;
+        let j = (0..view.servers.len())
+            .min_by(|&a, &b| {
+                self.efe(req, view, a)
+                    .partial_cmp(&self.efe(req, view, b))
+                    .unwrap()
+            })
+            .expect("non-empty cluster");
+        self.visits[req.class.index()][j] += 1;
+        Decision::now(j)
+    }
+
+    fn feedback(&mut self, _outcome: &ServiceOutcome, _view: &ClusterView) {
+        // Rewardless: outcomes are not consumed. (That's the point.)
+    }
+
+    fn diagnostics(&self) -> Vec<(String, f64)> {
+        vec![("decisions".into(), self.decisions as f64)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::{test_req, test_view};
+    use super::*;
+
+    #[test]
+    fn prefers_faster_server_under_pressure() {
+        let mut s = RewardlessGuidance::new(2);
+        // Server 1 would miss the deadline.
+        let view = test_view(vec![1.0, 5.0]);
+        let req = test_req(2.0);
+        // Warm the visit counts symmetrically so ambiguity doesn't dominate.
+        s.visits = vec![vec![10, 10]; 4];
+        assert_eq!(s.decide(&req, &view).server, 0);
+    }
+
+    #[test]
+    fn explores_unvisited_servers_initially() {
+        let mut s = RewardlessGuidance::new(3);
+        let view = test_view(vec![1.0, 1.0, 1.0]);
+        let req = test_req(4.0);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            seen.insert(s.decide(&req, &view).server);
+        }
+        assert!(seen.len() >= 2, "no exploration: {seen:?}");
+    }
+
+    #[test]
+    fn uses_both_tiers() {
+        let mut s = RewardlessGuidance::new(3);
+        // 0=cloud fast, 1,2=edge fast for some, slow for others — vary the
+        // view across calls.
+        let mut picked_cloud = false;
+        let mut picked_edge = false;
+        for i in 0..40 {
+            let view = if i % 2 == 0 {
+                test_view(vec![0.5, 3.0, 3.0])
+            } else {
+                test_view(vec![3.0, 0.5, 0.5])
+            };
+            let d = s.decide(&test_req(2.0), &view);
+            if d.server == 0 {
+                picked_cloud = true;
+            } else {
+                picked_edge = true;
+            }
+        }
+        assert!(picked_cloud && picked_edge);
+    }
+}

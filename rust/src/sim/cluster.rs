@@ -1,0 +1,262 @@
+//! Edge-cloud cluster assembly: five edge servers with dedicated LAN links
+//! plus one cloud server behind the shared WAN uplink (the paper's testbed),
+//! and the scheduler-facing resource snapshot (CMAB state space).
+
+use super::energy::{EnergyBreakdown, EnergyWeights};
+use super::net::{LinkSim, LinkSpec};
+use super::server::{paper_testbed, ServerKind, ServerSim, ServerSpec};
+use super::time::SimTime;
+use crate::scheduler::{ClusterView, ServerView};
+use crate::workload::service::ServiceRequest;
+
+/// Bandwidth regime (paper §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BandwidthMode {
+    Stable,
+    /// Varies within ±20 %.
+    Fluctuating,
+}
+
+/// Injected server outage window (failure injection tests).
+#[derive(Debug, Clone, Copy)]
+pub struct Outage {
+    pub server: usize,
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+/// Full cluster configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub servers: Vec<ServerSpec>,
+    pub bandwidth: BandwidthMode,
+    pub weights: EnergyWeights,
+    pub outages: Vec<Outage>,
+    pub seed: u64,
+}
+
+impl ClusterConfig {
+    /// The paper's testbed with the given edge model deployment
+    /// ("yi-6b" | "llama2-7b" | "llama3-8b" | "yi-9b").
+    pub fn paper(edge_model: &str, bandwidth: BandwidthMode) -> Self {
+        ClusterConfig {
+            servers: paper_testbed(edge_model),
+            bandwidth,
+            weights: EnergyWeights::default(),
+            outages: Vec::new(),
+            seed: 0xC1A0,
+        }
+    }
+
+    pub fn with_outages(mut self, outages: Vec<Outage>) -> Self {
+        self.outages = outages;
+        self
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn cloud_index(&self) -> usize {
+        self.servers
+            .iter()
+            .position(|s| s.kind == ServerKind::Cloud)
+            .expect("cluster has a cloud server")
+    }
+}
+
+/// Requests dispatched toward a server but still uploading — the router's
+/// own bookkeeping, folded into predictions so decision bursts don't herd
+/// onto one server through stale state.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InFlight {
+    pub n: usize,
+    pub work_s: f64,
+}
+
+/// Live cluster state: one ServerSim + one LinkSim per server. Edge links
+/// are dedicated; the cloud link is the shared 300 Mbps uplink.
+pub struct ClusterSim {
+    pub servers: Vec<ServerSim>,
+    pub links: Vec<LinkSim>,
+    pub weights: EnergyWeights,
+    /// Per-server in-flight dispatch accounting.
+    pub in_flight: Vec<InFlight>,
+}
+
+impl ClusterSim {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        let fluct = cfg.bandwidth == BandwidthMode::Fluctuating;
+        let mut links = Vec::new();
+        for (i, s) in cfg.servers.iter().enumerate() {
+            links.push(LinkSim::new(match s.kind {
+                ServerKind::Edge => LinkSpec::edge(i, fluct),
+                ServerKind::Cloud => LinkSpec::cloud(fluct),
+            }));
+        }
+        ClusterSim {
+            in_flight: vec![InFlight::default(); cfg.servers.len()],
+            servers: cfg.servers.iter().cloned().map(ServerSim::new).collect(),
+            links,
+            weights: cfg.weights,
+        }
+    }
+
+    /// Record a dispatch toward `server` (request now uploading).
+    pub fn dispatch_in_flight(&mut self, server: usize, req: &ServiceRequest) {
+        let w = self.servers[server].spec.solo_work(req);
+        self.in_flight[server].n += 1;
+        self.in_flight[server].work_s += w;
+    }
+
+    /// Record an arrival at `server` (upload finished).
+    pub fn land_in_flight(&mut self, server: usize, req: &ServiceRequest) {
+        let w = self.servers[server].spec.solo_work(req);
+        let f = &mut self.in_flight[server];
+        f.n = f.n.saturating_sub(1);
+        f.work_s = (f.work_s - w).max(0.0);
+    }
+
+    /// Advance every server and link integrator to `now` (cheap: O(jobs)).
+    pub fn advance_all(&mut self, now: SimTime) {
+        for s in &mut self.servers {
+            s.advance_to(now);
+        }
+        for l in &mut self.links {
+            l.advance_to(now);
+        }
+    }
+
+    /// Build the scheduler-facing snapshot for one request (CMAB state).
+    /// Callers must have advanced the cluster to `now` first.
+    pub fn view(&self, req: &ServiceRequest, now: SimTime) -> ClusterView {
+        let servers = self
+            .servers
+            .iter()
+            .zip(&self.links)
+            .zip(&self.in_flight)
+            .map(|((srv, link), fl)| {
+                let tx = link.predict_tx_time(req.payload_bytes);
+                let service = srv.predict_service_time_with(req, fl.n, fl.work_s);
+                // Bandwidth the upload needs to finish inside a nominal
+                // 1-second window (paper C3's B_i).
+                let bw_demand = req.payload_bytes as f64 * 8.0;
+                ServerView {
+                    kind: srv.spec.kind,
+                    predicted_time: tx + service,
+                    compute_headroom: srv.compute_headroom_with(fl.n),
+                    compute_demand: ServerSpec::compute_demand(req),
+                    bandwidth_headroom: link.bandwidth_headroom(),
+                    bandwidth_demand: bw_demand,
+                    tx_energy_est: link.spec.tx_energy(req.payload_bytes),
+                    infer_energy_est: (srv.spec.p_infer - srv.spec.p_idle)
+                        * srv.spec.solo_work(req),
+                    n_active: srv.queue.n_active(),
+                    n_waiting: srv.queue.n_waiting(),
+                    solo_time_est: link.spec.solo_time(req.payload_bytes)
+                        + srv.spec.solo_work(req),
+                    // Raw occupancy (no in-flight bookkeeping): what an
+                    // external observer without router state sees.
+                    occupancy: (srv.queue.n_active() + srv.queue.n_waiting()) as f64
+                        / (srv.queue.max_active() + srv.spec.queue_limit) as f64,
+                }
+            })
+            .collect();
+        ClusterView {
+            now,
+            servers,
+            weights: self.weights,
+        }
+    }
+
+    /// Total energy so far, split by objective term.
+    pub fn energy(&self) -> EnergyBreakdown {
+        let mut e = EnergyBreakdown::default();
+        for s in &self.servers {
+            e.infer_j += s.energy_infer_j;
+            e.idle_j += s.energy_idle_j;
+        }
+        for l in &self.links {
+            // Link energy is attributed per completed upload at dispatch
+            // time; integrate moved bytes for the cluster total.
+            e.tran_j += l.bytes_moved * 8.0 / 1.0e6 * l.spec.energy_j_per_mbit;
+        }
+        e
+    }
+
+    pub fn tokens_served(&self) -> u64 {
+        self.servers.iter().map(|s| s.tokens_served).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::service::ServiceClass;
+
+    fn req() -> ServiceRequest {
+        ServiceRequest {
+            id: 0,
+            class: ServiceClass::Chat,
+            arrival: 0.0,
+            prompt_tokens: 100,
+            output_tokens: 40,
+            deadline: 4.0,
+            payload_bytes: 200_000,
+        }
+    }
+
+    #[test]
+    fn paper_cluster_shape() {
+        let cfg = ClusterConfig::paper("yi-6b", BandwidthMode::Stable);
+        assert_eq!(cfg.n_servers(), 6);
+        assert_eq!(cfg.cloud_index(), 5);
+        let sim = ClusterSim::new(&cfg);
+        assert_eq!(sim.servers.len(), 6);
+        assert_eq!(sim.links.len(), 6);
+        assert!(sim.links[5].spec.bandwidth_bps > sim.links[0].spec.bandwidth_bps);
+    }
+
+    #[test]
+    fn view_has_all_servers_and_sane_predictions() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let sim = ClusterSim::new(&cfg);
+        let v = sim.view(&req(), 0.0);
+        assert_eq!(v.servers.len(), 6);
+        for sv in &v.servers {
+            assert!(sv.predicted_time > 0.0 && sv.predicted_time.is_finite());
+            assert!(sv.tx_energy_est > 0.0);
+            assert!(sv.infer_energy_est > 0.0);
+        }
+        // Idle cluster: cloud is predicted faster at inference…
+        let cloud = &v.servers[5];
+        let edge = &v.servers[0];
+        assert!(cloud.predicted_time < edge.predicted_time);
+        // …but costs more energy.
+        assert!(cloud.infer_energy_est > edge.infer_energy_est);
+        assert!(cloud.tx_energy_est > edge.tx_energy_est);
+    }
+
+    #[test]
+    fn energy_starts_zero_and_grows_idle() {
+        let cfg = ClusterConfig::paper("yi-9b", BandwidthMode::Stable);
+        let mut sim = ClusterSim::new(&cfg);
+        assert_eq!(sim.energy().total_j(), 0.0);
+        sim.advance_all(10.0);
+        let e = sim.energy();
+        assert!(e.idle_j > 0.0);
+        assert_eq!(e.infer_j, 0.0);
+        // 5 edges * 6 W + 1 cloud * 65 W, 10 s.
+        assert!((e.idle_j - (5.0 * 6.0 + 65.0) * 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fluctuating_mode_sets_link_amplitude() {
+        let cfg = ClusterConfig::paper("yi-6b", BandwidthMode::Fluctuating);
+        let sim = ClusterSim::new(&cfg);
+        assert!(sim.links.iter().all(|l| l.spec.fluctuation > 0.0));
+        let cfg2 = ClusterConfig::paper("yi-6b", BandwidthMode::Stable);
+        let sim2 = ClusterSim::new(&cfg2);
+        assert!(sim2.links.iter().all(|l| l.spec.fluctuation == 0.0));
+    }
+}

@@ -1,0 +1,99 @@
+//! Energy accounting: the three terms of the paper's objective (Eq. 2) —
+//! transmission, inference, and idle energy — with the weight factors
+//! ω_tran, ω_infer, ω_idle.
+
+/// Weighted energy objective (Eq. 2). Defaults weigh the terms equally.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyWeights {
+    pub w_tran: f64,
+    pub w_infer: f64,
+    pub w_idle: f64,
+}
+
+impl Default for EnergyWeights {
+    fn default() -> Self {
+        EnergyWeights {
+            w_tran: 1.0,
+            w_infer: 1.0,
+            w_idle: 1.0,
+        }
+    }
+}
+
+/// Accumulated energy, joules, split by objective term.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyBreakdown {
+    pub tran_j: f64,
+    pub infer_j: f64,
+    pub idle_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.tran_j + self.infer_j + self.idle_j
+    }
+
+    /// Weighted objective value (the quantity CS-UCB minimizes).
+    pub fn weighted(&self, w: &EnergyWeights) -> f64 {
+        w.w_tran * self.tran_j + w.w_infer * self.infer_j + w.w_idle * self.idle_j
+    }
+
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.tran_j += other.tran_j;
+        self.infer_j += other.infer_j;
+        self.idle_j += other.idle_j;
+    }
+
+    /// Kilowatt-hours, for report readability.
+    pub fn total_kwh(&self) -> f64 {
+        self.total_j() / 3.6e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_weights() {
+        let e = EnergyBreakdown {
+            tran_j: 1.0,
+            infer_j: 2.0,
+            idle_j: 3.0,
+        };
+        assert!((e.total_j() - 6.0).abs() < 1e-12);
+        let w = EnergyWeights {
+            w_tran: 2.0,
+            w_infer: 0.5,
+            w_idle: 1.0,
+        };
+        assert!((e.weighted(&w) - (2.0 + 1.0 + 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = EnergyBreakdown::default();
+        a.add(&EnergyBreakdown {
+            tran_j: 1.0,
+            infer_j: 1.0,
+            idle_j: 1.0,
+        });
+        a.add(&EnergyBreakdown {
+            tran_j: 0.5,
+            infer_j: 0.0,
+            idle_j: 0.0,
+        });
+        assert!((a.tran_j - 1.5).abs() < 1e-12);
+        assert!((a.total_j() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kwh_conversion() {
+        let e = EnergyBreakdown {
+            tran_j: 3.6e6,
+            infer_j: 0.0,
+            idle_j: 0.0,
+        };
+        assert!((e.total_kwh() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,550 @@
+//! The discrete-event simulation engine that replays a workload trace
+//! through a scheduler over the edge-cloud cluster.
+//!
+//! Event flow per service: Arrival → (scheduler decision, optional defer)
+//! → Dispatch → upload on the target's link (fair-share PS) → ComputeArrive
+//! (after link RTT) → batch slot on the server (PS with batching curve) →
+//! ServerDone → outcome + bandit feedback.
+//!
+//! Completion events for PS queues are generation-stamped: any occupancy or
+//! rate change bumps the generation and re-schedules, stale events are
+//! dropped on pop (sim/time.rs).
+
+use std::time::Instant;
+
+use super::cluster::{ClusterConfig, ClusterSim, Outage};
+use super::energy::EnergyBreakdown;
+use super::time::{EventQueue, SimTime};
+use crate::scheduler::Scheduler;
+use crate::util::rng::Rng;
+use crate::util::stats::{Percentiles, Running};
+use crate::workload::service::{ServiceOutcome, ServiceRequest};
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Trace index arrives at the router.
+    Arrival(usize),
+    /// Deferred dispatch of service id to server.
+    Dispatch { svc: usize, server: usize },
+    /// Earliest upload completion on link (generation-stamped).
+    LinkDone { link: usize, gen: u64 },
+    /// Upload finished + RTT elapsed: service reaches the server.
+    ComputeArrive { svc: usize, server: usize },
+    /// Earliest batch completion on server (generation-stamped).
+    ServerDone { server: usize, gen: u64 },
+    /// Re-draw a link's bandwidth fluctuation multiplier.
+    FluctTick { link: usize },
+    OutageStart { server: usize },
+    OutageEnd { server: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Pending,
+    Uploading,
+    Computing,
+    Done,
+    Failed,
+}
+
+struct SvcState {
+    server: usize,
+    phase: Phase,
+    dispatched_at: SimTime,
+    upload_done_at: SimTime,
+    compute_started_at: SimTime,
+    tx_energy_j: f64,
+}
+
+/// Aggregate results of one simulation run (one cell of a paper table).
+pub struct RunReport {
+    pub scheduler: &'static str,
+    pub outcomes: Vec<ServiceOutcome>,
+    pub energy: EnergyBreakdown,
+    /// Simulated makespan (first arrival to last completion), seconds.
+    pub makespan_s: f64,
+    /// Tokens fully processed per simulated second.
+    pub throughput_tok_s: f64,
+    pub success_rate: f64,
+    /// Weighted energy per *successful* service, J — the paper's Fig-2/6
+    /// "energy cost per service" metric.
+    pub energy_per_success_j: f64,
+    pub mean_processing_s: f64,
+    pub p95_processing_s: f64,
+    /// Requests that never finished inside the horizon.
+    pub unfinished: usize,
+    /// Requests shed by bounded server queues.
+    pub dropped: usize,
+    /// Requests completed after their deadline.
+    pub late: usize,
+    /// Scheduler-specific diagnostics (e.g. CS-UCB regret).
+    pub diagnostics: Vec<(String, f64)>,
+    /// Wall-clock perf of the DES itself.
+    pub wall_s: f64,
+    pub events_processed: u64,
+    pub events_per_sec: f64,
+}
+
+impl RunReport {
+    pub fn summary_row(&self) -> String {
+        format!(
+            "{:<22} success {:5.1}%  mean {:6.3}s  p95 {:6.3}s  thpt {:8.1} tok/s  \
+             energy {:8.1} kJ (tran {:6.1} / infer {:7.1} / idle {:7.1})  {:7.1} J/succ",
+            self.scheduler,
+            self.success_rate * 100.0,
+            self.mean_processing_s,
+            self.p95_processing_s,
+            self.throughput_tok_s,
+            self.energy.total_j() / 1e3,
+            self.energy.tran_j / 1e3,
+            self.energy.infer_j / 1e3,
+            self.energy.idle_j / 1e3,
+            self.energy_per_success_j,
+        )
+    }
+}
+
+/// Simulation horizon guard: requests still unfinished at
+/// `last_arrival + HORIZON_SLACK_S` are recorded as failures.
+const HORIZON_SLACK_S: f64 = 300.0;
+
+pub struct Engine<'a> {
+    cluster: ClusterSim,
+    events: EventQueue<Ev>,
+    trace: &'a [ServiceRequest],
+    svc: Vec<SvcState>,
+    scheduler: &'a mut dyn Scheduler,
+    rng: Rng,
+    outcomes: Vec<ServiceOutcome>,
+    remaining: usize,
+    horizon: SimTime,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        cfg: &ClusterConfig,
+        trace: &'a [ServiceRequest],
+        scheduler: &'a mut dyn Scheduler,
+    ) -> Self {
+        let cluster = ClusterSim::new(cfg);
+        let mut events = EventQueue::new();
+        for (i, r) in trace.iter().enumerate() {
+            events.push_at(r.arrival, Ev::Arrival(i));
+        }
+        for (li, link) in cluster.links.iter().enumerate() {
+            if link.spec.fluctuation > 0.0 {
+                events.push_at(link.spec.fluct_period, Ev::FluctTick { link: li });
+            }
+        }
+        for Outage { server, start, end } in &cfg.outages {
+            events.push_at(*start, Ev::OutageStart { server: *server });
+            events.push_at(*end, Ev::OutageEnd { server: *server });
+        }
+        let horizon = trace.last().map(|r| r.arrival).unwrap_or(0.0) + HORIZON_SLACK_S;
+        let svc = trace
+            .iter()
+            .map(|_| SvcState {
+                server: usize::MAX,
+                phase: Phase::Pending,
+                dispatched_at: 0.0,
+                upload_done_at: 0.0,
+                compute_started_at: 0.0,
+                tx_energy_j: 0.0,
+            })
+            .collect();
+        Engine {
+            cluster,
+            events,
+            trace,
+            svc,
+            scheduler,
+            rng: Rng::new(cfg.seed),
+            outcomes: Vec::with_capacity(trace.len()),
+            remaining: trace.len(),
+            horizon,
+        }
+    }
+
+    /// Run to completion and summarize.
+    pub fn run(mut self) -> RunReport {
+        let t0 = Instant::now();
+        while self.remaining > 0 {
+            let Some((now, ev)) = self.events.pop() else {
+                break;
+            };
+            if now > self.horizon {
+                break;
+            }
+            if std::env::var("PERLLM_TRACE_EVENTS").is_ok() {
+                eprintln!("t={now:.6} {ev:?} remaining={}", self.remaining);
+            }
+            self.handle(now, ev);
+        }
+        let end = self.events.now();
+        self.cluster.advance_all(end);
+
+        // Anything still in flight failed the horizon.
+        let mut unfinished = 0;
+        for (i, st) in self.svc.iter().enumerate() {
+            if st.phase != Phase::Done && st.phase != Phase::Failed {
+                unfinished += 1;
+                let r = &self.trace[i];
+                self.outcomes.push(ServiceOutcome {
+                    id: r.id,
+                    class: r.class,
+                    server: st.server.min(self.cluster.servers.len().saturating_sub(1)),
+                    tx_time: 0.0,
+                    infer_time: 0.0,
+                    processing_time: f64::INFINITY,
+                    deadline: r.deadline,
+                    energy_j: st.tx_energy_j,
+                    tokens: 0,
+                    completed_at: end,
+                });
+            }
+        }
+
+        let wall = t0.elapsed().as_secs_f64();
+        let mut proc = Running::new();
+        let mut pcts = Percentiles::new();
+        let mut ok = 0usize;
+        let mut dropped = 0usize;
+        let mut late = 0usize;
+        for o in &self.outcomes {
+            if o.processing_time.is_finite() {
+                proc.push(o.processing_time);
+                pcts.push(o.processing_time);
+                if !o.success() {
+                    late += 1;
+                }
+            } else if o.tokens == 0 && o.infer_time == 0.0 {
+                dropped += 1;
+            }
+            if o.success() {
+                ok += 1;
+            }
+        }
+        let first_arrival = self.trace.first().map(|r| r.arrival).unwrap_or(0.0);
+        let makespan = (end - first_arrival).max(1e-9);
+        let tokens = self.cluster.tokens_served();
+        let n = self.outcomes.len().max(1);
+        let energy = self.cluster.energy();
+        RunReport {
+            scheduler: self.scheduler.name(),
+            energy_per_success_j: energy.total_j() / ok.max(1) as f64,
+            energy,
+            makespan_s: makespan,
+            throughput_tok_s: tokens as f64 / makespan,
+            success_rate: ok as f64 / n as f64,
+            mean_processing_s: proc.mean(),
+            p95_processing_s: pcts.p95(),
+            unfinished,
+            dropped,
+            late,
+            diagnostics: self.scheduler.diagnostics(),
+            wall_s: wall,
+            events_processed: self.events.processed(),
+            events_per_sec: self.events.processed() as f64 / wall.max(1e-9),
+            outcomes: self.outcomes,
+        }
+    }
+
+    fn handle(&mut self, now: SimTime, ev: Ev) {
+        match ev {
+            Ev::Arrival(i) => {
+                self.cluster.advance_all(now);
+                let req = &self.trace[i];
+                let view = self.cluster.view(req, now);
+                let d = self.scheduler.decide(req, &view);
+                assert!(d.server < self.cluster.servers.len(), "bad server index");
+                self.svc[i].server = d.server;
+                if d.defer_s > 0.0 {
+                    self.events.push_in(
+                        d.defer_s,
+                        Ev::Dispatch {
+                            svc: i,
+                            server: d.server,
+                        },
+                    );
+                } else {
+                    self.dispatch(now, i, d.server);
+                }
+            }
+            Ev::Dispatch { svc, server } => {
+                self.dispatch(now, svc, server);
+            }
+            Ev::LinkDone { link, gen } => {
+                if !self.cluster.links[link].gen.is_current(gen) {
+                    return;
+                }
+                self.cluster.links[link].advance_to(now);
+                let rate = self.cluster.links[link].per_flow_rate();
+                let done = self.cluster.links[link].queue.reap(now, rate);
+                for job in done {
+                    let i = job.id as usize;
+                    let rtt = self.cluster.links[link].spec.rtt_s;
+                    self.svc[i].upload_done_at = now + rtt;
+                    self.events.push_in(
+                        rtt,
+                        Ev::ComputeArrive {
+                            svc: i,
+                            server: self.svc[i].server,
+                        },
+                    );
+                }
+                self.reschedule_link(link);
+            }
+            Ev::ComputeArrive { svc, server } => {
+                self.cluster.land_in_flight(server, &self.trace[svc]);
+                let srv = &mut self.cluster.servers[server];
+                srv.advance_to(now);
+                if srv.would_drop() {
+                    // Bounded queue: load shedding (admission failure). The
+                    // upload energy is already spent — that waste is the
+                    // congestion cost the paper's Figure 2 measures.
+                    self.fail(now, svc, server);
+                    return;
+                }
+                let work = srv.spec.solo_work(&self.trace[svc]);
+                srv.queue.push(svc as u64, work, now);
+                self.svc[svc].phase = Phase::Computing;
+                self.svc[svc].compute_started_at = now;
+                self.reschedule_server(server);
+            }
+            Ev::ServerDone { server, gen } => {
+                if !self.cluster.servers[server].gen.is_current(gen) {
+                    return;
+                }
+                self.cluster.servers[server].advance_to(now);
+                let rate = self.cluster.servers[server].per_job_rate();
+                let done = self.cluster.servers[server].queue.reap(now, rate);
+                for job in done {
+                    self.complete(now, job.id as usize, server, job.energy_j);
+                }
+                self.reschedule_server(server);
+            }
+            Ev::FluctTick { link } => {
+                let l = &mut self.cluster.links[link];
+                l.advance_to(now);
+                let a = l.spec.fluctuation;
+                l.mult = self.rng.uniform(1.0 - a, 1.0 + a);
+                let period = l.spec.fluct_period;
+                self.reschedule_link(link);
+                self.events.push_in(period, Ev::FluctTick { link });
+            }
+            Ev::OutageStart { server } => {
+                self.cluster.servers[server].advance_to(now);
+                self.cluster.servers[server].rate_mult = 0.0;
+                self.reschedule_server(server);
+            }
+            Ev::OutageEnd { server } => {
+                self.cluster.servers[server].advance_to(now);
+                self.cluster.servers[server].rate_mult = 1.0;
+                self.reschedule_server(server);
+            }
+        }
+    }
+
+    fn dispatch(&mut self, now: SimTime, i: usize, server: usize) {
+        self.cluster.dispatch_in_flight(server, &self.trace[i]);
+        let link = &mut self.cluster.links[server];
+        link.advance_to(now);
+        link.queue
+            .push(i as u64, self.trace[i].payload_bytes as f64, now);
+        self.svc[i].phase = Phase::Uploading;
+        self.svc[i].dispatched_at = now;
+        self.svc[i].tx_energy_j = link.spec.tx_energy(self.trace[i].payload_bytes);
+        self.reschedule_link(server);
+    }
+
+    fn reschedule_link(&mut self, li: usize) {
+        let link = &mut self.cluster.links[li];
+        let gen = link.gen.invalidate();
+        if let Some(dt) = link.queue.next_completion_in(link.per_flow_rate()) {
+            self.events.push_in(dt, Ev::LinkDone { link: li, gen });
+        }
+    }
+
+    fn reschedule_server(&mut self, si: usize) {
+        let srv = &mut self.cluster.servers[si];
+        let gen = srv.gen.invalidate();
+        if let Some(dt) = srv.queue.next_completion_in(srv.per_job_rate()) {
+            self.events.push_in(dt, Ev::ServerDone { server: si, gen });
+        }
+    }
+
+    /// Record a shed request: failed outcome, transmission energy only.
+    fn fail(&mut self, now: SimTime, i: usize, server: usize) {
+        let req = &self.trace[i];
+        self.svc[i].phase = Phase::Failed;
+        let outcome = ServiceOutcome {
+            id: req.id,
+            class: req.class,
+            server,
+            tx_time: self.svc[i].upload_done_at - self.svc[i].dispatched_at,
+            infer_time: 0.0,
+            processing_time: f64::INFINITY,
+            deadline: req.deadline,
+            energy_j: self.svc[i].tx_energy_j,
+            tokens: 0,
+            completed_at: now,
+        };
+        self.remaining -= 1;
+        let view = self.cluster.view(req, now);
+        self.scheduler.feedback(&outcome, &view);
+        self.outcomes.push(outcome);
+    }
+
+    fn complete(&mut self, now: SimTime, i: usize, server: usize, infer_energy_j: f64) {
+        let req = &self.trace[i];
+        let st = &mut self.svc[i];
+        st.phase = Phase::Done;
+        let tokens = req.total_tokens();
+        self.cluster.servers[server].tokens_served += tokens;
+        let outcome = ServiceOutcome {
+            id: req.id,
+            class: req.class,
+            server,
+            tx_time: st.upload_done_at - st.dispatched_at,
+            infer_time: now - st.compute_started_at,
+            processing_time: now - req.arrival,
+            deadline: req.deadline,
+            energy_j: st.tx_energy_j + infer_energy_j,
+            tokens,
+            completed_at: now,
+        };
+        self.remaining -= 1;
+        let view = self.cluster.view(req, now);
+        self.scheduler.feedback(&outcome, &view);
+        self.outcomes.push(outcome);
+    }
+}
+
+/// Convenience: run one (config, trace, scheduler) combination.
+pub fn simulate(
+    cfg: &ClusterConfig,
+    trace: &[ServiceRequest],
+    scheduler: &mut dyn Scheduler,
+) -> RunReport {
+    Engine::new(cfg, trace, scheduler).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{ClusterView, Decision};
+    use crate::sim::cluster::BandwidthMode;
+    use crate::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
+
+    /// Fixed-target scheduler for engine unit tests.
+    struct Fixed(usize);
+    impl Scheduler for Fixed {
+        fn name(&self) -> &'static str {
+            "fixed"
+        }
+        fn decide(&mut self, _r: &ServiceRequest, _v: &ClusterView) -> Decision {
+            Decision::now(self.0)
+        }
+    }
+
+    fn small_trace(n: usize, rate: f64) -> Vec<ServiceRequest> {
+        generate(
+            &WorkloadConfig::default()
+                .with_requests(n)
+                .with_arrivals(ArrivalProcess::Poisson { rate })
+                .with_seed(7),
+        )
+    }
+
+    #[test]
+    fn all_requests_complete_under_light_load() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let trace = small_trace(50, 2.0);
+        let mut s = Fixed(5); // cloud
+        let rep = simulate(&cfg, &trace, &mut s);
+        assert_eq!(rep.outcomes.len(), 50);
+        assert_eq!(rep.unfinished, 0);
+        assert!(rep.success_rate > 0.9, "success={}", rep.success_rate);
+        assert!(rep.throughput_tok_s > 0.0);
+        assert!(rep.energy.total_j() > 0.0);
+    }
+
+    #[test]
+    fn outcome_times_are_consistent() {
+        let cfg = ClusterConfig::paper("yi-6b", BandwidthMode::Stable);
+        let trace = small_trace(20, 1.0);
+        let mut s = Fixed(0); // one edge
+        let rep = simulate(&cfg, &trace, &mut s);
+        for o in &rep.outcomes {
+            assert!(o.tx_time > 0.0, "tx {}", o.tx_time);
+            assert!(o.infer_time > 0.0);
+            // processing >= tx + infer (queueing in between).
+            assert!(o.processing_time >= o.tx_time + o.infer_time - 1e-9);
+            assert!(o.energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn edge_tx_shorter_cloud_infer_shorter() {
+        // The Figure-2 motivation shape on a single request.
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let trace = small_trace(1, 1.0);
+        let mut cloud = Fixed(5);
+        let mut edge = Fixed(0);
+        let rc = simulate(&cfg, &trace, &mut cloud);
+        let re = simulate(&cfg, &trace, &mut edge);
+        assert!(re.outcomes[0].tx_time < rc.outcomes[0].tx_time);
+        assert!(rc.outcomes[0].infer_time < re.outcomes[0].infer_time);
+    }
+
+    #[test]
+    fn cloud_congestion_collapses_under_simultaneous_load() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let trace = generate(
+            &WorkloadConfig::default()
+                .with_requests(400)
+                .with_arrivals(ArrivalProcess::Simultaneous)
+                .with_seed(3),
+        );
+        let mut s = Fixed(5);
+        let rep = simulate(&cfg, &trace, &mut s);
+        // Fair-share collapse: mean processing far above solo time.
+        assert!(rep.mean_processing_s > 5.0, "mean={}", rep.mean_processing_s);
+        assert!(rep.success_rate < 0.5, "success={}", rep.success_rate);
+    }
+
+    #[test]
+    fn outage_fails_or_delays_requests() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable)
+            .with_outages(vec![Outage {
+                server: 0,
+                start: 0.0,
+                end: 1.0e9, // forever
+            }]);
+        let trace = small_trace(5, 1.0);
+        let mut s = Fixed(0);
+        let rep = simulate(&cfg, &trace, &mut s);
+        assert_eq!(rep.unfinished, 5);
+        assert_eq!(rep.success_rate, 0.0);
+    }
+
+    #[test]
+    fn fluctuating_bandwidth_still_completes() {
+        let cfg = ClusterConfig::paper("yi-9b", BandwidthMode::Fluctuating);
+        let trace = small_trace(80, 4.0);
+        let mut s = Fixed(5);
+        let rep = simulate(&cfg, &trace, &mut s);
+        assert_eq!(rep.unfinished, 0);
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Fluctuating);
+        let trace = small_trace(60, 3.0);
+        let r1 = simulate(&cfg, &trace, &mut Fixed(5));
+        let r2 = simulate(&cfg, &trace, &mut Fixed(5));
+        assert_eq!(r1.outcomes.len(), r2.outcomes.len());
+        assert!((r1.mean_processing_s - r2.mean_processing_s).abs() < 1e-12);
+        assert!((r1.energy.total_j() - r2.energy.total_j()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! Edge-cloud cluster simulation substrate: discrete-event engine,
+//! processor-sharing queues, network links (with the shared-cloud-uplink
+//! congestion mechanism), server batching model, and Eq.-2 energy
+//! accounting. This replaces the paper's physical testbed (DESIGN.md §2).
+
+pub mod cluster;
+pub mod energy;
+pub mod engine;
+pub mod net;
+pub mod ps;
+pub mod server;
+pub mod time;
+
+pub use cluster::{BandwidthMode, ClusterConfig, ClusterSim, Outage};
+pub use energy::{EnergyBreakdown, EnergyWeights};
+pub use engine::{simulate, Engine, RunReport};
+pub use server::{ServerKind, ServerSpec, EDGE_MODELS};

@@ -1,0 +1,207 @@
+//! Network model: per-edge dedicated links and the shared cloud uplink.
+//!
+//! Paper §4.1: edge links 100 Mbps, cloud 300 Mbps, with a "fluctuating"
+//! mode varying within ±20 %. The cloud uplink is *shared* by every request
+//! routed to the cloud — fair-share division across concurrent uploads is
+//! exactly the congestion mechanism behind the Figure-2 surge. Edge links
+//! are LAN-local: short RTT and ~3x lower energy per bit than the WAN path.
+
+use super::ps::PsQueue;
+use super::time::{Generation, SimTime};
+
+/// Static link description.
+#[derive(Debug, Clone)]
+pub struct LinkSpec {
+    pub name: String,
+    /// Nominal bandwidth, bits per second.
+    pub bandwidth_bps: f64,
+    /// Per-flow throughput ceiling, bits per second (TCP window × RTT
+    /// limits a single WAN flow well below the aggregate pipe).
+    pub per_flow_cap_bps: f64,
+    /// Propagation / protocol round-trip added to every upload, seconds.
+    pub rtt_s: f64,
+    /// Fluctuation amplitude: multiplier drawn from U[1-a, 1+a].
+    pub fluctuation: f64,
+    /// Seconds between fluctuation re-draws.
+    pub fluct_period: f64,
+    /// Transmission energy, joules per megabit (WAN ≫ LAN).
+    pub energy_j_per_mbit: f64,
+}
+
+impl LinkSpec {
+    pub fn edge(i: usize, fluctuating: bool) -> LinkSpec {
+        LinkSpec {
+            name: format!("edge-link-{i}"),
+            bandwidth_bps: 100.0e6,
+            per_flow_cap_bps: 40.0e6,
+            rtt_s: 0.005,
+            fluctuation: if fluctuating { 0.2 } else { 0.0 },
+            fluct_period: 0.5,
+            energy_j_per_mbit: 0.6,
+        }
+    }
+
+    pub fn cloud(fluctuating: bool) -> LinkSpec {
+        LinkSpec {
+            name: "cloud-uplink".into(),
+            bandwidth_bps: 300.0e6,
+            per_flow_cap_bps: 8.0e6,
+            rtt_s: 0.08,
+            fluctuation: if fluctuating { 0.2 } else { 0.0 },
+            fluct_period: 0.5,
+            energy_j_per_mbit: 4.0,
+        }
+    }
+
+    /// Solo transfer time for a payload (no sharing, per-flow-capped rate).
+    pub fn solo_time(&self, payload_bytes: u64) -> f64 {
+        let rate = self.per_flow_cap_bps.min(self.bandwidth_bps);
+        self.rtt_s + payload_bytes as f64 * 8.0 / rate
+    }
+
+    /// Transmission energy for a payload, joules.
+    pub fn tx_energy(&self, payload_bytes: u64) -> f64 {
+        payload_bytes as f64 * 8.0 / 1.0e6 * self.energy_j_per_mbit
+    }
+}
+
+/// Dynamic link state in the DES: a PS queue over payload bytes.
+#[derive(Debug)]
+pub struct LinkSim {
+    pub spec: LinkSpec,
+    pub queue: PsQueue,
+    pub gen: Generation,
+    /// Current fluctuation multiplier.
+    pub mult: f64,
+    last_update: SimTime,
+    /// Integrated bytes moved (utilization accounting).
+    pub bytes_moved: f64,
+}
+
+impl LinkSim {
+    /// Links carry unbounded concurrent flows (TCP fair share), so the PS
+    /// concurrency cap is effectively infinite.
+    pub fn new(spec: LinkSpec) -> Self {
+        LinkSim {
+            spec,
+            queue: PsQueue::new(usize::MAX >> 1),
+            gen: Generation::new(),
+            mult: 1.0,
+            last_update: 0.0,
+            bytes_moved: 0.0,
+        }
+    }
+
+    /// Bytes/s each concurrent upload receives right now: fair share of the
+    /// (fluctuating) pipe, capped per flow.
+    pub fn per_flow_rate(&self) -> f64 {
+        let n = self.queue.n_active();
+        if n == 0 {
+            return 0.0;
+        }
+        let share = self.spec.bandwidth_bps * self.mult / n as f64;
+        share.min(self.spec.per_flow_cap_bps * self.mult) / 8.0
+    }
+
+    pub fn advance_to(&mut self, now: SimTime) {
+        let dt = now - self.last_update;
+        if dt <= 0.0 {
+            return;
+        }
+        let rate = self.per_flow_rate();
+        let n = self.queue.n_active();
+        self.queue.advance(dt, rate);
+        self.bytes_moved += rate * dt * n as f64;
+        self.last_update = now;
+    }
+
+    /// Predicted upload time for a payload arriving now (shared fairly with
+    /// the flows already in flight) — scheduler-visible bandwidth estimate.
+    pub fn predict_tx_time(&self, payload_bytes: u64) -> f64 {
+        let n = self.queue.n_active() + 1;
+        let share = self.spec.bandwidth_bps * self.mult.max(1e-9) / n as f64;
+        let rate = share.min(self.spec.per_flow_cap_bps * self.mult.max(1e-9)) / 8.0;
+        self.spec.rtt_s + payload_bytes as f64 / rate
+    }
+
+    /// Paper C3: bandwidth headroom as a fraction of nominal capacity.
+    pub fn bandwidth_headroom(&self) -> f64 {
+        let n = self.queue.n_active() as f64;
+        // Treat each active flow as consuming a fair share; headroom decays
+        // towards zero as the link saturates.
+        (self.spec.bandwidth_bps * self.mult) / (n + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solo_time_includes_rtt() {
+        let l = LinkSpec::cloud(false);
+        // Per-flow cap (8 Mbps) binds, not the 300 Mbps aggregate.
+        let t = l.solo_time(8_000_000 / 8); // exactly 1 s at the flow cap
+        assert!((t - (1.0 + 0.08)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fair_share_below_cap() {
+        let mut l = LinkSim::new(LinkSpec::edge(0, false));
+        // 1-2 flows: the 40 Mbps per-flow cap binds, not the share.
+        l.queue.push(1, 1.0e6, 0.0);
+        let r1 = l.per_flow_rate();
+        assert!((r1 - 40.0e6 / 8.0).abs() < 1e-6);
+        // 4 flows: fair share 25 Mbps < cap.
+        for i in 2..=4 {
+            l.queue.push(i, 1.0e6, 0.0);
+        }
+        let r4 = l.per_flow_rate();
+        assert!((r4 - 100.0e6 / 4.0 / 8.0).abs() < 1e-6);
+        // 8 flows: share halves again.
+        for i in 5..=8 {
+            l.queue.push(i, 1.0e6, 0.0);
+        }
+        assert!((r4 / l.per_flow_rate() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_moves_bytes() {
+        let mut l = LinkSim::new(LinkSpec::edge(0, false));
+        l.queue.push(1, 5.0e6, 0.0); // 1 s at the 40 Mbps flow cap
+        l.advance_to(0.5);
+        assert!((l.bytes_moved - 2.5e6).abs() < 1.0);
+        l.advance_to(1.0);
+        let done = l.queue.reap(1.0, l.per_flow_rate());
+        assert_eq!(done.len(), 1);
+    }
+
+    #[test]
+    fn congestion_slows_everyone() {
+        let mut l = LinkSim::new(LinkSpec::cloud(false));
+        let t_solo = l.predict_tx_time(1_000_000);
+        for i in 0..99 {
+            l.queue.push(i, 1.0e6, 0.0);
+        }
+        let t_crowded = l.predict_tx_time(1_000_000);
+        // 100 flows share 300 Mbps -> 3 Mbps each vs the 8 Mbps solo cap.
+        assert!(t_crowded > 2.0 * t_solo, "{t_crowded} vs {t_solo}");
+    }
+
+    #[test]
+    fn tx_energy_scales_with_bytes() {
+        let l = LinkSpec::cloud(false);
+        assert!((l.tx_energy(2_000_000) - 2.0 * l.tx_energy(1_000_000)).abs() < 1e-9);
+        // WAN costs more per bit than LAN.
+        assert!(l.tx_energy(1_000_000) > LinkSpec::edge(0, false).tx_energy(1_000_000));
+    }
+
+    #[test]
+    fn headroom_decays_with_flows() {
+        let mut l = LinkSim::new(LinkSpec::cloud(false));
+        let h0 = l.bandwidth_headroom();
+        l.queue.push(1, 1.0e6, 0.0);
+        l.queue.push(2, 1.0e6, 0.0);
+        assert!(l.bandwidth_headroom() < h0);
+    }
+}

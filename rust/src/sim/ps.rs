@@ -1,0 +1,283 @@
+//! Processor-sharing queue with bounded concurrency and FIFO overflow.
+//!
+//! Both resource types in the cluster are PS systems:
+//! * a network link divides its (fluctuating) bandwidth across concurrent
+//!   uploads — this is what produces the paper's cloud-uplink congestion
+//!   collapse (Fig. 2);
+//! * a server divides its token throughput across the requests in its batch
+//!   (continuous batching), with a sub-linear batching-efficiency curve and
+//!   at most `max_active` concurrent slots; excess requests wait FIFO.
+//!
+//! Jobs carry "remaining work" in owner-defined units (bytes for links,
+//! solo-service seconds for servers). The owner advances the queue between
+//! events with the per-job rate that held over that interval and schedules
+//! the next completion through a [`Generation`]-stamped event.
+
+use std::collections::VecDeque;
+
+use super::time::SimTime;
+
+/// Time threshold (seconds of service at the current rate) below which a
+/// job counts as finished. Work-unit magnitudes differ wildly between
+/// owners (bytes ~1e5 vs solo-seconds ~1), so the "done" tolerance must be
+/// expressed in *time*: a job with less than a nanosecond of service left
+/// is complete. Guards against float drift producing zero-width event
+/// storms.
+const DONE_EPS_S: f64 = 1e-9;
+
+#[derive(Debug, Clone)]
+pub struct PsJob {
+    pub id: u64,
+    pub remaining: f64,
+    /// Time the job entered the queue (for queue-wait accounting).
+    pub enqueued_at: SimTime,
+    /// Time the job entered service (first moment it received rate).
+    pub started_at: Option<SimTime>,
+    /// Energy attributed to this job by the owner (J), accrued in advance().
+    pub energy_j: f64,
+}
+
+#[derive(Debug)]
+pub struct PsQueue {
+    active: Vec<PsJob>,
+    waiting: VecDeque<PsJob>,
+    max_active: usize,
+}
+
+impl PsQueue {
+    pub fn new(max_active: usize) -> Self {
+        assert!(max_active > 0);
+        PsQueue {
+            active: Vec::new(),
+            waiting: VecDeque::new(),
+            max_active,
+        }
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn n_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active.is_empty() && self.waiting.is_empty()
+    }
+
+    pub fn max_active(&self) -> usize {
+        self.max_active
+    }
+
+    /// Total remaining work across active + waiting jobs (backlog estimate
+    /// used by the schedulers' processing-time predictor).
+    pub fn backlog(&self) -> f64 {
+        self.active.iter().map(|j| j.remaining).sum::<f64>()
+            + self.waiting.iter().map(|j| j.remaining).sum::<f64>()
+    }
+
+    /// Admit a job: straight to service if a slot is free, else FIFO wait.
+    pub fn push(&mut self, id: u64, work: f64, now: SimTime) {
+        assert!(work.is_finite() && work > 0.0, "bad work {work}");
+        let mut job = PsJob {
+            id,
+            remaining: work,
+            enqueued_at: now,
+            started_at: None,
+            energy_j: 0.0,
+        };
+        if self.active.len() < self.max_active {
+            job.started_at = Some(now);
+            self.active.push(job);
+        } else {
+            self.waiting.push_back(job);
+        }
+    }
+
+    /// Advance all active jobs by `dt` seconds at `per_job_rate` work/s.
+    /// The caller guarantees the rate was constant over the interval (it
+    /// bumps the generation and re-advances on every occupancy change).
+    pub fn advance(&mut self, dt: SimTime, per_job_rate: f64) {
+        self.advance_energy(dt, per_job_rate, 0.0);
+    }
+
+    /// Advance and additionally attribute `energy_per_job` joules to every
+    /// active job (marginal per-service energy accounting).
+    pub fn advance_energy(&mut self, dt: SimTime, per_job_rate: f64, energy_per_job: f64) {
+        debug_assert!(dt >= 0.0 && per_job_rate >= 0.0);
+        if dt == 0.0 {
+            return;
+        }
+        let dec = dt * per_job_rate;
+        for j in &mut self.active {
+            j.remaining -= dec;
+            j.energy_j += energy_per_job;
+        }
+    }
+
+    /// Remove finished jobs, promote waiters into freed slots, and return
+    /// the finished jobs. `now` stamps promoted waiters' service start.
+    /// `per_job_rate` is the rate that applied up to `now`; jobs within
+    /// `DONE_EPS_S` seconds of completion at that rate are done.
+    pub fn reap(&mut self, now: SimTime, per_job_rate: f64) -> Vec<PsJob> {
+        let eps = (per_job_rate * DONE_EPS_S).max(f64::MIN_POSITIVE);
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].remaining <= eps {
+                done.push(self.active.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        while self.active.len() < self.max_active {
+            match self.waiting.pop_front() {
+                Some(mut j) => {
+                    j.started_at = Some(now);
+                    self.active.push(j);
+                }
+                None => break,
+            }
+        }
+        done
+    }
+
+    /// Seconds until the earliest active job finishes at `per_job_rate`.
+    pub fn next_completion_in(&self, per_job_rate: f64) -> Option<SimTime> {
+        if per_job_rate <= 0.0 {
+            return None;
+        }
+        self.active
+            .iter()
+            .map(|j| (j.remaining.max(0.0)) / per_job_rate)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Remove a job wherever it is (failure injection / cancellation).
+    pub fn cancel(&mut self, id: u64, now: SimTime) -> Option<PsJob> {
+        if let Some(i) = self.active.iter().position(|j| j.id == id) {
+            let job = self.active.swap_remove(i);
+            // Freed a slot: promote a waiter.
+            if let Some(mut w) = self.waiting.pop_front() {
+                w.started_at = Some(now);
+                self.active.push(w);
+            }
+            return Some(job);
+        }
+        if let Some(i) = self.waiting.iter().position(|j| j.id == id) {
+            return self.waiting.remove(i);
+        }
+        None
+    }
+
+    pub fn active_jobs(&self) -> &[PsJob] {
+        &self.active
+    }
+}
+
+/// Sub-linear batching efficiency: total service rate multiplier for `n`
+/// concurrent jobs, eff(n) = n^alpha, clamped to [1, n]. alpha ~ 0.85 for a
+/// GPU with continuous batching (near-linear until memory-bound), ~ 0.25
+/// for a CPU edge box (little parallel headroom).
+pub fn batch_efficiency(n: usize, alpha: f64) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    (n as f64).powf(alpha).clamp(1.0, n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_overflow_and_promotion() {
+        let mut q = PsQueue::new(2);
+        q.push(1, 10.0, 0.0);
+        q.push(2, 10.0, 0.0);
+        q.push(3, 10.0, 0.0);
+        assert_eq!(q.n_active(), 2);
+        assert_eq!(q.n_waiting(), 1);
+        // Finish job 1.
+        q.advance(10.0, 1.0);
+        // Both active jobs finish together (same work, same rate).
+        let done = q.reap(10.0, 1.0);
+        assert_eq!(done.len(), 2);
+        assert_eq!(q.n_active(), 1);
+        assert_eq!(q.active_jobs()[0].id, 3);
+        assert_eq!(q.active_jobs()[0].started_at, Some(10.0));
+    }
+
+    #[test]
+    fn next_completion_is_min() {
+        let mut q = PsQueue::new(4);
+        q.push(1, 8.0, 0.0);
+        q.push(2, 4.0, 0.0);
+        q.push(3, 6.0, 0.0);
+        let t = q.next_completion_in(2.0).unwrap();
+        assert!((t - 2.0).abs() < 1e-12); // job 2: 4.0 work / 2.0 rate
+    }
+
+    #[test]
+    fn advance_respects_rate() {
+        let mut q = PsQueue::new(1);
+        q.push(1, 10.0, 0.0);
+        q.advance(3.0, 2.0);
+        assert!((q.active_jobs()[0].remaining - 4.0).abs() < 1e-12);
+        assert!(q.reap(3.0, 2.0).is_empty());
+        q.advance(2.0, 2.0);
+        assert_eq!(q.reap(5.0, 2.0).len(), 1);
+        assert!(q.is_idle());
+    }
+
+    #[test]
+    fn backlog_counts_waiting() {
+        let mut q = PsQueue::new(1);
+        q.push(1, 5.0, 0.0);
+        q.push(2, 7.0, 0.0);
+        assert!((q.backlog() - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cancel_active_promotes_waiter() {
+        let mut q = PsQueue::new(1);
+        q.push(1, 5.0, 0.0);
+        q.push(2, 7.0, 0.0);
+        let c = q.cancel(1, 1.0).unwrap();
+        assert_eq!(c.id, 1);
+        assert_eq!(q.n_active(), 1);
+        assert_eq!(q.active_jobs()[0].id, 2);
+        assert_eq!(q.active_jobs()[0].started_at, Some(1.0));
+    }
+
+    #[test]
+    fn cancel_waiting() {
+        let mut q = PsQueue::new(1);
+        q.push(1, 5.0, 0.0);
+        q.push(2, 7.0, 0.0);
+        assert_eq!(q.cancel(2, 0.5).unwrap().id, 2);
+        assert_eq!(q.n_active(), 1);
+        assert_eq!(q.n_waiting(), 0);
+        assert!(q.cancel(99, 0.5).is_none());
+    }
+
+    #[test]
+    fn zero_rate_never_completes() {
+        let mut q = PsQueue::new(1);
+        q.push(1, 5.0, 0.0);
+        assert!(q.next_completion_in(0.0).is_none());
+        q.advance(100.0, 0.0);
+        assert!(q.reap(100.0, 0.0).is_empty());
+    }
+
+    #[test]
+    fn batch_efficiency_shape() {
+        assert_eq!(batch_efficiency(0, 0.85), 0.0);
+        assert_eq!(batch_efficiency(1, 0.85), 1.0);
+        let e4 = batch_efficiency(4, 0.85);
+        assert!(e4 > 1.0 && e4 < 4.0);
+        // Higher alpha -> closer to linear.
+        assert!(batch_efficiency(8, 0.9) > batch_efficiency(8, 0.3));
+    }
+}

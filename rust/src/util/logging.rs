@@ -1,0 +1,65 @@
+//! Leveled stderr logger backing the `log` crate facade (no `env_logger`
+//! offline). Level comes from `PERLLM_LOG` (error|warn|info|debug|trace),
+//! default `info`.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:10.4}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; subsequent calls are no-ops. Returns the active
+/// level filter.
+pub fn init() -> LevelFilter {
+    let filter = match std::env::var("PERLLM_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| {
+        let logger = Box::leak(Box::new(StderrLogger {
+            start: Instant::now(),
+        }));
+        let _ = log::set_logger(logger);
+        log::set_max_level(filter);
+    });
+    filter
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        let a = super::init();
+        let b = super::init();
+        assert_eq!(a, b);
+        log::info!("logger smoke line");
+    }
+}

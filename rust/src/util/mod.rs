@@ -1,0 +1,9 @@
+//! Foundation substrates built from scratch for the offline environment:
+//! deterministic PRNG, streaming statistics, a property-testing harness,
+//! and a leveled logger. Everything above (sim, scheduler, coordinator)
+//! builds on these.
+
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

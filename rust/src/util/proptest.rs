@@ -1,0 +1,168 @@
+//! Minimal property-based testing harness (no `proptest` crate offline).
+//!
+//! Provides what our invariant tests need: seeded random case generation,
+//! a fixed case budget, first-failure shrinking by re-generation at smaller
+//! "size", and a reproducible failure report that names the seed.
+//!
+//! ```no_run
+//! use perllm::util::proptest::{check, Gen};
+//! check("addition commutes", 256, |g: &mut Gen| {
+//!     let a = g.i64(-1000, 1000);
+//!     let b = g.i64(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Random value source handed to each property case. `size` grows with the
+/// case index so early cases are small (fast, easy to debug) and later ones
+/// stress larger structures — the proptest/QuickCheck sizing discipline.
+pub struct Gen {
+    rng: Rng,
+    size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    /// Current size hint (grows over the run, >= 1).
+    pub fn size(&self) -> usize {
+        self.size.max(1)
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Vec with length scaled by the current size hint.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let cap = max_len.min(self.size()).max(1);
+        let n = self.usize(0, cap);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (failing the enclosing test)
+/// with the seed and case index on first failure, after attempting a
+/// smaller-sized reproduction to report the simplest found counterexample.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base_seed = env_seed().unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case);
+        // Size ramps from 1 to 100 over the run.
+        let size = 1 + (case as usize * 99) / (cases.max(2) as usize - 1).max(1);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, size);
+            prop(&mut g);
+        });
+        if let Err(err) = result {
+            // Shrink pass: try the same seed at smaller sizes and report the
+            // smallest size that still fails.
+            let mut min_fail = size;
+            for s in 1..size {
+                let again = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, s);
+                    prop(&mut g);
+                });
+                if again.is_err() {
+                    min_fail = s;
+                    break;
+                }
+            }
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed: case={case} seed={seed:#x} size={size} \
+                 min_failing_size={min_fail}\n  reproduce with PERLLM_PROP_SEED={seed}\n  {msg}"
+            );
+        }
+    }
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("PERLLM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sort idempotent", 64, |g| {
+            let mut xs = g.vec(32, |g| g.i64(-100, 100));
+            xs.sort_unstable();
+            let once = xs.clone();
+            xs.sort_unstable();
+            assert_eq!(once, xs);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check("always fails", 8, |g| {
+            let x = g.i64(0, 10);
+            assert!(x > 100, "x={x}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("gen ranges", 128, |g| {
+            let a = g.u64(5, 9);
+            assert!((5..=9).contains(&a));
+            let b = g.i64(-3, 3);
+            assert!((-3..=3).contains(&b));
+            let c = g.f64(1.0, 2.0);
+            assert!((1.0..2.0).contains(&c));
+        });
+    }
+
+    #[test]
+    fn vec_len_bounded() {
+        check("vec bounded", 64, |g| {
+            let xs = g.vec(16, |g| g.bool());
+            assert!(xs.len() <= 16);
+        });
+    }
+}

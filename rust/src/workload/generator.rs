@@ -1,0 +1,300 @@
+//! Workload generation: reproducible traces of diverse LLM services.
+//!
+//! The paper evaluates 10,000 concurrent-ish service requests with
+//! personalized deadlines drawn from [2 s, 6 s] (§4.2). We generate
+//! Poisson or bursty arrival processes over a class mix with per-class
+//! token-length distributions (log-normal, heavy-tailed like production
+//! traces), all pinned to a seed so every bench row is reproducible.
+
+use super::service::{ServiceClass, ServiceRequest};
+use crate::util::rng::Rng;
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson with the given rate (req/s).
+    Poisson { rate: f64 },
+    /// On/off bursts: `burst_rate` during bursts of `burst_len` seconds,
+    /// `base_rate` otherwise, period `period` seconds. Models flash crowds.
+    Bursty {
+        base_rate: f64,
+        burst_rate: f64,
+        burst_len: f64,
+        period: f64,
+    },
+    /// All requests arrive at t=0 (the paper's "simultaneous uploading of
+    /// large-scale services" stress case, Fig. 2).
+    Simultaneous,
+}
+
+/// Per-class token profile: log-normal prompt/output lengths.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassProfile {
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    pub output_mu: f64,
+    pub output_sigma: f64,
+    /// Deadline range [lo, hi] seconds for this class.
+    pub deadline_lo: f64,
+    pub deadline_hi: f64,
+    /// Mix weight (relative frequency).
+    pub weight: f64,
+}
+
+impl ClassProfile {
+    fn default_for(class: ServiceClass) -> ClassProfile {
+        // Medians chosen so that prompt ~ exp(mu) tokens, output likewise.
+        match class {
+            ServiceClass::Chat => ClassProfile {
+                prompt_mu: 3.9, // ~50 tokens
+                prompt_sigma: 0.5,
+                output_mu: 3.4, // ~30 tokens
+                output_sigma: 0.5,
+                deadline_lo: 2.0,
+                deadline_hi: 4.0,
+                weight: 0.4,
+            },
+            ServiceClass::Summarize => ClassProfile {
+                prompt_mu: 5.5, // ~245 tokens
+                prompt_sigma: 0.4,
+                output_mu: 3.7, // ~40 tokens
+                output_sigma: 0.4,
+                deadline_lo: 3.0,
+                deadline_hi: 6.0,
+                weight: 0.2,
+            },
+            ServiceClass::Translate => ClassProfile {
+                prompt_mu: 4.6, // ~100 tokens
+                prompt_sigma: 0.4,
+                output_mu: 4.1, // ~60 tokens
+                output_sigma: 0.4,
+                deadline_lo: 2.0,
+                deadline_hi: 5.0,
+                weight: 0.25,
+            },
+            ServiceClass::Code => ClassProfile {
+                prompt_mu: 4.4, // ~80 tokens
+                prompt_sigma: 0.6,
+                output_mu: 4.5, // ~90 tokens
+                output_sigma: 0.5,
+                deadline_lo: 3.0,
+                deadline_hi: 6.0,
+                weight: 0.15,
+            },
+        }
+    }
+}
+
+/// Full workload description.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub n_requests: usize,
+    pub arrivals: ArrivalProcess,
+    pub seed: u64,
+    pub profiles: [ClassProfile; 4],
+    /// Payload model: fixed header + per-prompt-token context bytes.
+    pub payload_base_bytes: u64,
+    pub payload_bytes_per_token: u64,
+    /// Cap on token lengths (keeps the heavy tail inside model max_seq).
+    pub max_prompt_tokens: u32,
+    pub max_output_tokens: u32,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            n_requests: 10_000,
+            arrivals: ArrivalProcess::Poisson { rate: 15.0 },
+            seed: 0x9E11,
+            profiles: [
+                ClassProfile::default_for(ServiceClass::Chat),
+                ClassProfile::default_for(ServiceClass::Summarize),
+                ClassProfile::default_for(ServiceClass::Translate),
+                ClassProfile::default_for(ServiceClass::Code),
+            ],
+            payload_base_bytes: 65_536,
+            payload_bytes_per_token: 4096,
+            max_prompt_tokens: 1024,
+            max_output_tokens: 512,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn with_requests(mut self, n: usize) -> Self {
+        self.n_requests = n;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_arrivals(mut self, a: ArrivalProcess) -> Self {
+        self.arrivals = a;
+        self
+    }
+
+    /// Uniform deadline range override for every class (paper: U[2, 6] s).
+    pub fn with_deadline_range(mut self, lo: f64, hi: f64) -> Self {
+        for p in &mut self.profiles {
+            p.deadline_lo = lo;
+            p.deadline_hi = hi;
+        }
+        self
+    }
+}
+
+/// Generate the full trace, sorted by arrival time, ids dense from 0.
+pub fn generate(cfg: &WorkloadConfig) -> Vec<ServiceRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0f64;
+    let weights: Vec<f64> = cfg.profiles.iter().map(|p| p.weight).collect();
+    let wsum: f64 = weights.iter().sum();
+
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for id in 0..cfg.n_requests {
+        t = next_arrival(&cfg.arrivals, t, &mut rng);
+        // Class by weighted draw.
+        let mut u = rng.f64() * wsum;
+        let mut class = ServiceClass::Chat;
+        for (i, c) in ServiceClass::ALL.iter().enumerate() {
+            u -= weights[i];
+            if u <= 0.0 {
+                class = *c;
+                break;
+            }
+        }
+        let p = cfg.profiles[class.index()];
+        let prompt = rng
+            .lognormal(p.prompt_mu, p.prompt_sigma)
+            .round()
+            .clamp(1.0, cfg.max_prompt_tokens as f64) as u32;
+        let output = rng
+            .lognormal(p.output_mu, p.output_sigma)
+            .round()
+            .clamp(1.0, cfg.max_output_tokens as f64) as u32;
+        let deadline = rng.uniform(p.deadline_lo, p.deadline_hi);
+        out.push(ServiceRequest {
+            id: id as u64,
+            class,
+            arrival: t,
+            prompt_tokens: prompt,
+            output_tokens: output,
+            deadline,
+            payload_bytes: cfg.payload_base_bytes
+                + prompt as u64 * cfg.payload_bytes_per_token,
+        });
+    }
+    out
+}
+
+fn next_arrival(process: &ArrivalProcess, t: f64, rng: &mut Rng) -> f64 {
+    match *process {
+        ArrivalProcess::Poisson { rate } => t + rng.exp(rate),
+        ArrivalProcess::Simultaneous => 0.0,
+        ArrivalProcess::Bursty {
+            base_rate,
+            burst_rate,
+            burst_len,
+            period,
+        } => {
+            let phase = t % period;
+            let rate = if phase < burst_len { burst_rate } else { base_rate };
+            t + rng.exp(rate)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_count_sorted() {
+        let cfg = WorkloadConfig::default().with_requests(500);
+        let trace = generate(&cfg);
+        assert_eq!(trace.len(), 500);
+        assert!(trace.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(trace.iter().enumerate().all(|(i, r)| r.id == i as u64));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = WorkloadConfig::default().with_requests(100).with_seed(9);
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.deadline, y.deadline);
+        }
+        let c = generate(&cfg.clone().with_seed(10));
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt_tokens != y.prompt_tokens));
+    }
+
+    #[test]
+    fn deadlines_in_configured_range() {
+        let cfg = WorkloadConfig::default()
+            .with_requests(2000)
+            .with_deadline_range(2.0, 6.0);
+        for r in generate(&cfg) {
+            assert!(r.deadline >= 2.0 && r.deadline <= 6.0, "d={}", r.deadline);
+        }
+    }
+
+    #[test]
+    fn token_caps_respected() {
+        let mut cfg = WorkloadConfig::default().with_requests(3000);
+        cfg.max_prompt_tokens = 100;
+        cfg.max_output_tokens = 64;
+        for r in generate(&cfg) {
+            assert!(r.prompt_tokens >= 1 && r.prompt_tokens <= 100);
+            assert!(r.output_tokens >= 1 && r.output_tokens <= 64);
+        }
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let cfg = WorkloadConfig::default()
+            .with_requests(20_000)
+            .with_arrivals(ArrivalProcess::Poisson { rate: 100.0 });
+        let trace = generate(&cfg);
+        let span = trace.last().unwrap().arrival;
+        let rate = trace.len() as f64 / span;
+        assert!((rate - 100.0).abs() < 5.0, "rate={rate}");
+    }
+
+    #[test]
+    fn simultaneous_all_at_zero() {
+        let cfg = WorkloadConfig::default()
+            .with_requests(50)
+            .with_arrivals(ArrivalProcess::Simultaneous);
+        assert!(generate(&cfg).iter().all(|r| r.arrival == 0.0));
+    }
+
+    #[test]
+    fn all_classes_present() {
+        let cfg = WorkloadConfig::default().with_requests(1000);
+        let trace = generate(&cfg);
+        for c in ServiceClass::ALL {
+            assert!(trace.iter().any(|r| r.class == c), "missing {c:?}");
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_monotone() {
+        let cfg = WorkloadConfig::default()
+            .with_requests(1000)
+            .with_arrivals(ArrivalProcess::Bursty {
+                base_rate: 20.0,
+                burst_rate: 400.0,
+                burst_len: 1.0,
+                period: 10.0,
+            });
+        let trace = generate(&cfg);
+        assert!(trace.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+}

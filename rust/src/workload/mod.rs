@@ -1,0 +1,8 @@
+//! Workload substrate: diverse-service request model and reproducible
+//! trace generation (the paper's 10 k-request evaluation workloads).
+
+pub mod generator;
+pub mod service;
+
+pub use generator::{generate, ArrivalProcess, ClassProfile, WorkloadConfig};
+pub use service::{ServiceClass, ServiceOutcome, ServiceRequest};

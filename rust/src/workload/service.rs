@@ -1,0 +1,162 @@
+//! Service request model: the "diverse LLM services" of the paper.
+//!
+//! Each request carries a service class (chat, summarization, translation,
+//! code — the diversity the paper's intro motivates), token counts, a
+//! personalized processing-time requirement D∆ drawn from [2 s, 6 s]
+//! (paper §4.2), and the upload payload implied by its prompt.
+
+use crate::sim::time::SimTime;
+
+/// Service classes with distinct token profiles and deadline sensitivity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ServiceClass {
+    /// Short prompt, short answer, tight deadline (interactive).
+    Chat,
+    /// Long prompt, short answer (long-text quality users, paper §1).
+    Summarize,
+    /// Medium prompt, medium answer.
+    Translate,
+    /// Medium prompt, long answer, loose deadline.
+    Code,
+}
+
+impl ServiceClass {
+    pub const ALL: [ServiceClass; 4] = [
+        ServiceClass::Chat,
+        ServiceClass::Summarize,
+        ServiceClass::Translate,
+        ServiceClass::Code,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            ServiceClass::Chat => 0,
+            ServiceClass::Summarize => 1,
+            ServiceClass::Translate => 2,
+            ServiceClass::Code => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ServiceClass::Chat => "chat",
+            ServiceClass::Summarize => "summarize",
+            ServiceClass::Translate => "translate",
+            ServiceClass::Code => "code",
+        }
+    }
+}
+
+/// One inference service request (one "arm pull context" for the bandit).
+#[derive(Debug, Clone)]
+pub struct ServiceRequest {
+    pub id: u64,
+    pub class: ServiceClass,
+    /// Arrival time at the router.
+    pub arrival: SimTime,
+    /// Prompt length in tokens.
+    pub prompt_tokens: u32,
+    /// Expected/decoded output length in tokens.
+    pub output_tokens: u32,
+    /// Personalized processing-time requirement D∆ (paper C1).
+    pub deadline: SimTime,
+    /// Upload payload in bytes (prompt + conversation context).
+    pub payload_bytes: u64,
+}
+
+impl ServiceRequest {
+    /// Total token work (prefill is cheaper per token than decode; the
+    /// server model weighs them via its own rates — this is just the sum
+    /// used for throughput accounting).
+    pub fn total_tokens(&self) -> u64 {
+        self.prompt_tokens as u64 + self.output_tokens as u64
+    }
+}
+
+/// Outcome of one completed (or failed) service.
+#[derive(Debug, Clone)]
+pub struct ServiceOutcome {
+    pub id: u64,
+    pub class: ServiceClass,
+    pub server: usize,
+    /// Transmission (upload) time actually experienced.
+    pub tx_time: SimTime,
+    /// Queueing + inference time on the server.
+    pub infer_time: SimTime,
+    /// End-to-end processing time (tx + queue + inference).
+    pub processing_time: SimTime,
+    pub deadline: SimTime,
+    /// Energy attributed to this service (transmission + inference share), J.
+    pub energy_j: f64,
+    pub tokens: u64,
+    pub completed_at: SimTime,
+}
+
+impl ServiceOutcome {
+    /// Paper's success criterion: processing time under the requirement.
+    pub fn success(&self) -> bool {
+        self.processing_time <= self.deadline
+    }
+
+    /// Normalized slack: (D∆ - D) / D∆, the C1 term of f(y) (Eq. 3).
+    pub fn slack(&self) -> f64 {
+        (self.deadline - self.processing_time) / self.deadline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(processing: f64, deadline: f64) -> ServiceOutcome {
+        ServiceOutcome {
+            id: 1,
+            class: ServiceClass::Chat,
+            server: 0,
+            tx_time: 0.1,
+            infer_time: processing - 0.1,
+            processing_time: processing,
+            deadline,
+            energy_j: 10.0,
+            tokens: 100,
+            completed_at: processing,
+        }
+    }
+
+    #[test]
+    fn success_iff_within_deadline() {
+        assert!(outcome(1.9, 2.0).success());
+        assert!(outcome(2.0, 2.0).success());
+        assert!(!outcome(2.01, 2.0).success());
+    }
+
+    #[test]
+    fn slack_sign_matches_success() {
+        assert!(outcome(1.0, 2.0).slack() > 0.0);
+        assert!(outcome(3.0, 2.0).slack() < 0.0);
+    }
+
+    #[test]
+    fn class_indices_distinct() {
+        let mut seen = [false; 4];
+        for c in ServiceClass::ALL {
+            assert!(!seen[c.index()]);
+            seen[c.index()] = true;
+            assert!(!c.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn total_tokens_sums() {
+        let r = ServiceRequest {
+            id: 0,
+            class: ServiceClass::Code,
+            arrival: 0.0,
+            prompt_tokens: 10,
+            output_tokens: 32,
+            deadline: 4.0,
+            payload_bytes: 1024,
+        };
+        assert_eq!(r.total_tokens(), 42);
+    }
+}

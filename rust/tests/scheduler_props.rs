@@ -1,0 +1,239 @@
+//! Property-based tests on scheduler and simulation invariants
+//! (DESIGN.md §9), using the crate's own proptest harness.
+
+use perllm::scheduler::csucb::{CsUcb, CsUcbParams};
+use perllm::scheduler::{ClusterView, Scheduler, ServerView};
+use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
+use perllm::sim::energy::EnergyWeights;
+use perllm::sim::engine::simulate;
+use perllm::sim::ps::PsQueue;
+use perllm::sim::server::ServerKind;
+use perllm::util::proptest::{check, Gen};
+use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
+use perllm::workload::service::{ServiceClass, ServiceRequest};
+
+fn random_view(g: &mut Gen, n: usize) -> ClusterView {
+    let servers = (0..n)
+        .map(|i| {
+            let cap = g.f64(0.5, 20.0);
+            ServerView {
+                kind: if i == n - 1 {
+                    ServerKind::Cloud
+                } else {
+                    ServerKind::Edge
+                },
+                predicted_time: g.f64(0.1, 12.0),
+                compute_headroom: cap,
+                compute_demand: g.f64(0.0, 25.0),
+                bandwidth_headroom: g.f64(1.0e5, 3.0e8),
+                bandwidth_demand: g.f64(1.0e4, 1.0e9),
+                tx_energy_est: g.f64(0.1, 20.0),
+                infer_energy_est: g.f64(1.0, 200.0),
+                n_active: g.usize(0, 16),
+                n_waiting: g.usize(0, 16),
+                solo_time_est: g.f64(0.1, 5.0),
+                occupancy: g.f64(0.0, 1.0),
+            }
+        })
+        .collect();
+    ClusterView {
+        now: 0.0,
+        servers,
+        weights: EnergyWeights::default(),
+    }
+}
+
+fn random_req(g: &mut Gen) -> ServiceRequest {
+    ServiceRequest {
+        id: g.u64(0, 1 << 40),
+        class: *g.pick(&ServiceClass::ALL),
+        arrival: 0.0,
+        prompt_tokens: g.usize(1, 1024) as u32,
+        output_tokens: g.usize(1, 512) as u32,
+        deadline: g.f64(0.5, 8.0),
+        payload_bytes: g.u64(1_000, 5_000_000),
+    }
+}
+
+#[test]
+fn prop_constraint_filter_soundness() {
+    // f(y) >= 0 implies every individual constraint holds (Eq. 3).
+    check("f(y) soundness", 300, |g| {
+        let n = g.usize(1, 8);
+        let view = random_view(g, n);
+        let req = random_req(g);
+        for j in view.feasible_servers(&req) {
+            let sv = &view.servers[j];
+            assert!(sv.predicted_time <= req.deadline + 1e-9, "C1 violated");
+            assert!(sv.compute_demand <= sv.compute_headroom + 1e-9, "C2 violated");
+            assert!(
+                sv.bandwidth_demand <= sv.bandwidth_headroom + 1e-9,
+                "C3 violated"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_csucb_picks_feasible_when_any_exists() {
+    check("cs-ucb feasibility", 300, |g| {
+        let n = g.usize(2, 8);
+        let view = random_view(g, n);
+        let req = random_req(g);
+        let feasible = view.feasible_servers(&req);
+        let mut s = CsUcb::with_defaults(n);
+        let d = s.decide(&req, &view);
+        assert!(d.server < n, "out of range");
+        if !feasible.is_empty() {
+            assert!(
+                feasible.contains(&d.server),
+                "picked infeasible {} with feasible set {feasible:?}",
+                d.server
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_least_violating_is_argmax_fy() {
+    check("least violating", 200, |g| {
+        let n = g.usize(1, 8);
+        let view = random_view(g, n);
+        let req = random_req(g);
+        let j = view.least_violating(&req);
+        let fj = view.constraint_satisfaction(&req, j);
+        for k in 0..n {
+            assert!(view.constraint_satisfaction(&req, k) <= fj + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_every_request_gets_exactly_one_outcome() {
+    // C4 single-assignment + engine conservation: every request in the
+    // trace yields exactly one outcome, whatever the load level.
+    check("outcome conservation", 12, |g| {
+        let n = g.usize(20, 300);
+        let rate = g.f64(2.0, 60.0);
+        let seed = g.u64(0, 1 << 32);
+        let trace = generate(
+            &WorkloadConfig::default()
+                .with_requests(n)
+                .with_arrivals(ArrivalProcess::Poisson { rate })
+                .with_seed(seed),
+        );
+        let cfg = ClusterConfig::paper("yi-6b", BandwidthMode::Fluctuating);
+        let mut s = CsUcb::with_defaults(cfg.n_servers());
+        let rep = simulate(&cfg, &trace, &mut s);
+        assert_eq!(rep.outcomes.len(), n);
+        let mut ids: Vec<u64> = rep.outcomes.iter().map(|o| o.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicate or missing outcomes");
+    });
+}
+
+#[test]
+fn prop_energy_non_negative_and_consistent() {
+    check("energy consistency", 8, |g| {
+        let n = g.usize(30, 200);
+        let trace = generate(
+            &WorkloadConfig::default()
+                .with_requests(n)
+                .with_seed(g.u64(0, 999)),
+        );
+        let cfg = ClusterConfig::paper("llama3-8b", BandwidthMode::Stable);
+        let mut s = CsUcb::with_defaults(cfg.n_servers());
+        let rep = simulate(&cfg, &trace, &mut s);
+        assert!(rep.energy.tran_j >= 0.0);
+        assert!(rep.energy.infer_j >= 0.0);
+        assert!(rep.energy.idle_j >= 0.0);
+        // Per-service attributed energy never exceeds the cluster total.
+        let attributed: f64 = rep.outcomes.iter().map(|o| o.energy_j).sum();
+        assert!(
+            attributed <= rep.energy.total_j() + 1e-6,
+            "attributed {attributed} > total {}",
+            rep.energy.total_j()
+        );
+    });
+}
+
+#[test]
+fn prop_ps_queue_work_conserved_and_bounded() {
+    check("ps conservation", 200, |g| {
+        let mut q = PsQueue::new(g.usize(1, 8));
+        let mut pushed = 0.0f64;
+        let mut id = 0u64;
+        let mut now = 0.0f64;
+        for _ in 0..g.usize(1, 60) {
+            if g.bool() {
+                let w = g.f64(0.1, 5.0);
+                pushed += w;
+                q.push(id, w, now);
+                id += 1;
+            } else {
+                let rate = g.f64(0.1, 3.0);
+                let dt = g.f64(0.0, 2.0);
+                // Cap dt at the next completion so jobs don't go negative.
+                let dt = match q.next_completion_in(rate) {
+                    Some(eta) => dt.min(eta),
+                    None => dt,
+                };
+                q.advance(dt, rate);
+                now += dt;
+                let _ = q.reap(now, rate);
+            }
+        }
+        let remaining = q.backlog();
+        assert!(remaining >= -1e-6);
+        assert!(remaining <= pushed + 1e-6, "backlog exceeds pushed work");
+    });
+}
+
+#[test]
+fn prop_ucb_reward_monotone_in_energy() {
+    // Lower energy at the same timing outcome => weakly higher reward, and
+    // success beats failure at equal energy (Eq. 4 sanity).
+    check("reward monotonicity", 200, |g| {
+        let p = CsUcbParams::default();
+        let mk = |energy: f64, proc: f64, deadline: f64| perllm::workload::service::ServiceOutcome {
+            id: 0,
+            class: ServiceClass::Chat,
+            server: 0,
+            tx_time: 0.1,
+            infer_time: proc,
+            processing_time: proc,
+            deadline,
+            energy_j: energy,
+            tokens: 10,
+            completed_at: proc,
+        };
+        let d = g.f64(1.0, 8.0);
+        let proc = g.f64(0.1, 10.0);
+        let e1 = g.f64(0.0, 5000.0);
+        let e2 = e1 + g.f64(0.0, 5000.0);
+        let r1 = CsUcb::reward(&p, &mk(e1, proc, d));
+        let r2 = CsUcb::reward(&p, &mk(e2, proc, d));
+        assert!(r1 >= r2 - 1e-12, "reward not monotone: {r1} < {r2}");
+        let ok = CsUcb::reward(&p, &mk(e1, d * 0.5, d));
+        let late = CsUcb::reward(&p, &mk(e1, d * 2.0, d));
+        assert!(ok > late);
+    });
+}
+
+#[test]
+fn prop_workload_generation_valid() {
+    check("workload validity", 60, |g| {
+        let cfg = WorkloadConfig::default()
+            .with_requests(g.usize(1, 500))
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(g.u64(0, 1 << 30));
+        for r in generate(&cfg) {
+            assert!(r.prompt_tokens >= 1);
+            assert!(r.output_tokens >= 1);
+            assert!((2.0..=6.0).contains(&r.deadline));
+            assert!(r.payload_bytes > 0);
+            assert!(r.arrival >= 0.0);
+        }
+    });
+}
