@@ -1,9 +1,20 @@
 //! Paper-scale scheduling experiment: replay the paper's evaluation
-//! (§4.2-4.4) — 10,000 diverse services, four schedulers, stable and
-//! fluctuating bandwidth — and print Table-1/Figure-4/5/6-style rows.
+//! (§4.2-4.4) — 10,000 diverse services by default, four schedulers,
+//! stable and fluctuating bandwidth — and print Table-1/Figure-4/5/6-style
+//! rows plus the DES's own throughput (events/s and stale-event ratio).
+//!
+//! The virtual-time simulation core makes million-request sweeps
+//! practical; for the 1M acceptance run use:
+//!
+//! ```text
+//! cargo run --release --example paper_scale_sim -- \
+//!     --requests 1000000 --schedulers cs-ucb --modes stable
+//! ```
 //!
 //! Usage: cargo run --release --example paper_scale_sim [-- --requests N]
 //!                   [--model yi-6b|llama2-7b|llama3-8b|yi-9b] [--seed S]
+//!                   [--schedulers fineinfer,agod,rewardless,cs-ucb]
+//!                   [--modes stable|fluctuating|both]
 
 use perllm::scheduler::{
     agod::Agod, csucb::CsUcb, fineinfer::FineInfer, rewardless::RewardlessGuidance, Scheduler,
@@ -24,6 +35,17 @@ fn main() {
     let n: usize = get("--requests", "10000").parse().expect("bad --requests");
     let model = get("--model", "llama2-7b");
     let seed: u64 = get("--seed", "42").parse().expect("bad --seed");
+    let schedulers: Vec<String> = get("--schedulers", "fineinfer,agod,rewardless,cs-ucb")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let modes: Vec<BandwidthMode> = match get("--modes", "both").as_str() {
+        "stable" => vec![BandwidthMode::Stable],
+        "fluctuating" | "fluct" => vec![BandwidthMode::Fluctuating],
+        "both" => vec![BandwidthMode::Stable, BandwidthMode::Fluctuating],
+        other => panic!("bad --modes {other}"),
+    };
 
     let trace = generate(
         &WorkloadConfig::default()
@@ -33,35 +55,50 @@ fn main() {
             .with_seed(seed),
     );
 
-    for mode in [BandwidthMode::Stable, BandwidthMode::Fluctuating] {
+    for mode in modes {
         println!("\n=== edge model {model}, {mode:?} bandwidth, {n} requests ===");
         let cfg = ClusterConfig::paper(&model, mode);
         let cloud = cfg.cloud_index();
         let ns = cfg.n_servers();
 
-        let mut schedulers: Vec<Box<dyn Scheduler>> = vec![
-            Box::new(FineInfer::new(cloud)),
-            Box::new(Agod::new(ns, seed)),
-            Box::new(RewardlessGuidance::new(ns)),
-            Box::new(CsUcb::with_defaults(ns)),
-        ];
-        let mut baseline_thpt = None;
-        for s in schedulers.iter_mut() {
+        let mut throughputs: Vec<(String, f64)> = Vec::new();
+        for name in &schedulers {
+            let mut s: Box<dyn Scheduler> = match name.as_str() {
+                "fineinfer" => Box::new(FineInfer::new(cloud)),
+                "agod" => Box::new(Agod::new(ns, seed)),
+                "rewardless" => Box::new(RewardlessGuidance::new(ns)),
+                "cs-ucb" => Box::new(CsUcb::with_defaults(ns)),
+                other => panic!("unknown scheduler {other}"),
+            };
             let rep = simulate(&cfg, &trace, s.as_mut());
             println!("{}", rep.summary_row());
             println!(
                 "    dropped {} late {} unfinished {}",
                 rep.dropped, rep.late, rep.unfinished
             );
-            if baseline_thpt.is_none() {
-                baseline_thpt = Some(rep.throughput_tok_s);
-            } else {
-                let r = rep.throughput_tok_s / baseline_thpt.unwrap();
-                println!("    throughput vs FineInfer: {r:.2}x");
-            }
+            println!(
+                "    DES: {} events in {:.2}s wall = {:.0} events/s, \
+                 stale ratio {:.4} ({} stale)",
+                rep.events_processed,
+                rep.wall_s,
+                rep.events_per_sec,
+                rep.stale_ratio,
+                rep.stale_events
+            );
+            throughputs.push((name.clone(), rep.throughput_tok_s));
             for (k, v) in rep.diagnostics {
                 if k == "cum_regret" || k == "regret_bound" || k == "fallback_decisions" {
                     println!("    {k}: {v:.1}");
+                }
+            }
+        }
+        // Ratios as a post-pass so the FineInfer baseline applies no matter
+        // where (or whether) it appears in --schedulers.
+        if let Some((_, base)) = throughputs.iter().find(|(n, _)| n == "fineinfer") {
+            let base = *base;
+            for (name, thpt) in &throughputs {
+                if name != "fineinfer" {
+                    println!("    {name} throughput vs FineInfer: {:.2}x", thpt / base);
                 }
             }
         }

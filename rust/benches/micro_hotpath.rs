@@ -3,22 +3,40 @@
 //! * CS-UCB decision latency (must be negligible vs service times)
 //! * DES event throughput (events/s — drives experiment wall time)
 //! * PS-queue operations
-//! * end-to-end simulation wall time per 1 000 requests
+//! * the congested-cloud stress case: 400 simultaneous arrivals on one
+//!   server, the regime where the seed's O(active-jobs)-per-event queue
+//!   went quadratic-ish (the virtual-time core's headline win)
+//! * end-to-end simulation wall time per 1 000 / 4 000 requests
 //!
 //! Run: cargo bench --bench micro_hotpath
+//!
+//! Emits the measured numbers to BENCH_perllm.current.json at the repo
+//! root (override with PERLLM_BENCH_JSON=path, disable with =skip);
+//! merge them into the committed BENCH_perllm.json when they move.
 
-mod common;
-
-use perllm::bench::{bench_fn, Table};
+use perllm::bench::{bench_fn, render_json, JsonValue};
 use perllm::scheduler::csucb::CsUcb;
-use perllm::scheduler::Scheduler;
+use perllm::scheduler::{ClusterView, Decision, Scheduler};
 use perllm::sim::cluster::{BandwidthMode, ClusterConfig, ClusterSim};
 use perllm::sim::engine::simulate;
 use perllm::sim::ps::PsQueue;
-use perllm::workload::generator::{generate, WorkloadConfig};
+use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
+use perllm::workload::service::ServiceRequest;
+
+/// Fixed-target scheduler: isolates DES throughput from decision logic.
+struct Fixed(usize);
+impl Scheduler for Fixed {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+    fn decide(&mut self, _r: &ServiceRequest, _v: &ClusterView) -> Decision {
+        Decision::now(self.0)
+    }
+}
 
 fn main() {
     let mut rows = Vec::new();
+    let mut json: Vec<(&str, JsonValue)> = Vec::new();
 
     // 1. Scheduler decision latency on a live-ish view.
     {
@@ -28,26 +46,67 @@ fn main() {
         let view = sim.view(&trace[0], 0.0);
         let mut sched = CsUcb::with_defaults(cfg.n_servers());
         let mut i = 0usize;
-        rows.push(bench_fn("cs-ucb decide()", 1_000, 100_000, || {
+        let r = bench_fn("cs-ucb decide()", 1_000, 100_000, || {
             let req = &trace[i % trace.len()];
             std::hint::black_box(sched.decide(req, &view));
             i += 1;
-        }));
+        });
+        json.push(("csucb_decide_mean_ns", JsonValue::Num(r.mean_ns)));
+        rows.push(r);
     }
 
     // 2. PS queue push/advance/reap cycle.
     {
         let mut q = PsQueue::new(16);
         let mut id = 0u64;
-        rows.push(bench_fn("ps push+advance+reap", 1_000, 100_000, || {
+        let r = bench_fn("ps push+advance+reap", 1_000, 100_000, || {
             q.push(id, 1.0, 0.0);
             q.advance(0.5, 2.0);
             std::hint::black_box(q.reap(0.5, 2.0));
             id += 1;
-        }));
+        });
+        json.push(("ps_cycle_mean_ns", JsonValue::Num(r.mean_ns)));
+        rows.push(r);
     }
 
-    // 3. Full DES runs (events/s reported separately).
+    // 3. Congested cloud: 400 simultaneous arrivals forced onto the cloud
+    //    server behind the shared uplink. Every event used to touch all
+    //    ~400 concurrent uploads; with the virtual-time core each event is
+    //    O(log n). This is the acceptance scenario for the ≥3x events/s
+    //    win.
+    {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let trace = generate(
+            &WorkloadConfig::default()
+                .with_requests(400)
+                .with_arrivals(ArrivalProcess::Simultaneous)
+                .with_seed(3),
+        );
+        let cloud = cfg.cloud_index();
+        // All JSON metrics use last-iteration semantics (consistent with
+        // the csucb rows below) so cross-PR ratios compare like with like.
+        let mut events_per_sec = 0.0f64;
+        let mut stale_ratio = 0.0f64;
+        let mut events: u64 = 0;
+        let r = bench_fn("congested cloud 400 simultaneous", 1, 10, || {
+            let mut s = Fixed(cloud);
+            let rep = simulate(&cfg, &trace, &mut s);
+            events_per_sec = rep.events_per_sec;
+            stale_ratio = rep.stale_ratio;
+            events = rep.events_processed;
+            std::hint::black_box(rep.success_rate);
+        });
+        println!(
+            "  congested cloud: {events} events, {events_per_sec:.0} events/s, \
+             stale ratio {stale_ratio:.3}"
+        );
+        json.push(("congested_cloud_400_events_per_sec", JsonValue::Num(events_per_sec)));
+        json.push(("congested_cloud_400_stale_ratio", JsonValue::Num(stale_ratio)));
+        json.push(("congested_cloud_400_events", JsonValue::Num(events as f64)));
+        rows.push(r);
+    }
+
+    // 4. Full DES runs (events/s reported separately).
     for &n in &[1_000usize, 4_000] {
         let trace = generate(
             &WorkloadConfig::default()
@@ -57,20 +116,52 @@ fn main() {
         );
         let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Fluctuating);
         let mut events_per_sec = 0.0;
+        let mut stale_ratio = 0.0;
         let name = format!("simulate cs-ucb {n} reqs");
         rows.push(bench_fn(&name, 1, 5, || {
             let mut s = CsUcb::with_defaults(cfg.n_servers());
             let rep = simulate(&cfg, &trace, &mut s);
             events_per_sec = rep.events_per_sec;
+            stale_ratio = rep.stale_ratio;
             std::hint::black_box(rep.success_rate);
         }));
-        println!("  {n} reqs: DES {events_per_sec:.0} events/s");
+        println!("  {n} reqs: DES {events_per_sec:.0} events/s, stale ratio {stale_ratio:.3}");
+        if n == 4_000 {
+            json.push(("csucb_4000_events_per_sec", JsonValue::Num(events_per_sec)));
+            json.push(("csucb_4000_stale_ratio", JsonValue::Num(stale_ratio)));
+        }
     }
 
-    let mut t = Table::new("L3 hot-path micro benches", &["bench"]);
-    let _ = &mut t;
-    println!();
+    println!("\n== L3 hot-path micro benches ==");
     for r in &rows {
         println!("{}", r.row());
+    }
+
+    emit_baseline(&json);
+}
+
+/// Write the measured numbers to a sibling of the committed baseline
+/// (BENCH_perllm.current.json) so running the bench never clobbers the
+/// history kept in BENCH_perllm.json — merge the emitted `current` section
+/// in by hand when the numbers move.
+fn emit_baseline(pairs: &[(&str, JsonValue)]) {
+    let path = match std::env::var("PERLLM_BENCH_JSON") {
+        Ok(p) if p == "skip" => return,
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_perllm.current.json")
+        }
+    };
+    let meta = vec![
+        (
+            "generated_by",
+            JsonValue::Str("cargo bench --bench micro_hotpath".into()),
+        ),
+        ("schema", JsonValue::Num(1.0)),
+    ];
+    let body = render_json(&[("meta", meta), ("current", pairs.to_vec())]);
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("\nwrote baseline to {}", path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
     }
 }

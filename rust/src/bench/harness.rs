@@ -1,8 +1,70 @@
-//! Timing kit + table renderer for the harness-free benches.
+//! Timing kit + table renderer for the harness-free benches, plus a tiny
+//! JSON emitter so perf baselines (BENCH_perllm.json) are machine-diffable
+//! across PRs without a serde dependency.
 
 use std::time::Instant;
 
 use crate::util::stats::Percentiles;
+
+/// A flat JSON value for the bench-baseline emitter.
+#[derive(Debug, Clone)]
+pub enum JsonValue {
+    Num(f64),
+    Str(String),
+}
+
+impl JsonValue {
+    fn render(&self) -> String {
+        match self {
+            // JSON has no NaN/inf; clamp to null.
+            JsonValue::Num(x) if x.is_finite() => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    format!("{}", *x as i64)
+                } else {
+                    format!("{x}")
+                }
+            }
+            JsonValue::Num(_) => "null".to_string(),
+            JsonValue::Str(s) => format!("\"{}\"", json_escape(s)),
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render nested (section → key → value) pairs as a pretty-printed JSON
+/// object, sections and keys in the order given.
+pub fn render_json(sections: &[(&str, Vec<(&str, JsonValue)>)]) -> String {
+    let mut out = String::from("{\n");
+    for (si, (section, pairs)) in sections.iter().enumerate() {
+        out.push_str(&format!("  \"{}\": {{\n", json_escape(section)));
+        for (ki, (k, v)) in pairs.iter().enumerate() {
+            let comma = if ki + 1 == pairs.len() { "" } else { "," };
+            out.push_str(&format!(
+                "    \"{}\": {}{}\n",
+                json_escape(k),
+                v.render(),
+                comma
+            ));
+        }
+        let comma = if si + 1 == sections.len() { "" } else { "," };
+        out.push_str(&format!("  }}{}\n", comma));
+    }
+    out.push_str("}\n");
+    out
+}
 
 /// Result of timing one closure.
 #[derive(Debug, Clone)]
@@ -158,5 +220,26 @@ mod tests {
     fn table_checks_columns() {
         let mut t = Table::new("demo", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn json_renders_sections() {
+        let s = render_json(&[
+            (
+                "meta",
+                vec![
+                    ("name", JsonValue::Str("x \"y\"".into())),
+                    ("n", JsonValue::Num(3.0)),
+                ],
+            ),
+            ("perf", vec![("events_per_sec", JsonValue::Num(1234.5))]),
+        ]);
+        assert!(s.contains("\"meta\""));
+        assert!(s.contains("\\\"y\\\""));
+        assert!(s.contains("\"n\": 3"));
+        assert!(s.contains("1234.5"));
+        // Non-finite numbers become null, keeping the file valid JSON.
+        let s = render_json(&[("perf", vec![("bad", JsonValue::Num(f64::NAN))])]);
+        assert!(s.contains("null"));
     }
 }

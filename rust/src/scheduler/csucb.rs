@@ -57,6 +57,51 @@ impl Default for CsUcbParams {
     }
 }
 
+/// Pending violation penalties P(t) keyed by request id. Both id sources —
+/// DES trace indices and the live router's monotone counters — are dense
+/// from zero, so a flat Vec with a NaN sentinel serves the million-request
+/// path with no hashing and no per-decision allocation (growth is
+/// amortized and monotone). Ids beyond the dense cap (never produced by
+/// our id allocators, but the API takes arbitrary u64) spill to a map.
+#[derive(Debug, Default)]
+struct PendingPenalties {
+    dense: Vec<f64>,
+    spill: std::collections::HashMap<u64, f64>,
+}
+
+/// Dense ids up to 16M: 128 MB worst case, far past any single-run trace.
+const DENSE_ID_LIMIT: u64 = 1 << 24;
+
+impl PendingPenalties {
+    fn insert(&mut self, id: u64, p: f64) {
+        if id < DENSE_ID_LIMIT {
+            let i = id as usize;
+            if i >= self.dense.len() {
+                self.dense.resize(i + 1, f64::NAN);
+            }
+            self.dense[i] = p;
+        } else {
+            self.spill.insert(id, p);
+        }
+    }
+
+    fn remove(&mut self, id: u64) -> Option<f64> {
+        if id < DENSE_ID_LIMIT {
+            let i = id as usize;
+            let slot = self.dense.get_mut(i)?;
+            let v = *slot;
+            *slot = f64::NAN;
+            if v.is_nan() {
+                None
+            } else {
+                Some(v)
+            }
+        } else {
+            self.spill.remove(&id)
+        }
+    }
+}
+
 /// Per-arm statistics: estimated reward R̄(a) and pull count L(a, t).
 #[derive(Debug, Clone, Copy, Default)]
 struct Arm {
@@ -80,7 +125,7 @@ pub struct CsUcb {
     t: u64,
     /// Pending violation penalty P(t) per in-flight decision id — realized
     /// at decision time from the constraint filter.
-    pending_penalty: std::collections::HashMap<u64, f64>,
+    pending_penalty: PendingPenalties,
     /// Cumulative empirical regret (Eq. 5 with R(S_max) estimated by the
     /// best current arm estimate).
     cum_regret: f64,
@@ -96,7 +141,7 @@ impl CsUcb {
             arms: vec![vec![Arm::default(); n_servers]; ServiceClass::ALL.len()],
             n_servers,
             t: 0,
-            pending_penalty: std::collections::HashMap::new(),
+            pending_penalty: PendingPenalties::default(),
             cum_regret: 0.0,
             fallback_decisions: 0,
             feedbacks: 0,
@@ -208,17 +253,19 @@ impl Scheduler for CsUcb {
                 (least_violating, best_fy.min(0.0))
             }
         };
-        self.pending_penalty.insert(req.id, penalty);
+        // Only fallback decisions carry a real penalty; feedback() treats
+        // absent as 0.0, so skipping the store for the (overwhelmingly
+        // common) feasible case keeps decide() write-free.
+        if penalty < 0.0 {
+            self.pending_penalty.insert(req.id, penalty);
+        }
         Decision::now(choice)
     }
 
     fn feedback(&mut self, outcome: &ServiceOutcome, _view: &ClusterView) {
         self.feedbacks += 1;
         let class = outcome.class.index();
-        let penalty = self
-            .pending_penalty
-            .remove(&outcome.id)
-            .unwrap_or(0.0);
+        let penalty = self.pending_penalty.remove(outcome.id).unwrap_or(0.0);
         let mut r = Self::reward(&self.params, outcome);
         // Bad super-arm penalty (Eq. 7): violations at decision time cost
         // proportionally to their severity.
@@ -371,6 +418,24 @@ mod tests {
             s.feedback(&o, &view);
         }
         assert_eq!(seen.len(), 4, "all arms tried once: {seen:?}");
+    }
+
+    #[test]
+    fn pending_penalties_dense_and_spill() {
+        let mut p = PendingPenalties::default();
+        assert_eq!(p.remove(0), None);
+        p.insert(3, -0.5);
+        p.insert(3, -0.25); // overwrite, like a map
+        assert_eq!(p.remove(3), Some(-0.25));
+        assert_eq!(p.remove(3), None);
+        // Zero is a real stored value, distinct from absent.
+        p.insert(7, 0.0);
+        assert_eq!(p.remove(7), Some(0.0));
+        // Sparse ids beyond the dense cap take the spill path.
+        let big = DENSE_ID_LIMIT + 12;
+        p.insert(big, -1.0);
+        assert_eq!(p.remove(big), Some(-1.0));
+        assert_eq!(p.remove(big), None);
     }
 
     #[test]

@@ -54,6 +54,19 @@ pub struct ClusterView {
 }
 
 impl ClusterView {
+    /// An empty snapshot with room for `n` servers — the scratch buffer the
+    /// DES engine refills per decision via `ClusterSim::view_into`, so the
+    /// arrival hot path performs no per-decision allocation. Schedulers
+    /// receive views by reference (`Scheduler::decide` borrows) and must
+    /// not retain them across decisions.
+    pub fn with_capacity(n: usize, weights: EnergyWeights) -> ClusterView {
+        ClusterView {
+            now: 0.0,
+            servers: Vec::with_capacity(n),
+            weights,
+        }
+    }
+
     /// Paper Eq. 3 for a single assignment y = (request → server j): the
     /// minimum normalized slack across the three constraint families.
     /// f(y) >= 0 iff C1, C2, C3 all hold.

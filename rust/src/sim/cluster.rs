@@ -117,7 +117,9 @@ impl ClusterSim {
         f.work_s = (f.work_s - w).max(0.0);
     }
 
-    /// Advance every server and link integrator to `now` (cheap: O(jobs)).
+    /// Advance every server and link integrator to `now`. O(servers +
+    /// links): each queue advance is a constant-time virtual-time bump, so
+    /// this stays cheap even mid-congestion-collapse.
     pub fn advance_all(&mut self, now: SimTime) {
         for s in &mut self.servers {
             s.advance_to(now);
@@ -130,43 +132,51 @@ impl ClusterSim {
     /// Build the scheduler-facing snapshot for one request (CMAB state).
     /// Callers must have advanced the cluster to `now` first.
     pub fn view(&self, req: &ServiceRequest, now: SimTime) -> ClusterView {
-        let servers = self
-            .servers
-            .iter()
-            .zip(&self.links)
-            .zip(&self.in_flight)
-            .map(|((srv, link), fl)| {
-                let tx = link.predict_tx_time(req.payload_bytes);
-                let service = srv.predict_service_time_with(req, fl.n, fl.work_s);
-                // Bandwidth the upload needs to finish inside a nominal
-                // 1-second window (paper C3's B_i).
-                let bw_demand = req.payload_bytes as f64 * 8.0;
-                ServerView {
-                    kind: srv.spec.kind,
-                    predicted_time: tx + service,
-                    compute_headroom: srv.compute_headroom_with(fl.n),
-                    compute_demand: ServerSpec::compute_demand(req),
-                    bandwidth_headroom: link.bandwidth_headroom(),
-                    bandwidth_demand: bw_demand,
-                    tx_energy_est: link.spec.tx_energy(req.payload_bytes),
-                    infer_energy_est: (srv.spec.p_infer - srv.spec.p_idle)
-                        * srv.spec.solo_work(req),
-                    n_active: srv.queue.n_active(),
-                    n_waiting: srv.queue.n_waiting(),
-                    solo_time_est: link.spec.solo_time(req.payload_bytes)
-                        + srv.spec.solo_work(req),
-                    // Raw occupancy (no in-flight bookkeeping): what an
-                    // external observer without router state sees.
-                    occupancy: (srv.queue.n_active() + srv.queue.n_waiting()) as f64
-                        / (srv.queue.max_active() + srv.spec.queue_limit) as f64,
-                }
-            })
-            .collect();
-        ClusterView {
-            now,
-            servers,
-            weights: self.weights,
-        }
+        let mut out = ClusterView::with_capacity(self.servers.len(), self.weights);
+        self.view_into(req, now, &mut out);
+        out
+    }
+
+    /// Fill a caller-owned snapshot in place. The engine keeps one scratch
+    /// `ClusterView` and refills it per decision, so the per-arrival hot
+    /// path allocates nothing once the `servers` Vec has reached cluster
+    /// size.
+    pub fn view_into(&self, req: &ServiceRequest, now: SimTime, out: &mut ClusterView) {
+        out.now = now;
+        out.weights = self.weights;
+        out.servers.clear();
+        out.servers.extend(
+            self.servers
+                .iter()
+                .zip(&self.links)
+                .zip(&self.in_flight)
+                .map(|((srv, link), fl)| {
+                    let tx = link.predict_tx_time(req.payload_bytes);
+                    let service = srv.predict_service_time_with(req, fl.n, fl.work_s);
+                    // Bandwidth the upload needs to finish inside a nominal
+                    // 1-second window (paper C3's B_i).
+                    let bw_demand = req.payload_bytes as f64 * 8.0;
+                    ServerView {
+                        kind: srv.spec.kind,
+                        predicted_time: tx + service,
+                        compute_headroom: srv.compute_headroom_with(fl.n),
+                        compute_demand: ServerSpec::compute_demand(req),
+                        bandwidth_headroom: link.bandwidth_headroom(),
+                        bandwidth_demand: bw_demand,
+                        tx_energy_est: link.spec.tx_energy(req.payload_bytes),
+                        infer_energy_est: (srv.spec.p_infer - srv.spec.p_idle)
+                            * srv.spec.solo_work(req),
+                        n_active: srv.queue.n_active(),
+                        n_waiting: srv.queue.n_waiting(),
+                        solo_time_est: link.spec.solo_time(req.payload_bytes)
+                            + srv.spec.solo_work(req),
+                        // Raw occupancy (no in-flight bookkeeping): what an
+                        // external observer without router state sees.
+                        occupancy: (srv.queue.n_active() + srv.queue.n_waiting()) as f64
+                            / (srv.queue.max_active() + srv.spec.queue_limit) as f64,
+                    }
+                }),
+        );
     }
 
     /// Total energy so far, split by objective term.
@@ -235,6 +245,24 @@ mod tests {
         // …but costs more energy.
         assert!(cloud.infer_energy_est > edge.infer_energy_est);
         assert!(cloud.tx_energy_est > edge.tx_energy_est);
+    }
+
+    #[test]
+    fn view_into_refills_scratch_snapshot() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let sim = ClusterSim::new(&cfg);
+        let fresh = sim.view(&req(), 1.5);
+        let mut scratch = ClusterView::with_capacity(cfg.n_servers(), cfg.weights);
+        // Fill twice: the second fill must fully replace the first.
+        sim.view_into(&req(), 0.5, &mut scratch);
+        sim.view_into(&req(), 1.5, &mut scratch);
+        assert_eq!(scratch.now, 1.5);
+        assert_eq!(scratch.servers.len(), fresh.servers.len());
+        for (a, b) in scratch.servers.iter().zip(&fresh.servers) {
+            assert_eq!(a.predicted_time, b.predicted_time);
+            assert_eq!(a.n_active, b.n_active);
+            assert_eq!(a.occupancy, b.occupancy);
+        }
     }
 
     #[test]

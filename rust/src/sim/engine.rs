@@ -14,8 +14,9 @@ use std::time::Instant;
 
 use super::cluster::{ClusterConfig, ClusterSim, Outage};
 use super::energy::EnergyBreakdown;
+use super::ps::PsJob;
 use super::time::{EventQueue, SimTime};
-use crate::scheduler::Scheduler;
+use crate::scheduler::{ClusterView, Scheduler};
 use crate::util::rng::Rng;
 use crate::util::stats::{Percentiles, Running};
 use crate::workload::service::{ServiceOutcome, ServiceRequest};
@@ -73,7 +74,8 @@ pub struct RunReport {
     pub p95_processing_s: f64,
     /// Requests that never finished inside the horizon.
     pub unfinished: usize,
-    /// Requests shed by bounded server queues.
+    /// Requests shed by bounded server queues (admission failures), counted
+    /// at shed time — disjoint from `unfinished` by construction.
     pub dropped: usize,
     /// Requests completed after their deadline.
     pub late: usize,
@@ -83,6 +85,11 @@ pub struct RunReport {
     pub wall_s: f64,
     pub events_processed: u64,
     pub events_per_sec: f64,
+    /// Popped events that were generation-invalidated and dropped. These
+    /// inflate `events_processed` without doing work, so the honest DES
+    /// throughput is `events_per_sec * (1 - stale_ratio)`.
+    pub stale_events: u64,
+    pub stale_ratio: f64,
 }
 
 impl RunReport {
@@ -118,6 +125,14 @@ pub struct Engine<'a> {
     outcomes: Vec<ServiceOutcome>,
     remaining: usize,
     horizon: SimTime,
+    /// Requests shed by bounded server queues, counted where they happen
+    /// (`fail`) so horizon-unfinished requests are never misclassified.
+    shed: usize,
+    /// Scratch scheduler snapshot, refilled in place per decision/feedback
+    /// instead of collecting a fresh `ClusterView` per event.
+    view: ClusterView,
+    /// Scratch reap output, reused across every completion event.
+    reap_buf: Vec<PsJob>,
 }
 
 impl<'a> Engine<'a> {
@@ -152,6 +167,7 @@ impl<'a> Engine<'a> {
                 tx_energy_j: 0.0,
             })
             .collect();
+        let view = ClusterView::with_capacity(cfg.servers.len(), cfg.weights);
         Engine {
             cluster,
             events,
@@ -162,12 +178,18 @@ impl<'a> Engine<'a> {
             outcomes: Vec::with_capacity(trace.len()),
             remaining: trace.len(),
             horizon,
+            shed: 0,
+            view,
+            reap_buf: Vec::new(),
         }
     }
 
     /// Run to completion and summarize.
     pub fn run(mut self) -> RunReport {
         let t0 = Instant::now();
+        // Hoisted out of the loop: an env lookup per event costs more than
+        // the event handling itself on the million-request path.
+        let trace_events = std::env::var("PERLLM_TRACE_EVENTS").is_ok();
         while self.remaining > 0 {
             let Some((now, ev)) = self.events.pop() else {
                 break;
@@ -175,7 +197,7 @@ impl<'a> Engine<'a> {
             if now > self.horizon {
                 break;
             }
-            if std::env::var("PERLLM_TRACE_EVENTS").is_ok() {
+            if trace_events {
                 eprintln!("t={now:.6} {ev:?} remaining={}", self.remaining);
             }
             self.handle(now, ev);
@@ -208,7 +230,6 @@ impl<'a> Engine<'a> {
         let mut proc = Running::new();
         let mut pcts = Percentiles::new();
         let mut ok = 0usize;
-        let mut dropped = 0usize;
         let mut late = 0usize;
         for o in &self.outcomes {
             if o.processing_time.is_finite() {
@@ -217,13 +238,15 @@ impl<'a> Engine<'a> {
                 if !o.success() {
                     late += 1;
                 }
-            } else if o.tokens == 0 && o.infer_time == 0.0 {
-                dropped += 1;
             }
             if o.success() {
                 ok += 1;
             }
         }
+        // Shed requests are counted at shed time (`fail`), not inferred
+        // from outcome fields: horizon-unfinished requests also carry
+        // (tokens 0, infer 0) and used to be double-counted here.
+        let dropped = self.shed;
         let first_arrival = self.trace.first().map(|r| r.arrival).unwrap_or(0.0);
         let makespan = (end - first_arrival).max(1e-9);
         let tokens = self.cluster.tokens_served();
@@ -245,6 +268,8 @@ impl<'a> Engine<'a> {
             wall_s: wall,
             events_processed: self.events.processed(),
             events_per_sec: self.events.processed() as f64 / wall.max(1e-9),
+            stale_events: self.events.stale(),
+            stale_ratio: self.events.stale_ratio(),
             outcomes: self.outcomes,
         }
     }
@@ -254,8 +279,8 @@ impl<'a> Engine<'a> {
             Ev::Arrival(i) => {
                 self.cluster.advance_all(now);
                 let req = &self.trace[i];
-                let view = self.cluster.view(req, now);
-                let d = self.scheduler.decide(req, &view);
+                self.cluster.view_into(req, now, &mut self.view);
+                let d = self.scheduler.decide(req, &self.view);
                 assert!(d.server < self.cluster.servers.len(), "bad server index");
                 self.svc[i].server = d.server;
                 if d.defer_s > 0.0 {
@@ -275,14 +300,18 @@ impl<'a> Engine<'a> {
             }
             Ev::LinkDone { link, gen } => {
                 if !self.cluster.links[link].gen.is_current(gen) {
+                    self.events.note_stale();
                     return;
                 }
                 self.cluster.links[link].advance_to(now);
                 let rate = self.cluster.links[link].per_flow_rate();
-                let done = self.cluster.links[link].queue.reap(now, rate);
-                for job in done {
+                // Reuse the scratch buffer across events (take/put-back so
+                // the borrow checker allows pushing events while iterating).
+                let mut done = std::mem::take(&mut self.reap_buf);
+                self.cluster.links[link].queue.reap_into(now, rate, &mut done);
+                let rtt = self.cluster.links[link].spec.rtt_s;
+                for job in &done {
                     let i = job.id as usize;
-                    let rtt = self.cluster.links[link].spec.rtt_s;
                     self.svc[i].upload_done_at = now + rtt;
                     self.events.push_in(
                         rtt,
@@ -292,6 +321,7 @@ impl<'a> Engine<'a> {
                         },
                     );
                 }
+                self.reap_buf = done;
                 self.reschedule_link(link);
             }
             Ev::ComputeArrive { svc, server } => {
@@ -313,14 +343,17 @@ impl<'a> Engine<'a> {
             }
             Ev::ServerDone { server, gen } => {
                 if !self.cluster.servers[server].gen.is_current(gen) {
+                    self.events.note_stale();
                     return;
                 }
                 self.cluster.servers[server].advance_to(now);
                 let rate = self.cluster.servers[server].per_job_rate();
-                let done = self.cluster.servers[server].queue.reap(now, rate);
-                for job in done {
+                let mut done = std::mem::take(&mut self.reap_buf);
+                self.cluster.servers[server].queue.reap_into(now, rate, &mut done);
+                for job in &done {
                     self.complete(now, job.id as usize, server, job.energy_j);
                 }
+                self.reap_buf = done;
                 self.reschedule_server(server);
             }
             Ev::FluctTick { link } => {
@@ -377,6 +410,7 @@ impl<'a> Engine<'a> {
     fn fail(&mut self, now: SimTime, i: usize, server: usize) {
         let req = &self.trace[i];
         self.svc[i].phase = Phase::Failed;
+        self.shed += 1;
         let outcome = ServiceOutcome {
             id: req.id,
             class: req.class,
@@ -390,8 +424,8 @@ impl<'a> Engine<'a> {
             completed_at: now,
         };
         self.remaining -= 1;
-        let view = self.cluster.view(req, now);
-        self.scheduler.feedback(&outcome, &view);
+        self.cluster.view_into(req, now, &mut self.view);
+        self.scheduler.feedback(&outcome, &self.view);
         self.outcomes.push(outcome);
     }
 
@@ -414,8 +448,8 @@ impl<'a> Engine<'a> {
             completed_at: now,
         };
         self.remaining -= 1;
-        let view = self.cluster.view(req, now);
-        self.scheduler.feedback(&outcome, &view);
+        self.cluster.view_into(req, now, &mut self.view);
+        self.scheduler.feedback(&outcome, &self.view);
         self.outcomes.push(outcome);
     }
 }
@@ -526,6 +560,60 @@ mod tests {
         let rep = simulate(&cfg, &trace, &mut s);
         assert_eq!(rep.unfinished, 5);
         assert_eq!(rep.success_rate, 0.0);
+    }
+
+    /// Regression: horizon-unfinished requests carry the same outcome shape
+    /// as shed requests (tokens 0, infer 0, infinite processing time) and
+    /// used to be double-counted as `dropped`. Classification now happens
+    /// at shed time, so a forever-outage run reports 5 unfinished, 0
+    /// dropped.
+    #[test]
+    fn unfinished_not_double_counted_as_dropped() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable)
+            .with_outages(vec![Outage {
+                server: 0,
+                start: 0.0,
+                end: 1.0e9, // forever
+            }]);
+        let trace = small_trace(5, 1.0);
+        let mut s = Fixed(0);
+        let rep = simulate(&cfg, &trace, &mut s);
+        assert_eq!(rep.unfinished, 5);
+        assert_eq!(rep.dropped, 0, "unfinished leaked into dropped");
+        // And a genuinely-shedding overload run counts drops, not
+        // unfinished: 400 simultaneous uploads swamp one edge server's
+        // 8 slots + 2 waiting places.
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let trace = generate(
+            &WorkloadConfig::default()
+                .with_requests(400)
+                .with_arrivals(ArrivalProcess::Simultaneous)
+                .with_seed(3),
+        );
+        let mut s = Fixed(0);
+        let rep = simulate(&cfg, &trace, &mut s);
+        assert!(rep.dropped > 0, "overload must shed");
+        assert_eq!(rep.outcomes.len(), 400);
+    }
+
+    /// Generation-invalidated completion events are counted, not silently
+    /// swallowed: simultaneous uploads re-schedule the shared link's
+    /// completion on every occupancy change, stranding the superseded
+    /// events.
+    #[test]
+    fn stale_events_are_counted() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let trace = generate(
+            &WorkloadConfig::default()
+                .with_requests(200)
+                .with_arrivals(ArrivalProcess::Simultaneous)
+                .with_seed(3),
+        );
+        let mut s = Fixed(5);
+        let rep = simulate(&cfg, &trace, &mut s);
+        assert!(rep.stale_events > 0, "congestion must strand events");
+        assert!(rep.stale_ratio > 0.0 && rep.stale_ratio < 1.0);
+        assert!(rep.stale_events < rep.events_processed);
     }
 
     #[test]

@@ -103,6 +103,9 @@ impl LinkSim {
         share.min(self.spec.per_flow_cap_bps * self.mult) / 8.0
     }
 
+    /// Advance upload progress and the utilization integral to `now`.
+    /// O(1): the queue advance is a virtual-work-time counter bump even
+    /// with hundreds of concurrent flows mid-congestion-collapse.
     pub fn advance_to(&mut self, now: SimTime) {
         let dt = now - self.last_update;
         if dt <= 0.0 {

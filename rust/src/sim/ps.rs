@@ -1,4 +1,6 @@
-//! Processor-sharing queue with bounded concurrency and FIFO overflow.
+//! Processor-sharing queue with bounded concurrency and FIFO overflow,
+//! implemented on **virtual work time** so every hot-path operation is
+//! O(1) or O(log n) regardless of how many jobs share the resource.
 //!
 //! Both resource types in the cluster are PS systems:
 //! * a network link divides its (fluctuating) bandwidth across concurrent
@@ -12,8 +14,28 @@
 //! solo-service seconds for servers). The owner advances the queue between
 //! events with the per-job rate that held over that interval and schedules
 //! the next completion through a [`Generation`]-stamped event.
+//!
+//! # Virtual work time
+//!
+//! Under processor sharing every active job receives the *same* service
+//! rate, so instead of decrementing each job's `remaining` on every
+//! `advance` (O(active jobs) — quadratic over a congestion collapse where
+//! hundreds of uploads share one pipe) we keep one cumulative counter
+//! `attained`: the total service each continuously-active job has received.
+//! A job admitted when the counter reads `A` with `work` units to do is
+//! finished exactly when the counter reaches its **finish work**
+//! `A + work`; its current remaining work is `finish_work - attained`.
+//! `advance` then just bumps the counter (O(1)), the earliest completion is
+//! the minimum finish work (a binary heap peek, O(1), with O(log n)
+//! maintenance), and per-job energy attribution becomes the difference of a
+//! second cumulative integral sampled at admission and at removal.
+//! Aggregate backlog is maintained incrementally so scheduler snapshots
+//! stop summing every job.
+//!
+//! [`Generation`]: super::time::Generation
 
-use std::collections::VecDeque;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use super::time::SimTime;
 
@@ -25,6 +47,8 @@ use super::time::SimTime;
 /// storms.
 const DONE_EPS_S: f64 = 1e-9;
 
+/// Snapshot of one job handed back to the owner on reap/cancel (and from
+/// [`PsQueue::job`] for inspection).
 #[derive(Debug, Clone)]
 pub struct PsJob {
     pub id: u64,
@@ -33,24 +57,109 @@ pub struct PsJob {
     pub enqueued_at: SimTime,
     /// Time the job entered service (first moment it received rate).
     pub started_at: Option<SimTime>,
-    /// Energy attributed to this job by the owner (J), accrued in advance().
+    /// Energy attributed to this job by the owner (J), accrued while in
+    /// service and realized at reap/cancel from the cumulative integral.
     pub energy_j: f64,
+}
+
+/// An in-service job: everything is expressed relative to the queue's
+/// cumulative counters so no per-job state needs touching on advance.
+#[derive(Debug, Clone, Copy)]
+struct ActiveJob {
+    /// Value of `attained` at which this job completes.
+    finish_work: f64,
+    /// Admission sequence number: unique, monotone; FIFO tie-break for
+    /// equal finish work and staleness stamp for heap entries.
+    seq: u64,
+    enqueued_at: SimTime,
+    started_at: SimTime,
+    /// Value of `energy_acc` when this job entered service.
+    energy_offset: f64,
+}
+
+/// A job waiting for a slot: untouched by service, so it keeps raw work.
+#[derive(Debug, Clone, Copy)]
+struct WaitingJob {
+    id: u64,
+    work: f64,
+    enqueued_at: SimTime,
+}
+
+/// Min-ordering key for the completion heap: earliest finish work first,
+/// FIFO (admission order) on ties. `finish_work` is never NaN — `push`
+/// rejects non-finite work and the counters only accumulate finite values.
+#[derive(Debug, Clone, Copy)]
+struct HeapKey {
+    finish_work: f64,
+    seq: u64,
+    id: u64,
+}
+
+impl PartialEq for HeapKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for HeapKey {}
+
+impl PartialOrd for HeapKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-finish-first.
+        other
+            .finish_work
+            .partial_cmp(&self.finish_work)
+            .unwrap()
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
 }
 
 #[derive(Debug)]
 pub struct PsQueue {
-    active: Vec<PsJob>,
-    waiting: VecDeque<PsJob>,
+    /// In-service jobs by id. Never iterated in an order-sensitive way
+    /// (determinism): completion order comes from the heap, aggregates from
+    /// the incremental sums.
+    active: HashMap<u64, ActiveJob>,
+    /// Completion order over `active`, keyed by (finish_work, seq). Kept
+    /// exactly in sync with `active` (cancel retains the heap), so the top
+    /// is always the next completion.
+    heap: BinaryHeap<HeapKey>,
+    waiting: VecDeque<WaitingJob>,
     max_active: usize,
+    /// Cumulative service attained by every continuously-active job
+    /// (virtual work time). Reset to zero whenever the queue drains, which
+    /// bounds float growth over long runs.
+    attained: f64,
+    /// Cumulative per-job energy integral (J), same lifecycle as
+    /// `attained`.
+    energy_acc: f64,
+    /// Admission sequence counter.
+    seq: u64,
+    /// Sum of `finish_work` over active jobs: active backlog is
+    /// `active_finish_sum - n_active * attained`.
+    active_finish_sum: f64,
+    /// Sum of raw work over waiting jobs.
+    waiting_work: f64,
 }
 
 impl PsQueue {
     pub fn new(max_active: usize) -> Self {
         assert!(max_active > 0);
         PsQueue {
-            active: Vec::new(),
+            active: HashMap::new(),
+            heap: BinaryHeap::new(),
             waiting: VecDeque::new(),
             max_active,
+            attained: 0.0,
+            energy_acc: 0.0,
+            seq: 0,
+            active_finish_sum: 0.0,
+            waiting_work: 0.0,
         }
     }
 
@@ -70,109 +179,227 @@ impl PsQueue {
         self.max_active
     }
 
+    /// Cumulative attained service per continuously-active job (virtual
+    /// work time). Exposed for diagnostics and the differential tests.
+    pub fn attained(&self) -> f64 {
+        self.attained
+    }
+
     /// Total remaining work across active + waiting jobs (backlog estimate
-    /// used by the schedulers' processing-time predictor).
+    /// used by the schedulers' processing-time predictor). O(1): maintained
+    /// incrementally instead of summing every job.
     pub fn backlog(&self) -> f64 {
-        self.active.iter().map(|j| j.remaining).sum::<f64>()
-            + self.waiting.iter().map(|j| j.remaining).sum::<f64>()
+        let active = self.active_finish_sum - self.active.len() as f64 * self.attained;
+        active.max(0.0) + self.waiting_work
     }
 
     /// Admit a job: straight to service if a slot is free, else FIFO wait.
     pub fn push(&mut self, id: u64, work: f64, now: SimTime) {
         assert!(work.is_finite() && work > 0.0, "bad work {work}");
-        let mut job = PsJob {
-            id,
-            remaining: work,
-            enqueued_at: now,
-            started_at: None,
-            energy_j: 0.0,
-        };
         if self.active.len() < self.max_active {
-            job.started_at = Some(now);
-            self.active.push(job);
+            self.start_service(id, work, now, now);
         } else {
-            self.waiting.push_back(job);
+            self.waiting.push_back(WaitingJob {
+                id,
+                work,
+                enqueued_at: now,
+            });
+            self.waiting_work += work;
+        }
+    }
+
+    /// Put a job in service at `now`: stamp its finish work and energy
+    /// offset against the cumulative counters.
+    fn start_service(&mut self, id: u64, work: f64, enqueued_at: SimTime, now: SimTime) {
+        self.seq += 1;
+        let job = ActiveJob {
+            finish_work: self.attained + work,
+            seq: self.seq,
+            enqueued_at,
+            started_at: now,
+            energy_offset: self.energy_acc,
+        };
+        self.heap.push(HeapKey {
+            finish_work: job.finish_work,
+            seq: job.seq,
+            id,
+        });
+        self.active_finish_sum += job.finish_work;
+        let prev = self.active.insert(id, job);
+        debug_assert!(prev.is_none(), "duplicate ps job id {id}");
+    }
+
+    /// Remove a job from service, realizing its remaining work and energy
+    /// from the counters. The caller is responsible for its heap entry
+    /// (reap pops it; cancel retains it away).
+    fn finish_service(&mut self, id: u64, job: ActiveJob) -> PsJob {
+        self.active_finish_sum -= job.finish_work;
+        if self.active.is_empty() {
+            // Drained: clear accumulated rounding residue.
+            self.active_finish_sum = 0.0;
+        }
+        PsJob {
+            id,
+            remaining: job.finish_work - self.attained,
+            enqueued_at: job.enqueued_at,
+            started_at: Some(job.started_at),
+            energy_j: self.energy_acc - job.energy_offset,
+        }
+    }
+
+    /// Promote waiters into free slots. `now` stamps their service start.
+    fn promote_waiters(&mut self, now: SimTime) {
+        while self.active.len() < self.max_active {
+            match self.waiting.pop_front() {
+                Some(w) => {
+                    self.waiting_work -= w.work;
+                    if self.waiting.is_empty() {
+                        self.waiting_work = 0.0;
+                    }
+                    self.start_service(w.id, w.work, w.enqueued_at, now);
+                }
+                None => break,
+            }
+        }
+        if self.is_idle() {
+            // Fully drained: renormalize the counters so `attained` and
+            // `energy_acc` stay small over arbitrarily long simulations.
+            self.attained = 0.0;
+            self.energy_acc = 0.0;
         }
     }
 
     /// Advance all active jobs by `dt` seconds at `per_job_rate` work/s.
     /// The caller guarantees the rate was constant over the interval (it
     /// bumps the generation and re-advances on every occupancy change).
+    /// O(1): bumps the cumulative counter, touches no job.
     pub fn advance(&mut self, dt: SimTime, per_job_rate: f64) {
         self.advance_energy(dt, per_job_rate, 0.0);
     }
 
     /// Advance and additionally attribute `energy_per_job` joules to every
-    /// active job (marginal per-service energy accounting).
+    /// active job (marginal per-service energy accounting). O(1): the
+    /// per-job energy is realized lazily at reap/cancel time as the
+    /// difference of the cumulative integral.
     pub fn advance_energy(&mut self, dt: SimTime, per_job_rate: f64, energy_per_job: f64) {
         debug_assert!(dt >= 0.0 && per_job_rate >= 0.0);
-        if dt == 0.0 {
+        if dt == 0.0 || self.active.is_empty() {
             return;
         }
-        let dec = dt * per_job_rate;
-        for j in &mut self.active {
-            j.remaining -= dec;
-            j.energy_j += energy_per_job;
-        }
+        self.attained += dt * per_job_rate;
+        self.energy_acc += energy_per_job;
     }
 
     /// Remove finished jobs, promote waiters into freed slots, and return
     /// the finished jobs. `now` stamps promoted waiters' service start.
     /// `per_job_rate` is the rate that applied up to `now`; jobs within
     /// `DONE_EPS_S` seconds of completion at that rate are done.
+    ///
+    /// Completion order is (finish work, admission order) — earliest
+    /// finisher first, FIFO on exact ties. O(k log n) for k completions.
     pub fn reap(&mut self, now: SimTime, per_job_rate: f64) -> Vec<PsJob> {
+        let mut out = Vec::new();
+        self.reap_into(now, per_job_rate, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`reap`](Self::reap): clears and fills a
+    /// caller-owned buffer so the event loop can reuse one Vec across every
+    /// completion event.
+    pub fn reap_into(&mut self, now: SimTime, per_job_rate: f64, out: &mut Vec<PsJob>) {
+        out.clear();
         let eps = (per_job_rate * DONE_EPS_S).max(f64::MIN_POSITIVE);
-        let mut done = Vec::new();
-        let mut i = 0;
-        while i < self.active.len() {
-            if self.active[i].remaining <= eps {
-                done.push(self.active.swap_remove(i));
-            } else {
-                i += 1;
+        let threshold = self.attained + eps;
+        while let Some(top) = self.heap.peek() {
+            // Defensive staleness check: `heap` mirrors `active` exactly
+            // (cancel retains), so this only skips entries if an invariant
+            // was broken upstream (e.g. a duplicate id in release mode).
+            let valid = self
+                .active
+                .get(&top.id)
+                .is_some_and(|j| j.seq == top.seq);
+            if !valid {
+                self.heap.pop();
+                continue;
             }
-        }
-        while self.active.len() < self.max_active {
-            match self.waiting.pop_front() {
-                Some(mut j) => {
-                    j.started_at = Some(now);
-                    self.active.push(j);
-                }
-                None => break,
+            if top.finish_work > threshold {
+                break;
             }
+            let key = self.heap.pop().expect("peeked entry");
+            let job = self.active.remove(&key.id).expect("validated entry");
+            let done = self.finish_service(key.id, job);
+            out.push(done);
         }
-        done
+        self.promote_waiters(now);
     }
 
     /// Seconds until the earliest active job finishes at `per_job_rate`.
+    /// O(1): the earliest finisher is the heap top.
     pub fn next_completion_in(&self, per_job_rate: f64) -> Option<SimTime> {
         if per_job_rate <= 0.0 {
             return None;
         }
-        self.active
-            .iter()
-            .map(|j| (j.remaining.max(0.0)) / per_job_rate)
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+        self.heap
+            .peek()
+            .map(|k| (k.finish_work - self.attained).max(0.0) / per_job_rate)
     }
 
     /// Remove a job wherever it is (failure injection / cancellation).
+    /// O(n) — cancellation is rare (it is not on the event hot path).
     pub fn cancel(&mut self, id: u64, now: SimTime) -> Option<PsJob> {
-        if let Some(i) = self.active.iter().position(|j| j.id == id) {
-            let job = self.active.swap_remove(i);
+        if let Some(job) = self.active.remove(&id) {
+            let seq = job.seq;
+            self.heap.retain(|k| k.seq != seq);
+            let out = self.finish_service(id, job);
             // Freed a slot: promote a waiter.
-            if let Some(mut w) = self.waiting.pop_front() {
-                w.started_at = Some(now);
-                self.active.push(w);
-            }
-            return Some(job);
+            self.promote_waiters(now);
+            return Some(out);
         }
-        if let Some(i) = self.waiting.iter().position(|j| j.id == id) {
-            return self.waiting.remove(i);
+        if let Some(i) = self.waiting.iter().position(|w| w.id == id) {
+            let w = self.waiting.remove(i).expect("indexed waiter");
+            self.waiting_work -= w.work;
+            if self.waiting.is_empty() {
+                self.waiting_work = 0.0;
+            }
+            if self.is_idle() {
+                self.attained = 0.0;
+                self.energy_acc = 0.0;
+            }
+            return Some(PsJob {
+                id: w.id,
+                remaining: w.work,
+                enqueued_at: w.enqueued_at,
+                started_at: None,
+                energy_j: 0.0,
+            });
         }
         None
     }
 
-    pub fn active_jobs(&self) -> &[PsJob] {
-        &self.active
+    /// Snapshot one job (active or waiting) by id, with its remaining work
+    /// and energy realized against the current counters.
+    pub fn job(&self, id: u64) -> Option<PsJob> {
+        if let Some(j) = self.active.get(&id) {
+            return Some(PsJob {
+                id,
+                remaining: j.finish_work - self.attained,
+                enqueued_at: j.enqueued_at,
+                started_at: Some(j.started_at),
+                energy_j: self.energy_acc - j.energy_offset,
+            });
+        }
+        self.waiting.iter().find(|w| w.id == id).map(|w| PsJob {
+            id: w.id,
+            remaining: w.work,
+            enqueued_at: w.enqueued_at,
+            started_at: None,
+            energy_j: 0.0,
+        })
+    }
+
+    /// Ids of the jobs currently in service (arbitrary order).
+    pub fn active_ids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.active.keys().copied()
     }
 }
 
@@ -199,14 +426,15 @@ mod tests {
         q.push(3, 10.0, 0.0);
         assert_eq!(q.n_active(), 2);
         assert_eq!(q.n_waiting(), 1);
-        // Finish job 1.
         q.advance(10.0, 1.0);
-        // Both active jobs finish together (same work, same rate).
+        // Both active jobs finish together (same work, same rate); ties
+        // reap in admission order.
         let done = q.reap(10.0, 1.0);
-        assert_eq!(done.len(), 2);
+        assert_eq!(done.iter().map(|j| j.id).collect::<Vec<_>>(), vec![1, 2]);
         assert_eq!(q.n_active(), 1);
-        assert_eq!(q.active_jobs()[0].id, 3);
-        assert_eq!(q.active_jobs()[0].started_at, Some(10.0));
+        let promoted = q.job(3).unwrap();
+        assert_eq!(promoted.started_at, Some(10.0));
+        assert!((promoted.remaining - 10.0).abs() < 1e-12);
     }
 
     #[test]
@@ -224,7 +452,7 @@ mod tests {
         let mut q = PsQueue::new(1);
         q.push(1, 10.0, 0.0);
         q.advance(3.0, 2.0);
-        assert!((q.active_jobs()[0].remaining - 4.0).abs() < 1e-12);
+        assert!((q.job(1).unwrap().remaining - 4.0).abs() < 1e-12);
         assert!(q.reap(3.0, 2.0).is_empty());
         q.advance(2.0, 2.0);
         assert_eq!(q.reap(5.0, 2.0).len(), 1);
@@ -237,6 +465,9 @@ mod tests {
         q.push(1, 5.0, 0.0);
         q.push(2, 7.0, 0.0);
         assert!((q.backlog() - 12.0).abs() < 1e-12);
+        // Backlog tracks progress incrementally.
+        q.advance(2.0, 1.0);
+        assert!((q.backlog() - 10.0).abs() < 1e-12);
     }
 
     #[test]
@@ -247,8 +478,9 @@ mod tests {
         let c = q.cancel(1, 1.0).unwrap();
         assert_eq!(c.id, 1);
         assert_eq!(q.n_active(), 1);
-        assert_eq!(q.active_jobs()[0].id, 2);
-        assert_eq!(q.active_jobs()[0].started_at, Some(1.0));
+        let promoted = q.job(2).unwrap();
+        assert_eq!(promoted.started_at, Some(1.0));
+        assert!((promoted.remaining - 7.0).abs() < 1e-12);
     }
 
     #[test]
@@ -269,6 +501,67 @@ mod tests {
         assert!(q.next_completion_in(0.0).is_none());
         q.advance(100.0, 0.0);
         assert!(q.reap(100.0, 0.0).is_empty());
+        // Remaining work untouched by the zero-rate interval.
+        assert!((q.job(1).unwrap().remaining - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_attributed_over_service_intervals() {
+        let mut q = PsQueue::new(4);
+        q.push(1, 2.0, 0.0);
+        // Job 1 alone for 1 s: 5 J.
+        q.advance_energy(1.0, 1.0, 5.0);
+        q.push(2, 2.0, 1.0);
+        // Both for 1 s: 3 J each. Job 1 reaches its finish work.
+        q.advance_energy(1.0, 1.0, 3.0);
+        let done = q.reap(2.0, 1.0);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert!((done[0].energy_j - 8.0).abs() < 1e-12);
+        // Job 2 only saw the second interval.
+        assert!((q.job(2).unwrap().energy_j - 3.0).abs() < 1e-12);
+        assert!((q.job(2).unwrap().remaining - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_renormalize_when_drained() {
+        let mut q = PsQueue::new(2);
+        q.push(1, 3.0, 0.0);
+        q.advance_energy(3.0, 1.0, 7.0);
+        assert_eq!(q.reap(3.0, 1.0).len(), 1);
+        assert!(q.is_idle());
+        assert_eq!(q.attained(), 0.0);
+        // A fresh busy period starts from clean counters.
+        q.push(2, 4.0, 5.0);
+        assert!((q.next_completion_in(2.0).unwrap() - 2.0).abs() < 1e-12);
+        assert!((q.job(2).unwrap().energy_j - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equal_finish_ties_complete_fifo() {
+        let mut q = PsQueue::new(8);
+        for id in [4u64, 7, 9] {
+            q.push(id, 1.0, 0.0);
+        }
+        q.advance(1.0, 1.0);
+        let done = q.reap(1.0, 1.0);
+        assert_eq!(done.iter().map(|j| j.id).collect::<Vec<_>>(), vec![4, 7, 9]);
+    }
+
+    #[test]
+    fn reap_into_reuses_buffer() {
+        let mut q = PsQueue::new(4);
+        let mut buf = Vec::new();
+        q.push(1, 1.0, 0.0);
+        q.advance(1.0, 1.0);
+        q.reap_into(1.0, 1.0, &mut buf);
+        assert_eq!(buf.len(), 1);
+        // The buffer is cleared on the next call, not appended to.
+        q.push(2, 1.0, 1.0);
+        q.advance(1.0, 1.0);
+        q.reap_into(2.0, 1.0, &mut buf);
+        assert_eq!(buf.len(), 1);
+        assert_eq!(buf[0].id, 2);
     }
 
     #[test]

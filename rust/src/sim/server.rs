@@ -103,7 +103,9 @@ impl ServerSim {
     }
 
     /// Advance integrators and job progress to `now`. Call before any state
-    /// change and before scheduling the next completion.
+    /// change and before scheduling the next completion. O(1): job progress
+    /// is a virtual-work-time counter bump and the energy split is two
+    /// scalar integrals, independent of batch size.
     pub fn advance_to(&mut self, now: SimTime) {
         let dt = now - self.last_update;
         if dt <= 0.0 {
@@ -157,6 +159,8 @@ impl ServerSim {
         let stretch = n_after as f64 / eff;
         let mult = if self.rate_mult > 0.0 { self.rate_mult } else { 1e-9 };
         // Queue wait: backlog ahead of us divided by total service rate.
+        // backlog() is an O(1) incremental aggregate, so this predictor is
+        // constant-time even on a saturated server.
         let wait = if occupied >= self.queue.max_active() {
             (self.queue.backlog() + extra_work) / (eff * mult)
         } else {

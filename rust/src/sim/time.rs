@@ -51,6 +51,7 @@ pub struct EventQueue<E> {
     now: SimTime,
     seq: u64,
     processed: u64,
+    stale: u64,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -66,6 +67,7 @@ impl<E> EventQueue<E> {
             now: 0.0,
             seq: 0,
             processed: 0,
+            stale: 0,
         }
     }
 
@@ -77,6 +79,24 @@ impl<E> EventQueue<E> {
     /// Number of events popped so far (perf metric: DES events/s).
     pub fn processed(&self) -> u64 {
         self.processed
+    }
+
+    /// Record that a popped event was generation-invalidated and dropped.
+    /// Stale events still cost a heap pop, so tracking them keeps events/s
+    /// honest: a high stale ratio means the queue is churning on cancelled
+    /// completions rather than real work.
+    pub fn note_stale(&mut self) {
+        self.stale += 1;
+    }
+
+    /// Number of popped events that were stale (generation-invalidated).
+    pub fn stale(&self) -> u64 {
+        self.stale
+    }
+
+    /// Fraction of popped events that were stale, in [0, 1].
+    pub fn stale_ratio(&self) -> f64 {
+        self.stale as f64 / self.processed.max(1) as f64
     }
 
     pub fn len(&self) -> usize {
@@ -202,6 +222,26 @@ mod tests {
     fn nan_time_rejected() {
         let mut q = EventQueue::new();
         q.push_at(f64::NAN, ());
+    }
+
+    #[test]
+    fn stale_accounting() {
+        let mut q = EventQueue::new();
+        q.push_at(1.0, "live");
+        q.push_at(2.0, "stale");
+        q.pop();
+        q.pop();
+        q.note_stale();
+        assert_eq!(q.stale(), 1);
+        assert_eq!(q.processed(), 2);
+        assert!((q.stale_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stale_ratio_zero_when_empty() {
+        let q: EventQueue<()> = EventQueue::new();
+        assert_eq!(q.stale(), 0);
+        assert_eq!(q.stale_ratio(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Minimal offline shim of the `anyhow` API surface this workspace uses:
+//! `Error`, `Result`, `anyhow!`, `bail!`, and the `Context` extension for
+//! `Result` and `Option`. Context frames chain in Display-alternate (`{:#}`)
+//! form like the real crate ("outer: inner").
+//!
+//! Not a general replacement: no backtraces, no downcasting.
+
+use std::fmt;
+
+/// A boxed, context-chained error message.
+pub struct Error {
+    /// Context frames, outermost first; the last entry is the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    fn push_context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The outermost message (context if any, else the root cause).
+    pub fn to_string_outer(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full context chain, like anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Like real anyhow, Error deliberately does NOT implement std::error::Error
+// — that keeps the blanket From below coherent with core's reflexive
+// `From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Sealed conversion into [`Error`], covering both std errors and `Error`
+/// itself (the same split real anyhow makes with its private `ext::StdError`
+/// trait) so `Context` works on `Result<_, io::Error>` and
+/// `Result<_, anyhow::Error>` alike.
+mod private {
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding context to fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: private::IntoError,
+{
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| private::IntoError::into_error(e).push_context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| private::IntoError::into_error(e).push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains_in_alternate_display() {
+        let r: Result<(), _> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+    }
+
+    #[test]
+    fn macros_format() {
+        let name = "x";
+        let e = anyhow!("unknown model {name}");
+        assert_eq!(format!("{e}"), "unknown model x");
+        fn f() -> Result<()> {
+            bail!("nope {}", 3);
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "nope 3");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("root cause"));
+        let e = r.with_context(|| "outer frame").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer frame: root cause");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn g() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(g().is_err());
+    }
+}

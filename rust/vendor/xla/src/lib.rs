@@ -1,0 +1,127 @@
+//! Offline stub of the PJRT/XLA client API surface used by the runtime
+//! layer. It compiles the full runtime code path but returns an
+//! "unavailable" error from every entry point, so:
+//!
+//! * tier-1 builds/tests need no PJRT shared library or registry access;
+//! * runtime tests (`tests/runtime_pjrt.rs`, `tests/serving_e2e.rs`) skip
+//!   gracefully — they gate on AOT artifacts before touching the client;
+//! * swapping in a real `xla` crate is a Cargo.toml change, no code edits.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the call sites' `map_err(|e| ...{e:?})` usage.
+pub struct XlaError(String);
+
+impl XlaError {
+    fn unavailable(what: &str) -> XlaError {
+        XlaError(format!(
+            "{what}: PJRT is unavailable in this offline build (stub xla crate); \
+             link a real xla crate to serve models"
+        ))
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// Parsed HLO module (stub: never constructed successfully).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(XlaError::unavailable(&format!(
+            "parsing HLO text {:?}",
+            path.as_ref()
+        )))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::unavailable("creating PJRT CPU client"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::unavailable("compiling computation"))
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(XlaError::unavailable("uploading host buffer"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::unavailable("reading back buffer"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::unavailable("executing"))
+    }
+}
+
+#[derive(Debug)]
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        Err(XlaError::unavailable("destructuring tuple literal"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(XlaError::unavailable("converting literal"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo").is_err());
+        let err = format!("{:?}", PjRtClient::cpu().unwrap_err());
+        assert!(err.contains("unavailable"));
+    }
+}
