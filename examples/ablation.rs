@@ -13,8 +13,8 @@ use perllm::scheduler::csucb::{CsUcb, CsUcbParams};
 use perllm::scheduler::oracle::Oracle;
 use perllm::scheduler::Scheduler;
 use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
-use perllm::sim::engine::simulate;
-use perllm::workload::generator::{generate, WorkloadConfig};
+use perllm::sim::engine::simulate_stream;
+use perllm::workload::generator::{WorkloadConfig, WorkloadGen};
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -25,12 +25,12 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(4000);
 
-    let trace = generate(
-        &WorkloadConfig::default()
-            .with_requests(n)
-            .with_deadline_range(2.0, 6.0)
-            .with_seed(123),
-    );
+    // Streamed workload: every variant gets a fresh cursor over the same
+    // seeded request sequence (nothing is materialized).
+    let workload = WorkloadConfig::default()
+        .with_requests(n)
+        .with_deadline_range(2.0, 6.0)
+        .with_seed(123);
     let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Fluctuating);
 
     let mut table = Table::new(
@@ -39,7 +39,8 @@ fn main() {
     );
 
     let mut run = |name: &str, sched: &mut dyn Scheduler| {
-        let rep = simulate(&cfg, &trace, sched);
+        let mut source = WorkloadGen::new(&workload);
+        let rep = simulate_stream(&cfg, &mut source, sched);
         let regret = rep
             .diagnostics
             .iter()
@@ -62,6 +63,16 @@ fn main() {
     run(
         "no slack margin",
         &mut CsUcb::new(6, CsUcbParams { slack_margin: 0.0, ..d }),
+    );
+    run(
+        "shedding on (threshold 2)",
+        &mut CsUcb::new(
+            6,
+            CsUcbParams {
+                shed_threshold: 2.0,
+                ..d
+            },
+        ),
     );
     run(
         "no penalty (θ=0)",

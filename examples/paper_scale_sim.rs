@@ -1,10 +1,14 @@
 //! Paper-scale scheduling experiment: replay the paper's evaluation
 //! (§4.2-4.4) — 10,000 diverse services by default, four schedulers,
 //! stable and fluctuating bandwidth — and print Table-1/Figure-4/5/6-style
-//! rows plus the DES's own throughput (events/s and stale-event ratio).
+//! rows plus the DES's own throughput (events/s, stale-event ratio, and
+//! the event-heap high-water mark).
 //!
-//! The virtual-time simulation core makes million-request sweeps
-//! practical; for the 1M acceptance run use:
+//! The workload is *streamed* through the engine (`ArrivalSource`): each
+//! run constructs a fresh `WorkloadGen` from the same seed, so no trace is
+//! ever materialized and the event heap stays bounded by in-flight
+//! concurrency — the 1M acceptance run no longer pre-pushes 1M arrival
+//! events:
 //!
 //! ```text
 //! cargo run --release --example paper_scale_sim -- \
@@ -15,13 +19,17 @@
 //!                   [--model yi-6b|llama2-7b|llama3-8b|yi-9b] [--seed S]
 //!                   [--schedulers fineinfer,agod,rewardless,cs-ucb]
 //!                   [--modes stable|fluctuating|both]
+//!                   [--min-success F] [--min-events-per-sec F]
+//!
+//! The `--min-*` flags turn the run into a CI gate: if any run's success
+//! rate or DES events/s lands below the floor, the process exits 1.
 
 use perllm::scheduler::{
     agod::Agod, csucb::CsUcb, fineinfer::FineInfer, rewardless::RewardlessGuidance, Scheduler,
 };
 use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
-use perllm::sim::engine::simulate;
-use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
+use perllm::sim::engine::simulate_stream;
+use perllm::workload::generator::{ArrivalProcess, WorkloadConfig, WorkloadGen};
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -46,17 +54,25 @@ fn main() {
         "both" => vec![BandwidthMode::Stable, BandwidthMode::Fluctuating],
         other => panic!("bad --modes {other}"),
     };
+    let min_success: f64 = get("--min-success", "0").parse().expect("bad --min-success");
+    let min_events: f64 = get("--min-events-per-sec", "0")
+        .parse()
+        .expect("bad --min-events-per-sec");
+    let max_peak_heap: usize = get("--max-peak-event-heap", "0")
+        .parse()
+        .expect("bad --max-peak-event-heap");
 
-    let trace = generate(
-        &WorkloadConfig::default()
-            .with_requests(n)
-            .with_arrivals(ArrivalProcess::Poisson { rate: 15.0 })
-            .with_deadline_range(2.0, 6.0)
-            .with_seed(seed),
-    );
+    // One workload description; every run streams a fresh cursor from it,
+    // so all schedulers and modes see the identical request sequence.
+    let workload = WorkloadConfig::default()
+        .with_requests(n)
+        .with_arrivals(ArrivalProcess::Poisson { rate: 15.0 })
+        .with_deadline_range(2.0, 6.0)
+        .with_seed(seed);
 
+    let mut floor_violations = 0usize;
     for mode in modes {
-        println!("\n=== edge model {model}, {mode:?} bandwidth, {n} requests ===");
+        println!("\n=== edge model {model}, {mode:?} bandwidth, {n} requests (streamed) ===");
         let cfg = ClusterConfig::paper(&model, mode);
         let cloud = cfg.cloud_index();
         let ns = cfg.n_servers();
@@ -70,24 +86,52 @@ fn main() {
                 "cs-ucb" => Box::new(CsUcb::with_defaults(ns)),
                 other => panic!("unknown scheduler {other}"),
             };
-            let rep = simulate(&cfg, &trace, s.as_mut());
+            let mut source = WorkloadGen::new(&workload);
+            let rep = simulate_stream(&cfg, &mut source, s.as_mut());
             println!("{}", rep.summary_row());
             println!(
-                "    dropped {} late {} unfinished {}",
-                rep.dropped, rep.late, rep.unfinished
+                "    dropped {} (policy {}) late {} unfinished {}",
+                rep.dropped, rep.dropped_by_policy, rep.late, rep.unfinished
             );
             println!(
                 "    DES: {} events in {:.2}s wall = {:.0} events/s, \
-                 stale ratio {:.4} ({} stale)",
+                 stale ratio {:.4} ({} stale), peak heap {}",
                 rep.events_processed,
                 rep.wall_s,
                 rep.events_per_sec,
                 rep.stale_ratio,
-                rep.stale_events
+                rep.stale_events,
+                rep.peak_event_queue_len
             );
+            if min_success > 0.0 && rep.success_rate < min_success {
+                eprintln!(
+                    "FLOOR VIOLATION: {name} success {:.3} < {min_success}",
+                    rep.success_rate
+                );
+                floor_violations += 1;
+            }
+            if min_events > 0.0 && rep.events_per_sec < min_events {
+                eprintln!(
+                    "FLOOR VIOLATION: {name} events/s {:.0} < {min_events}",
+                    rep.events_per_sec
+                );
+                floor_violations += 1;
+            }
+            if max_peak_heap > 0 && rep.peak_event_queue_len > max_peak_heap {
+                eprintln!(
+                    "FLOOR VIOLATION: {name} peak event heap {} > {max_peak_heap} \
+                     (streaming no longer bounds the heap)",
+                    rep.peak_event_queue_len
+                );
+                floor_violations += 1;
+            }
             throughputs.push((name.clone(), rep.throughput_tok_s));
             for (k, v) in rep.diagnostics {
-                if k == "cum_regret" || k == "regret_bound" || k == "fallback_decisions" {
+                if k == "cum_regret"
+                    || k == "regret_bound"
+                    || k == "fallback_decisions"
+                    || k == "shed_decisions"
+                {
                     println!("    {k}: {v:.1}");
                 }
             }
@@ -102,5 +146,9 @@ fn main() {
                 }
             }
         }
+    }
+    if floor_violations > 0 {
+        eprintln!("{floor_violations} floor violation(s)");
+        std::process::exit(1);
     }
 }

@@ -1,42 +1,43 @@
 //! Quickstart: the PerLLM public API in ~60 lines.
 //!
-//! 1. Generate a diverse-service workload.
+//! 1. Describe a diverse-service workload (streamed, never materialized).
 //! 2. Build the paper's edge-cloud cluster.
-//! 3. Schedule it with CS-UCB and with the cloud-only baseline.
+//! 3. Schedule it with CS-UCB and with the cloud-only baseline — each run
+//!    streams a fresh cursor over the same seeded request sequence.
 //! 4. Compare success rate, throughput, and energy.
 //!
 //! Run: cargo run --release --example quickstart
 
-use perllm::scheduler::{csucb::CsUcb, fineinfer::FineInfer, Scheduler};
+use perllm::scheduler::{csucb::CsUcb, fineinfer::FineInfer};
 use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
-use perllm::sim::engine::simulate;
+use perllm::sim::engine::simulate_stream;
 use perllm::util::stats::ratio;
-use perllm::workload::generator::{generate, WorkloadConfig};
+use perllm::workload::generator::{WorkloadConfig, WorkloadGen};
 
 fn main() {
-    // 1. A reproducible trace: 2 000 services, deadlines in [2 s, 6 s].
-    let trace = generate(
-        &WorkloadConfig::default()
-            .with_requests(2_000)
-            .with_deadline_range(2.0, 6.0)
-            .with_seed(7),
-    );
-    println!(
-        "workload: {} requests, first arrival {:.2}s, last {:.2}s",
-        trace.len(),
-        trace.first().unwrap().arrival,
-        trace.last().unwrap().arrival
-    );
+    // 1. A reproducible workload: 2 000 services, deadlines in [2 s, 6 s].
+    //    `WorkloadGen` is a pull-based ArrivalSource — the engine prefetches
+    //    one arrival at a time, so the event heap stays bounded no matter
+    //    how long the trace is.
+    let workload = WorkloadConfig::default()
+        .with_requests(2_000)
+        .with_deadline_range(2.0, 6.0)
+        .with_seed(7);
+    println!("workload: {} requests (streamed)", workload.n_requests);
 
     // 2. The paper's testbed: five edge servers + one cloud server.
     let cluster = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
 
     // 3. Schedule with the paper's CS-UCB and the cloud-only baseline.
+    //    Schedulers return Actions (Assign / Defer / Shed); the engine
+    //    accounts sheds into RunReport::dropped.
     let mut perllm_sched = CsUcb::with_defaults(cluster.n_servers());
-    let perllm_run = simulate(&cluster, &trace, &mut perllm_sched);
+    let perllm_run =
+        simulate_stream(&cluster, &mut WorkloadGen::new(&workload), &mut perllm_sched);
 
     let mut cloud_only = FineInfer::new(cluster.cloud_index());
-    let baseline_run = simulate(&cluster, &trace, &mut cloud_only);
+    let baseline_run =
+        simulate_stream(&cluster, &mut WorkloadGen::new(&workload), &mut cloud_only);
 
     // 4. Compare.
     println!("\n{}", baseline_run.summary_row());
@@ -49,6 +50,13 @@ fn main() {
         baseline_run.success_rate * 100.0,
         perllm_run.energy_per_success_j,
         baseline_run.energy_per_success_j,
+    );
+    println!(
+        "dropped: {} (policy sheds {}) — event-heap peak {} (≪ {} requests)",
+        perllm_run.dropped,
+        perllm_run.dropped_by_policy,
+        perllm_run.peak_event_queue_len,
+        workload.n_requests,
     );
     for (k, v) in &perllm_run.diagnostics {
         if k == "cum_regret" || k == "regret_bound" {

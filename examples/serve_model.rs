@@ -77,10 +77,11 @@ fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
     let mut sent: Vec<&str> = Vec::with_capacity(n);
     let mut replies = Vec::new();
+    let mut shed = 0usize;
     for i in 0..n {
         let (p, class) = prompts[rng.index(prompts.len())];
         sent.push(p);
-        cluster.submit(ServeRequest {
+        let outcome = cluster.submit(ServeRequest {
             id: i as u64,
             prompt: p.to_string(),
             max_new_tokens: max_new,
@@ -89,16 +90,23 @@ fn main() -> anyhow::Result<()> {
             temperature: 0.0, // greedy: reproducible output
             top_k: 1,
         })?;
+        // Policy sheds resolve immediately: no completion will arrive.
+        if outcome.worker().is_none() {
+            shed += 1;
+        }
         // Open-loop pacing: drain completions as they arrive.
         while let Some(r) = cluster.recv_completion(Duration::from_millis(1)) {
             replies.push(r);
         }
     }
-    while replies.len() < n {
+    while replies.len() + shed < n {
         let Some(r) = cluster.recv_completion(Duration::from_secs(120)) else {
             anyhow::bail!("timed out: {}/{} done", replies.len(), n);
         };
         replies.push(r);
+    }
+    if shed > 0 {
+        println!("{shed} requests shed by the scheduling policy");
     }
     let wall = t0.elapsed().as_secs_f64();
 

@@ -9,7 +9,7 @@
 mod common;
 
 use perllm::bench::Table;
-use perllm::scheduler::{ClusterView, Decision, Scheduler};
+use perllm::scheduler::{Action, ClusterView, Scheduler};
 use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
 use perllm::sim::engine::simulate;
 use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
@@ -30,13 +30,13 @@ impl Scheduler for Tier {
             "edge-only"
         }
     }
-    fn decide(&mut self, _r: &ServiceRequest, view: &ClusterView) -> Decision {
+    fn decide(&mut self, _r: &ServiceRequest, view: &ClusterView) -> Action {
         if self.cloud {
-            Decision::now(view.servers.len() - 1)
+            Action::assign(view.servers.len() - 1)
         } else {
             let e = self.next_edge % (view.servers.len() - 1);
             self.next_edge += 1;
-            Decision::now(e)
+            Action::assign(e)
         }
     }
 }

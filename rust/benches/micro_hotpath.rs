@@ -16,11 +16,11 @@
 
 use perllm::bench::{bench_fn, render_json, JsonValue};
 use perllm::scheduler::csucb::CsUcb;
-use perllm::scheduler::{ClusterView, Decision, Scheduler};
+use perllm::scheduler::{Action, ClusterView, Scheduler};
 use perllm::sim::cluster::{BandwidthMode, ClusterConfig, ClusterSim};
-use perllm::sim::engine::simulate;
+use perllm::sim::engine::{simulate, simulate_stream};
 use perllm::sim::ps::PsQueue;
-use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
+use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig, WorkloadGen};
 use perllm::workload::service::ServiceRequest;
 
 /// Fixed-target scheduler: isolates DES throughput from decision logic.
@@ -29,8 +29,8 @@ impl Scheduler for Fixed {
     fn name(&self) -> &'static str {
         "fixed"
     }
-    fn decide(&mut self, _r: &ServiceRequest, _v: &ClusterView) -> Decision {
-        Decision::now(self.0)
+    fn decide(&mut self, _r: &ServiceRequest, _v: &ClusterView) -> Action {
+        Action::assign(self.0)
     }
 }
 
@@ -130,6 +130,28 @@ fn main() {
             json.push(("csucb_4000_events_per_sec", JsonValue::Num(events_per_sec)));
             json.push(("csucb_4000_stale_ratio", JsonValue::Num(stale_ratio)));
         }
+    }
+
+    // 5. Streaming arrivals: same 4000-request cs-ucb run fed through a
+    //    WorkloadGen cursor instead of a materialized trace. Wall time must
+    //    match the trace path (identical event sequence) while the event
+    //    heap stays bounded by in-flight concurrency.
+    {
+        let workload = WorkloadConfig::default()
+            .with_requests(4_000)
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(42);
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Fluctuating);
+        let mut peak_heap = 0usize;
+        rows.push(bench_fn("simulate cs-ucb 4000 reqs (stream)", 1, 5, || {
+            let mut s = CsUcb::with_defaults(cfg.n_servers());
+            let mut source = WorkloadGen::new(&workload);
+            let rep = simulate_stream(&cfg, &mut source, &mut s);
+            peak_heap = rep.peak_event_queue_len;
+            std::hint::black_box(rep.success_rate);
+        }));
+        println!("  streaming 4000 reqs: peak event heap {peak_heap}");
+        json.push(("streaming_4000_peak_event_heap", JsonValue::Num(peak_heap as f64)));
     }
 
     println!("\n== L3 hot-path micro benches ==");

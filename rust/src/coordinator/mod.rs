@@ -13,5 +13,5 @@ pub mod server;
 pub use batcher::{Batcher, GenRequest, GenResult, StepModel};
 pub use kv::{KvPool, KvPoolConfig};
 pub use metrics::ServingMetrics;
-pub use router::{Router, WorkerTelemetry};
-pub use server::{ServeReply, ServeRequest, ServingCluster};
+pub use router::{Routed, Router, WorkerTelemetry};
+pub use server::{ServeReply, ServeRequest, ServingCluster, SubmitOutcome};

@@ -2,15 +2,18 @@
 //! telemetry and delegates the placement decision to any [`Scheduler`]
 //! (CS-UCB in production, baselines for ablation).
 //!
-//! This is the serving-path twin of the DES's `ClusterSim::view`: the same
-//! decision interface fed by measured statistics (queue depths, EMA step
-//! times) instead of simulated state, so the paper's scheduler runs
-//! unchanged on both substrates.
+//! This is the serving-path twin of the DES cluster: it implements the
+//! same [`ViewSource`] trait (one `view_into` filling a caller-owned
+//! snapshot) and consumes the same [`Action`] decisions, so the paper's
+//! scheduler runs unchanged on both substrates. The router keeps one
+//! scratch `ClusterView` and refills it per `route()`/`complete()` — the
+//! per-request heap allocations the PR-1 router still performed are gone
+//! (verified by the allocation-counting test in `tests/router_alloc.rs`).
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use crate::scheduler::{ClusterView, Scheduler, ServerView};
+use crate::scheduler::{Action, ClusterView, Scheduler, ServerView, ShedReason, ViewSource};
 use crate::sim::energy::EnergyWeights;
 use crate::sim::server::ServerKind;
 use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest};
@@ -74,6 +77,32 @@ impl WorkerTelemetry {
     }
 }
 
+/// What the router did with one request — the serving-side projection of
+/// the scheduler's [`Action`]. The live substrate has no timer wheel, so
+/// `Defer` reports the requested delay and lets the caller decide (the
+/// serving cluster dispatches immediately: its workers batch
+/// continuously, which is what a deferred-batching window approximates).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Routed {
+    /// Dispatch to this worker now.
+    Assign { worker: usize },
+    /// The policy asked to hold the request `delay_s` before dispatching.
+    Defer { worker: usize, delay_s: f64 },
+    /// Rejected by policy. Bandit feedback was already delivered; no
+    /// completion will ever arrive for this request.
+    Shed { reason: ShedReason },
+}
+
+impl Routed {
+    /// Target worker, if the request was placed anywhere.
+    pub fn worker(&self) -> Option<usize> {
+        match *self {
+            Routed::Assign { worker } | Routed::Defer { worker, .. } => Some(worker),
+            Routed::Shed { .. } => None,
+        }
+    }
+}
+
 /// The leader's router: scheduler + live telemetry.
 pub struct Router {
     scheduler: Box<dyn Scheduler>,
@@ -85,26 +114,41 @@ pub struct Router {
     /// exactly the thundering-herd hazard the DES engine also guards
     /// against; see sim/cluster.rs InFlight).
     outstanding: Vec<usize>,
+    /// Scratch snapshot refilled per route()/complete(): the live decision
+    /// path performs zero per-request heap allocations once the buffer has
+    /// grown to cluster size.
+    scratch: ClusterView,
+    /// Requests rejected by the policy (`Action::Shed`).
+    sheds: u64,
+    /// Out-of-range scheduler targets recovered via least-violating — a
+    /// scheduler bug, logged rather than silently clamped.
+    bad_assignments: u64,
 }
 
 impl Router {
     pub fn new(scheduler: Box<dyn Scheduler>, workers: Vec<Arc<WorkerTelemetry>>) -> Self {
+        let weights = EnergyWeights::default();
         Router {
             outstanding: vec![0; workers.len()],
+            scratch: ClusterView::with_capacity(workers.len(), weights),
             scheduler,
             workers,
-            weights: EnergyWeights::default(),
+            weights,
             decisions: 0,
+            sheds: 0,
+            bad_assignments: 0,
         }
     }
 
-    /// Snapshot telemetry into the scheduler-facing view for one request.
-    pub fn view(&self, expected_tokens: usize) -> ClusterView {
-        let servers = self
-            .workers
-            .iter()
-            .zip(&self.outstanding)
-            .map(|(w, &outst)| {
+    /// Fill `out` with the telemetry snapshot for a request expected to
+    /// move `expected_tokens` tokens. This is the single fill routine
+    /// behind both the [`ViewSource`] impl and `complete()`.
+    fn fill_view(&self, expected_tokens: usize, out: &mut ClusterView) {
+        out.now = 0.0;
+        out.weights = self.weights;
+        out.servers.clear();
+        out.servers
+            .extend(self.workers.iter().zip(&self.outstanding).map(|(w, &outst)| {
                 // Whichever is larger: what the worker has observed, or what
                 // we know we have sent it (telemetry lags the mailbox).
                 let queued = w.queued.load(Ordering::Relaxed);
@@ -131,23 +175,67 @@ impl Router {
                     solo_time_est: expected_tokens as f64 * us_tok / 1.0e6,
                     occupancy: used / cap,
                 }
-            })
-            .collect();
-        ClusterView {
-            now: 0.0,
-            servers,
-            weights: self.weights,
-        }
+            }));
     }
 
-    /// Route one request; returns the worker index.
-    pub fn route(&mut self, req: &ServiceRequest) -> usize {
+    /// Snapshot telemetry into a freshly allocated scheduler-facing view.
+    /// Allocating wrapper kept for inspection/tests; the request path uses
+    /// the scratch buffer via [`ViewSource::view_into`]/`fill_view`.
+    pub fn view(&self, expected_tokens: usize) -> ClusterView {
+        let mut out = ClusterView::with_capacity(self.workers.len(), self.weights);
+        self.fill_view(expected_tokens, &mut out);
+        out
+    }
+
+    /// Route one request through the scheduler's [`Action`] interface.
+    pub fn route(&mut self, req: &ServiceRequest) -> Routed {
         self.decisions += 1;
-        let view = self.view((req.prompt_tokens + req.output_tokens) as usize);
-        let d = self.scheduler.decide(req, &view);
-        let w = d.server.min(self.workers.len() - 1);
-        self.outstanding[w] += 1;
-        w
+        // Take/put-back keeps the scratch view out of `self` while the
+        // scheduler borrows it (no allocation: the buffer is reused).
+        let mut view = std::mem::take(&mut self.scratch);
+        self.fill_view((req.prompt_tokens + req.output_tokens) as usize, &mut view);
+        let action = self.scheduler.decide(req, &view);
+        let routed = match action {
+            Action::Assign { server } => Routed::Assign {
+                worker: self.checked_worker(server, req, &view),
+            },
+            Action::Defer { server, delay_s } => Routed::Defer {
+                worker: self.checked_worker(server, req, &view),
+                delay_s,
+            },
+            Action::Shed { reason } => {
+                // The request is resolved here and now: account it and
+                // deliver bandit feedback immediately (no completion will
+                // come back through the workers).
+                self.sheds += 1;
+                let outcome = ServiceOutcome::shed(req, 0.0);
+                self.scheduler.feedback(&outcome, &view);
+                Routed::Shed { reason }
+            }
+        };
+        if let Some(w) = routed.worker() {
+            self.outstanding[w] += 1;
+        }
+        self.scratch = view;
+        routed
+    }
+
+    /// Validate a scheduler-chosen worker index. An out-of-range target is
+    /// a scheduler bug: log it loudly and recover with the least-violating
+    /// worker instead of masking the bug with a clamp (the pre-Action
+    /// router silently did `server.min(len - 1)`).
+    fn checked_worker(&mut self, server: usize, req: &ServiceRequest, view: &ClusterView) -> usize {
+        if server < self.workers.len() {
+            return server;
+        }
+        self.bad_assignments += 1;
+        log::error!(
+            "scheduler {:?} chose out-of-range worker {server} (cluster has {}); \
+             falling back to least-violating",
+            self.scheduler.name(),
+            self.workers.len()
+        );
+        view.least_violating(req)
     }
 
     /// Feed the realized outcome back to the bandit.
@@ -155,12 +243,23 @@ impl Router {
         if let Some(o) = self.outstanding.get_mut(outcome.server) {
             *o = o.saturating_sub(1);
         }
-        let view = self.view(outcome.tokens.max(1) as usize);
+        let mut view = std::mem::take(&mut self.scratch);
+        self.fill_view(outcome.tokens.max(1) as usize, &mut view);
         self.scheduler.feedback(outcome, &view);
+        self.scratch = view;
     }
 
     pub fn diagnostics(&self) -> Vec<(String, f64)> {
-        self.scheduler.diagnostics()
+        let mut d = self.scheduler.diagnostics();
+        d.push(("router_decisions".into(), self.decisions as f64));
+        d.push(("router_sheds".into(), self.sheds as f64));
+        d.push(("router_bad_assignments".into(), self.bad_assignments as f64));
+        d
+    }
+
+    /// Requests the policy has shed so far.
+    pub fn sheds(&self) -> u64 {
+        self.sheds
     }
 
     /// Helper to build the ServiceRequest the scheduler expects from a raw
@@ -184,6 +283,14 @@ impl Router {
     }
 }
 
+impl ViewSource for Router {
+    /// The unified-API entry point — same signature `ClusterSim`
+    /// implements, fed by live telemetry instead of simulated state.
+    fn view_into(&self, req: &ServiceRequest, out: &mut ClusterView) {
+        self.fill_view((req.prompt_tokens + req.output_tokens) as usize, out);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,9 +306,104 @@ mod tests {
         let mut router = Router::new(Box::new(CsUcb::with_defaults(2)), workers);
         let req = Router::service_request(1, ServiceClass::Chat, 16, 16, 5.0);
         for _ in 0..50 {
-            let w = router.route(&req);
+            let w = router.route(&req).worker().expect("placed");
             assert!(w < 2);
         }
+    }
+
+    /// Differential check: the scratch `view_into` fill and the allocating
+    /// `view()` wrapper must produce identical snapshots, including after
+    /// telemetry changes and with stale content in the scratch buffer.
+    #[test]
+    fn scratch_view_matches_collected_view() {
+        use crate::scheduler::ViewSource;
+        let workers = vec![
+            telemetry(ServerKind::Edge),
+            telemetry(ServerKind::Edge),
+            telemetry(ServerKind::Cloud),
+        ];
+        workers[0].queued.store(6, Ordering::Relaxed);
+        workers[0].active.store(4, Ordering::Relaxed);
+        workers[0].record_step_time(5000.0);
+        workers[2].active.store(2, Ordering::Relaxed);
+        let router = Router::new(Box::new(CsUcb::with_defaults(3)), workers);
+        // prompt 16 + output 32 = the 48 expected tokens view() is given.
+        let req = Router::service_request(9, ServiceClass::Code, 16, 32, 5.0);
+        let mut scratch = ClusterView::default();
+        router.view_into(&req, &mut scratch);
+        assert_eq!(scratch, router.view(48));
+        // Refill after telemetry moved: the second fill must fully replace
+        // the first.
+        router.workers[1].queued.store(3, Ordering::Relaxed);
+        router.workers[1].record_step_time(9000.0);
+        router.view_into(&req, &mut scratch);
+        assert_eq!(scratch, router.view(48));
+    }
+
+    /// A shed decision surfaces as `Routed::Shed`, counts in diagnostics,
+    /// and delivers bandit feedback without involving any worker.
+    #[test]
+    fn shed_action_resolves_request_with_feedback() {
+        use crate::scheduler::{Action, Scheduler, ShedReason};
+        struct ShedAll {
+            feedbacks: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+        }
+        impl Scheduler for ShedAll {
+            fn name(&self) -> &'static str {
+                "shed-all"
+            }
+            fn decide(&mut self, _r: &ServiceRequest, _v: &ClusterView) -> Action {
+                Action::shed(ShedReason::Overloaded)
+            }
+            fn feedback(&mut self, o: &ServiceOutcome, _v: &ClusterView) {
+                assert!(o.was_shed());
+                self.feedbacks.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let feedbacks = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let workers = vec![telemetry(ServerKind::Edge), telemetry(ServerKind::Cloud)];
+        let mut router = Router::new(
+            Box::new(ShedAll {
+                feedbacks: feedbacks.clone(),
+            }),
+            workers,
+        );
+        let req = Router::service_request(1, ServiceClass::Chat, 16, 16, 5.0);
+        for _ in 0..5 {
+            let routed = router.route(&req);
+            assert_eq!(routed, Routed::Shed { reason: ShedReason::Overloaded });
+            assert_eq!(routed.worker(), None);
+        }
+        assert_eq!(router.sheds(), 5);
+        assert_eq!(feedbacks.load(Ordering::Relaxed), 5, "feedback per shed");
+        let d = router.diagnostics();
+        assert!(d.iter().any(|(k, v)| k == "router_sheds" && *v == 5.0));
+    }
+
+    /// The old silent `server.min(len - 1)` clamp is gone: an out-of-range
+    /// target is recovered via least-violating and surfaced in
+    /// diagnostics.
+    #[test]
+    fn out_of_range_target_recovers_and_is_counted() {
+        use crate::scheduler::{Action, Scheduler};
+        struct Bad;
+        impl Scheduler for Bad {
+            fn name(&self) -> &'static str {
+                "bad"
+            }
+            fn decide(&mut self, _r: &ServiceRequest, _v: &ClusterView) -> Action {
+                Action::assign(99)
+            }
+        }
+        let workers = vec![telemetry(ServerKind::Edge), telemetry(ServerKind::Cloud)];
+        let mut router = Router::new(Box::new(Bad), workers);
+        let req = Router::service_request(1, ServiceClass::Chat, 16, 16, 5.0);
+        let w = router.route(&req).worker().expect("recovered placement");
+        assert!(w < 2, "fallback must stay in range");
+        let d = router.diagnostics();
+        assert!(d
+            .iter()
+            .any(|(k, v)| k == "router_bad_assignments" && *v == 1.0));
     }
 
     #[test]
@@ -236,7 +438,7 @@ mod tests {
         let req = Router::service_request(1, ServiceClass::Chat, 16, 16, 2.0);
         let mut to_1 = 0;
         for _ in 0..20 {
-            if router.route(&req) == 1 {
+            if router.route(&req).worker() == Some(1) {
                 to_1 += 1;
             }
         }

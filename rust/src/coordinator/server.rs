@@ -25,8 +25,8 @@ use anyhow::Result;
 
 use super::batcher::{Batcher, GenRequest, StepModel};
 use super::metrics::ServingMetrics;
-use super::router::{Router, WorkerTelemetry};
-use crate::scheduler::Scheduler;
+use super::router::{Routed, Router, WorkerTelemetry};
+use crate::scheduler::{Scheduler, ShedReason};
 use crate::sim::server::ServerKind;
 use crate::workload::service::{ServiceClass, ServiceOutcome};
 
@@ -74,6 +74,25 @@ enum WorkerMsg {
 
 struct Done {
     reply: ServeReply,
+}
+
+/// Result of submitting one request to the serving cluster.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SubmitOutcome {
+    /// Placed on this worker; a completion will arrive.
+    Enqueued { worker: usize },
+    /// Rejected by the scheduling policy; no completion will arrive.
+    Shed { reason: ShedReason },
+}
+
+impl SubmitOutcome {
+    /// The worker the request went to, if it was placed.
+    pub fn worker(&self) -> Option<usize> {
+        match *self {
+            SubmitOutcome::Enqueued { worker } => Some(worker),
+            SubmitOutcome::Shed { .. } => None,
+        }
+    }
 }
 
 /// One worker thread: drains its queue into the batcher and steps it.
@@ -249,9 +268,10 @@ impl ServingCluster {
         })
     }
 
-    /// Route and enqueue one request; returns the chosen worker.
-    pub fn submit(&mut self, req: ServeRequest) -> Result<usize> {
-        self.metrics.record_arrival();
+    /// Route and enqueue one request. A `Shed` resolves the request here:
+    /// the bandit already received feedback inside the router, no
+    /// completion will arrive, and the caller must not wait for one.
+    pub fn submit(&mut self, req: ServeRequest) -> Result<SubmitOutcome> {
         let sreq = Router::service_request(
             req.id,
             req.class,
@@ -259,15 +279,27 @@ impl ServingCluster {
             req.max_new_tokens,
             req.deadline_s,
         );
-        let w = self.router.route(&sreq);
-        self.work_txs[w]
-            .send(WorkerMsg::Work(WorkItem {
-                req,
-                submitted: Instant::now(),
-            }))
-            .map_err(|_| anyhow::anyhow!("worker {w} gone"))?;
-        self.outstanding += 1;
-        Ok(w)
+        match self.router.route(&sreq) {
+            // A Defer degenerates to immediate dispatch on the live
+            // substrate: the worker's continuous batcher *is* the batch
+            // boundary a deferred-batching window approximates in the DES.
+            Routed::Assign { worker } | Routed::Defer { worker, .. } => {
+                // Arrival recorded only for placed requests: sheds never
+                // produce a completion, and counting them here would leave
+                // phantom in-flight entries in the metrics report (shed
+                // counts live in the router diagnostics instead).
+                self.metrics.record_arrival();
+                self.work_txs[worker]
+                    .send(WorkerMsg::Work(WorkItem {
+                        req,
+                        submitted: Instant::now(),
+                    }))
+                    .map_err(|_| anyhow::anyhow!("worker {worker} gone"))?;
+                self.outstanding += 1;
+                Ok(SubmitOutcome::Enqueued { worker })
+            }
+            Routed::Shed { reason } => Ok(SubmitOutcome::Shed { reason }),
+        }
     }
 
     /// Blocking receive of the next completion (None on timeout).
@@ -354,7 +386,8 @@ mod tests {
     fn serves_requests_end_to_end_with_fake_models() {
         let mut cluster = fake_cluster(2);
         for i in 0..10 {
-            cluster.submit(req(i)).unwrap();
+            let out = cluster.submit(req(i)).unwrap();
+            assert!(out.worker().is_some(), "idle cluster must not shed");
         }
         let mut got = 0;
         while got < 10 {
@@ -374,7 +407,7 @@ mod tests {
         let mut cluster = fake_cluster(3);
         let mut per_worker = [0usize; 3];
         for i in 0..60 {
-            let w = cluster.submit(req(i)).unwrap();
+            let w = cluster.submit(req(i)).unwrap().worker().expect("placed");
             per_worker[w] += 1;
         }
         let mut got = 0;

@@ -16,10 +16,10 @@ use perllm::scheduler::{
     agod::Agod, csucb::CsUcb, fineinfer::FineInfer, rewardless::RewardlessGuidance, Scheduler,
 };
 use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
-use perllm::sim::engine::simulate;
+use perllm::sim::engine::simulate_stream;
 use perllm::sim::server::ServerKind;
 use perllm::util::rng::Rng;
-use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
+use perllm::workload::generator::{ArrivalProcess, WorkloadConfig, WorkloadGen};
 use perllm::workload::service::ServiceClass;
 
 fn main() {
@@ -80,18 +80,20 @@ fn cmd_sim(p: &cli::Parsed) -> Result<()> {
     } else {
         BandwidthMode::Stable
     };
-    let trace = generate(
-        &WorkloadConfig::default()
-            .with_requests(n)
-            .with_arrivals(ArrivalProcess::Poisson { rate })
-            .with_deadline_range(2.0, 6.0)
-            .with_seed(seed),
-    );
+    // Streamed workload: each scheduler gets a fresh cursor over the same
+    // seeded sequence, so nothing is materialized and the event heap stays
+    // bounded at any --requests scale.
+    let workload = WorkloadConfig::default()
+        .with_requests(n)
+        .with_arrivals(ArrivalProcess::Poisson { rate })
+        .with_deadline_range(2.0, 6.0)
+        .with_seed(seed);
     let cfg = ClusterConfig::paper(&model, mode);
     println!("perllm sim: {n} requests, edge model {model}, {mode:?} bandwidth, rate {rate}/s");
     for name in ["fineinfer", "agod", "rewardless", "cs-ucb"] {
         let mut s = make_scheduler(name, cfg.n_servers(), cfg.cloud_index(), seed)?;
-        let rep = simulate(&cfg, &trace, s.as_mut());
+        let mut source = WorkloadGen::new(&workload);
+        let rep = simulate_stream(&cfg, &mut source, s.as_mut());
         println!("{}", rep.summary_row());
     }
     Ok(())
@@ -168,10 +170,11 @@ fn cmd_serve(p: &cli::Parsed) -> Result<()> {
     let mut sent_prompts: Vec<&str> = Vec::with_capacity(n);
     let mut ok = 0usize;
     let mut got = 0usize;
+    let mut shed = 0usize;
     for i in 0..n {
         let k = rng.index(prompts.len());
         sent_prompts.push(prompts[k]);
-        cluster.submit(ServeRequest {
+        let outcome = cluster.submit(ServeRequest {
             id: i as u64,
             prompt: prompts[k].to_string(),
             max_new_tokens: max_new,
@@ -180,6 +183,10 @@ fn cmd_serve(p: &cli::Parsed) -> Result<()> {
             temperature: 0.8,
             top_k: 200,
         })?;
+        // Shed requests resolve immediately — no completion will arrive.
+        if outcome.worker().is_none() {
+            shed += 1;
+        }
         // Paced open-loop arrivals so queueing reflects routing, not a
         // single burst.
         while let Some(r) = cluster.recv_completion(Duration::from_millis(1)) {
@@ -189,7 +196,7 @@ fn cmd_serve(p: &cli::Parsed) -> Result<()> {
             report_reply(&mut got, &sent_prompts, &r);
         }
     }
-    while got < n {
+    while got + shed < n {
         let Some(r) = cluster.recv_completion(Duration::from_secs(120)) else {
             bail!("timed out waiting for completions ({got}/{n})");
         };
@@ -197,6 +204,9 @@ fn cmd_serve(p: &cli::Parsed) -> Result<()> {
             ok += 1;
         }
         report_reply(&mut got, &sent_prompts, &r);
+    }
+    if shed > 0 {
+        println!("{shed} requests shed by the scheduling policy");
     }
     println!("\n{}", cluster.metrics.report());
     println!("deadline success: {:.1}%", 100.0 * ok as f64 / n as f64);

@@ -12,7 +12,7 @@
 //! reward — is preserved; the diffusion parameterization itself is not
 //! load-bearing for Table 1 / Figs. 4-6.
 
-use super::{ClusterView, Decision, Scheduler};
+use super::{Action, ClusterView, Scheduler};
 use crate::sim::server::ServerKind;
 use crate::util::rng::Rng;
 use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest};
@@ -27,6 +27,9 @@ pub struct Agod {
     /// Learning rate for the critic update.
     pub lr: f64,
     decisions: u64,
+    /// Scratch edge-index buffer, refilled per decision so the hot path
+    /// performs no per-decision allocation.
+    edge_buf: Vec<usize>,
 }
 
 impl Agod {
@@ -38,13 +41,8 @@ impl Agod {
             steps: 6,
             lr: 0.15,
             decisions: 0,
+            edge_buf: Vec::with_capacity(n_servers),
         }
-    }
-
-    fn edge_indices(view: &ClusterView) -> Vec<usize> {
-        (0..view.servers.len())
-            .filter(|&j| view.servers[j].kind == ServerKind::Edge)
-            .collect()
     }
 }
 
@@ -53,25 +51,28 @@ impl Scheduler for Agod {
         "agod (edge-only)"
     }
 
-    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Decision {
+    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
         self.decisions += 1;
-        let edges = Self::edge_indices(view);
-        assert!(!edges.is_empty(), "AGOD needs edge servers");
+        self.edge_buf.clear();
+        self.edge_buf
+            .extend((0..view.servers.len()).filter(|&j| view.servers[j].kind == ServerKind::Edge));
+        assert!(!self.edge_buf.is_empty(), "AGOD needs edge servers");
         let class = req.class.index();
 
         // Denoising chain: start from noise, anneal toward the critic's
         // preference blended with the instantaneous load signal.
-        let mut current = *self.rng.choose(&edges);
+        let mut current = *self.rng.choose(&self.edge_buf);
         for k in 0..self.steps {
             // Temperature decays 1 -> 0 over the chain.
             let temp = 1.0 - (k as f64 + 1.0) / self.steps as f64;
             if self.rng.chance(temp * 0.6) {
                 // Noise step: jump to a random edge.
-                current = *self.rng.choose(&edges);
+                current = *self.rng.choose(&self.edge_buf);
             } else {
                 // Guidance step: move to the best edge under critic +
                 // load-balancing tiebreak.
-                current = edges
+                current = self
+                    .edge_buf
                     .iter()
                     .copied()
                     .max_by(|&a, &b| {
@@ -82,10 +83,14 @@ impl Scheduler for Agod {
                     .unwrap_or(current);
             }
         }
-        Decision::now(current)
+        Action::assign(current)
     }
 
     fn feedback(&mut self, outcome: &ServiceOutcome, _view: &ClusterView) {
+        if outcome.was_shed() {
+            // No placement happened; nothing for the critic to learn from.
+            return;
+        }
         let class = outcome.class.index();
         let j = outcome.server;
         // Same Eq.-4-shaped reward as CS-UCB (fair comparison).
@@ -111,8 +116,8 @@ mod tests {
         let mut s = Agod::new(3, 1);
         let view = test_view(vec![1.0, 1.0, 1.0]);
         for _ in 0..100 {
-            let d = s.decide(&test_req(3.0), &view);
-            assert_ne!(d.server, 0, "picked the cloud");
+            let j = s.decide(&test_req(3.0), &view).server().expect("assigns");
+            assert_ne!(j, 0, "picked the cloud");
         }
     }
 
@@ -122,12 +127,12 @@ mod tests {
         let view = test_view(vec![1.0, 1.0, 1.0]); // 0=cloud, 1/2=edge
         let req = test_req(4.0);
         for _ in 0..300 {
-            let d = s.decide(&req, &view);
-            let energy = if d.server == 1 { 50.0 } else { 900.0 };
+            let j = s.decide(&req, &view).server().expect("assigns");
+            let energy = if j == 1 { 50.0 } else { 900.0 };
             let o = ServiceOutcome {
                 id: 1,
                 class: req.class,
-                server: d.server,
+                server: j,
                 tx_time: 0.05,
                 infer_time: 0.95,
                 processing_time: 1.0,
@@ -141,7 +146,7 @@ mod tests {
         // After training, the critic must prefer edge 1.
         let mut picks1 = 0;
         for _ in 0..100 {
-            if s.decide(&req, &view).server == 1 {
+            if s.decide(&req, &view) == Action::assign(1) {
                 picks1 += 1;
             }
         }

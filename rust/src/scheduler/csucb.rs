@@ -19,7 +19,7 @@
 //! (the paper: "assigned to a more resource-rich server") and the penalty
 //! term P(t) carries the violation severity into the index (Eq. 7).
 
-use super::{ClusterView, Decision, Scheduler};
+use super::{Action, ClusterView, Scheduler, ShedReason};
 use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest};
 
 /// Reward scale: 1 kJ of weighted energy ≡ 1.0 reward unit, keeping the
@@ -42,6 +42,17 @@ pub struct CsUcbParams {
     /// (f(y) >= slack_margin). Absorbs load arriving between the decision
     /// and completion.
     pub slack_margin: f64,
+    /// Shed the request outright when even the least-violating server has
+    /// f(y) < -shed_threshold: every placement is so deep in violation
+    /// (deadline hopeless or resources absolutely crammed) that uploading
+    /// would only waste energy and link share. The default is
+    /// `f64::INFINITY` — shedding disabled, the pure paper behavior
+    /// (always fall back to least-violating), keeping `with_defaults`
+    /// runs comparable to the paper and to pre-Action baselines. Serving
+    /// deployments that prefer rejecting hopeless work should set ~2.0
+    /// (only triggers when the binding constraint is violated ~3x over);
+    /// the ablation example carries that variant.
+    pub shed_threshold: f64,
 }
 
 impl Default for CsUcbParams {
@@ -53,6 +64,7 @@ impl Default for CsUcbParams {
             delta: 0.25,
             theta: 0.3,
             slack_margin: 0.2,
+            shed_threshold: f64::INFINITY,
         }
     }
 }
@@ -131,6 +143,8 @@ pub struct CsUcb {
     cum_regret: f64,
     /// Count of decisions forced through the least-violating fallback.
     fallback_decisions: u64,
+    /// Count of requests explicitly shed (violation beyond shed_threshold).
+    shed_decisions: u64,
     feedbacks: u64,
 }
 
@@ -144,6 +158,7 @@ impl CsUcb {
             pending_penalty: PendingPenalties::default(),
             cum_regret: 0.0,
             fallback_decisions: 0,
+            shed_decisions: 0,
             feedbacks: 0,
         }
     }
@@ -203,7 +218,7 @@ impl Scheduler for CsUcb {
         "cs-ucb (PerLLM)"
     }
 
-    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Decision {
+    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
         self.t += 1;
         let class = req.class.index();
 
@@ -247,6 +262,15 @@ impl Scheduler for CsUcb {
         let (choice, penalty) = match best_margin.or(best_bare) {
             Some((j, _)) => (j, 0.0),
             None => {
+                // Nothing feasible. If even the least-violating placement
+                // is beyond the shed threshold the request is hopeless —
+                // reject it before any upload energy is spent (first-class
+                // load shedding; the engine/router account the drop and
+                // still deliver feedback).
+                if best_fy < -self.params.shed_threshold {
+                    self.shed_decisions += 1;
+                    return Action::shed(ShedReason::Infeasible);
+                }
                 // Constraint-satisfaction fallback: least-violating server;
                 // its violation severity becomes the penalty term P(t).
                 self.fallback_decisions += 1;
@@ -259,11 +283,17 @@ impl Scheduler for CsUcb {
         if penalty < 0.0 {
             self.pending_penalty.insert(req.id, penalty);
         }
-        Decision::now(choice)
+        Action::assign(choice)
     }
 
     fn feedback(&mut self, outcome: &ServiceOutcome, _view: &ClusterView) {
         self.feedbacks += 1;
+        if outcome.was_shed() {
+            // No arm was pulled: nothing to credit or blame. (Clean up any
+            // stale pending penalty under this id just in case.)
+            self.pending_penalty.remove(outcome.id);
+            return;
+        }
         let class = outcome.class.index();
         let penalty = self.pending_penalty.remove(outcome.id).unwrap_or(0.0);
         let mut r = Self::reward(&self.params, outcome);
@@ -295,6 +325,7 @@ impl Scheduler for CsUcb {
             ("cum_regret".into(), self.cum_regret),
             ("regret_bound".into(), self.regret_bound()),
             ("fallback_decisions".into(), self.fallback_decisions as f64),
+            ("shed_decisions".into(), self.shed_decisions as f64),
             ("explored_arms".into(), explored as f64),
             ("decisions".into(), self.t as f64),
         ]
@@ -328,8 +359,7 @@ mod tests {
         let view = test_view(vec![1.0, 5.0]); // server 1 misses 2 s deadline
         let req = test_req(2.0);
         for _ in 0..20 {
-            let d = s.decide(&req, &view);
-            assert_eq!(d.server, 0);
+            assert_eq!(s.decide(&req, &view), Action::assign(0));
         }
     }
 
@@ -339,8 +369,37 @@ mod tests {
         let view = test_view(vec![10.0, 6.0]);
         let req = test_req(2.0);
         let d = s.decide(&req, &view);
-        assert_eq!(d.server, 1); // least violating
+        assert_eq!(d, Action::assign(1)); // least violating
         assert_eq!(s.fallback_decisions, 1);
+        assert_eq!(s.shed_decisions, 0);
+    }
+
+    #[test]
+    fn sheds_when_violation_beyond_threshold() {
+        let mut s = CsUcb::new(
+            2,
+            CsUcbParams {
+                shed_threshold: 2.0,
+                ..CsUcbParams::default()
+            },
+        );
+        // Best server predicts 8 s against a 1 s deadline: f(y) = -7,
+        // far beyond the threshold of 2 — hopeless, shed it.
+        let view = test_view(vec![10.0, 8.0]);
+        let req = test_req(1.0);
+        let d = s.decide(&req, &view);
+        assert_eq!(d, Action::shed(ShedReason::Infeasible));
+        assert_eq!(s.shed_decisions, 1);
+        assert_eq!(s.fallback_decisions, 0);
+        // Shed feedback is consumed without touching any arm.
+        let mut o = outcome(0, 0.0, f64::INFINITY, 1.0);
+        o.server = ServiceOutcome::SHED_SERVER;
+        s.feedback(&o, &view);
+        assert!(s.arms.iter().flatten().all(|a| a.pulls == 0));
+        // Defaults shed nothing: the pure paper fallback behavior.
+        let mut paper = CsUcb::with_defaults(2);
+        assert_eq!(paper.decide(&req, &view), Action::assign(1));
+        assert_eq!(paper.shed_decisions, 0);
     }
 
     #[test]
@@ -361,12 +420,12 @@ mod tests {
         let req = test_req(4.0);
         let mut picks0 = 0;
         for i in 0..200 {
-            let d = s.decide(&req, &view);
-            if d.server == 0 {
+            let j = s.decide(&req, &view).server().expect("assigns");
+            if j == 0 {
                 picks0 += 1;
             }
-            let energy = if d.server == 0 { 50.0 } else { 800.0 };
-            let mut o = outcome(d.server, energy, 1.0, 4.0);
+            let energy = if j == 0 { 50.0 } else { 800.0 };
+            let mut o = outcome(j, energy, 1.0, 4.0);
             o.id = i as u64 + 10;
             // decision stored penalty under req.id (7) — emulate engine by
             // reusing the id.
@@ -383,13 +442,13 @@ mod tests {
         let req = test_req(4.0);
         let mut checkpoints = Vec::new();
         for i in 1..=400 {
-            let d = s.decide(&req, &view);
-            let energy = match d.server {
+            let j = s.decide(&req, &view).server().expect("assigns");
+            let energy = match j {
                 0 => 50.0,
                 1 => 300.0,
                 _ => 600.0,
             };
-            let mut o = outcome(d.server, energy, 1.0, 4.0);
+            let mut o = outcome(j, energy, 1.0, 4.0);
             o.id = req.id;
             s.feedback(&o, &view);
             if i % 100 == 0 {
@@ -411,9 +470,9 @@ mod tests {
         let req = test_req(4.0);
         let mut seen = std::collections::HashSet::new();
         for _ in 0..4 {
-            let d = s.decide(&req, &view);
-            seen.insert(d.server);
-            let mut o = outcome(d.server, 100.0, 1.0, 4.0);
+            let j = s.decide(&req, &view).server().expect("assigns");
+            seen.insert(j);
+            let mut o = outcome(j, 100.0, 1.0, 4.0);
             o.id = req.id;
             s.feedback(&o, &view);
         }

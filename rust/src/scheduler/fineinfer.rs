@@ -5,7 +5,7 @@
 //! shared cloud uplink as the bottleneck (hence its Figure-5 throughput
 //! floor in the paper).
 
-use super::{ClusterView, Decision, Scheduler};
+use super::{Action, ClusterView, Scheduler};
 use crate::workload::service::ServiceRequest;
 
 pub struct FineInfer {
@@ -30,14 +30,14 @@ impl Scheduler for FineInfer {
         "fineinfer (cloud-only)"
     }
 
-    fn decide(&mut self, _req: &ServiceRequest, view: &ClusterView) -> Decision {
+    fn decide(&mut self, _req: &ServiceRequest, view: &ClusterView) -> Action {
         self.decisions += 1;
         // Hold until the next global batch boundary.
         let phase = view.now % self.window_s;
-        let defer = if phase == 0.0 { 0.0 } else { self.window_s - phase };
-        Decision {
-            server: self.cloud,
-            defer_s: defer,
+        if phase == 0.0 {
+            Action::assign(self.cloud)
+        } else {
+            Action::defer(self.cloud, self.window_s - phase)
         }
     }
 
@@ -56,7 +56,7 @@ mod tests {
         let mut s = FineInfer::new(0);
         let view = test_view(vec![1.0, 0.5]);
         for _ in 0..10 {
-            assert_eq!(s.decide(&test_req(3.0), &view).server, 0);
+            assert_eq!(s.decide(&test_req(3.0), &view).server(), Some(0));
         }
     }
 
@@ -65,10 +65,13 @@ mod tests {
         let mut s = FineInfer::new(0);
         let mut view = test_view(vec![1.0]);
         view.now = 0.10;
-        let d = s.decide(&test_req(3.0), &view);
-        assert!((d.defer_s - 0.15).abs() < 1e-9, "defer={}", d.defer_s);
+        let Action::Defer { server, delay_s } = s.decide(&test_req(3.0), &view) else {
+            panic!("mid-window decision must defer");
+        };
+        assert_eq!(server, 0);
+        assert!((delay_s - 0.15).abs() < 1e-9, "defer={delay_s}");
         view.now = 0.25;
         let d2 = s.decide(&test_req(3.0), &view);
-        assert_eq!(d2.defer_s, 0.0);
+        assert_eq!(d2, Action::assign(0), "on-boundary dispatches now");
     }
 }

@@ -1,9 +1,42 @@
 //! Scheduling layer: the paper's contribution (CS-UCB) plus the three
-//! published baselines and a clairvoyant oracle, behind one trait.
+//! published baselines and a clairvoyant oracle, behind one
+//! **action-based API shared by both substrates** (the DES engine and the
+//! live coordinator router).
+//!
+//! The API is built from three abstractions:
+//!
+//! * [`Action`] — what a policy may do with one request: `Assign` it to a
+//!   server now, `Defer` it (deferred batching), or `Shed` it outright.
+//!   Shedding is first-class: a policy that knows every placement is
+//!   hopeless can reject the work before any upload energy is spent,
+//!   and the engine/router account the drop and still deliver bandit
+//!   feedback for it.
+//! * [`ViewSource`] — anything that can fill a caller-owned
+//!   [`ClusterView`] snapshot in place (`view_into`). Both the DES
+//!   cluster (`sim::cluster::ClusterSim`) and the live router
+//!   (`coordinator::router::Router`) implement it, so the decision path
+//!   is allocation-free end to end on either substrate: one scratch view
+//!   refilled per decision, `_into` feasibility helpers writing into
+//!   reusable index buffers.
+//! * [`crate::workload::ArrivalSource`] — a pull-based workload cursor.
+//!   The engine prefetches exactly one pending arrival instead of
+//!   pre-pushing the whole trace, which caps the event-heap size on
+//!   million-request runs.
 //!
 //! Every scheduler sees the *same* cluster view (same predictors, same
 //! resource snapshots) — differences in the results come from decision
 //! logic, not from information asymmetry.
+//!
+//! Porting a scheduler to this API: implement
+//! `fn decide(&mut self, req, view) -> Action`; return
+//! `Action::assign(j)` for immediate dispatch, `Action::defer(j, s)` to
+//! hold for `s` seconds, `Action::shed(reason)` to reject. Keep any index
+//! buffers you need as struct fields and fill them with the `_into`
+//! helpers ([`ClusterView::feasible_servers_into`] /
+//! [`ClusterView::feasible_servers_with_slack_into`]) so `decide` never
+//! allocates. Shed requests come back through `feedback` with
+//! [`ServiceOutcome::was_shed`] set — skip arm updates for those (no arm
+//! was pulled) but do count them.
 
 pub mod agod;
 pub mod csucb;
@@ -16,7 +49,7 @@ use crate::sim::server::ServerKind;
 use crate::workload::service::{ServiceOutcome, ServiceRequest};
 
 /// Per-candidate-server snapshot handed to the scheduler for one request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServerView {
     pub kind: ServerKind,
     /// Predicted end-to-end processing time if this request is assigned
@@ -46,19 +79,29 @@ pub struct ServerView {
 }
 
 /// Cluster snapshot at decision time (the CMAB state space s of §3.2).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusterView {
     pub now: f64,
     pub servers: Vec<ServerView>,
     pub weights: EnergyWeights,
 }
 
+impl Default for ClusterView {
+    fn default() -> Self {
+        ClusterView {
+            now: 0.0,
+            servers: Vec::new(),
+            weights: EnergyWeights::default(),
+        }
+    }
+}
+
 impl ClusterView {
-    /// An empty snapshot with room for `n` servers — the scratch buffer the
-    /// DES engine refills per decision via `ClusterSim::view_into`, so the
-    /// arrival hot path performs no per-decision allocation. Schedulers
-    /// receive views by reference (`Scheduler::decide` borrows) and must
-    /// not retain them across decisions.
+    /// An empty snapshot with room for `n` servers — the scratch buffer
+    /// both substrates refill per decision via [`ViewSource::view_into`],
+    /// so the decision hot path performs no per-request allocation.
+    /// Schedulers receive views by reference (`Scheduler::decide` borrows)
+    /// and must not retain them across decisions.
     pub fn with_capacity(n: usize, weights: EnergyWeights) -> ClusterView {
         ClusterView {
             now: 0.0,
@@ -93,17 +136,47 @@ impl ClusterView {
     }
 
     /// Servers whose assignment satisfies every constraint (f(y) >= 0).
+    ///
+    /// Allocating wrapper around [`Self::feasible_servers_into`]; hot
+    /// paths should hold a scratch `Vec<usize>` and use the `_into` form.
     pub fn feasible_servers(&self, req: &ServiceRequest) -> Vec<usize> {
-        self.feasible_servers_with_slack(req, 0.0)
+        let mut out = Vec::new();
+        self.feasible_servers_into(req, &mut out);
+        out
+    }
+
+    /// Fill `out` with the feasible server indices (f(y) >= 0).
+    pub fn feasible_servers_into(&self, req: &ServiceRequest, out: &mut Vec<usize>) {
+        self.feasible_servers_with_slack_into(req, 0.0, out);
     }
 
     /// Servers with at least `margin` normalized slack on the binding
     /// constraint (f(y) >= margin). A positive margin absorbs the load that
     /// arrives between admission and completion.
+    ///
+    /// Allocating wrapper around
+    /// [`Self::feasible_servers_with_slack_into`].
     pub fn feasible_servers_with_slack(&self, req: &ServiceRequest, margin: f64) -> Vec<usize> {
-        (0..self.servers.len())
-            .filter(|&j| self.constraint_satisfaction(req, j) >= margin)
-            .collect()
+        let mut out = Vec::new();
+        self.feasible_servers_with_slack_into(req, margin, &mut out);
+        out
+    }
+
+    /// Fill `out` with the indices of servers whose binding-constraint
+    /// slack is at least `margin` (f(y) >= margin). Clears `out` first, so
+    /// a scheduler-owned scratch buffer can be reused across decisions
+    /// without any per-decision allocation once it has grown to cluster
+    /// size.
+    pub fn feasible_servers_with_slack_into(
+        &self,
+        req: &ServiceRequest,
+        margin: f64,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
+        out.extend(
+            (0..self.servers.len()).filter(|&j| self.constraint_satisfaction(req, j) >= margin),
+        );
     }
 
     /// Fallback when no server is feasible: the paper assigns the service
@@ -120,7 +193,63 @@ impl ClusterView {
     }
 }
 
-/// A scheduling decision for one request.
+/// Why a policy shed a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Every assignment violates the constraints beyond recovery — the
+    /// request would miss its requirement wherever it is placed.
+    Infeasible,
+    /// The policy declined for load reasons (queues saturated) even
+    /// though a placement nominally exists.
+    Overloaded,
+}
+
+/// A scheduling action for one request — what [`Scheduler::decide`]
+/// returns. Both substrates (DES engine, live router) handle every
+/// variant: `Assign` dispatches now, `Defer` holds the request (deferred
+/// batching), `Shed` rejects it. Sheds count into `RunReport::dropped`
+/// (engine) / router shed diagnostics, and the policy still receives
+/// bandit feedback for them (a failed outcome with
+/// [`ServiceOutcome::was_shed`] set).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Action {
+    /// Dispatch to `server` immediately.
+    Assign { server: usize },
+    /// Hold the request `delay_s` seconds, then dispatch to `server`.
+    Defer { server: usize, delay_s: f64 },
+    /// Reject the request outright; no server resources are consumed.
+    Shed { reason: ShedReason },
+}
+
+impl Action {
+    pub fn assign(server: usize) -> Action {
+        Action::Assign { server }
+    }
+
+    pub fn defer(server: usize, delay_s: f64) -> Action {
+        Action::Defer { server, delay_s }
+    }
+
+    pub fn shed(reason: ShedReason) -> Action {
+        Action::Shed { reason }
+    }
+
+    /// Target server, if the action dispatches anywhere.
+    pub fn server(&self) -> Option<usize> {
+        match *self {
+            Action::Assign { server } | Action::Defer { server, .. } => Some(server),
+            Action::Shed { .. } => None,
+        }
+    }
+
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Action::Shed { .. })
+    }
+}
+
+/// Legacy single-assignment decision — the PR-1 API, kept only as a
+/// compat shim for external callers. It cannot express shedding; convert
+/// with `Action::from(decision)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Decision {
     /// Target server index.
@@ -138,14 +267,40 @@ impl Decision {
     }
 }
 
+impl From<Decision> for Action {
+    fn from(d: Decision) -> Action {
+        if d.defer_s > 0.0 {
+            Action::Defer {
+                server: d.server,
+                delay_s: d.defer_s,
+            }
+        } else {
+            Action::Assign { server: d.server }
+        }
+    }
+}
+
+/// Anything that can fill a scheduler-facing snapshot in place: the DES
+/// cluster and the live router both implement this, which is what lets
+/// one scheduler implementation run unchanged on either substrate with
+/// zero per-request allocation (callers own one scratch [`ClusterView`]
+/// and refill it per decision).
+pub trait ViewSource {
+    /// Fill `out` with the current cluster snapshot for `req`. Must fully
+    /// overwrite `out` (the buffer is reused across requests).
+    fn view_into(&self, req: &ServiceRequest, out: &mut ClusterView);
+}
+
 /// Common interface for PerLLM and baselines.
 pub trait Scheduler: Send {
     fn name(&self) -> &'static str;
 
-    /// Choose a server for `req` given the current cluster view.
-    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Decision;
+    /// Choose an [`Action`] for `req` given the current cluster view.
+    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action;
 
     /// Observe the realized outcome of a past decision (bandit feedback).
+    /// Shed requests are delivered too ([`ServiceOutcome::was_shed`]);
+    /// implementations must not index arms by `outcome.server` for those.
     fn feedback(&mut self, _outcome: &ServiceOutcome, _view: &ClusterView) {}
 
     /// Scheduler-specific diagnostics for reports (e.g. cumulative regret).
@@ -239,5 +394,37 @@ mod tests {
             w_idle: 1.0,
         };
         assert!((view.energy_cost(0) - (2.0 + 5.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feasible_into_matches_allocating_form_and_reuses_buffer() {
+        let view = test_view(vec![1.0, 3.0, 1.5]);
+        let req = test_req(2.0);
+        let mut buf = vec![99, 98, 97, 96]; // stale content must be cleared
+        view.feasible_servers_into(&req, &mut buf);
+        assert_eq!(buf, view.feasible_servers(&req));
+        view.feasible_servers_with_slack_into(&req, 0.2, &mut buf);
+        assert_eq!(buf, view.feasible_servers_with_slack(&req, 0.2));
+    }
+
+    #[test]
+    fn action_helpers_and_server_accessor() {
+        assert_eq!(Action::assign(3).server(), Some(3));
+        assert_eq!(Action::defer(1, 0.5).server(), Some(1));
+        assert_eq!(Action::shed(ShedReason::Infeasible).server(), None);
+        assert!(Action::shed(ShedReason::Overloaded).is_shed());
+        assert!(!Action::assign(0).is_shed());
+    }
+
+    #[test]
+    fn decision_shim_converts_to_action() {
+        assert_eq!(Action::from(Decision::now(2)), Action::assign(2));
+        assert_eq!(
+            Action::from(Decision {
+                server: 4,
+                defer_s: 0.25,
+            }),
+            Action::defer(4, 0.25)
+        );
     }
 }

@@ -6,12 +6,14 @@
 //! the DES predictor is well-calibrated this is near-optimal per decision,
 //! which is exactly what a regret denominator needs.
 
-use super::{ClusterView, Decision, Scheduler};
+use super::{Action, ClusterView, Scheduler};
 use crate::workload::service::ServiceRequest;
 
 #[derive(Default)]
 pub struct Oracle {
     decisions: u64,
+    /// Scratch feasible-index buffer (no per-decision allocation).
+    feasible: Vec<usize>,
 }
 
 impl Oracle {
@@ -25,14 +27,15 @@ impl Scheduler for Oracle {
         "oracle (clairvoyant)"
     }
 
-    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Decision {
+    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
         self.decisions += 1;
-        let feasible = view.feasible_servers(req);
-        let j = if feasible.is_empty() {
+        view.feasible_servers_into(req, &mut self.feasible);
+        let j = if self.feasible.is_empty() {
             view.least_violating(req)
         } else {
-            feasible
-                .into_iter()
+            self.feasible
+                .iter()
+                .copied()
                 .min_by(|&a, &b| {
                     view.energy_cost(a)
                         .partial_cmp(&view.energy_cost(b))
@@ -40,7 +43,7 @@ impl Scheduler for Oracle {
                 })
                 .unwrap()
         };
-        Decision::now(j)
+        Action::assign(j)
     }
 
     fn diagnostics(&self) -> Vec<(String, f64)> {
@@ -59,13 +62,13 @@ mod tests {
         let mut view = test_view(vec![1.0, 1.0]);
         view.servers[0].infer_energy_est = 50.0;
         view.servers[1].infer_energy_est = 5.0;
-        assert_eq!(s.decide(&test_req(3.0), &view).server, 1);
+        assert_eq!(s.decide(&test_req(3.0), &view), Action::assign(1));
     }
 
     #[test]
     fn falls_back_to_fastest_when_infeasible() {
         let mut s = Oracle::new();
         let view = test_view(vec![9.0, 7.0]);
-        assert_eq!(s.decide(&test_req(2.0), &view).server, 1);
+        assert_eq!(s.decide(&test_req(2.0), &view), Action::assign(1));
     }
 }

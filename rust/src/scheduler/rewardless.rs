@@ -10,7 +10,7 @@
 //! reward estimates, which is exactly the scheduling-quality gap the
 //! paper's evaluation shows against CS-UCB.
 
-use super::{ClusterView, Decision, Scheduler};
+use super::{Action, ClusterView, Scheduler};
 use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest};
 
 pub struct RewardlessGuidance {
@@ -61,7 +61,7 @@ impl Scheduler for RewardlessGuidance {
         "rewardless (edge-cloud)"
     }
 
-    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Decision {
+    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
         self.decisions += 1;
         let j = (0..view.servers.len())
             .min_by(|&a, &b| {
@@ -71,7 +71,7 @@ impl Scheduler for RewardlessGuidance {
             })
             .expect("non-empty cluster");
         self.visits[req.class.index()][j] += 1;
-        Decision::now(j)
+        Action::assign(j)
     }
 
     fn feedback(&mut self, _outcome: &ServiceOutcome, _view: &ClusterView) {
@@ -96,7 +96,7 @@ mod tests {
         let req = test_req(2.0);
         // Warm the visit counts symmetrically so ambiguity doesn't dominate.
         s.visits = vec![vec![10, 10]; 4];
-        assert_eq!(s.decide(&req, &view).server, 0);
+        assert_eq!(s.decide(&req, &view), Action::assign(0));
     }
 
     #[test]
@@ -106,7 +106,7 @@ mod tests {
         let req = test_req(4.0);
         let mut seen = std::collections::HashSet::new();
         for _ in 0..3 {
-            seen.insert(s.decide(&req, &view).server);
+            seen.insert(s.decide(&req, &view).server().expect("assigns"));
         }
         assert!(seen.len() >= 2, "no exploration: {seen:?}");
     }
@@ -124,8 +124,8 @@ mod tests {
             } else {
                 test_view(vec![3.0, 0.5, 0.5])
             };
-            let d = s.decide(&test_req(2.0), &view);
-            if d.server == 0 {
+            let j = s.decide(&test_req(2.0), &view).server().expect("assigns");
+            if j == 0 {
                 picked_cloud = true;
             } else {
                 picked_edge = true;

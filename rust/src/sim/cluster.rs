@@ -6,7 +6,7 @@ use super::energy::{EnergyBreakdown, EnergyWeights};
 use super::net::{LinkSim, LinkSpec};
 use super::server::{paper_testbed, ServerKind, ServerSim, ServerSpec};
 use super::time::SimTime;
-use crate::scheduler::{ClusterView, ServerView};
+use crate::scheduler::{ClusterView, ServerView, ViewSource};
 use crate::workload::service::ServiceRequest;
 
 /// Bandwidth regime (paper §4.1).
@@ -82,6 +82,10 @@ pub struct ClusterSim {
     pub weights: EnergyWeights,
     /// Per-server in-flight dispatch accounting.
     pub in_flight: Vec<InFlight>,
+    /// Observation clock: the time of the last event the owner processed.
+    /// `ViewSource::view_into` stamps snapshots with it, so the engine and
+    /// the live router expose the same two-argument view-filling API.
+    pub now: SimTime,
 }
 
 impl ClusterSim {
@@ -99,6 +103,7 @@ impl ClusterSim {
             servers: cfg.servers.iter().cloned().map(ServerSim::new).collect(),
             links,
             weights: cfg.weights,
+            now: 0.0,
         }
     }
 
@@ -121,6 +126,7 @@ impl ClusterSim {
     /// links): each queue advance is a constant-time virtual-time bump, so
     /// this stays cheap even mid-congestion-collapse.
     pub fn advance_all(&mut self, now: SimTime) {
+        self.now = now;
         for s in &mut self.servers {
             s.advance_to(now);
         }
@@ -133,15 +139,17 @@ impl ClusterSim {
     /// Callers must have advanced the cluster to `now` first.
     pub fn view(&self, req: &ServiceRequest, now: SimTime) -> ClusterView {
         let mut out = ClusterView::with_capacity(self.servers.len(), self.weights);
-        self.view_into(req, now, &mut out);
+        self.view_into_at(req, now, &mut out);
         out
     }
 
-    /// Fill a caller-owned snapshot in place. The engine keeps one scratch
-    /// `ClusterView` and refills it per decision, so the per-arrival hot
-    /// path allocates nothing once the `servers` Vec has reached cluster
-    /// size.
-    pub fn view_into(&self, req: &ServiceRequest, now: SimTime, out: &mut ClusterView) {
+    /// Fill a caller-owned snapshot in place, stamped with an explicit
+    /// observation time. The engine keeps one scratch `ClusterView` and
+    /// refills it per decision, so the per-arrival hot path allocates
+    /// nothing once the `servers` Vec has reached cluster size. The
+    /// trait-level [`ViewSource::view_into`] delegates here with
+    /// `self.now`.
+    pub fn view_into_at(&self, req: &ServiceRequest, now: SimTime, out: &mut ClusterView) {
         out.now = now;
         out.weights = self.weights;
         out.servers.clear();
@@ -196,6 +204,14 @@ impl ClusterSim {
 
     pub fn tokens_served(&self) -> u64 {
         self.servers.iter().map(|s| s.tokens_served).sum()
+    }
+}
+
+impl ViewSource for ClusterSim {
+    /// The unified-API entry point: same signature the live `Router`
+    /// implements, stamped with the cluster's observation clock.
+    fn view_into(&self, req: &ServiceRequest, out: &mut ClusterView) {
+        self.view_into_at(req, self.now, out);
     }
 }
 
@@ -254,8 +270,8 @@ mod tests {
         let fresh = sim.view(&req(), 1.5);
         let mut scratch = ClusterView::with_capacity(cfg.n_servers(), cfg.weights);
         // Fill twice: the second fill must fully replace the first.
-        sim.view_into(&req(), 0.5, &mut scratch);
-        sim.view_into(&req(), 1.5, &mut scratch);
+        sim.view_into_at(&req(), 0.5, &mut scratch);
+        sim.view_into_at(&req(), 1.5, &mut scratch);
         assert_eq!(scratch.now, 1.5);
         assert_eq!(scratch.servers.len(), fresh.servers.len());
         for (a, b) in scratch.servers.iter().zip(&fresh.servers) {
@@ -263,6 +279,18 @@ mod tests {
             assert_eq!(a.n_active, b.n_active);
             assert_eq!(a.occupancy, b.occupancy);
         }
+    }
+
+    #[test]
+    fn trait_view_uses_observation_clock() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let mut sim = ClusterSim::new(&cfg);
+        sim.advance_all(2.5);
+        let mut scratch = ClusterView::default();
+        ViewSource::view_into(&sim, &req(), &mut scratch);
+        assert_eq!(scratch.now, 2.5);
+        let direct = sim.view(&req(), 2.5);
+        assert_eq!(scratch, direct);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! ω_tran, ω_infer, ω_idle.
 
 /// Weighted energy objective (Eq. 2). Defaults weigh the terms equally.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EnergyWeights {
     pub w_tran: f64,
     pub w_infer: f64,

@@ -1,10 +1,18 @@
-//! The discrete-event simulation engine that replays a workload trace
-//! through a scheduler over the edge-cloud cluster.
+//! The discrete-event simulation engine that replays a workload through a
+//! scheduler over the edge-cloud cluster.
 //!
-//! Event flow per service: Arrival → (scheduler decision, optional defer)
-//! → Dispatch → upload on the target's link (fair-share PS) → ComputeArrive
-//! (after link RTT) → batch slot on the server (PS with batching curve) →
-//! ServerDone → outcome + bandit feedback.
+//! Arrivals are pulled lazily from an [`ArrivalSource`] cursor: the engine
+//! prefetches exactly one pending request, so the event heap holds at most
+//! one `Arrival` event at a time and its size is bounded by in-flight
+//! concurrency, not trace length (a 1M-request run used to begin by
+//! pushing 1M arrival events).
+//!
+//! Event flow per service: Arrival → scheduler [`Action`] — `Assign`
+//! dispatches now, `Defer` schedules a delayed Dispatch, `Shed` resolves
+//! the request immediately as dropped (with bandit feedback) → upload on
+//! the target's link (fair-share PS) → ComputeArrive (after link RTT) →
+//! batch slot on the server (PS with batching curve) → ServerDone →
+//! outcome + bandit feedback.
 //!
 //! Completion events for PS queues are generation-stamped: any occupancy or
 //! rate change bumps the generation and re-schedules, stale events are
@@ -16,15 +24,16 @@ use super::cluster::{ClusterConfig, ClusterSim, Outage};
 use super::energy::EnergyBreakdown;
 use super::ps::PsJob;
 use super::time::{EventQueue, SimTime};
-use crate::scheduler::{ClusterView, Scheduler};
+use crate::scheduler::{Action, ClusterView, Scheduler, ShedReason, ViewSource};
 use crate::util::rng::Rng;
 use crate::util::stats::{Percentiles, Running};
 use crate::workload::service::{ServiceOutcome, ServiceRequest};
+use crate::workload::{ArrivalSource, TraceSource};
 
 #[derive(Debug, Clone, Copy)]
 enum Ev {
-    /// Trace index arrives at the router.
-    Arrival(usize),
+    /// The prefetched request arrives at the router (at most one pending).
+    Arrival,
     /// Deferred dispatch of service id to server.
     Dispatch { svc: usize, server: usize },
     /// Earliest upload completion on link (generation-stamped).
@@ -49,6 +58,9 @@ enum Phase {
 }
 
 struct SvcState {
+    /// The request itself — owned here since arrivals stream in (there is
+    /// no longer a backing trace slice to index).
+    req: ServiceRequest,
     server: usize,
     phase: Phase,
     dispatched_at: SimTime,
@@ -74,9 +86,13 @@ pub struct RunReport {
     pub p95_processing_s: f64,
     /// Requests that never finished inside the horizon.
     pub unfinished: usize,
-    /// Requests shed by bounded server queues (admission failures), counted
-    /// at shed time — disjoint from `unfinished` by construction.
+    /// Requests dropped before completing service, counted where they
+    /// happen — scheduler `Shed` actions plus bounded-queue admission
+    /// failures — and disjoint from `unfinished` by construction.
     pub dropped: usize,
+    /// The subset of `dropped` rejected by an explicit scheduler
+    /// `Action::Shed` (no upload energy spent).
+    pub dropped_by_policy: usize,
     /// Requests completed after their deadline.
     pub late: usize,
     /// Scheduler-specific diagnostics (e.g. CS-UCB regret).
@@ -90,6 +106,9 @@ pub struct RunReport {
     /// throughput is `events_per_sec * (1 - stale_ratio)`.
     pub stale_events: u64,
     pub stale_ratio: f64,
+    /// High-water mark of the event heap. With streaming arrivals this is
+    /// bounded by in-flight concurrency (≪ number of requests).
+    pub peak_event_queue_len: usize,
 }
 
 impl RunReport {
@@ -118,16 +137,31 @@ const HORIZON_SLACK_S: f64 = 300.0;
 pub struct Engine<'a> {
     cluster: ClusterSim,
     events: EventQueue<Ev>,
-    trace: &'a [ServiceRequest],
+    source: &'a mut dyn ArrivalSource,
+    /// Per-request state, indexed by dense arrival order (event payloads
+    /// carry these indices). Grows as requests stream in.
     svc: Vec<SvcState>,
+    /// The single prefetched arrival; its `Arrival` event is in the heap.
+    pending_arrival: Option<ServiceRequest>,
     scheduler: &'a mut dyn Scheduler,
     rng: Rng,
     outcomes: Vec<ServiceOutcome>,
-    remaining: usize,
+    /// Requests arrived but not yet resolved (done/failed/shed).
+    in_flight: usize,
+    first_arrival: Option<SimTime>,
+    last_arrival: SimTime,
+    /// Infinite while the source still has requests; armed to
+    /// `last_arrival + HORIZON_SLACK_S` once it is exhausted.
     horizon: SimTime,
-    /// Requests shed by bounded server queues, counted where they happen
-    /// (`fail`) so horizon-unfinished requests are never misclassified.
+    /// Total drops: policy sheds + bounded-queue admission failures,
+    /// counted where they happen so horizon-unfinished requests are never
+    /// misclassified.
     shed: usize,
+    /// Drops from explicit scheduler `Shed` actions.
+    policy_shed: usize,
+    /// Out-of-range `Assign`/`Defer` targets recovered via the
+    /// least-violating fallback (a scheduler bug, surfaced not masked).
+    bad_actions: u64,
     /// Scratch scheduler snapshot, refilled in place per decision/feedback
     /// instead of collecting a fresh `ClusterView` per event.
     view: ClusterView,
@@ -138,14 +172,11 @@ pub struct Engine<'a> {
 impl<'a> Engine<'a> {
     pub fn new(
         cfg: &ClusterConfig,
-        trace: &'a [ServiceRequest],
+        source: &'a mut dyn ArrivalSource,
         scheduler: &'a mut dyn Scheduler,
     ) -> Self {
         let cluster = ClusterSim::new(cfg);
         let mut events = EventQueue::new();
-        for (i, r) in trace.iter().enumerate() {
-            events.push_at(r.arrival, Ev::Arrival(i));
-        }
         for (li, link) in cluster.links.iter().enumerate() {
             if link.spec.fluctuation > 0.0 {
                 events.push_at(link.spec.fluct_period, Ev::FluctTick { link: li });
@@ -155,32 +186,56 @@ impl<'a> Engine<'a> {
             events.push_at(*start, Ev::OutageStart { server: *server });
             events.push_at(*end, Ev::OutageEnd { server: *server });
         }
-        let horizon = trace.last().map(|r| r.arrival).unwrap_or(0.0) + HORIZON_SLACK_S;
-        let svc = trace
-            .iter()
-            .map(|_| SvcState {
-                server: usize::MAX,
-                phase: Phase::Pending,
-                dispatched_at: 0.0,
-                upload_done_at: 0.0,
-                compute_started_at: 0.0,
-                tx_energy_j: 0.0,
-            })
-            .collect();
         let view = ClusterView::with_capacity(cfg.servers.len(), cfg.weights);
-        Engine {
+        // len_hint only sizes buffers (capped so a huge hint cannot force
+        // a huge reservation); correctness never depends on it.
+        let hint = source.len_hint().unwrap_or(0).min(1 << 20);
+        let mut engine = Engine {
             cluster,
             events,
-            trace,
-            svc,
+            source,
+            svc: Vec::with_capacity(hint),
+            pending_arrival: None,
             scheduler,
             rng: Rng::new(cfg.seed),
-            outcomes: Vec::with_capacity(trace.len()),
-            remaining: trace.len(),
-            horizon,
+            outcomes: Vec::with_capacity(hint),
+            in_flight: 0,
+            first_arrival: None,
+            last_arrival: 0.0,
+            horizon: f64::INFINITY,
             shed: 0,
+            policy_shed: 0,
+            bad_actions: 0,
             view,
             reap_buf: Vec::new(),
+        };
+        engine.prefetch_arrival();
+        engine
+    }
+
+    /// Pull the next request from the source and schedule its arrival, or
+    /// arm the horizon guard once the source is exhausted. The invariant —
+    /// at most one pending `Arrival` event — is what keeps the event heap
+    /// bounded by in-flight concurrency instead of trace length.
+    fn prefetch_arrival(&mut self) {
+        match self.source.next_arrival() {
+            Some(r) => {
+                // The ArrivalSource contract: nondecreasing arrival times.
+                // An out-of-order request would be silently clamped to the
+                // current sim clock by the event queue (changing results),
+                // so catch the contract violation in debug builds.
+                debug_assert!(
+                    r.arrival >= self.last_arrival,
+                    "ArrivalSource yielded out-of-order arrival {} after {}",
+                    r.arrival,
+                    self.last_arrival
+                );
+                self.events.push_at(r.arrival, Ev::Arrival);
+                self.pending_arrival = Some(r);
+            }
+            None => {
+                self.horizon = self.last_arrival + HORIZON_SLACK_S;
+            }
         }
     }
 
@@ -190,7 +245,10 @@ impl<'a> Engine<'a> {
         // Hoisted out of the loop: an env lookup per event costs more than
         // the event handling itself on the million-request path.
         let trace_events = std::env::var("PERLLM_TRACE_EVENTS").is_ok();
-        while self.remaining > 0 {
+        // Every sourced request resolves inside the horizon guard: arrival
+        // events fire at times <= last_arrival < horizon, so a horizon
+        // break can only strand already-arrived (unfinished) work.
+        while self.in_flight > 0 || self.pending_arrival.is_some() {
             let Some((now, ev)) = self.events.pop() else {
                 break;
             };
@@ -198,7 +256,7 @@ impl<'a> Engine<'a> {
                 break;
             }
             if trace_events {
-                eprintln!("t={now:.6} {ev:?} remaining={}", self.remaining);
+                eprintln!("t={now:.6} {ev:?} in_flight={}", self.in_flight);
             }
             self.handle(now, ev);
         }
@@ -207,18 +265,17 @@ impl<'a> Engine<'a> {
 
         // Anything still in flight failed the horizon.
         let mut unfinished = 0;
-        for (i, st) in self.svc.iter().enumerate() {
+        for st in &self.svc {
             if st.phase != Phase::Done && st.phase != Phase::Failed {
                 unfinished += 1;
-                let r = &self.trace[i];
                 self.outcomes.push(ServiceOutcome {
-                    id: r.id,
-                    class: r.class,
+                    id: st.req.id,
+                    class: st.req.class,
                     server: st.server.min(self.cluster.servers.len().saturating_sub(1)),
                     tx_time: 0.0,
                     infer_time: 0.0,
                     processing_time: f64::INFINITY,
-                    deadline: r.deadline,
+                    deadline: st.req.deadline,
                     energy_j: st.tx_energy_j,
                     tokens: 0,
                     completed_at: end,
@@ -243,15 +300,22 @@ impl<'a> Engine<'a> {
                 ok += 1;
             }
         }
-        // Shed requests are counted at shed time (`fail`), not inferred
-        // from outcome fields: horizon-unfinished requests also carry
-        // (tokens 0, infer 0) and used to be double-counted here.
+        // Shed requests are counted at shed time (policy sheds and queue
+        // admission failures), not inferred from outcome fields:
+        // horizon-unfinished requests also carry (tokens 0, infer 0) and
+        // used to be double-counted here.
         let dropped = self.shed;
-        let first_arrival = self.trace.first().map(|r| r.arrival).unwrap_or(0.0);
+        let first_arrival = self.first_arrival.unwrap_or(0.0);
         let makespan = (end - first_arrival).max(1e-9);
         let tokens = self.cluster.tokens_served();
         let n = self.outcomes.len().max(1);
         let energy = self.cluster.energy();
+        let mut diagnostics = self.scheduler.diagnostics();
+        if self.bad_actions > 0 {
+            // Surface scheduler bugs (out-of-range targets) in the report
+            // instead of hiding them behind the fallback.
+            diagnostics.push(("engine_bad_actions".into(), self.bad_actions as f64));
+        }
         RunReport {
             scheduler: self.scheduler.name(),
             energy_per_success_j: energy.total_j() / ok.max(1) as f64,
@@ -263,36 +327,66 @@ impl<'a> Engine<'a> {
             p95_processing_s: pcts.p95(),
             unfinished,
             dropped,
+            dropped_by_policy: self.policy_shed,
             late,
-            diagnostics: self.scheduler.diagnostics(),
+            diagnostics,
             wall_s: wall,
             events_processed: self.events.processed(),
             events_per_sec: self.events.processed() as f64 / wall.max(1e-9),
             stale_events: self.events.stale(),
             stale_ratio: self.events.stale_ratio(),
+            peak_event_queue_len: self.events.peak_len(),
             outcomes: self.outcomes,
         }
     }
 
     fn handle(&mut self, now: SimTime, ev: Ev) {
+        // Events arrive in time order, so this keeps the cluster's
+        // observation clock (used by the unified `ViewSource` snapshots)
+        // current on every path.
+        self.cluster.now = now;
         match ev {
-            Ev::Arrival(i) => {
+            Ev::Arrival => {
+                let req = self
+                    .pending_arrival
+                    .take()
+                    .expect("Arrival event without pending request");
+                if self.first_arrival.is_none() {
+                    self.first_arrival = Some(req.arrival);
+                }
+                self.last_arrival = req.arrival;
+                self.in_flight += 1;
+                self.prefetch_arrival();
+
                 self.cluster.advance_all(now);
-                let req = &self.trace[i];
-                self.cluster.view_into(req, now, &mut self.view);
-                let d = self.scheduler.decide(req, &self.view);
-                assert!(d.server < self.cluster.servers.len(), "bad server index");
-                self.svc[i].server = d.server;
-                if d.defer_s > 0.0 {
-                    self.events.push_in(
-                        d.defer_s,
-                        Ev::Dispatch {
-                            svc: i,
-                            server: d.server,
-                        },
-                    );
-                } else {
-                    self.dispatch(now, i, d.server);
+                self.cluster.view_into(&req, &mut self.view);
+                let action = self.scheduler.decide(&req, &self.view);
+                let idx = self.svc.len();
+                self.svc.push(SvcState {
+                    req,
+                    server: usize::MAX,
+                    phase: Phase::Pending,
+                    dispatched_at: 0.0,
+                    upload_done_at: 0.0,
+                    compute_started_at: 0.0,
+                    tx_energy_j: 0.0,
+                });
+                match action {
+                    Action::Assign { server } => {
+                        let server = self.checked_server(idx, server);
+                        self.svc[idx].server = server;
+                        self.dispatch(now, idx, server);
+                    }
+                    Action::Defer { server, delay_s } => {
+                        let server = self.checked_server(idx, server);
+                        self.svc[idx].server = server;
+                        if delay_s.is_finite() && delay_s > 0.0 {
+                            self.events.push_in(delay_s, Ev::Dispatch { svc: idx, server });
+                        } else {
+                            self.dispatch(now, idx, server);
+                        }
+                    }
+                    Action::Shed { reason } => self.shed_at_decision(now, idx, reason),
                 }
             }
             Ev::Dispatch { svc, server } => {
@@ -325,7 +419,7 @@ impl<'a> Engine<'a> {
                 self.reschedule_link(link);
             }
             Ev::ComputeArrive { svc, server } => {
-                self.cluster.land_in_flight(server, &self.trace[svc]);
+                self.cluster.land_in_flight(server, &self.svc[svc].req);
                 let srv = &mut self.cluster.servers[server];
                 srv.advance_to(now);
                 if srv.would_drop() {
@@ -335,7 +429,7 @@ impl<'a> Engine<'a> {
                     self.fail(now, svc, server);
                     return;
                 }
-                let work = srv.spec.solo_work(&self.trace[svc]);
+                let work = srv.spec.solo_work(&self.svc[svc].req);
                 srv.queue.push(svc as u64, work, now);
                 self.svc[svc].phase = Phase::Computing;
                 self.svc[svc].compute_started_at = now;
@@ -378,15 +472,34 @@ impl<'a> Engine<'a> {
         }
     }
 
+    /// Validate a scheduler-chosen server index. An out-of-range target is
+    /// a scheduler bug: log it and recover with the paper's
+    /// least-violating fallback rather than masking it with a clamp.
+    fn checked_server(&mut self, idx: usize, server: usize) -> usize {
+        if server < self.cluster.servers.len() {
+            return server;
+        }
+        self.bad_actions += 1;
+        log::warn!(
+            "scheduler {:?} chose out-of-range server {server} (cluster has {}); \
+             falling back to least-violating",
+            self.scheduler.name(),
+            self.cluster.servers.len()
+        );
+        self.view.least_violating(&self.svc[idx].req)
+    }
+
     fn dispatch(&mut self, now: SimTime, i: usize, server: usize) {
-        self.cluster.dispatch_in_flight(server, &self.trace[i]);
+        self.cluster.dispatch_in_flight(server, &self.svc[i].req);
+        let payload = self.svc[i].req.payload_bytes;
         let link = &mut self.cluster.links[server];
         link.advance_to(now);
-        link.queue
-            .push(i as u64, self.trace[i].payload_bytes as f64, now);
-        self.svc[i].phase = Phase::Uploading;
-        self.svc[i].dispatched_at = now;
-        self.svc[i].tx_energy_j = link.spec.tx_energy(self.trace[i].payload_bytes);
+        link.queue.push(i as u64, payload as f64, now);
+        let tx_energy_j = link.spec.tx_energy(payload);
+        let st = &mut self.svc[i];
+        st.phase = Phase::Uploading;
+        st.dispatched_at = now;
+        st.tx_energy_j = tx_energy_j;
         self.reschedule_link(server);
     }
 
@@ -406,69 +519,102 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Record a shed request: failed outcome, transmission energy only.
-    fn fail(&mut self, now: SimTime, i: usize, server: usize) {
-        let req = &self.trace[i];
+    /// Record an explicit scheduler shed: the request is resolved on the
+    /// spot as dropped — no server involved, no energy spent — and the
+    /// policy receives bandit feedback for it (counted exactly once).
+    fn shed_at_decision(&mut self, now: SimTime, i: usize, _reason: ShedReason) {
         self.svc[i].phase = Phase::Failed;
         self.shed += 1;
+        self.policy_shed += 1;
+        let outcome = ServiceOutcome::shed(&self.svc[i].req, now);
+        self.in_flight -= 1;
+        // The decision-time view in `self.view` is still current: no
+        // cluster state changed between decide() and the shed.
+        self.scheduler.feedback(&outcome, &self.view);
+        self.outcomes.push(outcome);
+    }
+
+    /// Record a queue-admission shed: failed outcome, transmission energy
+    /// only (already spent on the upload).
+    fn fail(&mut self, now: SimTime, i: usize, server: usize) {
+        self.shed += 1;
+        let st = &mut self.svc[i];
+        st.phase = Phase::Failed;
         let outcome = ServiceOutcome {
-            id: req.id,
-            class: req.class,
+            id: st.req.id,
+            class: st.req.class,
             server,
-            tx_time: self.svc[i].upload_done_at - self.svc[i].dispatched_at,
+            tx_time: st.upload_done_at - st.dispatched_at,
             infer_time: 0.0,
             processing_time: f64::INFINITY,
-            deadline: req.deadline,
-            energy_j: self.svc[i].tx_energy_j,
+            deadline: st.req.deadline,
+            energy_j: st.tx_energy_j,
             tokens: 0,
             completed_at: now,
         };
-        self.remaining -= 1;
-        self.cluster.view_into(req, now, &mut self.view);
+        self.in_flight -= 1;
+        ViewSource::view_into(&self.cluster, &self.svc[i].req, &mut self.view);
         self.scheduler.feedback(&outcome, &self.view);
         self.outcomes.push(outcome);
     }
 
     fn complete(&mut self, now: SimTime, i: usize, server: usize, infer_energy_j: f64) {
-        let req = &self.trace[i];
         let st = &mut self.svc[i];
         st.phase = Phase::Done;
-        let tokens = req.total_tokens();
-        self.cluster.servers[server].tokens_served += tokens;
+        let tokens = st.req.total_tokens();
         let outcome = ServiceOutcome {
-            id: req.id,
-            class: req.class,
+            id: st.req.id,
+            class: st.req.class,
             server,
             tx_time: st.upload_done_at - st.dispatched_at,
             infer_time: now - st.compute_started_at,
-            processing_time: now - req.arrival,
-            deadline: req.deadline,
+            processing_time: now - st.req.arrival,
+            deadline: st.req.deadline,
             energy_j: st.tx_energy_j + infer_energy_j,
             tokens,
             completed_at: now,
         };
-        self.remaining -= 1;
-        self.cluster.view_into(req, now, &mut self.view);
+        self.cluster.servers[server].tokens_served += tokens;
+        self.in_flight -= 1;
+        ViewSource::view_into(&self.cluster, &self.svc[i].req, &mut self.view);
         self.scheduler.feedback(&outcome, &self.view);
         self.outcomes.push(outcome);
     }
 }
 
-/// Convenience: run one (config, trace, scheduler) combination.
+/// Convenience: run one (config, trace, scheduler) combination from an
+/// in-memory trace. The trace is streamed through a [`TraceSource`], so
+/// even this path keeps the event heap bounded.
+///
+/// The trace must be sorted by `arrival` (everything `generate` produces
+/// is). Out-of-order arrivals violate the [`ArrivalSource`] contract:
+/// debug builds assert, release builds clamp them to the current sim
+/// clock.
 pub fn simulate(
     cfg: &ClusterConfig,
     trace: &[ServiceRequest],
     scheduler: &mut dyn Scheduler,
 ) -> RunReport {
-    Engine::new(cfg, trace, scheduler).run()
+    let mut source = TraceSource::new(trace);
+    Engine::new(cfg, &mut source, scheduler).run()
+}
+
+/// Run one (config, arrival-source, scheduler) combination without ever
+/// materializing the workload — the entry point for million-request runs.
+pub fn simulate_stream(
+    cfg: &ClusterConfig,
+    source: &mut dyn ArrivalSource,
+    scheduler: &mut dyn Scheduler,
+) -> RunReport {
+    Engine::new(cfg, source, scheduler).run()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::{ClusterView, Decision};
+    use crate::scheduler::{Action, ClusterView};
     use crate::sim::cluster::BandwidthMode;
-    use crate::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
+    use crate::workload::generator::{generate, ArrivalProcess, WorkloadConfig, WorkloadGen};
 
     /// Fixed-target scheduler for engine unit tests.
     struct Fixed(usize);
@@ -476,8 +622,29 @@ mod tests {
         fn name(&self) -> &'static str {
             "fixed"
         }
-        fn decide(&mut self, _r: &ServiceRequest, _v: &ClusterView) -> Decision {
-            Decision::now(self.0)
+        fn decide(&mut self, _r: &ServiceRequest, _v: &ClusterView) -> Action {
+            Action::assign(self.0)
+        }
+    }
+
+    /// Sheds everything and counts the feedback it receives.
+    #[derive(Default)]
+    struct ShedAll {
+        feedbacks: usize,
+        shed_feedbacks: usize,
+    }
+    impl Scheduler for ShedAll {
+        fn name(&self) -> &'static str {
+            "shed-all"
+        }
+        fn decide(&mut self, _r: &ServiceRequest, _v: &ClusterView) -> Action {
+            Action::shed(ShedReason::Overloaded)
+        }
+        fn feedback(&mut self, o: &ServiceOutcome, _v: &ClusterView) {
+            self.feedbacks += 1;
+            if o.was_shed() {
+                self.shed_feedbacks += 1;
+            }
         }
     }
 
@@ -582,7 +749,8 @@ mod tests {
         assert_eq!(rep.dropped, 0, "unfinished leaked into dropped");
         // And a genuinely-shedding overload run counts drops, not
         // unfinished: 400 simultaneous uploads swamp one edge server's
-        // 8 slots + 2 waiting places.
+        // 8 slots + 2 waiting places. These are queue-admission drops, not
+        // policy sheds.
         let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
         let trace = generate(
             &WorkloadConfig::default()
@@ -593,7 +761,66 @@ mod tests {
         let mut s = Fixed(0);
         let rep = simulate(&cfg, &trace, &mut s);
         assert!(rep.dropped > 0, "overload must shed");
+        assert_eq!(rep.dropped_by_policy, 0, "no policy sheds from Fixed");
         assert_eq!(rep.outcomes.len(), 400);
+    }
+
+    /// Scheduler `Shed` actions resolve the request immediately: counted
+    /// once in `dropped` (and `dropped_by_policy`), outcome emitted, bandit
+    /// feedback delivered, and no upload energy spent.
+    #[test]
+    fn policy_shed_counted_once_with_feedback() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let trace = small_trace(40, 5.0);
+        let mut s = ShedAll::default();
+        let rep = simulate(&cfg, &trace, &mut s);
+        assert_eq!(rep.outcomes.len(), 40);
+        assert_eq!(rep.dropped, 40);
+        assert_eq!(rep.dropped_by_policy, 40);
+        assert_eq!(rep.unfinished, 0);
+        assert_eq!(rep.success_rate, 0.0);
+        assert_eq!(s.feedbacks, 40, "feedback delivered per shed");
+        assert_eq!(s.shed_feedbacks, 40, "shed outcomes marked as such");
+        assert!(rep.outcomes.iter().all(|o| o.was_shed()));
+        assert_eq!(rep.energy.tran_j, 0.0, "sheds must not spend upload energy");
+    }
+
+    /// An explicit `Defer` holds the request before dispatching it.
+    #[test]
+    fn defer_action_delays_dispatch() {
+        struct DeferAll;
+        impl Scheduler for DeferAll {
+            fn name(&self) -> &'static str {
+                "defer-all"
+            }
+            fn decide(&mut self, _r: &ServiceRequest, _v: &ClusterView) -> Action {
+                Action::defer(5, 0.5)
+            }
+        }
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let trace = small_trace(5, 1.0);
+        let rep = simulate(&cfg, &trace, &mut DeferAll);
+        assert_eq!(rep.unfinished, 0);
+        for o in &rep.outcomes {
+            assert!(
+                o.processing_time >= 0.5,
+                "deferred request finished too fast: {}",
+                o.processing_time
+            );
+        }
+    }
+
+    /// An out-of-range `Assign` is recovered via the least-violating
+    /// fallback instead of panicking (or being silently clamped).
+    #[test]
+    fn out_of_range_assign_falls_back() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let trace = small_trace(10, 2.0);
+        let mut s = Fixed(99);
+        let rep = simulate(&cfg, &trace, &mut s);
+        assert_eq!(rep.outcomes.len(), 10);
+        assert_eq!(rep.unfinished, 0);
+        assert!(rep.success_rate > 0.5, "fallback placed requests badly");
     }
 
     /// Generation-invalidated completion events are counted, not silently
@@ -634,5 +861,26 @@ mod tests {
         assert_eq!(r1.outcomes.len(), r2.outcomes.len());
         assert!((r1.mean_processing_s - r2.mean_processing_s).abs() < 1e-12);
         assert!((r1.energy.total_j() - r2.energy.total_j()).abs() < 1e-9);
+    }
+
+    /// Streaming a generator through `simulate_stream` gives the same
+    /// results as materializing the trace first: the workload is
+    /// byte-identical and the engine logic substrate-independent.
+    #[test]
+    fn stream_and_trace_paths_agree() {
+        let wl = WorkloadConfig::default()
+            .with_requests(300)
+            .with_arrivals(ArrivalProcess::Poisson { rate: 8.0 })
+            .with_seed(21);
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Fluctuating);
+        let trace = generate(&wl);
+        let r_trace = simulate(&cfg, &trace, &mut Fixed(5));
+        let mut stream = WorkloadGen::new(&wl);
+        let r_stream = simulate_stream(&cfg, &mut stream, &mut Fixed(5));
+        assert_eq!(r_trace.outcomes.len(), r_stream.outcomes.len());
+        assert!((r_trace.success_rate - r_stream.success_rate).abs() < 1e-12);
+        assert!((r_trace.mean_processing_s - r_stream.mean_processing_s).abs() < 1e-12);
+        assert!((r_trace.energy.total_j() - r_stream.energy.total_j()).abs() < 1e-9);
+        assert_eq!(r_trace.events_processed, r_stream.events_processed);
     }
 }

@@ -52,6 +52,7 @@ pub struct EventQueue<E> {
     seq: u64,
     processed: u64,
     stale: u64,
+    peak_len: usize,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -68,6 +69,7 @@ impl<E> EventQueue<E> {
             seq: 0,
             processed: 0,
             stale: 0,
+            peak_len: 0,
         }
     }
 
@@ -103,6 +105,14 @@ impl<E> EventQueue<E> {
         self.heap.len()
     }
 
+    /// Largest number of events ever simultaneously pending. With a
+    /// streaming [`crate::workload::ArrivalSource`] (one prefetched
+    /// arrival) this stays bounded by in-flight concurrency, not trace
+    /// length — the memory guarantee the 1M-request run relies on.
+    pub fn peak_len(&self) -> usize {
+        self.peak_len
+    }
+
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -117,6 +127,7 @@ impl<E> EventQueue<E> {
             event,
         });
         self.seq += 1;
+        self.peak_len = self.peak_len.max(self.heap.len());
     }
 
     /// Schedule `event` `delay` seconds from now.
@@ -242,6 +253,21 @@ mod tests {
         let q: EventQueue<()> = EventQueue::new();
         assert_eq!(q.stale(), 0);
         assert_eq!(q.stale_ratio(), 0.0);
+    }
+
+    #[test]
+    fn peak_len_tracks_high_water_mark() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peak_len(), 0);
+        q.push_at(1.0, ());
+        q.push_at(2.0, ());
+        q.push_at(3.0, ());
+        assert_eq!(q.peak_len(), 3);
+        q.pop();
+        q.pop();
+        q.push_at(4.0, ());
+        // Draining doesn't lower the high-water mark.
+        assert_eq!(q.peak_len(), 3);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! traces), all pinned to a seed so every bench row is reproducible.
 
 use super::service::{ServiceClass, ServiceRequest};
+use super::ArrivalSource;
 use crate::util::rng::Rng;
 
 /// Arrival process shape.
@@ -146,48 +147,96 @@ impl WorkloadConfig {
     }
 }
 
-/// Generate the full trace, sorted by arrival time, ids dense from 0.
-pub fn generate(cfg: &WorkloadConfig) -> Vec<ServiceRequest> {
-    let mut rng = Rng::new(cfg.seed);
-    let mut t = 0.0f64;
-    let weights: Vec<f64> = cfg.profiles.iter().map(|p| p.weight).collect();
-    let wsum: f64 = weights.iter().sum();
+/// Streaming workload cursor: draws one request at a time from the same
+/// RNG sequence `generate` uses, so `WorkloadGen::new(&cfg)` yields
+/// exactly the trace `generate(&cfg)` materializes — request for request
+/// — without ever holding the whole trace in memory. This is the
+/// [`ArrivalSource`] the DES consumes for million-request runs.
+pub struct WorkloadGen {
+    cfg: WorkloadConfig,
+    rng: Rng,
+    t: f64,
+    emitted: usize,
+    wsum: f64,
+}
 
-    let mut out = Vec::with_capacity(cfg.n_requests);
-    for id in 0..cfg.n_requests {
-        t = next_arrival(&cfg.arrivals, t, &mut rng);
+impl WorkloadGen {
+    pub fn new(cfg: &WorkloadConfig) -> Self {
+        WorkloadGen {
+            rng: Rng::new(cfg.seed),
+            t: 0.0,
+            emitted: 0,
+            wsum: cfg.profiles.iter().map(|p| p.weight).sum(),
+            cfg: cfg.clone(),
+        }
+    }
+}
+
+impl ArrivalSource for WorkloadGen {
+    fn next_arrival(&mut self) -> Option<ServiceRequest> {
+        if self.emitted >= self.cfg.n_requests {
+            return None;
+        }
+        let id = self.emitted as u64;
+        self.emitted += 1;
+        self.t = next_arrival(&self.cfg.arrivals, self.t, &mut self.rng);
         // Class by weighted draw.
-        let mut u = rng.f64() * wsum;
+        let mut u = self.rng.f64() * self.wsum;
         let mut class = ServiceClass::Chat;
         for (i, c) in ServiceClass::ALL.iter().enumerate() {
-            u -= weights[i];
+            u -= self.cfg.profiles[i].weight;
             if u <= 0.0 {
                 class = *c;
                 break;
             }
         }
-        let p = cfg.profiles[class.index()];
-        let prompt = rng
+        let p = self.cfg.profiles[class.index()];
+        let prompt = self
+            .rng
             .lognormal(p.prompt_mu, p.prompt_sigma)
             .round()
-            .clamp(1.0, cfg.max_prompt_tokens as f64) as u32;
-        let output = rng
+            .clamp(1.0, self.cfg.max_prompt_tokens as f64) as u32;
+        let output = self
+            .rng
             .lognormal(p.output_mu, p.output_sigma)
             .round()
-            .clamp(1.0, cfg.max_output_tokens as f64) as u32;
-        let deadline = rng.uniform(p.deadline_lo, p.deadline_hi);
-        out.push(ServiceRequest {
-            id: id as u64,
+            .clamp(1.0, self.cfg.max_output_tokens as f64) as u32;
+        let deadline = self.rng.uniform(p.deadline_lo, p.deadline_hi);
+        Some(ServiceRequest {
+            id,
             class,
-            arrival: t,
+            arrival: self.t,
             prompt_tokens: prompt,
             output_tokens: output,
             deadline,
-            payload_bytes: cfg.payload_base_bytes
-                + prompt as u64 * cfg.payload_bytes_per_token,
-        });
+            payload_bytes: self.cfg.payload_base_bytes
+                + prompt as u64 * self.cfg.payload_bytes_per_token,
+        })
     }
-    out
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.cfg.n_requests - self.emitted)
+    }
+}
+
+impl Iterator for WorkloadGen {
+    type Item = ServiceRequest;
+
+    fn next(&mut self) -> Option<ServiceRequest> {
+        self.next_arrival()
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.cfg.n_requests - self.emitted;
+        (n, Some(n))
+    }
+}
+
+/// Generate the full trace, sorted by arrival time, ids dense from 0.
+/// Materializing wrapper around [`WorkloadGen`]; million-request runs
+/// should stream the generator through the engine instead.
+pub fn generate(cfg: &WorkloadConfig) -> Vec<ServiceRequest> {
+    WorkloadGen::new(cfg).collect()
 }
 
 fn next_arrival(process: &ArrivalProcess, t: f64, rng: &mut Rng) -> f64 {
@@ -282,6 +331,26 @@ mod tests {
         for c in ServiceClass::ALL {
             assert!(trace.iter().any(|r| r.class == c), "missing {c:?}");
         }
+    }
+
+    #[test]
+    fn streaming_generator_matches_materialized_trace() {
+        let cfg = WorkloadConfig::default().with_requests(300).with_seed(77);
+        let trace = generate(&cfg);
+        let mut stream = WorkloadGen::new(&cfg);
+        assert_eq!(stream.len_hint(), Some(300));
+        for want in &trace {
+            let got = stream.next_arrival().expect("request");
+            assert_eq!(got.id, want.id);
+            assert_eq!(got.arrival, want.arrival);
+            assert_eq!(got.class, want.class);
+            assert_eq!(got.prompt_tokens, want.prompt_tokens);
+            assert_eq!(got.output_tokens, want.output_tokens);
+            assert_eq!(got.deadline, want.deadline);
+            assert_eq!(got.payload_bytes, want.payload_bytes);
+        }
+        assert!(stream.next_arrival().is_none());
+        assert_eq!(stream.len_hint(), Some(0));
     }
 
     #[test]

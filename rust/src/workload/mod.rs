@@ -1,8 +1,79 @@
 //! Workload substrate: diverse-service request model and reproducible
 //! trace generation (the paper's 10 k-request evaluation workloads).
+//!
+//! Workloads reach the DES through the pull-based [`ArrivalSource`]
+//! cursor instead of a pre-materialized `Vec<ServiceRequest>`: the engine
+//! prefetches exactly one pending arrival at a time, so the event heap no
+//! longer scales with trace length (a 1M-request run used to start by
+//! pushing 1M arrival events). [`generator::WorkloadGen`] streams the
+//! synthetic workloads; [`TraceSource`] adapts an existing in-memory
+//! trace.
 
 pub mod generator;
 pub mod service;
 
-pub use generator::{generate, ArrivalProcess, ClassProfile, WorkloadConfig};
+pub use generator::{generate, ArrivalProcess, ClassProfile, WorkloadConfig, WorkloadGen};
 pub use service::{ServiceClass, ServiceOutcome, ServiceRequest};
+
+/// Pull-based workload cursor: the engine asks for one arrival at a time.
+///
+/// Implementations must yield requests in nondecreasing `arrival` order
+/// (the DES clock is monotone; an out-of-order arrival is clamped to the
+/// current simulated time by the event queue).
+pub trait ArrivalSource {
+    /// The next request, or `None` when the workload is exhausted.
+    fn next_arrival(&mut self) -> Option<ServiceRequest>;
+
+    /// Remaining number of requests, if known (used only to size result
+    /// buffers — correctness never depends on it).
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Adapter: stream an existing in-memory trace (sorted by arrival time)
+/// through the [`ArrivalSource`] interface. This is what keeps the
+/// slice-based `sim::engine::simulate` entry point working on the
+/// streaming engine.
+pub struct TraceSource<'a> {
+    trace: &'a [ServiceRequest],
+    next: usize,
+}
+
+impl<'a> TraceSource<'a> {
+    pub fn new(trace: &'a [ServiceRequest]) -> Self {
+        TraceSource { trace, next: 0 }
+    }
+}
+
+impl ArrivalSource for TraceSource<'_> {
+    fn next_arrival(&mut self) -> Option<ServiceRequest> {
+        let r = self.trace.get(self.next)?.clone();
+        self.next += 1;
+        Some(r)
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.trace.len() - self.next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_source_streams_in_order_then_exhausts() {
+        let trace = generate(&WorkloadConfig::default().with_requests(5).with_seed(3));
+        let mut src = TraceSource::new(&trace);
+        assert_eq!(src.len_hint(), Some(5));
+        for want in &trace {
+            let got = src.next_arrival().expect("request");
+            assert_eq!(got.id, want.id);
+            assert_eq!(got.arrival, want.arrival);
+        }
+        assert_eq!(src.len_hint(), Some(0));
+        assert!(src.next_arrival().is_none());
+        assert!(src.next_arrival().is_none(), "stays exhausted");
+    }
+}

@@ -93,6 +93,37 @@ pub struct ServiceOutcome {
 }
 
 impl ServiceOutcome {
+    /// Sentinel `server` value for requests shed at decision time: no
+    /// server was involved, so there is no arm to credit or blame.
+    /// Schedulers must check [`Self::was_shed`] before indexing per-server
+    /// state with `outcome.server`.
+    pub const SHED_SERVER: usize = usize::MAX;
+
+    /// True when the scheduler rejected this request outright
+    /// (`Action::Shed`) rather than placing it.
+    pub fn was_shed(&self) -> bool {
+        self.server == Self::SHED_SERVER
+    }
+
+    /// The canonical outcome for a request shed at decision time: no
+    /// server, no energy spent, infinite processing time. Both substrates
+    /// (DES engine, live router) build shed feedback through this one
+    /// constructor so the [`Self::SHED_SERVER`] contract cannot drift.
+    pub fn shed(req: &ServiceRequest, completed_at: SimTime) -> ServiceOutcome {
+        ServiceOutcome {
+            id: req.id,
+            class: req.class,
+            server: Self::SHED_SERVER,
+            tx_time: 0.0,
+            infer_time: 0.0,
+            processing_time: f64::INFINITY,
+            deadline: req.deadline,
+            energy_j: 0.0,
+            tokens: 0,
+            completed_at,
+        }
+    }
+
     /// Paper's success criterion: processing time under the requirement.
     pub fn success(&self) -> bool {
         self.processing_time <= self.deadline
@@ -144,6 +175,14 @@ mod tests {
             seen[c.index()] = true;
             assert!(!c.name().is_empty());
         }
+    }
+
+    #[test]
+    fn shed_sentinel_detected() {
+        let mut o = outcome(1.0, 2.0);
+        assert!(!o.was_shed());
+        o.server = ServiceOutcome::SHED_SERVER;
+        assert!(o.was_shed());
     }
 
     #[test]

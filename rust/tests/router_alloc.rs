@@ -1,0 +1,93 @@
+//! Proof that the live router's decision path is allocation-free: a
+//! counting global allocator observes zero heap allocations across warmed
+//! `route()`/`complete()` cycles. This is the serving-path twin of the
+//! DES engine's scratch-view discipline (PR 1) — the pre-Action router
+//! collected a fresh `ClusterView` on every route *and* complete.
+//!
+//! Lives in its own integration-test binary because `#[global_allocator]`
+//! is per-binary, and this file holds exactly one test so no other test
+//! thread can allocate concurrently with the measured section.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use perllm::coordinator::router::{Router, WorkerTelemetry};
+use perllm::scheduler::csucb::CsUcb;
+use perllm::sim::server::ServerKind;
+use perllm::workload::service::{ServiceClass, ServiceOutcome};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn route_and_complete_do_not_allocate_once_warm() {
+    let workers = vec![
+        Arc::new(WorkerTelemetry::new(ServerKind::Edge, 4, 8)),
+        Arc::new(WorkerTelemetry::new(ServerKind::Edge, 4, 8)),
+        Arc::new(WorkerTelemetry::new(ServerKind::Cloud, 8, 16)),
+    ];
+    let mut router = Router::new(Box::new(CsUcb::with_defaults(3)), workers);
+    let req = Router::service_request(5, ServiceClass::Chat, 32, 32, 10.0);
+
+    let complete_for = |worker: usize| ServiceOutcome {
+        id: 5,
+        class: ServiceClass::Chat,
+        server: worker,
+        tx_time: 0.0,
+        infer_time: 0.1,
+        processing_time: 0.1,
+        deadline: 10.0,
+        energy_j: 30.0,
+        tokens: 64,
+        completed_at: 0.0,
+    };
+
+    // Warm-up: grow the scratch view, the CS-UCB arm table access paths,
+    // and the pending-penalty dense vec to steady state.
+    for _ in 0..64 {
+        let w = router.route(&req).worker().expect("placed");
+        router.complete(&complete_for(w));
+    }
+
+    // Let any allocator bookkeeping from the warm-up settle, then measure.
+    std::thread::sleep(Duration::from_millis(10));
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for _ in 0..1_000 {
+        let w = router.route(&req).worker().expect("placed");
+        router.complete(&complete_for(w));
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "router decision path allocated {} times over 1000 warmed route+complete cycles",
+        after - before
+    );
+}

@@ -2,7 +2,7 @@
 //! (DESIGN.md §9), using the crate's own proptest harness.
 
 use perllm::scheduler::csucb::{CsUcb, CsUcbParams};
-use perllm::scheduler::{ClusterView, Scheduler, ServerView};
+use perllm::scheduler::{Action, ClusterView, Scheduler, ServerView};
 use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
 use perllm::sim::energy::EnergyWeights;
 use perllm::sim::engine::simulate;
@@ -82,15 +82,41 @@ fn prop_csucb_picks_feasible_when_any_exists() {
         let req = random_req(g);
         let feasible = view.feasible_servers(&req);
         let mut s = CsUcb::with_defaults(n);
-        let d = s.decide(&req, &view);
-        assert!(d.server < n, "out of range");
-        if !feasible.is_empty() {
-            assert!(
-                feasible.contains(&d.server),
-                "picked infeasible {} with feasible set {feasible:?}",
-                d.server
-            );
+        match s.decide(&req, &view) {
+            Action::Assign { server } => {
+                assert!(server < n, "out of range");
+                if !feasible.is_empty() {
+                    assert!(
+                        feasible.contains(&server),
+                        "picked infeasible {server} with feasible set {feasible:?}"
+                    );
+                }
+            }
+            Action::Shed { .. } => {
+                // Shedding is only legal when nothing is feasible (deep
+                // violation everywhere).
+                assert!(feasible.is_empty(), "shed despite feasible {feasible:?}");
+            }
+            Action::Defer { .. } => panic!("cs-ucb never defers"),
         }
+    });
+}
+
+#[test]
+fn prop_feasible_into_matches_allocating_form() {
+    // The scratch-buffer `_into` helpers and the Vec-returning wrappers
+    // must agree for any view, request, and margin — including with stale
+    // buffer content from a previous (larger) fill.
+    check("feasible _into equivalence", 300, |g| {
+        let n = g.usize(1, 8);
+        let view = random_view(g, n);
+        let req = random_req(g);
+        let margin = g.f64(-0.5, 0.5);
+        let mut buf = vec![usize::MAX; g.usize(0, 12)];
+        view.feasible_servers_into(&req, &mut buf);
+        assert_eq!(buf, view.feasible_servers(&req));
+        view.feasible_servers_with_slack_into(&req, margin, &mut buf);
+        assert_eq!(buf, view.feasible_servers_with_slack(&req, margin));
     });
 }
 
