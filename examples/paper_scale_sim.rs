@@ -17,18 +17,34 @@
 //!
 //! Usage: cargo run --release --example paper_scale_sim [-- --requests N]
 //!                   [--model yi-6b|llama2-7b|llama3-8b|yi-9b] [--seed S]
+//!                   [--topology paper|edgeshard-10x|edgeshard-100x]
+//!                   [--rate R]
 //!                   [--schedulers fineinfer,agod,rewardless,cs-ucb]
 //!                   [--modes stable|fluctuating|both]
 //!                   [--min-success F] [--min-events-per-sec F]
 //!
+//! `--topology` swaps the paper's 6-server testbed for an EdgeShard-style
+//! multi-tier preset (60 / 600 servers); the Poisson arrival rate then
+//! defaults to the paper's 15 req/s scaled by the topology's capacity, so
+//! offered load stays comparable across scales (override with `--rate`).
+//! The 100x fleet-scale acceptance run:
+//!
+//! ```text
+//! cargo run --release --example paper_scale_sim -- \
+//!     --topology edgeshard-100x --requests 1000000 \
+//!     --schedulers cs-ucb --modes stable
+//! ```
+//!
 //! The `--min-*` flags turn the run into a CI gate: if any run's success
-//! rate or DES events/s lands below the floor, the process exits 1.
+//! rate or DES events/s lands below the floor (or the event-heap peak
+//! above the cap), the process exits 1.
 
 use perllm::scheduler::{
     agod::Agod, csucb::CsUcb, fineinfer::FineInfer, rewardless::RewardlessGuidance, Scheduler,
 };
-use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
+use perllm::sim::cluster::BandwidthMode;
 use perllm::sim::engine::simulate_stream;
+use perllm::sim::topology::TopologyConfig;
 use perllm::workload::generator::{ArrivalProcess, WorkloadConfig, WorkloadGen};
 
 fn main() {
@@ -43,6 +59,7 @@ fn main() {
     let n: usize = get("--requests", "10000").parse().expect("bad --requests");
     let model = get("--model", "llama2-7b");
     let seed: u64 = get("--seed", "42").parse().expect("bad --seed");
+    let topology = get("--topology", "paper");
     let schedulers: Vec<String> = get("--schedulers", "fineinfer,agod,rewardless,cs-ucb")
         .split(',')
         .map(|s| s.trim().to_string())
@@ -62,18 +79,35 @@ fn main() {
         .parse()
         .expect("bad --max-peak-event-heap");
 
+    // Arrival rate: the paper's 15 req/s scaled by topology capacity
+    // unless pinned explicitly — a 60-server fleet at paper load would
+    // just idle.
+    let capacity_scale = TopologyConfig::by_name(&topology, &model, BandwidthMode::Stable)
+        .unwrap_or_else(|| panic!("unknown --topology {topology}"))
+        .capacity_scale();
+    let rate: f64 = match get("--rate", "").as_str() {
+        "" => 15.0 * capacity_scale,
+        r => r.parse().expect("bad --rate"),
+    };
+
     // One workload description; every run streams a fresh cursor from it,
     // so all schedulers and modes see the identical request sequence.
     let workload = WorkloadConfig::default()
         .with_requests(n)
-        .with_arrivals(ArrivalProcess::Poisson { rate: 15.0 })
+        .with_arrivals(ArrivalProcess::Poisson { rate })
         .with_deadline_range(2.0, 6.0)
         .with_seed(seed);
 
     let mut floor_violations = 0usize;
     for mode in modes {
-        println!("\n=== edge model {model}, {mode:?} bandwidth, {n} requests (streamed) ===");
-        let cfg = ClusterConfig::paper(&model, mode);
+        let topo = TopologyConfig::by_name(&topology, &model, mode).expect("checked above");
+        let cfg = topo.build();
+        println!(
+            "\n=== topology {topology} ({} servers, capacity {:.1}x paper), edge model {model}, \
+             {mode:?} bandwidth, {n} requests at {rate:.1} req/s (streamed) ===",
+            cfg.n_servers(),
+            capacity_scale
+        );
         let cloud = cfg.cloud_index();
         let ns = cfg.n_servers();
 

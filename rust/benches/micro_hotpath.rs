@@ -7,6 +7,8 @@
 //!   server, the regime where the seed's O(active-jobs)-per-event queue
 //!   went quadratic-ish (the virtual-time core's headline win)
 //! * end-to-end simulation wall time per 1 000 / 4 000 requests
+//! * a 10x EdgeShard-style topology (60 servers) streaming run — the
+//!   calendar-queue + candidate-pruning scale scenario
 //!
 //! Run: cargo bench --bench micro_hotpath
 //!
@@ -20,6 +22,7 @@ use perllm::scheduler::{Action, ClusterView, Scheduler};
 use perllm::sim::cluster::{BandwidthMode, ClusterConfig, ClusterSim};
 use perllm::sim::engine::{simulate, simulate_stream};
 use perllm::sim::ps::PsQueue;
+use perllm::sim::topology::TopologyConfig;
 use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig, WorkloadGen};
 use perllm::workload::service::ServiceRequest;
 
@@ -152,6 +155,43 @@ fn main() {
         }));
         println!("  streaming 4000 reqs: peak event heap {peak_heap}");
         json.push(("streaming_4000_peak_event_heap", JsonValue::Num(peak_heap as f64)));
+    }
+
+    // 6. 10x multi-tier topology: 20k requests streamed through the
+    //    60-server EdgeShard-style preset at capacity-scaled load. This is
+    //    the scenario the calendar event queue and the candidate-pruned
+    //    decision path exist for: events/s here tracks how the engine
+    //    scales with cluster size, and the peak heap must stay bounded by
+    //    in-flight concurrency at ~10x the paper's arrival rate.
+    {
+        let topo = TopologyConfig::edgeshard_10x("llama2-7b", BandwidthMode::Stable);
+        let cfg = topo.build();
+        let workload = WorkloadConfig::default()
+            .with_requests(20_000)
+            .with_arrivals(ArrivalProcess::Poisson {
+                rate: topo.scaled_rate(15.0),
+            })
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(42);
+        let mut events_per_sec = 0.0;
+        let mut stale_ratio = 0.0;
+        let mut peak_heap = 0usize;
+        rows.push(bench_fn("simulate cs-ucb 20k reqs (10x topology)", 1, 3, || {
+            let mut s = CsUcb::with_defaults(cfg.n_servers());
+            let mut source = WorkloadGen::new(&workload);
+            let rep = simulate_stream(&cfg, &mut source, &mut s);
+            events_per_sec = rep.events_per_sec;
+            stale_ratio = rep.stale_ratio;
+            peak_heap = rep.peak_event_queue_len;
+            std::hint::black_box(rep.success_rate);
+        }));
+        println!(
+            "  10x topology 20k reqs: DES {events_per_sec:.0} events/s, \
+             stale ratio {stale_ratio:.3}, peak event heap {peak_heap}"
+        );
+        json.push(("topo10x_20k_events_per_sec", JsonValue::Num(events_per_sec)));
+        json.push(("topo10x_20k_stale_ratio", JsonValue::Num(stale_ratio)));
+        json.push(("topo10x_20k_peak_event_heap", JsonValue::Num(peak_heap as f64)));
     }
 
     println!("\n== L3 hot-path micro benches ==");

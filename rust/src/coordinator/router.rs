@@ -140,12 +140,34 @@ impl Router {
         }
     }
 
+    /// Build a router fleet from a simulated topology description: one
+    /// telemetry slot per topology server, capacity fields seeded from the
+    /// server spec (batch slots / bounded queue). This is how a
+    /// multi-tier `TopologyConfig` (EdgeShard-style presets included)
+    /// projects onto the live serving substrate — the same scheduler then
+    /// runs unchanged against either.
+    pub fn from_topology(
+        scheduler: Box<dyn Scheduler>,
+        topo: &crate::sim::topology::TopologyConfig,
+    ) -> Self {
+        let workers = topo
+            .build()
+            .servers
+            .iter()
+            .map(|s| Arc::new(WorkerTelemetry::new(s.kind, s.slots, s.queue_limit)))
+            .collect();
+        Router::new(scheduler, workers)
+    }
+
     /// Fill `out` with the telemetry snapshot for a request expected to
     /// move `expected_tokens` tokens. This is the single fill routine
     /// behind both the [`ViewSource`] impl and `complete()`.
     fn fill_view(&self, expected_tokens: usize, out: &mut ClusterView) {
         out.now = 0.0;
         out.weights = self.weights;
+        // No admissibility index on the live substrate (telemetry is
+        // already O(workers) to read): empty = full-scan sentinel.
+        out.candidates.clear();
         out.servers.clear();
         out.servers
             .extend(self.workers.iter().zip(&self.outstanding).map(|(w, &outst)| {
@@ -404,6 +426,30 @@ mod tests {
         assert!(d
             .iter()
             .any(|(k, v)| k == "router_bad_assignments" && *v == 1.0));
+    }
+
+    /// A multi-tier topology projects onto the live substrate: one worker
+    /// per topology server, kinds preserved, and routing works end to end
+    /// on the 60-server fleet.
+    #[test]
+    fn from_topology_builds_matching_fleet() {
+        use crate::sim::topology::TopologyConfig;
+        use crate::sim::BandwidthMode;
+        let topo = TopologyConfig::edgeshard_10x("llama2-7b", BandwidthMode::Stable);
+        let mut router =
+            Router::from_topology(Box::new(CsUcb::with_defaults(topo.n_servers())), &topo);
+        assert_eq!(router.workers.len(), 60);
+        let cfg = topo.build();
+        for (w, s) in router.workers.iter().zip(&cfg.servers) {
+            assert_eq!(w.kind, s.kind);
+            assert_eq!(w.max_batch.load(Ordering::Relaxed), s.slots);
+            assert_eq!(w.queue_cap.load(Ordering::Relaxed), s.queue_limit);
+        }
+        let req = Router::service_request(1, ServiceClass::Chat, 16, 16, 5.0);
+        for _ in 0..20 {
+            let w = router.route(&req).worker().expect("placed");
+            assert!(w < 60);
+        }
     }
 
     #[test]

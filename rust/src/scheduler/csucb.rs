@@ -222,21 +222,23 @@ impl Scheduler for CsUcb {
         self.t += 1;
         let class = req.class.index();
 
-        // Single fused pass over the servers: evaluate f(y) once per server
-        // and keep the best UCB among margin-feasible arms, the best among
-        // bare-feasible arms, and the least-violating fallback — no
-        // per-decision allocation (§Perf: this scan is the router hot path).
+        // Single fused pass over the scan set: evaluate f(y) once per
+        // candidate and keep the best UCB among margin-feasible arms and
+        // the best among bare-feasible arms — no per-decision allocation
+        // (§Perf: this scan is the router hot path). `view.scan()` is the
+        // incremental feasible-set path: on large topologies the view
+        // source prunes saturated servers (provably infeasible, zero
+        // compute headroom), so this loop stops visiting all N servers
+        // exactly when N is large enough for that to matter. The pruned
+        // servers can never win here (their f(y) ≤ -1 fails the `fy < 0`
+        // gate), so decisions are identical to the full scan; the
+        // all-infeasible fallback below rescans everything, saturated
+        // servers included, just as the paper's rule requires.
         let margin = self.params.slack_margin;
         let mut best_margin: Option<(usize, f64)> = None;
         let mut best_bare: Option<(usize, f64)> = None;
-        let mut best_fy = f64::NEG_INFINITY;
-        let mut least_violating = 0usize;
-        for j in 0..view.servers.len() {
+        for j in view.scan() {
             let fy = view.constraint_satisfaction(req, j);
-            if fy > best_fy {
-                best_fy = fy;
-                least_violating = j;
-            }
             if fy < 0.0 {
                 continue;
             }
@@ -262,11 +264,26 @@ impl Scheduler for CsUcb {
         let (choice, penalty) = match best_margin.or(best_bare) {
             Some((j, _)) => (j, 0.0),
             None => {
-                // Nothing feasible. If even the least-violating placement
-                // is beyond the shed threshold the request is hopeless —
-                // reject it before any upload energy is spent (first-class
-                // load shedding; the engine/router account the drop and
-                // still deliver feedback).
+                // Nothing feasible: full fallback scan over *every* server
+                // (saturated ones included — any server is a legal
+                // fallback target). First maximum wins on exact f(y) ties,
+                // matching the pre-candidate fused loop bit for bit. This
+                // scan only runs on fallback decisions, so the feasible
+                // hot path above stays sub-linear under pruning.
+                let mut best_fy = f64::NEG_INFINITY;
+                let mut least_violating = 0usize;
+                for j in 0..view.servers.len() {
+                    let fy = view.constraint_satisfaction(req, j);
+                    if fy > best_fy {
+                        best_fy = fy;
+                        least_violating = j;
+                    }
+                }
+                // If even the least-violating placement is beyond the shed
+                // threshold the request is hopeless — reject it before any
+                // upload energy is spent (first-class load shedding; the
+                // engine/router account the drop and still deliver
+                // feedback).
                 if best_fy < -self.params.shed_threshold {
                     self.shed_decisions += 1;
                     return Action::shed(ShedReason::Infeasible);
@@ -400,6 +417,38 @@ mod tests {
         let mut paper = CsUcb::with_defaults(2);
         assert_eq!(paper.decide(&req, &view), Action::assign(1));
         assert_eq!(paper.shed_decisions, 0);
+    }
+
+    /// Pruning infeasible servers out of the candidate set must not move
+    /// any decision: the fused loop skips f(y) < 0 servers anyway, and the
+    /// all-infeasible fallback rescans everything.
+    #[test]
+    fn candidate_pruning_is_decision_identical() {
+        let mut full = CsUcb::with_defaults(3);
+        let mut pruned = CsUcb::with_defaults(3);
+        let view_full = test_view(vec![1.0, 5.0, 1.2]); // server 1 misses 2 s
+        let mut view_pruned = view_full.clone();
+        view_pruned.candidates = vec![0, 2];
+        let req = test_req(2.0);
+        for i in 0..40 {
+            let a = full.decide(&req, &view_full);
+            let b = pruned.decide(&req, &view_pruned);
+            assert_eq!(a, b, "diverged at decision {i}");
+            let j = a.server().expect("assigns");
+            let mut o = outcome(j, if j == 0 { 80.0 } else { 400.0 }, 1.0, 2.0);
+            o.id = req.id;
+            full.feedback(&o, &view_full);
+            pruned.feedback(&o, &view_pruned);
+        }
+        // And when *everything* is pruned-or-infeasible the fallback still
+        // scans the full view (identical to no pruning).
+        let view_full = test_view(vec![10.0, 6.0, 8.0]);
+        let mut view_pruned = view_full.clone();
+        view_pruned.candidates = vec![2];
+        let a = full.decide(&test_req(2.0), &view_full);
+        let b = pruned.decide(&test_req(2.0), &view_pruned);
+        assert_eq!(a, b);
+        assert_eq!(a, Action::assign(1), "least violating of the full set");
     }
 
     #[test]

@@ -84,6 +84,19 @@ pub struct ClusterView {
     pub now: f64,
     pub servers: Vec<ServerView>,
     pub weights: EnergyWeights,
+    /// Incremental feasible-set hint: the indices of servers that can
+    /// still *admit* a request (slot or queue space), maintained O(1) per
+    /// occupancy change by the view source (see
+    /// `sim::cluster::ClusterSim::refresh_admissibility`). Empty means
+    /// "no pruning information — scan every server": sources without an
+    /// index (the live router) and snapshots where every server is
+    /// admissible both use the sentinel, so the common uncongested case
+    /// pays nothing. Excluded servers are provably infeasible (zero
+    /// compute headroom ⇒ f(y) ≤ -1), which is why [`Self::scan`]-based
+    /// feasibility filtering is decision-identical to a full scan; only
+    /// the full-scan fallbacks ([`Self::least_violating`]) still visit
+    /// saturated servers.
+    pub candidates: Vec<u32>,
 }
 
 impl Default for ClusterView {
@@ -92,6 +105,7 @@ impl Default for ClusterView {
             now: 0.0,
             servers: Vec::new(),
             weights: EnergyWeights::default(),
+            candidates: Vec::new(),
         }
     }
 }
@@ -107,7 +121,21 @@ impl ClusterView {
             now: 0.0,
             servers: Vec::with_capacity(n),
             weights,
+            candidates: Vec::new(),
         }
+    }
+
+    /// Iterate the servers a feasibility-filtering scheduler needs to
+    /// score: the candidate subset when the view source provided one,
+    /// every server otherwise. Ascending order either way, so tie-breaks
+    /// match the full scan exactly.
+    pub fn scan(&self) -> impl Iterator<Item = usize> + '_ {
+        let pruned = !self.candidates.is_empty();
+        let full = if pruned { 0..0 } else { 0..self.servers.len() };
+        self.candidates
+            .iter()
+            .map(|&i| i as usize)
+            .chain(full)
     }
 
     /// Paper Eq. 3 for a single assignment y = (request → server j): the
@@ -167,6 +195,12 @@ impl ClusterView {
     /// a scheduler-owned scratch buffer can be reused across decisions
     /// without any per-decision allocation once it has grown to cluster
     /// size.
+    ///
+    /// For `margin >= 0` the scan is restricted to [`Self::scan`]'s
+    /// candidate set: pruned servers carry zero compute headroom, so their
+    /// f(y) ≤ -1 can never clear a non-negative margin — the result is
+    /// identical to the full scan, minus the visits. Negative margins
+    /// (callers probing *violating* placements) always scan everything.
     pub fn feasible_servers_with_slack_into(
         &self,
         req: &ServiceRequest,
@@ -174,22 +208,47 @@ impl ClusterView {
         out: &mut Vec<usize>,
     ) {
         out.clear();
-        out.extend(
-            (0..self.servers.len()).filter(|&j| self.constraint_satisfaction(req, j) >= margin),
-        );
+        if margin >= 0.0 {
+            out.extend(
+                self.scan()
+                    .filter(|&j| self.constraint_satisfaction(req, j) >= margin),
+            );
+        } else {
+            out.extend(
+                (0..self.servers.len())
+                    .filter(|&j| self.constraint_satisfaction(req, j) >= margin),
+            );
+        }
     }
 
     /// Fallback when no server is feasible: the paper assigns the service
     /// to "a more resource-rich server" — the one with maximum f(y), i.e.
-    /// the least-violating assignment.
+    /// the least-violating assignment. Always a full scan (every server is
+    /// a legal fallback target, including saturated ones), but it only
+    /// runs on fallback decisions, never on the feasible hot path.
     pub fn least_violating(&self, req: &ServiceRequest) -> usize {
-        (0..self.servers.len())
-            .max_by(|&a, &b| {
-                self.constraint_satisfaction(req, a)
-                    .partial_cmp(&self.constraint_satisfaction(req, b))
-                    .unwrap()
-            })
-            .expect("non-empty cluster")
+        self.least_violating_with_fy(req).0
+    }
+
+    /// [`Self::least_violating`] plus the winning slack value, for callers
+    /// that need both without scanning twice. Ties keep the LAST maximum
+    /// (the historical `max_by` behavior this wrapper preserves). Note:
+    /// CS-UCB's all-infeasible fallback intentionally does NOT use this
+    /// helper — its inline scan keeps the FIRST maximum on ties, matching
+    /// its own pre-candidate fused loop bit for bit; swapping it onto this
+    /// helper would silently flip fallback choices on exact f(y) ties.
+    pub fn least_violating_with_fy(&self, req: &ServiceRequest) -> (usize, f64) {
+        assert!(!self.servers.is_empty(), "non-empty cluster");
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for j in 0..self.servers.len() {
+            let fy = self.constraint_satisfaction(req, j);
+            // `>=` keeps the last maximum on exact ties — the tie-break
+            // the previous `max_by`-based implementation had.
+            if fy >= best.1 {
+                best = (j, fy);
+            }
+        }
+        best
     }
 }
 
@@ -337,6 +396,7 @@ mod tests {
             now: 0.0,
             servers,
             weights: EnergyWeights::default(),
+            candidates: Vec::new(),
         }
     }
 
@@ -405,6 +465,47 @@ mod tests {
         assert_eq!(buf, view.feasible_servers(&req));
         view.feasible_servers_with_slack_into(&req, 0.2, &mut buf);
         assert_eq!(buf, view.feasible_servers_with_slack(&req, 0.2));
+    }
+
+    /// A pruned candidate set restricts `scan()` and the feasibility
+    /// helpers to the listed servers, and (because pruned servers are
+    /// infeasible by construction at the source) yields the same feasible
+    /// set the full scan would.
+    #[test]
+    fn candidate_scan_matches_full_scan_on_feasible_sets() {
+        let mut view = test_view(vec![1.0, 3.0, 1.5]);
+        let req = test_req(2.0);
+        let full = view.feasible_servers(&req);
+        assert_eq!(full, vec![0, 2]);
+        // Simulate the source pruning server 1 (saturated: in a real fill
+        // it would also carry zero headroom; here it is merely infeasible
+        // on deadline, which is enough for the equality we assert).
+        view.candidates = vec![0, 2];
+        assert_eq!(view.scan().collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(view.feasible_servers(&req), full);
+        let mut buf = Vec::new();
+        view.feasible_servers_with_slack_into(&req, 0.1, &mut buf);
+        let mut full_buf = Vec::new();
+        view.candidates.clear();
+        view.feasible_servers_with_slack_into(&req, 0.1, &mut full_buf);
+        assert_eq!(buf, full_buf);
+        // Negative margins (probing violating placements) ignore pruning.
+        view.candidates = vec![0];
+        view.feasible_servers_with_slack_into(&req, -10.0, &mut buf);
+        assert_eq!(buf, vec![0, 1, 2]);
+        // Empty candidates = full-scan sentinel.
+        view.candidates.clear();
+        assert_eq!(view.scan().collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn least_violating_with_fy_reports_winner_slack() {
+        let view = test_view(vec![10.0, 4.0, 8.0]);
+        let req = test_req(2.0);
+        let (j, fy) = view.least_violating_with_fy(&req);
+        assert_eq!(j, 1);
+        assert!((fy - view.constraint_satisfaction(&req, 1)).abs() < 1e-12);
+        assert!(fy < 0.0);
     }
 
     #[test]

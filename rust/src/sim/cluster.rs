@@ -1,6 +1,13 @@
-//! Edge-cloud cluster assembly: five edge servers with dedicated LAN links
-//! plus one cloud server behind the shared WAN uplink (the paper's testbed),
-//! and the scheduler-facing resource snapshot (CMAB state space).
+//! Edge-cloud cluster assembly: the paper's testbed (five edge servers
+//! with dedicated LAN links plus one cloud server behind the shared WAN
+//! uplink) generalized to arbitrary multi-tier topologies, and the
+//! scheduler-facing resource snapshot (CMAB state space).
+//!
+//! A [`ClusterConfig`] now carries an explicit `LinkSpec` per server
+//! instead of deriving links from the server tier, which is what lets
+//! [`super::topology::TopologyConfig`] express heterogeneous EdgeShard-
+//! style fleets (per-tier bandwidth, RTT, and energy-per-bit) through the
+//! same simulation substrate.
 
 use super::energy::{EnergyBreakdown, EnergyWeights};
 use super::net::{LinkSim, LinkSpec};
@@ -18,7 +25,7 @@ pub enum BandwidthMode {
 }
 
 /// Injected server outage window (failure injection tests).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Outage {
     pub server: usize,
     pub start: SimTime,
@@ -26,30 +33,55 @@ pub struct Outage {
 }
 
 /// Full cluster configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
     pub servers: Vec<ServerSpec>,
+    /// One uplink per server (same indexing as `servers`).
+    pub links: Vec<LinkSpec>,
     pub bandwidth: BandwidthMode,
     pub weights: EnergyWeights,
     pub outages: Vec<Outage>,
     pub seed: u64,
+    /// Skip the completion-event invalidate+re-push when an occupancy
+    /// touch provably did not move the next completion (same finish-work
+    /// top, same service rate). Default on; the off position exists so the
+    /// churn-regression test can pin that the guard changes stale-event
+    /// accounting only, never outcomes.
+    pub churn_guard: bool,
 }
 
 impl ClusterConfig {
     /// The paper's testbed with the given edge model deployment
     /// ("yi-6b" | "llama2-7b" | "llama3-8b" | "yi-9b").
     pub fn paper(edge_model: &str, bandwidth: BandwidthMode) -> Self {
+        let servers = paper_testbed(edge_model);
+        let fluct = bandwidth == BandwidthMode::Fluctuating;
+        let links = servers
+            .iter()
+            .enumerate()
+            .map(|(i, s)| match s.kind {
+                ServerKind::Edge => LinkSpec::edge(i, fluct),
+                ServerKind::Cloud => LinkSpec::cloud(fluct),
+            })
+            .collect();
         ClusterConfig {
-            servers: paper_testbed(edge_model),
+            servers,
+            links,
             bandwidth,
             weights: EnergyWeights::default(),
             outages: Vec::new(),
             seed: 0xC1A0,
+            churn_guard: true,
         }
     }
 
     pub fn with_outages(mut self, outages: Vec<Outage>) -> Self {
         self.outages = outages;
+        self
+    }
+
+    pub fn with_churn_guard(mut self, on: bool) -> Self {
+        self.churn_guard = on;
         self
     }
 
@@ -74,8 +106,7 @@ pub struct InFlight {
     pub work_s: f64,
 }
 
-/// Live cluster state: one ServerSim + one LinkSim per server. Edge links
-/// are dedicated; the cloud link is the shared 300 Mbps uplink.
+/// Live cluster state: one ServerSim + one LinkSim per server.
 pub struct ClusterSim {
     pub servers: Vec<ServerSim>,
     pub links: Vec<LinkSim>,
@@ -86,24 +117,37 @@ pub struct ClusterSim {
     /// `ViewSource::view_into` stamps snapshots with it, so the engine and
     /// the live router expose the same two-argument view-filling API.
     pub now: SimTime,
+    /// Incremental admissibility index: `admissible[i]` mirrors
+    /// `!servers[i].would_drop()` and is refreshed O(1) at every
+    /// occupancy-changing touch (the engine calls
+    /// [`Self::refresh_admissibility`] after each queue push/reap). The
+    /// scheduler snapshot exports it as `ClusterView::candidates`, which
+    /// is what lets `decide()` stop scanning servers that cannot admit
+    /// anything on 100-server views.
+    admissible: Vec<bool>,
+    n_admissible: usize,
+    /// Timestamp of the last full [`Self::advance_all`]; lets repeated
+    /// same-instant calls (one per completion in a reap batch) early-out
+    /// instead of touching every server again.
+    advanced_at: SimTime,
 }
 
 impl ClusterSim {
     pub fn new(cfg: &ClusterConfig) -> Self {
-        let fluct = cfg.bandwidth == BandwidthMode::Fluctuating;
-        let mut links = Vec::new();
-        for (i, s) in cfg.servers.iter().enumerate() {
-            links.push(LinkSim::new(match s.kind {
-                ServerKind::Edge => LinkSpec::edge(i, fluct),
-                ServerKind::Cloud => LinkSpec::cloud(fluct),
-            }));
-        }
+        assert_eq!(
+            cfg.servers.len(),
+            cfg.links.len(),
+            "one LinkSpec per server"
+        );
         ClusterSim {
             in_flight: vec![InFlight::default(); cfg.servers.len()],
             servers: cfg.servers.iter().cloned().map(ServerSim::new).collect(),
-            links,
+            links: cfg.links.iter().cloned().map(LinkSim::new).collect(),
             weights: cfg.weights,
             now: 0.0,
+            admissible: vec![true; cfg.servers.len()],
+            n_admissible: cfg.servers.len(),
+            advanced_at: -1.0,
         }
     }
 
@@ -122,17 +166,44 @@ impl ClusterSim {
         f.work_s = (f.work_s - w).max(0.0);
     }
 
+    /// Re-derive one server's admissibility after an occupancy change
+    /// (queue push, reap, waiter promotion). O(1); the owner must call
+    /// this after every touch that can flip `would_drop()` so the
+    /// candidate set handed to schedulers never goes stale.
+    pub fn refresh_admissibility(&mut self, server: usize) {
+        let ok = !self.servers[server].would_drop();
+        if ok != self.admissible[server] {
+            self.admissible[server] = ok;
+            if ok {
+                self.n_admissible += 1;
+            } else {
+                self.n_admissible -= 1;
+            }
+        }
+    }
+
+    /// Servers currently able to admit a request (slot or queue space).
+    pub fn n_admissible(&self) -> usize {
+        self.n_admissible
+    }
+
     /// Advance every server and link integrator to `now`. O(servers +
     /// links): each queue advance is a constant-time virtual-time bump, so
-    /// this stays cheap even mid-congestion-collapse.
+    /// this stays cheap even mid-congestion-collapse. Repeated calls at
+    /// the same instant (the feedback path advances once per completion in
+    /// a reap batch) early-out in O(1).
     pub fn advance_all(&mut self, now: SimTime) {
         self.now = now;
+        if now == self.advanced_at {
+            return;
+        }
         for s in &mut self.servers {
             s.advance_to(now);
         }
         for l in &mut self.links {
             l.advance_to(now);
         }
+        self.advanced_at = now;
     }
 
     /// Build the scheduler-facing snapshot for one request (CMAB state).
@@ -185,6 +256,22 @@ impl ClusterSim {
                     }
                 }),
         );
+        // Candidate pruning: when some servers are saturated (cannot admit
+        // anything, hence provably infeasible — zero compute headroom), the
+        // view names the admissible subset so schedulers skip the rest. An
+        // empty list means "no pruning information, scan everything" — used
+        // both when every server is admissible (pruning would save nothing)
+        // and by view sources without an index (the live router).
+        out.candidates.clear();
+        if self.n_admissible < self.servers.len() {
+            out.candidates.extend(
+                self.admissible
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &ok)| ok)
+                    .map(|(i, _)| i as u32),
+            );
+        }
     }
 
     /// Total energy so far, split by objective term.
@@ -237,6 +324,7 @@ mod tests {
         let cfg = ClusterConfig::paper("yi-6b", BandwidthMode::Stable);
         assert_eq!(cfg.n_servers(), 6);
         assert_eq!(cfg.cloud_index(), 5);
+        assert_eq!(cfg.links.len(), 6);
         let sim = ClusterSim::new(&cfg);
         assert_eq!(sim.servers.len(), 6);
         assert_eq!(sim.links.len(), 6);
@@ -307,6 +395,20 @@ mod tests {
     }
 
     #[test]
+    fn advance_all_same_instant_early_outs() {
+        let cfg = ClusterConfig::paper("yi-9b", BandwidthMode::Stable);
+        let mut sim = ClusterSim::new(&cfg);
+        sim.advance_all(5.0);
+        let e1 = sim.energy().total_j();
+        // Same instant: no double integration, clock still stamped.
+        sim.advance_all(5.0);
+        assert_eq!(sim.energy().total_j(), e1);
+        assert_eq!(sim.now, 5.0);
+        sim.advance_all(6.0);
+        assert!(sim.energy().total_j() > e1);
+    }
+
+    #[test]
     fn fluctuating_mode_sets_link_amplitude() {
         let cfg = ClusterConfig::paper("yi-6b", BandwidthMode::Fluctuating);
         let sim = ClusterSim::new(&cfg);
@@ -314,5 +416,36 @@ mod tests {
         let cfg2 = ClusterConfig::paper("yi-6b", BandwidthMode::Stable);
         let sim2 = ClusterSim::new(&cfg2);
         assert!(sim2.links.iter().all(|l| l.spec.fluctuation == 0.0));
+    }
+
+    /// The admissibility index mirrors `would_drop()` and the view exports
+    /// it as a candidate list exactly when some server is saturated.
+    #[test]
+    fn admissibility_index_tracks_saturation() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let mut sim = ClusterSim::new(&cfg);
+        assert_eq!(sim.n_admissible(), 6);
+        let mut v = ClusterView::default();
+        sim.view_into_at(&req(), 0.0, &mut v);
+        assert!(v.candidates.is_empty(), "no pruning while all admissible");
+
+        // Saturate edge 0: 8 slots + 2 waiting places.
+        for j in 0..10 {
+            sim.servers[0].queue.push(j, 1.0, 0.0);
+            sim.refresh_admissibility(0);
+        }
+        assert!(sim.servers[0].would_drop());
+        assert_eq!(sim.n_admissible(), 5);
+        sim.view_into_at(&req(), 0.0, &mut v);
+        assert_eq!(v.candidates, vec![1, 2, 3, 4, 5]);
+
+        // Drain it again: candidates disappear (full-scan sentinel).
+        sim.servers[0].queue.advance(10.0, 1.0);
+        let mut buf = Vec::new();
+        sim.servers[0].queue.reap_into(10.0, 1.0, &mut buf);
+        sim.refresh_admissibility(0);
+        assert_eq!(sim.n_admissible(), 6);
+        sim.view_into_at(&req(), 10.0, &mut v);
+        assert!(v.candidates.is_empty());
     }
 }

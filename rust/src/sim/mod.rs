@@ -10,8 +10,10 @@ pub mod net;
 pub mod ps;
 pub mod server;
 pub mod time;
+pub mod topology;
 
 pub use cluster::{BandwidthMode, ClusterConfig, ClusterSim, Outage};
 pub use energy::{EnergyBreakdown, EnergyWeights};
 pub use engine::{simulate, Engine, RunReport};
 pub use server::{ServerKind, ServerSpec, EDGE_MODELS};
+pub use topology::{TierSpec, TopologyConfig, TOPOLOGY_PRESETS};

@@ -10,7 +10,7 @@ use super::ps::PsQueue;
 use super::time::{Generation, SimTime};
 
 /// Static link description.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LinkSpec {
     pub name: String,
     /// Nominal bandwidth, bits per second.

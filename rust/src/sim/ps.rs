@@ -333,6 +333,17 @@ impl PsQueue {
         self.promote_waiters(now);
     }
 
+    /// Finish-work stamp of the earliest active job (the heap top), in
+    /// virtual work units. Together with the per-job rate this is the
+    /// *exact input* that determines the next completion time, which is
+    /// what the engine's reschedule guard compares to decide whether an
+    /// already-scheduled completion event is still correct (a float-exact
+    /// comparison, immune to the clock-advance drift that comparing
+    /// recomputed times would suffer).
+    pub fn peek_finish_work(&self) -> Option<f64> {
+        self.heap.peek().map(|k| k.finish_work)
+    }
+
     /// Seconds until the earliest active job finishes at `per_job_rate`.
     /// O(1): the earliest finisher is the heap top.
     pub fn next_completion_in(&self, per_job_rate: f64) -> Option<SimTime> {

@@ -20,7 +20,7 @@ pub enum ServerKind {
 }
 
 /// Static description of one server (one arm dimension of the bandit).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServerSpec {
     pub name: String,
     pub kind: ServerKind,

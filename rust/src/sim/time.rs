@@ -5,6 +5,27 @@
 //! both the shared cloud uplink and server batch slots; those recompute
 //! completion times whenever occupancy changes, which is expressed here by
 //! bumping a generation counter and letting stale events fall through.
+//!
+//! # Calendar queue
+//!
+//! [`EventQueue`] is a **calendar queue** (Brown, CACM'88): events hash
+//! into time-width buckets and pop walks the current "day" bucket, so
+//! push/pop are O(1) amortized instead of the binary heap's O(log n) —
+//! the difference shows up at 10-100x cluster scale where hundreds of
+//! servers keep hundreds of completion events in flight. The width and
+//! bucket count resize automatically as occupancy changes. Ordering is
+//! *exactly* the heap's — earliest time first, FIFO (push order) on ties
+//! — and the previous heap implementation is retained as
+//! [`HeapEventQueue`], an executable specification the differential
+//! proptest (`rust/tests/calendar_queue_equivalence.rs`) checks the
+//! calendar queue against, pop for pop.
+//!
+//! Ordering is drift-free by construction: each event carries its
+//! *virtual bucket number* (`floor(time / width)`, an integer), pop
+//! drains virtual buckets in integer order, and within a bucket entries
+//! are kept sorted by `(time, seq)`. Since the bucket number is monotone
+//! in time, integer bucket order + in-bucket order is total `(time,
+//! seq)` order — no float accumulation is ever compared against.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -12,42 +33,40 @@ use std::collections::BinaryHeap;
 /// Simulated seconds.
 pub type SimTime = f64;
 
+/// Smallest / largest bucket counts the calendar resizes between.
+const MIN_BUCKETS: usize = 8;
+const MAX_BUCKETS: usize = 1 << 20;
+
+/// Entries sampled from the head region when recomputing the bucket width
+/// at resize time (Brown's calendar queues sample the head so one
+/// far-future outlier — e.g. an outage-end event — cannot blow the width
+/// up to the whole horizon).
+const WIDTH_SAMPLE: usize = 32;
+
 #[derive(Debug, Clone)]
-struct Entry<E> {
+struct CalEntry<E> {
     time: SimTime,
     seq: u64,
+    /// Virtual bucket number `floor(time / width)` at the current width:
+    /// the integer pop order that makes bucket draining drift-free.
+    vb: u64,
     event: E,
 }
 
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl<E> Eq for Entry<E> {}
-
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; invert for earliest-first. NaN times are
-        // rejected at push, so partial_cmp is total here.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap()
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
-/// Earliest-first event queue with a monotone clock.
+/// Earliest-first event queue with a monotone clock (calendar-queue
+/// implementation; same observable behavior as [`HeapEventQueue`]).
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    /// `buckets[vb % nbuckets]`, each sorted by `(time, seq)` DESCENDING
+    /// so the earliest entry is at the end (O(1) pop via `Vec::pop`).
+    buckets: Vec<Vec<CalEntry<E>>>,
+    /// Power of two, so `vb % nbuckets` stays cheap and stable.
+    nbuckets: usize,
+    /// Seconds per bucket.
+    width: f64,
+    /// The virtual bucket pop is currently draining.
+    cur_vb: u64,
+    len: usize,
     now: SimTime,
     seq: u64,
     processed: u64,
@@ -64,7 +83,11 @@ impl<E> Default for EventQueue<E> {
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            nbuckets: MIN_BUCKETS,
+            width: 1.0,
+            cur_vb: 0,
+            len: 0,
             now: 0.0,
             seq: 0,
             processed: 0,
@@ -84,7 +107,7 @@ impl<E> EventQueue<E> {
     }
 
     /// Record that a popped event was generation-invalidated and dropped.
-    /// Stale events still cost a heap pop, so tracking them keeps events/s
+    /// Stale events still cost a pop, so tracking them keeps events/s
     /// honest: a high stale ratio means the queue is churning on cancelled
     /// completions rather than real work.
     pub fn note_stale(&mut self) {
@@ -102,7 +125,7 @@ impl<E> EventQueue<E> {
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     /// Largest number of events ever simultaneously pending. With a
@@ -114,20 +137,45 @@ impl<E> EventQueue<E> {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 
-    /// Schedule `event` at absolute time `at` (clamped to now; NaN rejected).
+    /// Virtual bucket of `t` at the current width. The float division is
+    /// only a *hash*: ordering never compares accumulated floats, it
+    /// compares these integers (monotone in `t`) and then `(time, seq)`.
+    #[inline]
+    fn vbucket_of(&self, t: SimTime) -> u64 {
+        // `as` saturates at u64::MAX for huge quotients, which keeps
+        // far-future events (outage horizons) ordered: they share the top
+        // bucket number and fall back to exact (time, seq) order there.
+        (t / self.width) as u64
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to now; must be
+    /// finite — the calendar hash has no bucket for NaN/inf).
     pub fn push_at(&mut self, at: SimTime, event: E) {
-        assert!(!at.is_nan(), "NaN event time");
+        assert!(at.is_finite(), "non-finite event time {at}");
         let t = if at < self.now { self.now } else { at };
-        self.heap.push(Entry {
-            time: t,
-            seq: self.seq,
-            event,
-        });
+        let seq = self.seq;
         self.seq += 1;
-        self.peak_len = self.peak_len.max(self.heap.len());
+        let vb = self.vbucket_of(t);
+        let entry = CalEntry {
+            time: t,
+            seq,
+            vb,
+            event,
+        };
+        let bucket = &mut self.buckets[(vb % self.nbuckets as u64) as usize];
+        // Descending (time, seq): find the insertion point from the sorted
+        // prefix of strictly-greater entries. Buckets hold ~1-2 entries at
+        // the steady-state width, so this is effectively O(1).
+        let pos = bucket.partition_point(|e| (e.time, e.seq) > (t, seq));
+        bucket.insert(pos, entry);
+        self.len += 1;
+        self.peak_len = self.peak_len.max(self.len);
+        if self.len > 2 * self.nbuckets && self.nbuckets < MAX_BUCKETS {
+            self.rebuild();
+        }
     }
 
     /// Schedule `event` `delay` seconds from now.
@@ -138,6 +186,232 @@ impl<E> EventQueue<E> {
 
     /// Pop the earliest event, advancing the clock.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        if self.len == 0 {
+            return None;
+        }
+        // Walk the calendar from the current virtual bucket. Entries of
+        // virtual bucket `vb` live only in ring slot `vb % nbuckets`, and
+        // the in-bucket minimum is at the end, so one `last()` check per
+        // step suffices. A full fruitless lap (sparse queue: next event
+        // more than a "year" away) falls back to a direct min search.
+        for _ in 0..self.nbuckets {
+            let slot = (self.cur_vb % self.nbuckets as u64) as usize;
+            if let Some(tail) = self.buckets[slot].last() {
+                if tail.vb == self.cur_vb {
+                    let e = self.buckets[slot].pop().expect("checked tail");
+                    return Some(self.finish_pop(e));
+                }
+            }
+            // Saturating: a u64::MAX virtual bucket (astronomically far
+            // future) must not overflow the scan; the direct-search
+            // fallback below handles whatever the lap cannot reach.
+            self.cur_vb = self.cur_vb.saturating_add(1);
+        }
+        // Direct search: the global minimum is the smallest bucket tail.
+        let slot = (0..self.nbuckets)
+            .filter(|&i| !self.buckets[i].is_empty())
+            .min_by(|&a, &b| {
+                let ea = self.buckets[a].last().expect("non-empty");
+                let eb = self.buckets[b].last().expect("non-empty");
+                (ea.time, ea.seq)
+                    .partial_cmp(&(eb.time, eb.seq))
+                    .expect("finite times")
+            })
+            .expect("len > 0");
+        let e = self.buckets[slot].pop().expect("non-empty");
+        self.cur_vb = e.vb;
+        Some(self.finish_pop(e))
+    }
+
+    fn finish_pop(&mut self, e: CalEntry<E>) -> (SimTime, E) {
+        debug_assert!(e.time >= self.now, "time went backwards");
+        self.len -= 1;
+        self.now = e.time;
+        self.processed += 1;
+        if self.len < self.nbuckets / 4 && self.nbuckets > MIN_BUCKETS {
+            self.rebuild();
+        }
+        (e.time, e.event)
+    }
+
+    /// Peek at the next event time without advancing.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.buckets
+            .iter()
+            .filter_map(|b| b.last())
+            .min_by(|a, b| {
+                (a.time, a.seq)
+                    .partial_cmp(&(b.time, b.seq))
+                    .expect("finite times")
+            })
+            .map(|e| e.time)
+    }
+
+    /// Re-hash every entry into a bucket array sized for the current
+    /// occupancy, with the width re-estimated from inter-event gaps near
+    /// the head. O(len log len); triggered O(log) times per doubling, so
+    /// amortized cost per operation stays constant.
+    fn rebuild(&mut self) {
+        let mut all: Vec<CalEntry<E>> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        all.sort_by(|a, b| {
+            (a.time, a.seq)
+                .partial_cmp(&(b.time, b.seq))
+                .expect("finite times")
+        });
+
+        // Width: a few times the mean gap over the head region keeps
+        // ~one event per bucket without letting a far-future outlier
+        // stretch the calendar to the horizon.
+        let sample = &all[..all.len().min(WIDTH_SAMPLE)];
+        let mut gaps = 0.0;
+        let mut n_gaps = 0u32;
+        for w in sample.windows(2) {
+            let g = w[1].time - w[0].time;
+            if g > 0.0 {
+                gaps += g;
+                n_gaps += 1;
+            }
+        }
+        if n_gaps > 0 {
+            self.width = (4.0 * gaps / n_gaps as f64).clamp(1e-9, 1e9);
+        }
+
+        self.nbuckets = all
+            .len()
+            .next_power_of_two()
+            .clamp(MIN_BUCKETS, MAX_BUCKETS);
+        self.buckets = (0..self.nbuckets).map(|_| Vec::new()).collect();
+        self.cur_vb = self.vbucket_of(self.now);
+        // Insert in descending global order so every bucket ends up
+        // descending-sorted with plain appends.
+        for mut e in all.into_iter().rev() {
+            e.vb = self.vbucket_of(e.time);
+            self.buckets[(e.vb % self.nbuckets as u64) as usize].push(e);
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct HeapEntry<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for HeapEntry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for HeapEntry<E> {}
+
+impl<E> PartialOrd for HeapEntry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for HeapEntry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first. NaN times
+        // are rejected at push, so partial_cmp is total here.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The original binary-heap event queue, retained as the **executable
+/// specification** for [`EventQueue`]: same API, same observable
+/// behavior, O(log n) operations. The differential proptest
+/// (`rust/tests/calendar_queue_equivalence.rs`) replays randomized
+/// push/pop sequences against both and demands pop-for-pop equality,
+/// FIFO tie-breaks included.
+#[derive(Debug)]
+pub struct HeapEventQueue<E> {
+    heap: BinaryHeap<HeapEntry<E>>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+    stale: u64,
+    peak_len: usize,
+}
+
+impl<E> Default for HeapEventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> HeapEventQueue<E> {
+    pub fn new() -> Self {
+        HeapEventQueue {
+            heap: BinaryHeap::new(),
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+            stale: 0,
+            peak_len: 0,
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn note_stale(&mut self) {
+        self.stale += 1;
+    }
+
+    pub fn stale(&self) -> u64 {
+        self.stale
+    }
+
+    pub fn stale_ratio(&self) -> f64 {
+        self.stale as f64 / self.processed.max(1) as f64
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn peak_len(&self) -> usize {
+        self.peak_len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to now; must be
+    /// finite, matching the calendar implementation).
+    pub fn push_at(&mut self, at: SimTime, event: E) {
+        assert!(at.is_finite(), "non-finite event time {at}");
+        let t = if at < self.now { self.now } else { at };
+        self.heap.push(HeapEntry {
+            time: t,
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+        self.peak_len = self.peak_len.max(self.heap.len());
+    }
+
+    pub fn push_in(&mut self, delay: SimTime, event: E) {
+        assert!(delay >= 0.0 && !delay.is_nan(), "bad delay {delay}");
+        self.push_at(self.now + delay, event);
+    }
+
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
         let e = self.heap.pop()?;
         debug_assert!(e.time >= self.now, "time went backwards");
         self.now = e.time;
@@ -145,7 +419,6 @@ impl<E> EventQueue<E> {
         Some((e.time, e.event))
     }
 
-    /// Peek at the next event time without advancing.
     pub fn peek_time(&self) -> Option<SimTime> {
         self.heap.peek().map(|e| e.time)
     }
@@ -236,6 +509,13 @@ mod tests {
     }
 
     #[test]
+    #[should_panic]
+    fn infinite_time_rejected() {
+        let mut q = EventQueue::new();
+        q.push_at(f64::INFINITY, ());
+    }
+
+    #[test]
     fn stale_accounting() {
         let mut q = EventQueue::new();
         q.push_at(1.0, "live");
@@ -268,6 +548,85 @@ mod tests {
         q.push_at(4.0, ());
         // Draining doesn't lower the high-water mark.
         assert_eq!(q.peak_len(), 3);
+    }
+
+    /// Enough pushes to force several calendar resizes (grow past the
+    /// initial 8 buckets, then shrink while draining), with sub-width
+    /// spacing so many events share a virtual bucket.
+    #[test]
+    fn survives_resizes_in_order() {
+        let mut q = EventQueue::new();
+        for i in 0..500u64 {
+            // Deterministic scatter into [0, 5) with repeats.
+            q.push_at((i * 7919 % 500) as f64 / 100.0, i);
+        }
+        let mut popped = Vec::new();
+        while let Some((t, e)) = q.pop() {
+            popped.push((t, e));
+        }
+        assert_eq!(popped.len(), 500);
+        for w in popped.windows(2) {
+            assert!(
+                w[0].0 < w[1].0 || (w[0].0 == w[1].0 && w[0].1 < w[1].1),
+                "order violated: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    /// A far-future event (an outage horizon) among dense near-term
+    /// events exercises the direct-search fallback and must not disturb
+    /// ordering or the width estimate.
+    #[test]
+    fn far_future_outlier_pops_last() {
+        let mut q = EventQueue::new();
+        q.push_at(1.0e9, "horizon");
+        for i in 0..100u64 {
+            q.push_at(i as f64 * 1e-3, "dense");
+        }
+        for _ in 0..100 {
+            let (t, e) = q.pop().unwrap();
+            assert_eq!(e, "dense");
+            assert!(t < 1.0);
+        }
+        let (t, e) = q.pop().unwrap();
+        assert_eq!((t, e), (1.0e9, "horizon"));
+        assert!(q.is_empty());
+    }
+
+    /// Interleaved push/pop with a monotone clock — the DES access
+    /// pattern — across a resize boundary.
+    #[test]
+    fn interleaved_pop_push_stays_sorted() {
+        let mut q = EventQueue::new();
+        for i in 0..40u64 {
+            q.push_at(i as f64 * 0.1, i);
+        }
+        let mut last = -1.0f64;
+        let mut n = 0u64;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+            n += 1;
+            if n % 3 == 0 && n < 60 {
+                q.push_in(0.05, 1000 + n);
+            }
+        }
+        assert!(n > 40);
+    }
+
+    #[test]
+    fn heap_spec_same_basic_behavior() {
+        let mut q = HeapEventQueue::new();
+        q.push_at(3.0, "c");
+        q.push_at(1.0, "a");
+        q.push_at(1.0, "a2");
+        q.push_at(2.0, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "a2", "b", "c"]);
+        assert_eq!(q.processed(), 4);
+        assert_eq!(q.peak_len(), 4);
     }
 
     #[test]

@@ -1,0 +1,370 @@
+//! Parameterized multi-tier cluster topologies: the generalization of the
+//! paper's fixed 5-edge + 1-cloud testbed to EdgeShard-style fleets
+//! (arXiv:2405.14371 evaluates multi-tier, many-instance deployments; so
+//! does the cloud-edge routing study arXiv:2507.15553).
+//!
+//! A [`TopologyConfig`] is a list of [`TierSpec`]s — each a server
+//! template, a link template, and an instance count — that [`build`]s
+//! into the flat [`ClusterConfig`] every other layer already consumes
+//! (DES engine, schedulers, workload scaling, the live router via
+//! `Router::from_topology`). The paper testbed itself is the smallest
+//! preset, and `TopologyConfig::paper(..).build()` reproduces
+//! `ClusterConfig::paper(..)` field for field, so paper-scale runs are
+//! decision-identical whichever constructor they start from.
+//!
+//! Presets: [`TopologyConfig::paper`] (6 servers),
+//! [`TopologyConfig::edgeshard_10x`] (60 servers: 48 edge + 10 regional
+//! hubs + 2 cloud), [`TopologyConfig::edgeshard_100x`] (600 servers).
+//! "Hub" servers are mid-tier aggregation boxes — edge-kind (they sit on
+//! the LAN side of the WAN boundary, and edge-only baselines like AGOD
+//! may use them) with throughput, batching, and link specs between the
+//! paper's two extremes.
+//!
+//! [`build`]: TopologyConfig::build
+
+use super::cluster::{BandwidthMode, ClusterConfig};
+use super::energy::EnergyWeights;
+use super::net::LinkSpec;
+use super::server::{paper_testbed, ServerKind, ServerSpec};
+
+/// One homogeneous tier: `count` instances stamped from the server and
+/// link templates. Instance names are `{name}-{i}` (and `{name}-link-{i}`
+/// for links); a single-instance tier keeps the bare template names, so
+/// the paper preset reproduces the historical "cloud" / "cloud-uplink"
+/// names exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierSpec {
+    pub name: String,
+    pub count: usize,
+    pub server: ServerSpec,
+    pub link: LinkSpec,
+}
+
+/// A multi-tier topology description that lowers to [`ClusterConfig`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologyConfig {
+    pub name: String,
+    pub tiers: Vec<TierSpec>,
+    pub bandwidth: BandwidthMode,
+    pub weights: EnergyWeights,
+    pub seed: u64,
+}
+
+/// Total batch slots of the paper testbed (5×8 edge + 12 cloud) — the
+/// denominator of [`TopologyConfig::capacity_scale`].
+const PAPER_SLOTS: usize = 52;
+
+impl TopologyConfig {
+    /// An empty topology; add tiers with [`Self::with_tier`].
+    pub fn new(name: &str, bandwidth: BandwidthMode) -> Self {
+        TopologyConfig {
+            name: name.to_string(),
+            tiers: Vec::new(),
+            bandwidth,
+            weights: EnergyWeights::default(),
+            seed: 0xC1A0,
+        }
+    }
+
+    pub fn with_tier(mut self, tier: TierSpec) -> Self {
+        self.tiers.push(tier);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// The paper's testbed as a topology: one 5-instance edge tier + one
+    /// cloud server. `build()` equals `ClusterConfig::paper(..)` exactly.
+    pub fn paper(edge_model: &str, bandwidth: BandwidthMode) -> Self {
+        let servers = paper_testbed(edge_model);
+        Self::new("paper", bandwidth)
+            .with_tier(TierSpec {
+                name: "edge".into(),
+                count: 5,
+                server: servers[0].clone(),
+                link: LinkSpec::edge(0, false),
+            })
+            .with_tier(TierSpec {
+                name: "cloud".into(),
+                count: 1,
+                server: servers[5].clone(),
+                link: LinkSpec::cloud(false),
+            })
+    }
+
+    /// EdgeShard-style three-tier fleet at ~10x paper scale: 48 edge
+    /// devices, 10 regional hubs, 2 cloud instances (60 servers,
+    /// capacity_scale ≈ 10.2).
+    pub fn edgeshard_10x(edge_model: &str, bandwidth: BandwidthMode) -> Self {
+        Self::edgeshard(edge_model, bandwidth, "edgeshard-10x", 48, 10, 2)
+    }
+
+    /// EdgeShard-style three-tier fleet at ~100x paper scale: 480 edge
+    /// devices, 100 regional hubs, 20 cloud instances (600 servers,
+    /// capacity_scale ≈ 101.5).
+    pub fn edgeshard_100x(edge_model: &str, bandwidth: BandwidthMode) -> Self {
+        Self::edgeshard(edge_model, bandwidth, "edgeshard-100x", 480, 100, 20)
+    }
+
+    fn edgeshard(
+        edge_model: &str,
+        bandwidth: BandwidthMode,
+        name: &str,
+        edges: usize,
+        hubs: usize,
+        clouds: usize,
+    ) -> Self {
+        let paper = paper_testbed(edge_model);
+        let edge = paper[0].clone();
+        let cloud = paper[5].clone();
+        // Regional hub: LAN-side aggregation box between the paper's two
+        // extremes — faster and better-batched than an edge device, far
+        // cheaper per watt than the cloud GPU.
+        let hub = ServerSpec {
+            name: "hub".into(),
+            kind: ServerKind::Edge,
+            prefill_rate: edge.prefill_rate * 2.2,
+            decode_rate: edge.decode_rate * 1.25,
+            slots: 12,
+            batch_alpha: 0.68,
+            p_infer: 120.0,
+            p_idle: 14.0,
+            compute_capacity: 12.0,
+            queue_limit: 3,
+        };
+        let hub_link = LinkSpec {
+            name: "hub-link".into(),
+            bandwidth_bps: 400.0e6,
+            per_flow_cap_bps: 25.0e6,
+            rtt_s: 0.02,
+            fluctuation: 0.0,
+            fluct_period: 0.5,
+            energy_j_per_mbit: 1.5,
+        };
+        Self::new(name, bandwidth)
+            .with_tier(TierSpec {
+                name: "edge".into(),
+                count: edges,
+                server: edge,
+                link: LinkSpec::edge(0, false),
+            })
+            .with_tier(TierSpec {
+                name: "hub".into(),
+                count: hubs,
+                server: hub,
+                link: hub_link,
+            })
+            .with_tier(TierSpec {
+                name: "cloud".into(),
+                count: clouds,
+                server: cloud,
+                link: LinkSpec::cloud(false),
+            })
+    }
+
+    /// Preset lookup for CLI flags: "paper" | "edgeshard-10x" |
+    /// "edgeshard-100x".
+    pub fn by_name(name: &str, edge_model: &str, bandwidth: BandwidthMode) -> Option<Self> {
+        match name {
+            "paper" => Some(Self::paper(edge_model, bandwidth)),
+            "edgeshard-10x" | "10x" => Some(Self::edgeshard_10x(edge_model, bandwidth)),
+            "edgeshard-100x" | "100x" => Some(Self::edgeshard_100x(edge_model, bandwidth)),
+            _ => None,
+        }
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.tiers.iter().map(|t| t.count).sum()
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.tiers.iter().map(|t| t.count * t.server.slots).sum()
+    }
+
+    /// Serving capacity relative to the paper testbed, by batch slots —
+    /// the factor per-tier arrival rates should scale by to keep offered
+    /// load comparable across topologies.
+    pub fn capacity_scale(&self) -> f64 {
+        self.total_slots() as f64 / PAPER_SLOTS as f64
+    }
+
+    /// A paper-calibrated arrival rate (req/s) scaled to this topology's
+    /// capacity.
+    pub fn scaled_rate(&self, paper_rate: f64) -> f64 {
+        paper_rate * self.capacity_scale()
+    }
+
+    /// Lower to the flat per-server [`ClusterConfig`] every simulation
+    /// layer consumes. The bandwidth mode is applied to each link template
+    /// here (Fluctuating grants a template's own amplitude when it has
+    /// one, else the paper's ±20 %), mirroring what
+    /// `ClusterConfig::paper` does with `LinkSpec::edge`/`cloud`.
+    pub fn build(&self) -> ClusterConfig {
+        assert!(!self.tiers.is_empty(), "topology has at least one tier");
+        let mut servers = Vec::with_capacity(self.n_servers());
+        let mut links = Vec::with_capacity(self.n_servers());
+        for tier in &self.tiers {
+            for i in 0..tier.count {
+                let mut server = tier.server.clone();
+                let mut link = tier.link.clone();
+                if tier.count == 1 {
+                    server.name = tier.name.clone();
+                } else {
+                    server.name = format!("{}-{i}", tier.name);
+                    link.name = format!("{}-link-{i}", tier.name);
+                }
+                link.fluctuation = match self.bandwidth {
+                    BandwidthMode::Stable => 0.0,
+                    BandwidthMode::Fluctuating => {
+                        if tier.link.fluctuation > 0.0 {
+                            tier.link.fluctuation
+                        } else {
+                            0.2
+                        }
+                    }
+                };
+                servers.push(server);
+                links.push(link);
+            }
+        }
+        ClusterConfig {
+            servers,
+            links,
+            bandwidth: self.bandwidth,
+            weights: self.weights,
+            outages: Vec::new(),
+            seed: self.seed,
+            churn_guard: true,
+        }
+    }
+}
+
+pub const TOPOLOGY_PRESETS: [&str; 3] = ["paper", "edgeshard-10x", "edgeshard-100x"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::csucb::CsUcb;
+    use crate::sim::engine::simulate;
+    use crate::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
+
+    /// The topology path must reproduce the historical constructor bit for
+    /// bit — that is what keeps every existing paper-scale result
+    /// comparable.
+    #[test]
+    fn paper_preset_builds_exact_paper_config() {
+        for model in crate::sim::server::EDGE_MODELS {
+            for mode in [BandwidthMode::Stable, BandwidthMode::Fluctuating] {
+                let from_topo = TopologyConfig::paper(model, mode).build();
+                let direct = ClusterConfig::paper(model, mode);
+                assert_eq!(from_topo, direct, "{model} {mode:?}");
+            }
+        }
+    }
+
+    /// And therefore paper-topology runs are decision-identical whichever
+    /// constructor produced the config.
+    #[test]
+    fn paper_preset_runs_are_outcome_identical() {
+        let trace = generate(
+            &WorkloadConfig::default()
+                .with_requests(300)
+                .with_arrivals(ArrivalProcess::Poisson { rate: 12.0 })
+                .with_seed(9),
+        );
+        let direct = ClusterConfig::paper("llama2-7b", BandwidthMode::Fluctuating);
+        let topo = TopologyConfig::paper("llama2-7b", BandwidthMode::Fluctuating).build();
+        let mut s1 = CsUcb::with_defaults(direct.n_servers());
+        let mut s2 = CsUcb::with_defaults(topo.n_servers());
+        let r1 = simulate(&direct, &trace, &mut s1);
+        let r2 = simulate(&topo, &trace, &mut s2);
+        assert_eq!(r1.outcomes.len(), r2.outcomes.len());
+        for (a, b) in r1.outcomes.iter().zip(&r2.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.server, b.server);
+            assert_eq!(a.completed_at.to_bits(), b.completed_at.to_bits());
+        }
+        assert_eq!(r1.events_processed, r2.events_processed);
+    }
+
+    #[test]
+    fn preset_shapes_and_scales() {
+        let p = TopologyConfig::paper("yi-6b", BandwidthMode::Stable);
+        assert_eq!(p.n_servers(), 6);
+        assert!((p.capacity_scale() - 1.0).abs() < 1e-12);
+
+        let t10 = TopologyConfig::edgeshard_10x("yi-6b", BandwidthMode::Stable);
+        assert_eq!(t10.n_servers(), 60);
+        assert!(
+            t10.capacity_scale() > 9.0 && t10.capacity_scale() < 12.0,
+            "scale {}",
+            t10.capacity_scale()
+        );
+        assert!((t10.scaled_rate(15.0) - 15.0 * t10.capacity_scale()).abs() < 1e-9);
+
+        let t100 = TopologyConfig::edgeshard_100x("yi-6b", BandwidthMode::Stable);
+        assert_eq!(t100.n_servers(), 600);
+        assert!(
+            t100.capacity_scale() > 90.0 && t100.capacity_scale() < 120.0,
+            "scale {}",
+            t100.capacity_scale()
+        );
+
+        for name in TOPOLOGY_PRESETS {
+            assert!(TopologyConfig::by_name(name, "yi-6b", BandwidthMode::Stable).is_some());
+        }
+        assert!(TopologyConfig::by_name("nope", "yi-6b", BandwidthMode::Stable).is_none());
+    }
+
+    #[test]
+    fn build_wires_heterogeneous_tiers() {
+        let cfg = TopologyConfig::edgeshard_10x("llama2-7b", BandwidthMode::Stable).build();
+        assert_eq!(cfg.n_servers(), 60);
+        assert_eq!(cfg.links.len(), 60);
+        // Tier boundaries by name.
+        assert_eq!(cfg.servers[0].name, "edge-0");
+        assert_eq!(cfg.servers[47].name, "edge-47");
+        assert_eq!(cfg.servers[48].name, "hub-0");
+        assert_eq!(cfg.servers[58].name, "cloud-0");
+        assert_eq!(cfg.servers[59].name, "cloud-1");
+        // Hubs sit between the extremes on throughput; clouds are Cloud.
+        assert!(cfg.servers[48].prefill_rate > cfg.servers[0].prefill_rate);
+        assert!(cfg.servers[48].prefill_rate < cfg.servers[58].prefill_rate);
+        assert_eq!(cfg.servers[48].kind, ServerKind::Edge);
+        assert_eq!(cfg.servers[58].kind, ServerKind::Cloud);
+        assert_eq!(cfg.cloud_index(), 58);
+        // Heterogeneous links per tier.
+        assert_eq!(cfg.links[48].name, "hub-link-0");
+        assert!(cfg.links[48].bandwidth_bps > cfg.links[0].bandwidth_bps);
+        assert!(cfg.links[0].fluctuation == 0.0);
+        // Fluctuating mode switches every tier's amplitude on.
+        let f = TopologyConfig::edgeshard_10x("llama2-7b", BandwidthMode::Fluctuating).build();
+        assert!(f.links.iter().all(|l| l.fluctuation > 0.0));
+    }
+
+    /// A short streaming run on the 10x preset end to end: every layer
+    /// (engine, scheduler arms sized to 60 servers, candidate pruning)
+    /// accepts the large topology.
+    #[test]
+    fn edgeshard_10x_runs_end_to_end() {
+        let topo = TopologyConfig::edgeshard_10x("llama2-7b", BandwidthMode::Stable);
+        let cfg = topo.build();
+        let trace = generate(
+            &WorkloadConfig::default()
+                .with_requests(500)
+                .with_arrivals(ArrivalProcess::Poisson {
+                    rate: topo.scaled_rate(15.0),
+                })
+                .with_deadline_range(2.0, 6.0)
+                .with_seed(5),
+        );
+        let mut s = CsUcb::with_defaults(cfg.n_servers());
+        let rep = simulate(&cfg, &trace, &mut s);
+        assert_eq!(rep.outcomes.len(), 500);
+        assert!(rep.success_rate > 0.5, "success {}", rep.success_rate);
+        assert!(rep.peak_event_queue_len < 500);
+    }
+}

@@ -137,6 +137,14 @@ impl WorkloadConfig {
         self
     }
 
+    /// Poisson arrivals at `rate` req/s — the common case, and the knob
+    /// topology-scaled runs turn (`TopologyConfig::scaled_rate`): one
+    /// workload description per tier, each at its own capacity-matched
+    /// rate, merged with `workload::MergedArrivals`.
+    pub fn with_rate(self, rate: f64) -> Self {
+        self.with_arrivals(ArrivalProcess::Poisson { rate })
+    }
+
     /// Uniform deadline range override for every class (paper: U[2, 6] s).
     pub fn with_deadline_range(mut self, lo: f64, hi: f64) -> Self {
         for p in &mut self.profiles {
@@ -303,6 +311,12 @@ mod tests {
             assert!(r.prompt_tokens >= 1 && r.prompt_tokens <= 100);
             assert!(r.output_tokens >= 1 && r.output_tokens <= 64);
         }
+    }
+
+    #[test]
+    fn with_rate_is_poisson_shorthand() {
+        let cfg = WorkloadConfig::default().with_rate(42.0);
+        assert_eq!(cfg.arrivals, ArrivalProcess::Poisson { rate: 42.0 });
     }
 
     #[test]

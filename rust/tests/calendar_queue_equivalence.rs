@@ -1,0 +1,183 @@
+//! Differential tests for the calendar-queue event structure.
+//!
+//! `sim::time::EventQueue` (calendar buckets, O(1) amortized) must be
+//! observationally identical to `sim::time::HeapEventQueue` (the retained
+//! binary-heap implementation, kept as the executable specification):
+//! same pop order — FIFO on exact time ties included — same clock, same
+//! past-date clamping, same `processed`/`stale`/`peak_len` accounting.
+//! The property test replays randomized operation sequences against both
+//! side by side; the scenario tests pin the access patterns the DES
+//! actually produces (same-instant bursts, far-future outage horizons,
+//! monotone pop-push interleaving). A 10x-topology streaming run then
+//! checks the scale property the calendar queue exists for: a bounded
+//! event heap at 60 servers and ~10x paper arrival rate.
+
+use perllm::scheduler::csucb::CsUcb;
+use perllm::sim::cluster::BandwidthMode;
+use perllm::sim::engine::simulate_stream;
+use perllm::sim::time::{EventQueue, HeapEventQueue};
+use perllm::sim::topology::TopologyConfig;
+use perllm::util::proptest::{check, Gen};
+use perllm::workload::generator::{ArrivalProcess, WorkloadConfig, WorkloadGen};
+
+/// Pop both queues once and demand bit-identical observations.
+fn pop_both(cal: &mut EventQueue<u64>, heap: &mut HeapEventQueue<u64>) {
+    let a = cal.pop();
+    let b = heap.pop();
+    match (a, b) {
+        (None, None) => {}
+        (Some((ta, ea)), Some((tb, eb))) => {
+            assert_eq!(ta.to_bits(), tb.to_bits(), "pop times diverged");
+            assert_eq!(ea, eb, "pop order diverged at t={ta}");
+        }
+        (a, b) => panic!("emptiness diverged: calendar {a:?} vs heap {b:?}"),
+    }
+    assert_eq!(cal.now().to_bits(), heap.now().to_bits());
+    assert_eq!(cal.len(), heap.len());
+    assert_eq!(cal.processed(), heap.processed());
+}
+
+/// One randomized operation sequence applied to both implementations.
+fn run_case(g: &mut Gen) {
+    let mut cal: EventQueue<u64> = EventQueue::new();
+    let mut heap: HeapEventQueue<u64> = HeapEventQueue::new();
+    // Remembered push times so later pushes can reuse one bit-for-bit
+    // (the FIFO tie-break case a float generator would otherwise
+    // essentially never produce).
+    let mut seen_times: Vec<f64> = Vec::new();
+    let mut next_val = 0u64;
+    let ops = g.usize(1, 20 + 20 * g.size());
+    for _ in 0..ops {
+        let roll = g.f64(0.0, 1.0);
+        if roll < 0.55 {
+            // Push, drawn from the regimes the DES produces.
+            let t = if !seen_times.is_empty() && g.chance(0.25) {
+                // Exact repeat: same-instant burst / FIFO tie.
+                *g.pick(&seen_times)
+            } else if g.chance(0.1) {
+                // Past-dated (clamps to now in both).
+                (cal.now() - g.f64(0.0, 5.0)).max(0.0)
+            } else if g.chance(0.05) {
+                // Far-future horizon (outage end): exercises the
+                // calendar's direct-search fallback and width sampling.
+                g.f64(1.0e5, 1.0e9)
+            } else if g.chance(0.5) {
+                // Dense near-term completions.
+                cal.now() + g.f64(0.0, 1.0e-2)
+            } else {
+                cal.now() + g.f64(0.0, 10.0)
+            };
+            seen_times.push(t);
+            cal.push_at(t, next_val);
+            heap.push_at(t, next_val);
+            next_val += 1;
+            assert_eq!(cal.len(), heap.len());
+            assert_eq!(cal.peak_len(), heap.peak_len());
+        } else if roll < 0.9 {
+            pop_both(&mut cal, &mut heap);
+        } else {
+            // Stale accounting is pure bookkeeping; mirror it anyway.
+            cal.note_stale();
+            heap.note_stale();
+            assert_eq!(cal.stale(), heap.stale());
+        }
+    }
+    // Drain to empty: the full residual orders must agree.
+    while !cal.is_empty() || !heap.is_empty() {
+        pop_both(&mut cal, &mut heap);
+    }
+    pop_both(&mut cal, &mut heap); // both stay empty
+    assert_eq!(cal.peak_len(), heap.peak_len());
+    assert_eq!(cal.stale(), heap.stale());
+    assert!((cal.stale_ratio() - heap.stale_ratio()).abs() < 1e-15);
+}
+
+#[test]
+fn calendar_queue_matches_heap_spec_on_random_sequences() {
+    check("calendar queue ≡ binary heap", 192, run_case);
+}
+
+/// `push_in` goes through the same clamp/order machinery relative to a
+/// moving clock; check it differentially too.
+#[test]
+fn calendar_queue_matches_heap_spec_with_relative_pushes() {
+    check("calendar push_in ≡ heap push_in", 96, |g: &mut Gen| {
+        let mut cal: EventQueue<u64> = EventQueue::new();
+        let mut heap: HeapEventQueue<u64> = HeapEventQueue::new();
+        let mut v = 0u64;
+        for _ in 0..g.usize(1, 10 + 10 * g.size()) {
+            if g.chance(0.6) {
+                let d = if g.chance(0.3) {
+                    0.0 // zero-delay: fires at `now`, FIFO after peers
+                } else {
+                    g.f64(0.0, 2.0)
+                };
+                cal.push_in(d, v);
+                heap.push_in(d, v);
+                v += 1;
+            } else {
+                pop_both(&mut cal, &mut heap);
+            }
+        }
+        while !cal.is_empty() {
+            pop_both(&mut cal, &mut heap);
+        }
+    });
+}
+
+/// The DES peeks the queue in tests and diagnostics: peek must name the
+/// same next event time as the spec without disturbing state.
+#[test]
+fn peek_matches_spec() {
+    check("calendar peek ≡ heap peek", 64, |g: &mut Gen| {
+        let mut cal: EventQueue<u64> = EventQueue::new();
+        let mut heap: HeapEventQueue<u64> = HeapEventQueue::new();
+        for i in 0..g.usize(0, 40) {
+            let t = g.f64(0.0, 100.0);
+            cal.push_at(t, i as u64);
+            heap.push_at(t, i as u64);
+            assert_eq!(
+                cal.peek_time().map(f64::to_bits),
+                heap.peek_time().map(f64::to_bits)
+            );
+        }
+        while !cal.is_empty() {
+            assert_eq!(
+                cal.peek_time().map(f64::to_bits),
+                heap.peek_time().map(f64::to_bits)
+            );
+            pop_both(&mut cal, &mut heap);
+        }
+        assert_eq!(cal.peek_time(), None);
+        assert_eq!(heap.peek_time(), None);
+    });
+}
+
+/// Scale check: a 20k-request streaming run on the 60-server EdgeShard
+/// preset at capacity-scaled load keeps the event heap bounded by
+/// in-flight concurrency, orders of magnitude below the request count —
+/// the property that makes 1M-request fleet runs feasible.
+#[test]
+fn edgeshard_10x_streaming_keeps_event_heap_bounded() {
+    let n = 20_000;
+    let topo = TopologyConfig::edgeshard_10x("llama2-7b", BandwidthMode::Stable);
+    let cfg = topo.build();
+    let workload = WorkloadConfig::default()
+        .with_requests(n)
+        .with_arrivals(ArrivalProcess::Poisson {
+            rate: topo.scaled_rate(15.0),
+        })
+        .with_deadline_range(2.0, 6.0)
+        .with_seed(42);
+    let mut s = CsUcb::with_defaults(cfg.n_servers());
+    let mut source = WorkloadGen::new(&workload);
+    let rep = simulate_stream(&cfg, &mut source, &mut s);
+    assert_eq!(rep.outcomes.len(), n, "every request resolved");
+    assert!(
+        rep.peak_event_queue_len < n / 10,
+        "event heap scaled with trace length: peak {} on {n} requests",
+        rep.peak_event_queue_len
+    );
+    assert!(rep.events_processed > n as u64);
+    assert!(rep.success_rate > 0.5, "success {}", rep.success_rate);
+}

@@ -40,6 +40,7 @@ fn random_view(g: &mut Gen, n: usize) -> ClusterView {
         now: 0.0,
         servers,
         weights: EnergyWeights::default(),
+        candidates: Vec::new(),
     }
 }
 
