@@ -18,6 +18,8 @@
 //! Usage: cargo run --release --example paper_scale_sim [-- --requests N]
 //!                   [--model yi-6b|llama2-7b|llama3-8b|yi-9b] [--seed S]
 //!                   [--topology paper|edgeshard-10x|edgeshard-100x]
+//!                   [--service-model ps|token-batch|token-batch-edge]
+//!                   [--mix single|tiered]
 //!                   [--rate R]
 //!                   [--schedulers fineinfer,agod,rewardless,cs-ucb]
 //!                   [--modes stable|fluctuating|both]
@@ -27,6 +29,18 @@
 //! multi-tier preset (60 / 600 servers); the Poisson arrival rate then
 //! defaults to the paper's 15 req/s scaled by the topology's capacity, so
 //! offered load stays comparable across scales (override with `--rate`).
+//!
+//! `--service-model` selects the token-level server model
+//! (`sim::service_model`): `ps` (the historical fluid, default),
+//! `token-batch` (discrete-iteration continuous batching on every tier),
+//! or `token-batch-edge` (token-batch edge tiers under PS cloud tiers).
+//!
+//! `--mix tiered` replaces the single fleet-wide class mix with one
+//! arrival stream per tier — locality-shaped class weights (edge tiers
+//! chat/translate-heavy, cloud summarize/code-heavy) at capacity-
+//! proportional rates — k-way merged through `workload::MergedArrivals`:
+//! the EdgeShard locality scenario from the CLI.
+//!
 //! The 100x fleet-scale acceptance run:
 //!
 //! ```text
@@ -46,6 +60,54 @@ use perllm::sim::cluster::BandwidthMode;
 use perllm::sim::engine::simulate_stream;
 use perllm::sim::topology::TopologyConfig;
 use perllm::workload::generator::{ArrivalProcess, WorkloadConfig, WorkloadGen};
+use perllm::workload::{ArrivalSource, MergedArrivals};
+
+/// Locality-shaped class weights per tier (`--mix tiered`), in
+/// `ServiceClass::ALL` order (Chat, Summarize, Translate, Code): edge
+/// tiers serve the interactive short-form traffic, hubs the default
+/// blend, cloud tiers the long-form heavy classes.
+fn tier_class_weights(tier_name: &str) -> [f64; 4] {
+    match tier_name {
+        "edge" => [0.60, 0.05, 0.30, 0.05],
+        "cloud" => [0.15, 0.40, 0.10, 0.35],
+        _ => [0.40, 0.20, 0.25, 0.15],
+    }
+}
+
+/// One workload description per tier: class weights by tier locality,
+/// requests and Poisson rate split proportionally to the tier's share of
+/// the fleet's batch slots (so total offered load matches the single-mix
+/// run), seeds decorrelated per tier.
+fn tier_workloads(
+    topo: &TopologyConfig,
+    n: usize,
+    rate: f64,
+    seed: u64,
+) -> Vec<WorkloadConfig> {
+    let total_slots = topo.total_slots() as f64;
+    let mut out = Vec::with_capacity(topo.tiers.len());
+    let mut assigned = 0usize;
+    for (i, tier) in topo.tiers.iter().enumerate() {
+        let share = (tier.count * tier.server.slots) as f64 / total_slots;
+        let tier_n = if i + 1 == topo.tiers.len() {
+            // Remainder keeps the total exact; saturating, because the
+            // earlier tiers' rounding can overshoot a tiny n.
+            n.saturating_sub(assigned)
+        } else {
+            ((n as f64 * share).round() as usize).min(n.saturating_sub(assigned))
+        };
+        assigned += tier_n;
+        out.push(
+            WorkloadConfig::default()
+                .with_requests(tier_n)
+                .with_arrivals(ArrivalProcess::Poisson { rate: rate * share })
+                .with_deadline_range(2.0, 6.0)
+                .with_class_weights(tier_class_weights(&tier.name))
+                .with_seed(seed ^ (0x9E37_79B9 * (i as u64 + 1))),
+        );
+    }
+    out
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -60,6 +122,12 @@ fn main() {
     let model = get("--model", "llama2-7b");
     let seed: u64 = get("--seed", "42").parse().expect("bad --seed");
     let topology = get("--topology", "paper");
+    let service_model = get("--service-model", "ps");
+    let mix = get("--mix", "single");
+    assert!(
+        mix == "single" || mix == "tiered",
+        "bad --mix {mix} (single|tiered)"
+    );
     let schedulers: Vec<String> = get("--schedulers", "fineinfer,agod,rewardless,cs-ucb")
         .split(',')
         .map(|s| s.trim().to_string())
@@ -100,11 +168,17 @@ fn main() {
 
     let mut floor_violations = 0usize;
     for mode in modes {
-        let topo = TopologyConfig::by_name(&topology, &model, mode).expect("checked above");
+        let topo = TopologyConfig::by_name(&topology, &model, mode)
+            .expect("checked above")
+            .with_service_model_by_name(&service_model)
+            .unwrap_or_else(|| {
+                panic!("bad --service-model {service_model} (ps|token-batch|token-batch-edge)")
+            });
         let cfg = topo.build();
         println!(
             "\n=== topology {topology} ({} servers, capacity {:.1}x paper), edge model {model}, \
-             {mode:?} bandwidth, {n} requests at {rate:.1} req/s (streamed) ===",
+             service model {service_model}, {mix} mix, {mode:?} bandwidth, \
+             {n} requests at {rate:.1} req/s (streamed) ===",
             cfg.n_servers(),
             capacity_scale
         );
@@ -120,8 +194,22 @@ fn main() {
                 "cs-ucb" => Box::new(CsUcb::with_defaults(ns)),
                 other => panic!("unknown scheduler {other}"),
             };
-            let mut source = WorkloadGen::new(&workload);
-            let rep = simulate_stream(&cfg, &mut source, s.as_mut());
+            let rep = if mix == "tiered" {
+                // One locality-shaped stream per tier, k-way merged: every
+                // scheduler still sees the identical merged sequence.
+                let tier_cfgs = tier_workloads(&topo, n, rate, seed);
+                let mut gens: Vec<WorkloadGen> =
+                    tier_cfgs.iter().map(WorkloadGen::new).collect();
+                let sources: Vec<&mut dyn ArrivalSource> = gens
+                    .iter_mut()
+                    .map(|g| g as &mut dyn ArrivalSource)
+                    .collect();
+                let mut source = MergedArrivals::new(sources);
+                simulate_stream(&cfg, &mut source, s.as_mut())
+            } else {
+                let mut source = WorkloadGen::new(&workload);
+                simulate_stream(&cfg, &mut source, s.as_mut())
+            };
             println!("{}", rep.summary_row());
             println!(
                 "    dropped {} (policy {}) late {} unfinished {}",

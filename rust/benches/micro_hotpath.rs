@@ -194,6 +194,42 @@ fn main() {
         json.push(("topo10x_20k_peak_event_heap", JsonValue::Num(peak_heap as f64)));
     }
 
+    // 7. Token-batch service model: the same 4000-request cs-ucb run with
+    //    every server on the discrete-iteration continuous-batching model
+    //    (`--service-model token-batch`). Tracks what the iteration-
+    //    granular completion schedule costs relative to the PS fluid's
+    //    O(1) virtual-time bumps (row 4) — the price of batching-accurate
+    //    physics on the event hot path.
+    {
+        let topo = TopologyConfig::paper("llama2-7b", BandwidthMode::Fluctuating)
+            .with_service_model_by_name("token-batch")
+            .expect("known service model");
+        let cfg = topo.build();
+        let workload = WorkloadConfig::default()
+            .with_requests(4_000)
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(42);
+        let mut events_per_sec = 0.0;
+        let mut stale_ratio = 0.0;
+        let mut success = 0.0;
+        rows.push(bench_fn("simulate cs-ucb 4000 reqs (token-batch)", 1, 5, || {
+            let mut s = CsUcb::with_defaults(cfg.n_servers());
+            let mut source = WorkloadGen::new(&workload);
+            let rep = simulate_stream(&cfg, &mut source, &mut s);
+            events_per_sec = rep.events_per_sec;
+            stale_ratio = rep.stale_ratio;
+            success = rep.success_rate;
+            std::hint::black_box(rep.success_rate);
+        }));
+        println!(
+            "  token-batch 4000 reqs: DES {events_per_sec:.0} events/s, \
+             stale ratio {stale_ratio:.3}, success {success:.3}"
+        );
+        json.push(("tokenbatch_4000_events_per_sec", JsonValue::Num(events_per_sec)));
+        json.push(("tokenbatch_4000_stale_ratio", JsonValue::Num(stale_ratio)));
+        json.push(("tokenbatch_4000_success_rate", JsonValue::Num(success)));
+    }
+
     println!("\n== L3 hot-path micro benches ==");
     for r in &rows {
         println!("{}", r.row());

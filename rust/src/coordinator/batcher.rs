@@ -89,6 +89,11 @@ struct Lane {
     max_new: usize,
     temperature: f32,
     top_k: usize,
+    /// Iterations the request spent queued before prefill, fixed at
+    /// admission — decode-path finishes report this (they used to
+    /// hardcode 0, losing queue-wait attribution for every request that
+    /// survived past prefill).
+    queued_iters: u64,
 }
 
 /// The continuous batcher over one model.
@@ -185,6 +190,7 @@ impl<M: StepModel> Batcher<M> {
                 max_new: req.max_new_tokens.min(self.model.max_seq() - prompt_len),
                 temperature: req.temperature,
                 top_k: req.top_k,
+                queued_iters: self.iter - 1 - submitted_iter,
             };
             lane.max_new = lane.max_new.max(1);
             // A 1-token budget finishes immediately after prefill.
@@ -196,7 +202,7 @@ impl<M: StepModel> Batcher<M> {
                     id: lane.id,
                     tokens: lane.generated,
                     prompt_tokens: prompt_len,
-                    queued_iters: self.iter - 1 - submitted_iter,
+                    queued_iters: lane.queued_iters,
                 });
             } else {
                 self.lanes.push(lane);
@@ -241,7 +247,7 @@ impl<M: StepModel> Batcher<M> {
                         id: lane.id,
                         tokens: lane.generated,
                         prompt_tokens: lane.pos + 1 - n_gen,
-                        queued_iters: 0,
+                        queued_iters: lane.queued_iters,
                     });
                 } else {
                     i += 1;
@@ -422,6 +428,35 @@ mod tests {
         b.submit(req(1, vec![1; 30], 100)); // only ~2 tokens of room
         let results = b.run_to_completion().unwrap();
         assert!(results[0].tokens.len() <= 2 + 1);
+    }
+
+    /// Regression: decode-path finishes used to hardcode `queued_iters:
+    /// 0`, so any request that generated more than its prefill token lost
+    /// its queue-wait attribution. Oversubscribe the bucket (8 requests,
+    /// bucket 4, several decode iterations each): the second wave must
+    /// report positive queued iterations, and the first wave zero.
+    #[test]
+    fn decode_path_reports_real_queued_iters() {
+        let mut b = Batcher::new(FakeModel::new(), 7);
+        for i in 0..8 {
+            b.submit(req(i, vec![1, 2], 4)); // 4 decode tokens each
+        }
+        let results = b.run_to_completion().unwrap();
+        assert_eq!(results.len(), 8);
+        let by_id = |id: u64| results.iter().find(|r| r.id == id).unwrap();
+        for i in 0..4 {
+            assert_eq!(by_id(i).queued_iters, 0, "first wave waited: req {i}");
+        }
+        for i in 4..8 {
+            assert!(
+                by_id(i).queued_iters > 0,
+                "second wave must report its wait: req {i} got {}",
+                by_id(i).queued_iters
+            );
+            // Every result came through the decode path (4 tokens > 1), so
+            // a zero here is exactly the old hardcode resurfacing.
+            assert_eq!(by_id(i).tokens.len(), 4);
+        }
     }
 
     #[test]

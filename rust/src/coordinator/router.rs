@@ -186,6 +186,14 @@ impl Router {
                 ServerView {
                     kind: w.kind,
                     predicted_time: predicted,
+                    // First token lands once everyone ahead has drained
+                    // plus one step of our own — telemetry has no
+                    // prefill/decode split, so one EMA token-time stands
+                    // in for our prefill; an idle worker then reports its
+                    // speed (never a flat 0.0), keeping the field's
+                    // contract consistent with the DES fill.
+                    predicted_ttft: ((queued + active) * expected_tokens + 1) as f64 * us_tok
+                        / 1.0e6,
                     compute_headroom: (cap - used).max(0.0),
                     compute_demand: 1.0,
                     bandwidth_headroom: 1.0e9,

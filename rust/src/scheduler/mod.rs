@@ -55,6 +55,13 @@ pub struct ServerView {
     /// Predicted end-to-end processing time if this request is assigned
     /// here *now* (upload fair-share + queue wait + stretched service).
     pub predicted_time: f64,
+    /// Predicted time to *first token* for this assignment (upload +
+    /// queue wait + stretched prefill), from the server's service model —
+    /// the honest TTFT estimate batching-aware models expose
+    /// (`sim::service_model::ServicePrediction`). Always
+    /// `<= predicted_time`; TTFT-SLO policies read this, deadline
+    /// policies keep using `predicted_time`.
+    pub predicted_ttft: f64,
     /// Remaining compute units (paper C2 headroom).
     pub compute_headroom: f64,
     /// Compute units this request would consume (paper C_i).
@@ -380,6 +387,7 @@ mod tests {
             .map(|(i, p)| ServerView {
                 kind: if i == 0 { ServerKind::Cloud } else { ServerKind::Edge },
                 predicted_time: p,
+                predicted_ttft: 0.5 * p,
                 compute_headroom: 2.0,
                 compute_demand: 0.5,
                 bandwidth_headroom: 50.0e6,

@@ -12,6 +12,7 @@
 use super::energy::{EnergyBreakdown, EnergyWeights};
 use super::net::{LinkSim, LinkSpec};
 use super::server::{paper_testbed, ServerKind, ServerSim, ServerSpec};
+use super::service_model::ServiceModel;
 use super::time::SimTime;
 use crate::scheduler::{ClusterView, ServerView, ViewSource};
 use crate::workload::service::ServiceRequest;
@@ -231,13 +232,17 @@ impl ClusterSim {
                 .zip(&self.in_flight)
                 .map(|((srv, link), fl)| {
                     let tx = link.predict_tx_time(req.payload_bytes);
-                    let service = srv.predict_service_time_with(req, fl.n, fl.work_s);
+                    let service = srv.predict(req, fl.n, fl.work_s);
                     // Bandwidth the upload needs to finish inside a nominal
                     // 1-second window (paper C3's B_i).
                     let bw_demand = req.payload_bytes as f64 * 8.0;
                     ServerView {
                         kind: srv.spec.kind,
-                        predicted_time: tx + service,
+                        predicted_time: tx + service.total_s,
+                        // Honest first-token estimate from the service
+                        // model (queue wait + stretched prefill), behind
+                        // the same upload.
+                        predicted_ttft: tx + service.ttft_s,
                         compute_headroom: srv.compute_headroom_with(fl.n),
                         compute_demand: ServerSpec::compute_demand(req),
                         bandwidth_headroom: link.bandwidth_headroom(),
@@ -245,14 +250,14 @@ impl ClusterSim {
                         tx_energy_est: link.spec.tx_energy(req.payload_bytes),
                         infer_energy_est: (srv.spec.p_infer - srv.spec.p_idle)
                             * srv.spec.solo_work(req),
-                        n_active: srv.queue.n_active(),
-                        n_waiting: srv.queue.n_waiting(),
+                        n_active: srv.n_active(),
+                        n_waiting: srv.n_waiting(),
                         solo_time_est: link.spec.solo_time(req.payload_bytes)
                             + srv.spec.solo_work(req),
                         // Raw occupancy (no in-flight bookkeeping): what an
                         // external observer without router state sees.
-                        occupancy: (srv.queue.n_active() + srv.queue.n_waiting()) as f64
-                            / (srv.queue.max_active() + srv.spec.queue_limit) as f64,
+                        occupancy: (srv.n_active() + srv.n_waiting()) as f64
+                            / (srv.model.slot_capacity() + srv.model.queue_capacity()) as f64,
                     }
                 }),
         );
@@ -339,6 +344,12 @@ mod tests {
         assert_eq!(v.servers.len(), 6);
         for sv in &v.servers {
             assert!(sv.predicted_time > 0.0 && sv.predicted_time.is_finite());
+            assert!(
+                sv.predicted_ttft > 0.0 && sv.predicted_ttft <= sv.predicted_time,
+                "ttft {} vs total {}",
+                sv.predicted_ttft,
+                sv.predicted_time
+            );
             assert!(sv.tx_energy_est > 0.0);
             assert!(sv.infer_energy_est > 0.0);
         }
@@ -431,7 +442,7 @@ mod tests {
 
         // Saturate edge 0: 8 slots + 2 waiting places.
         for j in 0..10 {
-            sim.servers[0].queue.push(j, 1.0, 0.0);
+            sim.servers[0].admit(j, &req(), 0.0);
             sim.refresh_admissibility(0);
         }
         assert!(sim.servers[0].would_drop());
@@ -440,12 +451,17 @@ mod tests {
         assert_eq!(v.candidates, vec![1, 2, 3, 4, 5]);
 
         // Drain it again: candidates disappear (full-scan sentinel).
-        sim.servers[0].queue.advance(10.0, 1.0);
         let mut buf = Vec::new();
-        sim.servers[0].queue.reap_into(10.0, 1.0, &mut buf);
-        sim.refresh_admissibility(0);
+        let mut t = 0.0;
+        while sim.servers[0].n_active() + sim.servers[0].n_waiting() > 0 {
+            t += 100.0;
+            sim.servers[0].advance_to(t);
+            sim.servers[0].reap_into(t, &mut buf);
+            sim.refresh_admissibility(0);
+            assert!(t < 1e4, "server failed to drain");
+        }
         assert_eq!(sim.n_admissible(), 6);
-        sim.view_into_at(&req(), 10.0, &mut v);
+        sim.view_into_at(&req(), t, &mut v);
         assert!(v.candidates.is_empty());
     }
 }

@@ -249,6 +249,14 @@ impl<'a> Engine<'a> {
         engine
     }
 
+    /// Mutable access to the cluster before [`Self::run`] — the hook the
+    /// executable-spec identity tests use to swap server `ServiceModel`
+    /// implementations (e.g. the pre-trait reference PS model) under an
+    /// otherwise identical engine.
+    pub fn cluster_mut(&mut self) -> &mut ClusterSim {
+        &mut self.cluster
+    }
+
     /// Pull the next request from the source and schedule its arrival, or
     /// arm the horizon guard once the source is exhausted. The invariant —
     /// at most one pending `Arrival` event — is what keeps the event heap
@@ -474,8 +482,7 @@ impl<'a> Engine<'a> {
                     self.fail(now, svc, server);
                     return;
                 }
-                let work = srv.spec.solo_work(&self.svc[svc].req);
-                srv.queue.push(svc as u64, work, now);
+                srv.admit(svc as u64, &self.svc[svc].req, now);
                 self.cluster.refresh_admissibility(server);
                 self.svc[svc].phase = Phase::Computing;
                 self.svc[svc].compute_started_at = now;
@@ -489,9 +496,8 @@ impl<'a> Engine<'a> {
                 // Consumed: see the LinkDone cache note.
                 self.server_sched[server].live = false;
                 self.cluster.servers[server].advance_to(now);
-                let rate = self.cluster.servers[server].per_job_rate();
                 let mut done = std::mem::take(&mut self.reap_buf);
-                self.cluster.servers[server].queue.reap_into(now, rate, &mut done);
+                self.cluster.servers[server].reap_into(now, &mut done);
                 self.cluster.refresh_admissibility(server);
                 for job in &done {
                     self.complete(now, job.id as usize, server, job.energy_j);
@@ -598,13 +604,18 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Server twin of [`Self::reschedule_link`], same guard.
+    /// Server twin of [`Self::reschedule_link`], same guard — expressed
+    /// against the model-agnostic [`ServerSim::completion_key`] /
+    /// [`ServerSim::next_completion_in`] pair. For the PS model the key
+    /// is exactly the historical (finish-work top, per-job rate) pair and
+    /// the completion estimate the same float expression, so PS runs are
+    /// bit-identical to the pre-trait engine (pinned by
+    /// `tests/service_model_identity.rs`).
     fn reschedule_server(&mut self, si: usize) {
         let srv = &mut self.cluster.servers[si];
-        let rate = srv.per_job_rate();
         let cache = &mut self.server_sched[si];
-        match srv.queue.peek_finish_work() {
-            Some(fw) if rate > 0.0 => {
+        match srv.completion_key() {
+            Some((fw, rate)) => {
                 if cache.live && cache.fw == fw && cache.rate == rate {
                     if self.churn_guard {
                         return;
@@ -614,7 +625,9 @@ impl<'a> Engine<'a> {
                     return;
                 }
                 let gen = srv.gen.invalidate();
-                let dt = (fw - srv.queue.attained()).max(0.0) / rate;
+                let dt = srv
+                    .next_completion_in()
+                    .expect("completion key implies a completion estimate");
                 let at = self.events.now() + dt;
                 self.events.push_at(at, Ev::ServerDone { server: si, gen });
                 *cache = SchedCache {
@@ -624,7 +637,7 @@ impl<'a> Engine<'a> {
                     at,
                 };
             }
-            _ => {
+            None => {
                 srv.gen.invalidate();
                 cache.live = false;
             }

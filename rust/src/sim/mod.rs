@@ -9,11 +9,15 @@ pub mod engine;
 pub mod net;
 pub mod ps;
 pub mod server;
+pub mod service_model;
 pub mod time;
+pub mod token_batch;
 pub mod topology;
 
 pub use cluster::{BandwidthMode, ClusterConfig, ClusterSim, Outage};
 pub use energy::{EnergyBreakdown, EnergyWeights};
 pub use engine::{simulate, Engine, RunReport};
 pub use server::{ServerKind, ServerSpec, EDGE_MODELS};
+pub use service_model::{PsServiceModel, ServiceModel, ServiceModelKind, ServicePrediction};
+pub use token_batch::TokenBatchModel;
 pub use topology::{TierSpec, TopologyConfig, TOPOLOGY_PRESETS};

@@ -1,14 +1,38 @@
-//! Server model: an edge CPU box or the cloud GPU, serving requests under
-//! continuous batching with a sub-linear batching-efficiency curve.
+//! Server layer: static server descriptions ([`ServerSpec`], including
+//! which [`ServiceModelKind`] the server runs) and the per-server DES
+//! state ([`ServerSim`]) — energy/busy integrators and the outage
+//! multiplier around a pluggable [`ServiceModel`].
 //!
 //! Calibration (DESIGN.md §6) follows the paper's Figure-2 measurements:
 //! the cloud A100 is ~6-10x faster per token and batches well; the edge
 //! Xeon is slower but draws ~8x less power. A request's *solo work* is
-//! `prompt/prefill_rate + output/decode_rate` seconds; with `n` requests
-//! in the batch each receives rate `eff(n)/n`, so total throughput grows
-//! sub-linearly up to `slots` concurrent requests (then FIFO queueing).
+//! `prompt/prefill_rate + output/decode_rate` seconds; how concurrent
+//! requests share the server is the service model's business — the PS
+//! fluid splits rate `eff(n)/n` per job, the token-batch model serves
+//! discrete iterations (see `sim/service_model.rs`).
+//!
+//! # Migration note (PR 4)
+//!
+//! `ServerSim` no longer exposes a public `queue: PsQueue` — the
+//! PS-specific internals moved behind the [`ServiceModel`] trait so
+//! batching-sensitive models can plug in without forking the engine.
+//! Old call sites translate mechanically:
+//!
+//! | pre-trait                                   | now                          |
+//! |---------------------------------------------|------------------------------|
+//! | `srv.queue.push(id, spec.solo_work(&r), t)` | `srv.admit(id, &r, t)`       |
+//! | `srv.queue.reap_into(t, srv.per_job_rate(), &mut buf)` | `srv.reap_into(t, &mut buf)` |
+//! | `srv.queue.peek_finish_work()` + rate guard | `srv.completion_key()`       |
+//! | `srv.queue.next_completion_in(rate)`        | `srv.next_completion_in()`   |
+//! | `srv.queue.n_active()` / `n_waiting()`      | `srv.n_active()` / `srv.n_waiting()` |
+//! | `srv.predict_service_time(&r)`              | unchanged (plus `srv.predict(..)` for TTFT) |
+//!
+//! The PS default is bit-identical pre/post refactor — pinned by the
+//! executable-spec run-identity test in
+//! `rust/tests/service_model_identity.rs`.
 
-use super::ps::{batch_efficiency, PsQueue};
+use super::service_model::{build_model, ServiceModel, ServiceModelKind, ServicePrediction};
+use super::ps::PsJob;
 use super::time::{Generation, SimTime};
 use crate::workload::service::ServiceRequest;
 
@@ -43,6 +67,9 @@ pub struct ServerSpec {
     /// than queue unboundedly; this is also what makes sustained-overload
     /// success rates meaningful (DESIGN.md §6).
     pub queue_limit: usize,
+    /// Which token-level service model this server runs (PS fluid by
+    /// default; topologies may select per tier).
+    pub service_model: ServiceModelKind,
 }
 
 impl ServerSpec {
@@ -57,13 +84,25 @@ impl ServerSpec {
     pub fn compute_demand(req: &ServiceRequest) -> f64 {
         (req.prompt_tokens as f64 + 4.0 * req.output_tokens as f64) / 1000.0
     }
+
+    /// This spec with a different service model (topology per-tier
+    /// selection / CLI overrides).
+    pub fn with_service_model(mut self, model: ServiceModelKind) -> Self {
+        self.service_model = model;
+        self
+    }
 }
 
-/// Dynamic server state inside the DES.
+/// Dynamic server state inside the DES: energy/busy integrators and the
+/// outage multiplier around the spec's [`ServiceModel`].
 #[derive(Debug)]
 pub struct ServerSim {
     pub spec: ServerSpec,
-    pub queue: PsQueue,
+    /// The pluggable token-level service model. Public so the
+    /// executable-spec identity tests can swap in reference
+    /// implementations; production code goes through the delegating
+    /// methods below.
+    pub model: Box<dyn ServiceModel>,
     pub gen: Generation,
     /// Rate multiplier (1.0 normally, 0.0 during an injected outage).
     pub rate_mult: f64,
@@ -79,10 +118,9 @@ pub struct ServerSim {
 
 impl ServerSim {
     pub fn new(spec: ServerSpec) -> Self {
-        let slots = spec.slots;
         ServerSim {
+            model: build_model(&spec),
             spec,
-            queue: PsQueue::new(slots),
             gen: Generation::new(),
             rate_mult: 1.0,
             last_update: 0.0,
@@ -93,29 +131,20 @@ impl ServerSim {
         }
     }
 
-    /// Work/s granted to each active job right now.
-    pub fn per_job_rate(&self) -> f64 {
-        let n = self.queue.n_active();
-        if n == 0 {
-            return 0.0;
-        }
-        self.rate_mult * batch_efficiency(n, self.spec.batch_alpha) / n as f64
-    }
-
     /// Advance integrators and job progress to `now`. Call before any state
-    /// change and before scheduling the next completion. O(1): job progress
-    /// is a virtual-work-time counter bump and the energy split is two
-    /// scalar integrals, independent of batch size.
+    /// change and before scheduling the next completion. For the PS model
+    /// this is O(1) (virtual-work-time counter bump + two scalar
+    /// integrals); the token-batch model is O(batch) only when iterations
+    /// actually complete.
     pub fn advance_to(&mut self, now: SimTime) {
         let dt = now - self.last_update;
         if dt <= 0.0 {
             return;
         }
-        let rate = self.per_job_rate();
-        let n = self.queue.n_active();
+        let n = self.model.n_active();
         let busy = n > 0;
         let e_per_job = self.marginal_energy(dt, n);
-        self.queue.advance_energy(dt, rate, e_per_job);
+        self.model.advance(dt, self.rate_mult, e_per_job);
         if busy {
             self.energy_infer_j += self.spec.p_infer * dt;
             self.busy_s += dt;
@@ -132,6 +161,41 @@ impl ServerSim {
             return 0.0;
         }
         (self.spec.p_infer - self.spec.p_idle) * dt / n as f64
+    }
+
+    /// Admit `req` as job `id` at `now` (the caller checked
+    /// [`Self::would_drop`]).
+    pub fn admit(&mut self, id: u64, req: &ServiceRequest, now: SimTime) {
+        self.model.admit(id, req, now);
+    }
+
+    /// Move finished jobs into `out` (cleared first) and promote waiters.
+    pub fn reap_into(&mut self, now: SimTime, out: &mut Vec<PsJob>) {
+        self.model.reap_into(now, self.rate_mult, out);
+    }
+
+    /// Seconds until the earliest completion at the current rate.
+    pub fn next_completion_in(&self) -> Option<SimTime> {
+        self.model.next_completion_in(self.rate_mult)
+    }
+
+    /// Reschedule-guard key (see `sim/service_model.rs` module docs).
+    pub fn completion_key(&self) -> Option<(f64, f64)> {
+        self.model.completion_key(self.rate_mult)
+    }
+
+    /// Jobs currently in service / waiting (view occupancy).
+    pub fn n_active(&self) -> usize {
+        self.model.n_active()
+    }
+
+    pub fn n_waiting(&self) -> usize {
+        self.model.n_waiting()
+    }
+
+    /// Full TTFT + completion prediction for a request arriving now.
+    pub fn predict(&self, req: &ServiceRequest, extra_n: usize, extra_work: f64) -> ServicePrediction {
+        self.model.predict(req, extra_n, extra_work, self.rate_mult)
     }
 
     /// Predicted *additional* time for a request arriving now: queue wait
@@ -152,21 +216,7 @@ impl ServerSim {
         extra_n: usize,
         extra_work: f64,
     ) -> f64 {
-        let work = self.spec.solo_work(req);
-        let occupied = self.queue.n_active() + extra_n;
-        let n_after = (occupied + 1).min(self.queue.max_active());
-        let eff = batch_efficiency(n_after, self.spec.batch_alpha).max(1e-9);
-        let stretch = n_after as f64 / eff;
-        let mult = if self.rate_mult > 0.0 { self.rate_mult } else { 1e-9 };
-        // Queue wait: backlog ahead of us divided by total service rate.
-        // backlog() is an O(1) incremental aggregate, so this predictor is
-        // constant-time even on a saturated server.
-        let wait = if occupied >= self.queue.max_active() {
-            (self.queue.backlog() + extra_work) / (eff * mult)
-        } else {
-            0.0
-        };
-        wait + work * stretch / mult
+        self.predict(req, extra_n, extra_work).total_s
     }
 
     /// Paper C2: remaining compute capacity. Occupancy counts both batch
@@ -178,15 +228,14 @@ impl ServerSim {
 
     /// Headroom counting `extra_n` in-flight dispatches toward this server.
     pub fn compute_headroom_with(&self, extra_n: usize) -> f64 {
-        let cap = (self.queue.max_active() + self.spec.queue_limit) as f64;
-        let used = (self.queue.n_active() + self.queue.n_waiting() + extra_n) as f64;
+        let cap = (self.model.slot_capacity() + self.model.queue_capacity()) as f64;
+        let used = (self.model.n_active() + self.model.n_waiting() + extra_n) as f64;
         self.spec.compute_capacity * (1.0 - used / cap).max(0.0)
     }
 
-    /// Would an arrival right now be shed? (waiting queue at its bound)
+    /// Would an arrival right now be shed? (bounded queue at its limit)
     pub fn would_drop(&self) -> bool {
-        self.queue.n_active() >= self.queue.max_active()
-            && self.queue.n_waiting() >= self.spec.queue_limit
+        self.model.would_drop()
     }
 }
 
@@ -217,6 +266,7 @@ pub fn paper_testbed(edge_model: &str) -> Vec<ServerSpec> {
             p_idle: 6.0,
             compute_capacity: 8.0,
             queue_limit: 2,
+            service_model: ServiceModelKind::Ps,
         })
         .collect();
     servers.push(ServerSpec {
@@ -230,6 +280,7 @@ pub fn paper_testbed(edge_model: &str) -> Vec<ServerSpec> {
         p_idle: 65.0,
         compute_capacity: 12.0,
         queue_limit: 4,
+        service_model: ServiceModelKind::Ps,
     });
     servers
 }
@@ -272,7 +323,7 @@ mod tests {
         let mut s = ServerSim::new(edge_spec());
         s.advance_to(10.0); // idle 10 s
         assert!((s.energy_idle_j - 60.0).abs() < 1e-9); // 6 W * 10 s
-        s.queue.push(1, 1.0, 10.0);
+        s.admit(1, &req(100, 40), 10.0);
         s.advance_to(11.0); // busy 1 s
         assert!((s.energy_infer_j - 45.0).abs() < 1e-9);
         assert!((s.busy_s - 1.0).abs() < 1e-12);
@@ -284,23 +335,30 @@ mod tests {
         let r = req(130, 10);
         let work = spec.solo_work(&r);
         let mut s = ServerSim::new(spec);
-        s.queue.push(1, work, 0.0);
-        let eta = s.queue.next_completion_in(s.per_job_rate()).unwrap();
+        s.admit(1, &r, 0.0);
+        let eta = s.next_completion_in().unwrap();
         assert!((eta - work).abs() < 1e-9);
     }
 
     #[test]
     fn batching_stretches_per_job_but_raises_total() {
+        // One job alone finishes its solo work in solo time; four equal
+        // jobs each take longer (per-job stretch) but the batch completes
+        // sooner than serial service (total throughput rises).
         let spec = cloud_spec();
-        let mut s = ServerSim::new(spec);
-        s.queue.push(1, 10.0, 0.0);
-        let rate1 = s.per_job_rate();
-        s.queue.push(2, 10.0, 0.0);
-        s.queue.push(3, 10.0, 0.0);
-        s.queue.push(4, 10.0, 0.0);
-        let rate4 = s.per_job_rate();
-        assert!(rate4 < rate1, "per-job rate must drop with batch size");
-        assert!(4.0 * rate4 > rate1, "total throughput must rise");
+        let r = req(800, 80);
+        let solo = spec.solo_work(&r);
+        let mut s1 = ServerSim::new(spec.clone());
+        s1.admit(1, &r, 0.0);
+        let t1 = s1.next_completion_in().unwrap();
+        assert!((t1 - solo).abs() < 1e-9);
+        let mut s4 = ServerSim::new(spec);
+        for i in 0..4 {
+            s4.admit(i, &r, 0.0);
+        }
+        let t4 = s4.next_completion_in().unwrap();
+        assert!(t4 > t1, "per-job time must stretch with batch size");
+        assert!(t4 < 4.0 * t1, "total throughput must rise");
     }
 
     #[test]
@@ -309,19 +367,29 @@ mod tests {
         let r = req(100, 40);
         let empty = s.predict_service_time(&r);
         for i in 0..8 {
-            s.queue.push(i, 3.0, 0.0);
+            s.admit(i, &req(60, 100), 0.0);
         }
         let loaded = s.predict_service_time(&r);
         assert!(loaded > empty, "{loaded} vs {empty}");
     }
 
     #[test]
+    fn prediction_exposes_ttft_below_total() {
+        for spec in [edge_spec(), cloud_spec()] {
+            let s = ServerSim::new(spec);
+            let p = s.predict(&req(400, 100), 0, 0.0);
+            assert!(p.ttft_s > 0.0);
+            assert!(p.ttft_s < p.total_s, "{} !< {}", p.ttft_s, p.total_s);
+        }
+    }
+
+    #[test]
     fn outage_gives_zero_rate() {
         let mut s = ServerSim::new(edge_spec());
-        s.queue.push(1, 5.0, 0.0);
+        s.admit(1, &req(100, 40), 0.0);
         s.rate_mult = 0.0;
-        assert_eq!(s.per_job_rate(), 0.0);
-        assert!(s.queue.next_completion_in(s.per_job_rate()).is_none());
+        assert!(s.next_completion_in().is_none());
+        assert!(s.completion_key().is_none());
     }
 
     #[test]
@@ -334,7 +402,18 @@ mod tests {
             // Cloud is faster but hungrier.
             assert!(tb[5].decode_rate > tb[0].decode_rate);
             assert!(tb[5].p_infer > 5.0 * tb[0].p_infer);
+            // PS fluid remains the default model everywhere.
+            assert!(tb.iter().all(|s| s.service_model == ServiceModelKind::Ps));
         }
+    }
+
+    #[test]
+    fn with_service_model_swaps_kind() {
+        let spec = edge_spec().with_service_model(ServiceModelKind::token_batch_for(8));
+        assert_ne!(spec.service_model, ServiceModelKind::Ps);
+        let s = ServerSim::new(spec);
+        assert_eq!(s.n_active(), 0);
+        assert_eq!(s.model.slot_capacity(), 8);
     }
 
     #[test]

@@ -1,0 +1,389 @@
+//! Pluggable token-level service models: the contract a simulated server
+//! must fulfil for the DES engine and the scheduler view, extracted from
+//! the PS-specific internals `ServerSim` used to hard-code.
+//!
+//! The engine never cared that a server was a processor-sharing fluid —
+//! it needs exactly six capabilities: admit a request, advance work and
+//! per-job energy attribution through time, name the next completion (and
+//! a *reschedule key* certifying when an already-scheduled completion
+//! event is still correct), reap finished jobs, predict service time for
+//! an arriving request, and report occupancy. [`ServiceModel`] is that
+//! contract. Two implementations ship:
+//!
+//! * [`PsServiceModel`] — the historical virtual-time processor-sharing
+//!   fluid over [`PsQueue`], **bit-identical** to the pre-trait
+//!   `ServerSim` (every formula is the same float expression; the
+//!   executable-spec run-identity test in
+//!   `rust/tests/service_model_identity.rs` pins `ClusterConfig::paper`
+//!   runs outcome-for-outcome, exactly as PR 3 pinned topology lowering).
+//! * [`super::token_batch::TokenBatchModel`] — a discrete-iteration
+//!   continuous-batching server (Orca-style, like the live coordinator's
+//!   `Batcher`): prefill admission into bounded lanes, batch-size-
+//!   dependent per-iteration token rate on the [`batch_efficiency`]
+//!   curve, and KV-token-budget admission mirroring `KvPool::can_admit`.
+//!
+//! Model choice is part of the server description
+//! ([`ServiceModelKind`] in [`super::server::ServerSpec`]), so
+//! `TopologyConfig` tiers can mix models (token-batch edge tiers under PS
+//! cloud tiers) and every layer above — cluster views, engine, CLI,
+//! benches — works unchanged.
+//!
+//! # Reschedule key
+//!
+//! The engine keeps at most one live completion event per server and must
+//! decide, on every occupancy touch, whether that event is still correct.
+//! [`ServiceModel::completion_key`] returns the model-defined pair of
+//! floats that *determines* the next completion instant: if the pair is
+//! identical before and after a touch, the completion provably did not
+//! move and the event is kept (the churn guard). For PS that pair is
+//! (heap-top finish work, per-job rate); for the token-batch model it is
+//! (absolute finish-iteration index, effective iteration period).
+
+use super::ps::{batch_efficiency, PsJob, PsQueue};
+use super::server::ServerSpec;
+use super::time::SimTime;
+use crate::workload::service::ServiceRequest;
+
+/// What a service model predicts for a request arriving now: time to
+/// first token and total completion time (both *additional* seconds from
+/// now, excluding network transfer — the view layer adds link terms).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServicePrediction {
+    /// Queue wait + (stretched) prefill: when the first output token
+    /// would appear. TTFT-sensitive scenarios (interactive SLOs) read
+    /// this; it is `<= total_s` by construction.
+    pub ttft_s: f64,
+    /// Queue wait + full stretched service: when the request completes.
+    pub total_s: f64,
+}
+
+/// Which service model a server runs — part of [`ServerSpec`], so
+/// topologies select models per tier and configs stay `PartialEq`-
+/// comparable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServiceModelKind {
+    /// Virtual-time processor-sharing fluid (the historical default).
+    Ps,
+    /// Discrete-iteration continuous batching with a KV-token admission
+    /// budget (see [`super::token_batch::TokenBatchModel`]).
+    TokenBatch {
+        /// Total KV tokens resident sequences may hold (prompt + output
+        /// per request, mirroring `KvPool::can_admit`'s page budget).
+        kv_tokens: u32,
+    },
+}
+
+impl ServiceModelKind {
+    /// A token-batch kind with a KV budget sized for `slots` worst-case
+    /// sequences of the default workload caps (1024 prompt + 512 output):
+    /// KV then only binds under deliberately shrunk budgets or heavy
+    /// tails, matching how the live `Batcher` sizes its `KvPool`.
+    pub fn token_batch_for(slots: usize) -> ServiceModelKind {
+        ServiceModelKind::TokenBatch {
+            kv_tokens: (slots as u32).saturating_mul(1536),
+        }
+    }
+}
+
+/// The server-side service contract the DES engine and the scheduler
+/// snapshot are written against. One boxed instance lives inside each
+/// `ServerSim`; the outage multiplier (`rate_mult`) stays owner-side and
+/// is threaded into every rate-sensitive call, so models never observe a
+/// stale multiplier.
+pub trait ServiceModel: std::fmt::Debug + Send {
+    /// Admit `req` as job `id` at `now` (slot if available, else the
+    /// bounded FIFO wait queue). The engine guarantees it checked
+    /// [`Self::would_drop`] first.
+    fn admit(&mut self, id: u64, req: &ServiceRequest, now: SimTime);
+
+    /// Would an arrival right now be shed? (bounded queue at its limit
+    /// with no way to start service)
+    fn would_drop(&self) -> bool;
+
+    /// Advance job progress by `dt` seconds at outage multiplier
+    /// `rate_mult`, attributing `energy_per_job` joules to every job in
+    /// service (marginal per-service energy accounting — attributed even
+    /// at rate 0, matching the busy-power integral upstream).
+    fn advance(&mut self, dt: SimTime, rate_mult: f64, energy_per_job: f64);
+
+    /// Seconds until the earliest job finishes, `None` if nothing can
+    /// complete (idle, or zero rate with nothing already finished).
+    fn next_completion_in(&self, rate_mult: f64) -> Option<SimTime>;
+
+    /// Reschedule-guard key: the float pair the next completion instant
+    /// is a pure function of (see the module docs). `Some` exactly when
+    /// [`Self::next_completion_in`] is `Some`.
+    fn completion_key(&self, rate_mult: f64) -> Option<(f64, f64)>;
+
+    /// Move finished jobs into `out` (cleared first), promote waiters
+    /// into freed capacity with `now` as their service start.
+    fn reap_into(&mut self, now: SimTime, rate_mult: f64, out: &mut Vec<PsJob>);
+
+    /// Predicted TTFT / completion time for `req` arriving now, with
+    /// `extra_n` requests (of `extra_work_s` total solo-seconds) already
+    /// dispatched toward this server but still on the network.
+    fn predict(
+        &self,
+        req: &ServiceRequest,
+        extra_n: usize,
+        extra_work_s: f64,
+        rate_mult: f64,
+    ) -> ServicePrediction;
+
+    /// Jobs currently in service (batch occupancy).
+    fn n_active(&self) -> usize;
+
+    /// Jobs waiting for a slot.
+    fn n_waiting(&self) -> usize;
+
+    /// Max concurrent jobs in service (batch slots / lanes).
+    fn slot_capacity(&self) -> usize;
+
+    /// Bounded wait-queue capacity.
+    fn queue_capacity(&self) -> usize;
+
+    /// Total remaining work across active + waiting jobs, in
+    /// solo-service seconds (scheduler backlog estimate).
+    fn backlog_s(&self) -> f64;
+}
+
+/// Build the model a [`ServerSpec`] asks for.
+pub fn build_model(spec: &ServerSpec) -> Box<dyn ServiceModel> {
+    match spec.service_model {
+        ServiceModelKind::Ps => Box::new(PsServiceModel::new(spec.clone())),
+        ServiceModelKind::TokenBatch { kv_tokens } => Box::new(
+            super::token_batch::TokenBatchModel::new(spec.clone(), kv_tokens as u64),
+        ),
+    }
+}
+
+/// The historical processor-sharing fluid behind the trait: a
+/// [`PsQueue`] over solo-service seconds with the sub-linear
+/// [`batch_efficiency`] rate split. Every formula here is copied verbatim
+/// from the pre-trait `ServerSim`, so a PS-default cluster is
+/// bit-identical pre/post refactor (pinned by
+/// `rust/tests/service_model_identity.rs`).
+#[derive(Debug)]
+pub struct PsServiceModel {
+    spec: ServerSpec,
+    queue: PsQueue,
+}
+
+impl PsServiceModel {
+    pub fn new(spec: ServerSpec) -> Self {
+        let slots = spec.slots;
+        PsServiceModel {
+            spec,
+            queue: PsQueue::new(slots),
+        }
+    }
+
+    /// Work/s granted to each active job at outage multiplier `mult` —
+    /// the exact pre-trait `ServerSim::per_job_rate`.
+    fn per_job_rate(&self, mult: f64) -> f64 {
+        let n = self.queue.n_active();
+        if n == 0 {
+            return 0.0;
+        }
+        mult * batch_efficiency(n, self.spec.batch_alpha) / n as f64
+    }
+
+    /// Direct access to the underlying queue (differential tests and the
+    /// PS-equivalence executable spec).
+    pub fn queue(&self) -> &PsQueue {
+        &self.queue
+    }
+}
+
+impl ServiceModel for PsServiceModel {
+    fn admit(&mut self, id: u64, req: &ServiceRequest, now: SimTime) {
+        let work = self.spec.solo_work(req);
+        self.queue.push(id, work, now);
+    }
+
+    fn would_drop(&self) -> bool {
+        self.queue.n_active() >= self.queue.max_active()
+            && self.queue.n_waiting() >= self.spec.queue_limit
+    }
+
+    fn advance(&mut self, dt: SimTime, rate_mult: f64, energy_per_job: f64) {
+        let rate = self.per_job_rate(rate_mult);
+        self.queue.advance_energy(dt, rate, energy_per_job);
+    }
+
+    fn next_completion_in(&self, rate_mult: f64) -> Option<SimTime> {
+        self.queue.next_completion_in(self.per_job_rate(rate_mult))
+    }
+
+    fn completion_key(&self, rate_mult: f64) -> Option<(f64, f64)> {
+        let rate = self.per_job_rate(rate_mult);
+        if rate > 0.0 {
+            self.queue.peek_finish_work().map(|fw| (fw, rate))
+        } else {
+            None
+        }
+    }
+
+    fn reap_into(&mut self, now: SimTime, rate_mult: f64, out: &mut Vec<PsJob>) {
+        let rate = self.per_job_rate(rate_mult);
+        self.queue.reap_into(now, rate, out);
+    }
+
+    fn predict(
+        &self,
+        req: &ServiceRequest,
+        extra_n: usize,
+        extra_work_s: f64,
+        rate_mult: f64,
+    ) -> ServicePrediction {
+        let work = self.spec.solo_work(req);
+        let occupied = self.queue.n_active() + extra_n;
+        let n_after = (occupied + 1).min(self.queue.max_active());
+        let eff = batch_efficiency(n_after, self.spec.batch_alpha).max(1e-9);
+        let stretch = n_after as f64 / eff;
+        let mult = if rate_mult > 0.0 { rate_mult } else { 1e-9 };
+        // Queue wait: backlog ahead of us divided by total service rate.
+        // backlog() is an O(1) incremental aggregate, so this predictor is
+        // constant-time even on a saturated server.
+        let wait = if occupied >= self.queue.max_active() {
+            (self.queue.backlog() + extra_work_s) / (eff * mult)
+        } else {
+            0.0
+        };
+        // TTFT on a fluid server: the prefill share of the stretched
+        // service, after the queue wait.
+        let prefill_s = req.prompt_tokens as f64 / self.spec.prefill_rate;
+        ServicePrediction {
+            ttft_s: wait + prefill_s * stretch / mult,
+            total_s: wait + work * stretch / mult,
+        }
+    }
+
+    fn n_active(&self) -> usize {
+        self.queue.n_active()
+    }
+
+    fn n_waiting(&self) -> usize {
+        self.queue.n_waiting()
+    }
+
+    fn slot_capacity(&self) -> usize {
+        self.queue.max_active()
+    }
+
+    fn queue_capacity(&self) -> usize {
+        self.spec.queue_limit
+    }
+
+    fn backlog_s(&self) -> f64 {
+        self.queue.backlog()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::server::paper_testbed;
+    use crate::workload::service::{ServiceClass, ServiceRequest};
+
+    fn req(id: u64, prompt: u32, output: u32) -> ServiceRequest {
+        ServiceRequest {
+            id,
+            class: ServiceClass::Chat,
+            arrival: 0.0,
+            prompt_tokens: prompt,
+            output_tokens: output,
+            deadline: 4.0,
+            payload_bytes: 10_000,
+        }
+    }
+
+    #[test]
+    fn kind_selects_implementation() {
+        let mut spec = paper_testbed("llama2-7b")[0].clone();
+        assert_eq!(spec.service_model, ServiceModelKind::Ps);
+        let m = build_model(&spec);
+        assert_eq!(m.slot_capacity(), spec.slots);
+        spec.service_model = ServiceModelKind::token_batch_for(spec.slots);
+        let t = build_model(&spec);
+        assert_eq!(t.slot_capacity(), spec.slots);
+        assert_eq!(t.n_active(), 0);
+    }
+
+    #[test]
+    fn token_batch_for_scales_kv_with_slots() {
+        match ServiceModelKind::token_batch_for(8) {
+            ServiceModelKind::TokenBatch { kv_tokens } => assert_eq!(kv_tokens, 8 * 1536),
+            other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ps_model_matches_raw_queue_formulas() {
+        // The trait wrapper must reproduce the raw-queue numbers exactly:
+        // same admitted work, same per-job rate, same completion estimate.
+        let spec = paper_testbed("llama2-7b")[0].clone();
+        let mut m = PsServiceModel::new(spec.clone());
+        let r = req(1, 130, 10);
+        let work = spec.solo_work(&r);
+        m.admit(1, &r, 0.0);
+        assert_eq!(m.n_active(), 1);
+        let eta = m.next_completion_in(1.0).unwrap();
+        assert!((eta - work).abs() < 1e-12);
+        let key = m.completion_key(1.0).unwrap();
+        assert_eq!(key.0, m.queue().peek_finish_work().unwrap());
+        assert_eq!(key.1, 1.0); // solo: eff(1)/1 = 1
+        // Outage: no completion, no key.
+        assert!(m.next_completion_in(0.0).is_none());
+        assert!(m.completion_key(0.0).is_none());
+    }
+
+    #[test]
+    fn ps_predict_matches_pre_trait_formula() {
+        let spec = paper_testbed("llama2-7b")[0].clone();
+        let mut m = PsServiceModel::new(spec.clone());
+        let probe = req(99, 100, 40);
+        let empty = m.predict(&probe, 0, 0.0, 1.0);
+        assert!((empty.total_s - spec.solo_work(&probe)).abs() < 1e-12);
+        assert!(empty.ttft_s <= empty.total_s);
+        for i in 0..spec.slots as u64 {
+            m.admit(i, &req(i, 100, 100), 0.0);
+        }
+        let loaded = m.predict(&probe, 0, 0.0, 1.0);
+        assert!(loaded.total_s > empty.total_s);
+        // Saturated + in-flight work raises the wait term further.
+        let inflight = m.predict(&probe, 2, 10.0, 1.0);
+        assert!(inflight.total_s > loaded.total_s);
+    }
+
+    #[test]
+    fn ps_would_drop_mirrors_bounds() {
+        let spec = paper_testbed("llama2-7b")[0].clone();
+        let cap = spec.slots + spec.queue_limit;
+        let mut m = PsServiceModel::new(spec);
+        for i in 0..cap as u64 {
+            assert!(!m.would_drop(), "dropped too early at {i}");
+            m.admit(i, &req(i, 50, 20), 0.0);
+        }
+        assert!(m.would_drop());
+        assert_eq!(m.n_active() + m.n_waiting(), cap);
+    }
+
+    #[test]
+    fn ps_energy_attribution_flows_to_reaped_jobs() {
+        let spec = paper_testbed("llama2-7b")[0].clone();
+        let mut m = PsServiceModel::new(spec.clone());
+        let r = req(1, 100, 10);
+        let work = spec.solo_work(&r);
+        m.admit(1, &r, 0.0);
+        // Run to completion in two advances; 3 J per interval.
+        m.advance(work / 2.0, 1.0, 3.0);
+        m.advance(work / 2.0, 1.0, 3.0);
+        let mut out = Vec::new();
+        m.reap_into(work, 1.0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!((out[0].energy_j - 6.0).abs() < 1e-12);
+        assert_eq!(m.n_active(), 0);
+        assert!((m.backlog_s() - 0.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,674 @@
+//! Discrete-iteration continuous-batching service model: the DES
+//! counterpart of the live coordinator's Orca-style `Batcher`
+//! (`coordinator/batcher.rs`), behind the [`ServiceModel`] trait.
+//!
+//! Where the PS fluid spreads a server's token rate continuously over
+//! every resident request, this model serves the batch in **iterations**:
+//! with `n` lanes occupied, one iteration takes
+//! `d(n) = n / (decode_rate * eff(n))` seconds (eff is the calibrated
+//! [`batch_efficiency`] curve) and grants every lane exactly one token of
+//! progress. Per-iteration throughput `n / d(n) = decode_rate * eff(n)`
+//! therefore grows **sub-linearly** with occupancy — the batching physics
+//! the edge-throughput study arXiv:2405.07140 shows dominates edge
+//! serving, invisible to a fluid whose rate split is composition-blind at
+//! the iteration scale.
+//!
+//! A request's demand is expressed in *iteration-equivalents*
+//! ([`TokenBatchModel::token_units`]): its `output_tokens` decode
+//! iterations plus its prefill converted at the prefill/decode rate
+//! ratio. At batch size 1 the model therefore reduces exactly to solo
+//! prefill + decode time, and with a linear efficiency curve (alpha = 1)
+//! `d(n)` is occupancy-independent — the fluid limit the differential
+//! test in `rust/tests/token_batch.rs` checks against [`PsQueue`]
+//! predictions.
+//!
+//! Admission mirrors the live batcher: a request enters a **lane** when
+//! one of the `slots` lanes is free *and* the KV-token budget admits its
+//! `prompt + output` reservation (the analogue of `KvPool::can_admit`);
+//! otherwise it joins the bounded FIFO wait queue. Lane promotion happens
+//! at engine touch points (admission and reap) — head-of-line, exactly
+//! like the batcher's iteration-boundary admission — never silently
+//! between events, so the engine's completion events and admissibility
+//! index stay exact. Once the wait queue is at its bound, further
+//! arrivals are shed whether the head is lane-blocked or KV-blocked
+//! (`would_drop`): KV head-of-line pressure must not grow the queue past
+//! its limit just because lanes happen to sit free. Reservations larger
+//! than the whole KV budget are clamped to it (the request runs solo
+//! with everything the server has), so no waiter is ever unpromotable.
+//!
+//! [`PsQueue`]: super::ps::PsQueue
+
+use std::collections::VecDeque;
+
+use super::ps::{batch_efficiency, PsJob};
+use super::server::ServerSpec;
+use super::service_model::{ServiceModel, ServicePrediction};
+use super::time::SimTime;
+use crate::workload::service::ServiceRequest;
+
+/// Sub-token tolerance: progress within this many iteration-equivalents
+/// of zero counts as finished (guards float drift at completion
+/// boundaries, like `PsQueue`'s `DONE_EPS_S`).
+const TOK_EPS: f64 = 1e-9;
+
+/// One resident sequence in the running batch.
+#[derive(Debug, Clone, Copy)]
+struct Lane {
+    id: u64,
+    /// Remaining demand in iteration-equivalents (prefill-converted +
+    /// decode tokens); the lane finishes when this reaches zero.
+    tokens_left: f64,
+    /// KV tokens reserved for this sequence (released at completion).
+    kv_tokens: u64,
+    enqueued_at: SimTime,
+    started_at: SimTime,
+    energy_j: f64,
+}
+
+/// A request waiting for a lane (untouched by service).
+#[derive(Debug, Clone, Copy)]
+struct Waiting {
+    id: u64,
+    tokens: f64,
+    kv_tokens: u64,
+    solo_s: f64,
+    enqueued_at: SimTime,
+}
+
+/// Discrete-iteration continuous-batching server state.
+#[derive(Debug)]
+pub struct TokenBatchModel {
+    spec: ServerSpec,
+    kv_budget: u64,
+    kv_used: u64,
+    lanes: Vec<Lane>,
+    waiting: VecDeque<Waiting>,
+    /// Lanes that reached zero demand, awaiting the engine's reap (the
+    /// completion event fires at exactly the finishing instant, so these
+    /// never linger across sim time).
+    finished: Vec<PsJob>,
+    /// Fraction of the current iteration already elapsed, in [0, 1).
+    /// Preserved as a fraction across composition changes: a lane joining
+    /// mid-iteration rides the in-progress iteration (the live batcher's
+    /// boundary admission, averaged out).
+    iter_frac: f64,
+    /// Completed iterations since the last drain — the absolute iteration
+    /// index underlying the reschedule key.
+    iters_done: u64,
+    /// Sum of waiting solo-seconds (incremental backlog aggregate).
+    waiting_work_s: f64,
+}
+
+impl TokenBatchModel {
+    pub fn new(spec: ServerSpec, kv_budget_tokens: u64) -> Self {
+        assert!(spec.slots > 0 && kv_budget_tokens > 0);
+        TokenBatchModel {
+            kv_budget: kv_budget_tokens,
+            kv_used: 0,
+            lanes: Vec::with_capacity(spec.slots),
+            waiting: VecDeque::new(),
+            finished: Vec::new(),
+            iter_frac: 0.0,
+            iters_done: 0,
+            waiting_work_s: 0.0,
+            spec,
+        }
+    }
+
+    /// A request's demand in iteration-equivalents: decode tokens plus
+    /// prefill converted at the rate ratio, so
+    /// `token_units * d(1) = prompt/prefill_rate + output/decode_rate`
+    /// (exact solo reduction).
+    pub fn token_units(spec: &ServerSpec, req: &ServiceRequest) -> f64 {
+        req.output_tokens as f64
+            + req.prompt_tokens as f64 * spec.decode_rate / spec.prefill_rate
+    }
+
+    /// KV reservation a request holds while resident (prompt + output,
+    /// the same budget the live batcher admits against its `KvPool`),
+    /// clamped to the pool size: a sequence larger than the whole budget
+    /// runs solo with everything the server has — the DES analogue of
+    /// the live batcher truncating prompts to `max_seq` — instead of
+    /// becoming an unpromotable head-of-line waiter that would deadlock
+    /// the server.
+    fn kv_reservation(&self, req: &ServiceRequest) -> u64 {
+        ((req.prompt_tokens + req.output_tokens) as u64).min(self.kv_budget)
+    }
+
+    /// Nominal seconds one iteration takes at batch size `n`.
+    fn iter_time(&self, n: usize) -> f64 {
+        debug_assert!(n > 0);
+        n as f64 / (self.spec.decode_rate * batch_efficiency(n, self.spec.batch_alpha))
+    }
+
+    /// Whole iterations a lane with `tokens_left` demand still needs
+    /// (shared by the predictor and the completion schedule, so the
+    /// uncontended prediction matches the realized time float-for-float).
+    fn iters_needed(tokens_left: f64) -> f64 {
+        (tokens_left - TOK_EPS).ceil().max(1.0)
+    }
+
+    /// Fewest iterations until some lane finishes.
+    fn min_iters_needed(&self) -> Option<f64> {
+        self.lanes
+            .iter()
+            .map(|l| Self::iters_needed(l.tokens_left))
+            .min_by(|a, b| a.partial_cmp(b).expect("finite iteration counts"))
+    }
+
+    fn start_lane(&mut self, w: Waiting, now: SimTime) {
+        self.kv_used += w.kv_tokens;
+        self.lanes.push(Lane {
+            id: w.id,
+            tokens_left: w.tokens,
+            kv_tokens: w.kv_tokens,
+            enqueued_at: w.enqueued_at,
+            started_at: now,
+            energy_j: 0.0,
+        });
+    }
+
+    /// Head-of-line waiter promotion into free lanes (KV permitting) —
+    /// called at engine touch points only (admit/reap), never inside
+    /// `advance`, so completion events are always scheduled from the
+    /// post-promotion composition.
+    fn promote_waiters(&mut self, now: SimTime) {
+        while self.lanes.len() < self.spec.slots {
+            let Some(head) = self.waiting.front() else { break };
+            if self.kv_used + head.kv_tokens > self.kv_budget {
+                break; // KV pressure: strict FIFO, retry at the next touch.
+            }
+            let w = self.waiting.pop_front().expect("checked head");
+            self.waiting_work_s -= w.solo_s;
+            if self.waiting.is_empty() {
+                self.waiting_work_s = 0.0;
+            }
+            self.start_lane(w, now);
+        }
+        if self.lanes.is_empty() && self.waiting.is_empty() {
+            // Fully drained: reset the iteration phase and counter so
+            // float state stays small over arbitrarily long runs.
+            self.iter_frac = 0.0;
+            self.iters_done = 0;
+        }
+    }
+
+    /// KV tokens currently reserved by resident sequences.
+    pub fn kv_used(&self) -> u64 {
+        self.kv_used
+    }
+
+    pub fn kv_budget(&self) -> u64 {
+        self.kv_budget
+    }
+}
+
+impl ServiceModel for TokenBatchModel {
+    fn admit(&mut self, id: u64, req: &ServiceRequest, now: SimTime) {
+        let w = Waiting {
+            id,
+            tokens: Self::token_units(&self.spec, req),
+            kv_tokens: self.kv_reservation(req),
+            solo_s: self.spec.solo_work(req),
+            enqueued_at: now,
+        };
+        // Strict FIFO: an arrival may only enter a lane directly when no
+        // earlier request is still waiting (a small request must not jump
+        // a KV-blocked head-of-line waiter).
+        if self.waiting.is_empty()
+            && self.lanes.len() < self.spec.slots
+            && self.kv_used + w.kv_tokens <= self.kv_budget
+        {
+            self.start_lane(w, now);
+        } else {
+            // Bounded wait (the engine shed anything `would_drop` caught;
+            // the KV-blocked corner overflows softly — module docs).
+            self.waiting_work_s += w.solo_s;
+            self.waiting.push_back(w);
+        }
+    }
+
+    fn would_drop(&self) -> bool {
+        if self.waiting.len() < self.spec.queue_limit {
+            return false; // bounded queue still has room
+        }
+        // Queue at its bound. Strict FIFO means an arrival could only be
+        // accepted by starting service immediately, which is impossible
+        // whenever any waiter is blocked ahead of it (a non-empty queue
+        // after a touch implies its head is lane- or KV-blocked —
+        // promotion runs at every touch) or the lanes are full. This is
+        // what keeps the wait queue bounded under KV head-of-line
+        // blocking even while lanes sit free.
+        !self.waiting.is_empty() || self.lanes.len() >= self.spec.slots
+    }
+
+    fn advance(&mut self, dt: SimTime, rate_mult: f64, energy_per_job: f64) {
+        if dt <= 0.0 || self.lanes.is_empty() {
+            return;
+        }
+        // Energy is attributed even at rate 0 (outage: the box still
+        // burns inference power over its resident batch), mirroring the
+        // PS model's advance_energy semantics.
+        for lane in &mut self.lanes {
+            lane.energy_j += energy_per_job;
+        }
+        if rate_mult <= 0.0 {
+            return;
+        }
+        let n = self.lanes.len();
+        let d = self.iter_time(n);
+        // Progress in nominal seconds; composition is constant between
+        // engine events (completions land exactly on events, promotions
+        // only at touches), so every iteration in the interval has the
+        // same period.
+        let total = self.iter_frac * d + dt * rate_mult;
+        let k = (total / d + TOK_EPS).floor();
+        self.iter_frac = ((total - k * d) / d).clamp(0.0, 1.0);
+        if k <= 0.0 {
+            return;
+        }
+        self.iters_done += k as u64;
+        let mut i = 0;
+        while i < self.lanes.len() {
+            self.lanes[i].tokens_left -= k;
+            if self.lanes[i].tokens_left <= TOK_EPS {
+                // Order-preserving removal: same-iteration finishers
+                // complete in admission order (FIFO ties, like PsQueue).
+                let lane = self.lanes.remove(i);
+                self.kv_used -= lane.kv_tokens;
+                self.finished.push(PsJob {
+                    id: lane.id,
+                    remaining: 0.0,
+                    enqueued_at: lane.enqueued_at,
+                    started_at: Some(lane.started_at),
+                    energy_j: lane.energy_j,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn next_completion_in(&self, rate_mult: f64) -> Option<SimTime> {
+        if !self.finished.is_empty() {
+            // Lanes already finished (advance crossed their boundary at
+            // this exact instant): reap is due now.
+            return Some(0.0);
+        }
+        if rate_mult <= 0.0 {
+            return None;
+        }
+        let m = self.min_iters_needed()?;
+        let d = self.iter_time(self.lanes.len());
+        Some(((m - self.iter_frac) * d / rate_mult).max(0.0))
+    }
+
+    fn completion_key(&self, rate_mult: f64) -> Option<(f64, f64)> {
+        if !self.finished.is_empty() {
+            // Distinct from any live-batch key (periods are positive),
+            // and changes as more lanes finish, so the guard always
+            // reschedules an immediate reap.
+            return Some((f64::NEG_INFINITY, self.finished.len() as f64));
+        }
+        if rate_mult <= 0.0 {
+            return None;
+        }
+        let m = self.min_iters_needed()?;
+        // (absolute finish-iteration index, effective iteration period):
+        // both are constant along an untouched interval — progress moves
+        // `iters_done` up exactly as `m` comes down — so an identical
+        // pair certifies the scheduled completion instant still holds.
+        Some((
+            self.iters_done as f64 + m,
+            self.iter_time(self.lanes.len()) / rate_mult,
+        ))
+    }
+
+    fn reap_into(&mut self, now: SimTime, _rate_mult: f64, out: &mut Vec<PsJob>) {
+        out.clear();
+        out.append(&mut self.finished);
+        self.promote_waiters(now);
+    }
+
+    fn predict(
+        &self,
+        req: &ServiceRequest,
+        extra_n: usize,
+        extra_work_s: f64,
+        rate_mult: f64,
+    ) -> ServicePrediction {
+        let tokens = Self::token_units(&self.spec, req);
+        let occupied = self.lanes.len() + extra_n;
+        let n_after = (occupied + 1).min(self.spec.slots);
+        let d = self.iter_time(n_after);
+        let mult = if rate_mult > 0.0 { rate_mult } else { 1e-9 };
+        // Queue wait: solo-second backlog ahead of us over the saturated
+        // batch's total service rate — the same estimator shape as the PS
+        // model, so scheduler comparisons stay information-symmetric. A
+        // non-empty wait queue means we queue behind its (lane- or
+        // KV-blocked) head regardless of free lanes — strict FIFO — so
+        // the wait term must apply there too, or a KV-starved server
+        // would advertise near-solo times exactly when it is congested.
+        let wait = if occupied >= self.spec.slots || !self.waiting.is_empty() {
+            let eff = batch_efficiency(n_after, self.spec.batch_alpha).max(1e-9);
+            (self.backlog_s() + extra_work_s) / (eff * mult)
+        } else {
+            0.0
+        };
+        let prefill_units =
+            req.prompt_tokens as f64 * self.spec.decode_rate / self.spec.prefill_rate;
+        ServicePrediction {
+            ttft_s: wait + (prefill_units + 1.0).min(tokens) * d / mult,
+            // Whole iterations, matching the completion schedule exactly:
+            // on an uncontended server this *is* the realized time.
+            total_s: wait + Self::iters_needed(tokens) * d / mult,
+        }
+    }
+
+    fn n_active(&self) -> usize {
+        self.lanes.len()
+    }
+
+    fn n_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    fn slot_capacity(&self) -> usize {
+        self.spec.slots
+    }
+
+    fn queue_capacity(&self) -> usize {
+        self.spec.queue_limit
+    }
+
+    fn backlog_s(&self) -> f64 {
+        let lane_s: f64 = self
+            .lanes
+            .iter()
+            .map(|l| l.tokens_left.max(0.0) / self.spec.decode_rate)
+            .sum();
+        lane_s + self.waiting_work_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::server::paper_testbed;
+    use crate::workload::service::ServiceClass;
+
+    fn spec() -> ServerSpec {
+        let mut s = paper_testbed("llama2-7b")[0].clone();
+        s.service_model = crate::sim::service_model::ServiceModelKind::token_batch_for(s.slots);
+        s
+    }
+
+    fn req(id: u64, prompt: u32, output: u32) -> ServiceRequest {
+        ServiceRequest {
+            id,
+            class: ServiceClass::Chat,
+            arrival: 0.0,
+            prompt_tokens: prompt,
+            output_tokens: output,
+            deadline: 10.0,
+            payload_bytes: 10_000,
+        }
+    }
+
+    fn model() -> TokenBatchModel {
+        TokenBatchModel::new(spec(), 8 * 1536)
+    }
+
+    /// Drive the model alone to the completion of everything, returning
+    /// (time, completed jobs) — a miniature of what the engine does.
+    fn run_to_empty(m: &mut TokenBatchModel) -> (f64, Vec<PsJob>) {
+        let mut t = 0.0;
+        let mut done = Vec::new();
+        let mut buf = Vec::new();
+        while let Some(dt) = m.next_completion_in(1.0) {
+            m.advance(dt, 1.0, 0.0);
+            t += dt;
+            m.reap_into(t, 1.0, &mut buf);
+            done.extend(buf.drain(..));
+        }
+        (t, done)
+    }
+
+    #[test]
+    fn solo_request_takes_whole_iterations_of_solo_time() {
+        let s = spec();
+        let mut m = model();
+        let r = req(1, 130, 10);
+        m.admit(1, &r, 0.0);
+        assert_eq!(m.n_active(), 1);
+        let (t, done) = run_to_empty(&mut m);
+        assert_eq!(done.len(), 1);
+        // Solo time quantized up to whole iterations of d(1) = 1/decode.
+        let solo = s.solo_work(&r);
+        let d1 = 1.0 / s.decode_rate;
+        assert!(t >= solo - 1e-9, "{t} < {solo}");
+        assert!(t <= solo + d1 + 1e-9, "{t} overshoots solo by > 1 iter");
+        assert_eq!(m.kv_used(), 0, "KV released at completion");
+    }
+
+    #[test]
+    fn uncontended_prediction_matches_realized_time_exactly() {
+        let mut m = model();
+        let r = req(1, 200, 40);
+        let predicted = m.predict(&r, 0, 0.0, 1.0);
+        m.admit(1, &r, 0.0);
+        let (t, _) = run_to_empty(&mut m);
+        assert!(
+            (predicted.total_s - t).abs() < 1e-12,
+            "predicted {} vs realized {t}",
+            predicted.total_s
+        );
+        assert!(predicted.ttft_s > 0.0 && predicted.ttft_s <= predicted.total_s);
+    }
+
+    #[test]
+    fn per_iteration_throughput_grows_sublinearly() {
+        // n identical requests served together: total token throughput
+        // must follow eff(n) — above 1x (batching helps) but below n
+        // (sub-linear), matching the efficiency curve within the
+        // whole-iteration quantization.
+        let s = spec();
+        let time_for = |n: usize| {
+            let mut m = model();
+            for i in 0..n as u64 {
+                m.admit(i, &req(i, 100, 60), 0.0);
+            }
+            let (t, done) = run_to_empty(&mut m);
+            assert_eq!(done.len(), n);
+            t
+        };
+        let t1 = time_for(1);
+        let t4 = time_for(4);
+        let t8 = time_for(8);
+        // Same per-request demand: T(n) = T(1) * n / eff(n) (+quantization).
+        assert!(t4 > t1 * 1.05, "batching cannot be free: {t4} vs {t1}");
+        assert!(t4 < t1 * 4.0, "batching must beat serial: {t4} vs {t1}");
+        let eff4 = batch_efficiency(4, s.batch_alpha);
+        let eff8 = batch_efficiency(8, s.batch_alpha);
+        assert!(
+            (t4 / t1 - 4.0 / eff4).abs() < 0.05 * (4.0 / eff4),
+            "T(4)/T(1) = {} expected {}",
+            t4 / t1,
+            4.0 / eff4
+        );
+        // Throughput (requests per second) keeps rising with occupancy…
+        assert!(8.0 / t8 > 4.0 / t4 && 4.0 / t4 > 1.0 / t1);
+        // …but sub-linearly, tracking eff.
+        assert!((t8 / t1 - 8.0 / eff8).abs() < 0.05 * (8.0 / eff8));
+    }
+
+    #[test]
+    fn bounded_queue_and_promotion() {
+        let s = spec();
+        let mut m = model();
+        let cap = s.slots + s.queue_limit;
+        for i in 0..cap as u64 {
+            assert!(!m.would_drop());
+            // Staggered lengths: completions arrive one lane at a time.
+            m.admit(i, &req(i, 50, 20 + 10 * i as u32), 0.0);
+        }
+        assert_eq!(m.n_active(), s.slots);
+        assert_eq!(m.n_waiting(), s.queue_limit);
+        assert!(m.would_drop());
+        // First completion frees a lane; reap promotes the head waiter.
+        let dt = m.next_completion_in(1.0).unwrap();
+        m.advance(dt, 1.0, 0.0);
+        let mut buf = Vec::new();
+        m.reap_into(dt, 1.0, &mut buf);
+        assert!(!buf.is_empty());
+        assert_eq!(m.n_active(), s.slots, "promotion refills the batch");
+        assert!(m.n_waiting() < s.queue_limit);
+        assert!(!m.would_drop());
+    }
+
+    #[test]
+    fn kv_budget_blocks_lane_admission() {
+        // Budget fits exactly one 600-token sequence: the second request
+        // waits even though lanes are free, and is promoted only after
+        // the first completes.
+        let mut m = TokenBatchModel::new(spec(), 700);
+        m.admit(1, &req(1, 500, 100), 0.0);
+        assert_eq!(m.n_active(), 1);
+        assert_eq!(m.kv_used(), 600);
+        m.admit(2, &req(2, 100, 50), 0.0);
+        assert_eq!(m.n_active(), 1, "KV pressure must queue, not lane");
+        assert_eq!(m.n_waiting(), 1);
+        let (_, done) = run_to_empty(&mut m);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(done[1].id, 2);
+        assert_eq!(m.kv_used(), 0);
+    }
+
+    #[test]
+    fn would_drop_under_kv_exhaustion_with_free_lanes() {
+        // Tiny budget: one resident sequence exhausts KV; once the
+        // bounded queue fills, further arrivals are shed even though
+        // lanes remain free.
+        let mut s = spec();
+        s.queue_limit = 1;
+        let mut m = TokenBatchModel::new(s, 600);
+        m.admit(1, &req(1, 500, 100), 0.0);
+        assert!(!m.would_drop());
+        m.admit(2, &req(2, 100, 50), 0.0);
+        assert!(m.n_active() == 1 && m.n_waiting() == 1);
+        assert!(m.would_drop(), "KV-exhausted + full queue must shed");
+    }
+
+    /// Regression (review): with a KV-blocked head and free lanes,
+    /// `would_drop` used to require exact budget exhaustion, so the
+    /// bounded queue grew without limit. The queue bound must hold
+    /// whatever is blocking the head.
+    #[test]
+    fn kv_blocked_head_keeps_queue_bounded() {
+        let mut s = spec();
+        s.queue_limit = 2;
+        // Budget 601: a resident 600-token sequence leaves 1 spare token,
+        // so kv_used < budget forever while no waiter can promote.
+        let mut m = TokenBatchModel::new(s, 601);
+        m.admit(1, &req(1, 500, 100), 0.0);
+        m.admit(2, &req(2, 100, 50), 0.0);
+        m.admit(3, &req(3, 100, 50), 0.0);
+        assert_eq!(m.n_active(), 1);
+        assert_eq!(m.n_waiting(), 2);
+        assert!(
+            m.would_drop(),
+            "queue at its bound must shed even though lanes are free and kv_used < budget"
+        );
+        // Draining the resident promotes the head again.
+        let (_, done) = run_to_empty(&mut m);
+        assert_eq!(done.len(), 3);
+    }
+
+    /// Regression (review): with free lanes but a KV-blocked wait queue,
+    /// `predict` used to report zero wait — advertising near-solo times
+    /// exactly when the server is KV-congested.
+    #[test]
+    fn predict_counts_kv_blocked_queue() {
+        let probe = req(9, 100, 50);
+        let idle = TokenBatchModel::new(spec(), 700).predict(&probe, 0, 0.0, 1.0);
+        let mut m = TokenBatchModel::new(spec(), 700);
+        m.admit(1, &req(1, 500, 100), 0.0); // resident: kv 600 of 700
+        m.admit(2, &req(2, 100, 50), 0.0); // KV-blocked waiter, lanes free
+        assert_eq!(m.n_waiting(), 1);
+        assert!(m.n_active() < m.slot_capacity());
+        let loaded = m.predict(&probe, 0, 0.0, 1.0);
+        assert!(
+            loaded.total_s > idle.total_s,
+            "KV-congested server must not advertise idle times: {} vs {}",
+            loaded.total_s,
+            idle.total_s
+        );
+        assert!(loaded.ttft_s > idle.ttft_s);
+    }
+
+    /// Regression (review): a request whose prompt+output reservation
+    /// exceeds the whole KV budget used to become an unpromotable
+    /// head-of-line waiter, deadlocking the server. It now runs solo
+    /// with the clamped full-budget reservation.
+    #[test]
+    fn oversized_request_runs_solo_instead_of_deadlocking() {
+        let mut m = TokenBatchModel::new(spec(), 300); // < 500 + 100
+        m.admit(1, &req(1, 500, 100), 0.0);
+        assert_eq!(m.n_active(), 1, "oversized request must still start");
+        assert_eq!(m.kv_used(), 300, "reservation clamped to the budget");
+        m.admit(2, &req(2, 100, 50), 0.0);
+        assert_eq!(m.n_waiting(), 1, "budget fully held: next request waits");
+        let (_, done) = run_to_empty(&mut m);
+        assert_eq!(done.len(), 2, "server must drain, not deadlock");
+        assert_eq!(m.kv_used(), 0);
+    }
+
+    #[test]
+    fn completion_key_is_stable_along_untouched_intervals() {
+        let mut m = model();
+        m.admit(1, &req(1, 100, 40), 0.0);
+        m.admit(2, &req(2, 100, 80), 0.0);
+        let k0 = m.completion_key(1.0).unwrap();
+        // Advance by a third of the way to the first completion: the key
+        // must not move (the scheduled event is still exact)…
+        let eta = m.next_completion_in(1.0).unwrap();
+        m.advance(eta / 3.0, 1.0, 0.0);
+        let k1 = m.completion_key(1.0).unwrap();
+        assert_eq!(k0, k1);
+        // …and the remaining time must shrink by exactly the elapsed dt.
+        let eta1 = m.next_completion_in(1.0).unwrap();
+        assert!((eta - eta / 3.0 - eta1).abs() < 1e-9);
+        // An admission changes the composition: key must move.
+        m.admit(3, &req(3, 100, 40), 0.5);
+        assert_ne!(m.completion_key(1.0).unwrap(), k1);
+    }
+
+    #[test]
+    fn outage_freezes_progress_but_attributes_energy() {
+        let mut m = model();
+        m.admit(1, &req(1, 100, 40), 0.0);
+        assert!(m.next_completion_in(0.0).is_none());
+        assert!(m.completion_key(0.0).is_none());
+        let backlog = m.backlog_s();
+        m.advance(100.0, 0.0, 7.0);
+        assert_eq!(m.backlog_s(), backlog, "no progress at rate 0");
+        let dt = m.next_completion_in(1.0).unwrap();
+        m.advance(dt, 1.0, 1.0);
+        let mut buf = Vec::new();
+        m.reap_into(100.0 + dt, 1.0, &mut buf);
+        assert_eq!(buf.len(), 1);
+        assert!((buf[0].energy_j - 8.0).abs() < 1e-12, "{}", buf[0].energy_j);
+    }
+
+    #[test]
+    fn drained_model_resets_iteration_state() {
+        let mut m = model();
+        m.admit(1, &req(1, 33, 7), 0.0);
+        let (t, _) = run_to_empty(&mut m);
+        assert!(t > 0.0);
+        assert_eq!(m.iters_done, 0);
+        assert_eq!(m.iter_frac, 0.0);
+        assert_eq!(m.backlog_s(), 0.0);
+    }
+}

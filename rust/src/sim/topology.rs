@@ -26,6 +26,7 @@ use super::cluster::{BandwidthMode, ClusterConfig};
 use super::energy::EnergyWeights;
 use super::net::LinkSpec;
 use super::server::{paper_testbed, ServerKind, ServerSpec};
+use super::service_model::ServiceModelKind;
 
 /// One homogeneous tier: `count` instances stamped from the server and
 /// link templates. Instance names are `{name}-{i}` (and `{name}-link-{i}`
@@ -74,6 +75,60 @@ impl TopologyConfig {
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
+    }
+
+    /// Run every tier's servers on `kind` (one literal kind for all
+    /// tiers; use [`Self::with_service_model_by_name`] to derive per-tier
+    /// KV budgets from each tier's slot count).
+    pub fn with_service_model(mut self, kind: ServiceModelKind) -> Self {
+        for tier in &mut self.tiers {
+            tier.server.service_model = kind;
+        }
+        self
+    }
+
+    /// Run only tiers of the given server kind on `model` — e.g.
+    /// token-batch edge tiers under PS cloud tiers, the mixed deployment
+    /// the batching/quantization edge studies evaluate.
+    pub fn with_service_model_for_kind(
+        mut self,
+        server_kind: ServerKind,
+        model: ServiceModelKind,
+    ) -> Self {
+        for tier in &mut self.tiers {
+            if tier.server.kind == server_kind {
+                tier.server.service_model = model;
+            }
+        }
+        self
+    }
+
+    /// Apply a whole-fleet service model by CLI name: "ps" (default),
+    /// "token-batch" (every tier, per-tier KV budgets), or
+    /// "token-batch-edge" (edge-kind tiers only; cloud stays PS).
+    pub fn with_service_model_by_name(self, name: &str) -> Option<Self> {
+        match name {
+            "ps" => Some(self),
+            "token-batch" => {
+                let mut topo = self;
+                for tier in &mut topo.tiers {
+                    tier.server.service_model =
+                        ServiceModelKind::token_batch_for(tier.server.slots);
+                }
+                Some(topo)
+            }
+            "token-batch-edge" => {
+                let mut topo = self;
+                for tier in &mut topo.tiers {
+                    if tier.server.kind == ServerKind::Edge {
+                        tier.server.service_model =
+                            ServiceModelKind::token_batch_for(tier.server.slots);
+                    }
+                }
+                Some(topo)
+            }
+            _ => None,
+        }
     }
 
     /// The paper's testbed as a topology: one 5-instance edge tier + one
@@ -134,6 +189,7 @@ impl TopologyConfig {
             p_idle: 14.0,
             compute_capacity: 12.0,
             queue_limit: 3,
+            service_model: ServiceModelKind::Ps,
         };
         let hub_link = LinkSpec {
             name: "hub-link".into(),
@@ -343,6 +399,105 @@ mod tests {
         // Fluctuating mode switches every tier's amplitude on.
         let f = TopologyConfig::edgeshard_10x("llama2-7b", BandwidthMode::Fluctuating).build();
         assert!(f.links.iter().all(|l| l.fluctuation > 0.0));
+    }
+
+    /// Per-tier service-model selection lowers into the per-server specs:
+    /// "token-batch" switches every tier (KV budget scaled by tier
+    /// slots), "token-batch-edge" leaves cloud tiers on the PS fluid.
+    #[test]
+    fn service_model_selection_lowers_per_tier() {
+        use crate::sim::service_model::ServiceModelKind;
+        let base = TopologyConfig::edgeshard_10x("llama2-7b", BandwidthMode::Stable);
+        assert!(base
+            .build()
+            .servers
+            .iter()
+            .all(|s| s.service_model == ServiceModelKind::Ps));
+
+        let all = base
+            .clone()
+            .with_service_model_by_name("token-batch")
+            .unwrap()
+            .build();
+        for s in &all.servers {
+            match s.service_model {
+                ServiceModelKind::TokenBatch { kv_tokens } => {
+                    assert_eq!(kv_tokens as usize, s.slots * 1536, "{}", s.name);
+                }
+                other => panic!("{}: expected token-batch, got {other:?}", s.name),
+            }
+        }
+
+        let edge_only = base
+            .clone()
+            .with_service_model_by_name("token-batch-edge")
+            .unwrap()
+            .build();
+        for s in &edge_only.servers {
+            match s.kind {
+                ServerKind::Edge => {
+                    assert!(matches!(s.service_model, ServiceModelKind::TokenBatch { .. }))
+                }
+                ServerKind::Cloud => assert_eq!(s.service_model, ServiceModelKind::Ps),
+            }
+        }
+
+        assert!(base.clone().with_service_model_by_name("ps").is_some());
+        assert!(base.clone().with_service_model_by_name("nope").is_none());
+
+        // The literal-kind builders (one explicit kind, e.g. a custom KV
+        // budget shared by every selected tier) are the programmatic
+        // siblings of the by-name arms; pin their selection behavior so
+        // the two entry points cannot drift apart silently.
+        let fixed = ServiceModelKind::TokenBatch { kv_tokens: 4096 };
+        let all_fixed = base.clone().with_service_model(fixed).build();
+        assert!(all_fixed.servers.iter().all(|s| s.service_model == fixed));
+        let edge_fixed = base
+            .clone()
+            .with_service_model_for_kind(ServerKind::Edge, fixed)
+            .build();
+        for s in &edge_fixed.servers {
+            match s.kind {
+                ServerKind::Edge => assert_eq!(s.service_model, fixed),
+                ServerKind::Cloud => assert_eq!(s.service_model, ServiceModelKind::Ps),
+            }
+        }
+        // And the edge-only selections agree tier-for-tier on *which*
+        // servers switched, whichever entry point chose them.
+        let by_name_edges = base
+            .with_service_model_by_name("token-batch-edge")
+            .unwrap()
+            .build();
+        for (a, b) in edge_fixed.servers.iter().zip(&by_name_edges.servers) {
+            assert_eq!(
+                matches!(a.service_model, ServiceModelKind::TokenBatch { .. }),
+                matches!(b.service_model, ServiceModelKind::TokenBatch { .. }),
+                "{}",
+                a.name
+            );
+        }
+    }
+
+    /// A mixed-model fleet (token-batch edge under PS cloud) runs end to
+    /// end through the unchanged engine and schedulers.
+    #[test]
+    fn mixed_model_paper_topology_runs_end_to_end() {
+        let topo = TopologyConfig::paper("llama2-7b", BandwidthMode::Stable)
+            .with_service_model_by_name("token-batch-edge")
+            .unwrap();
+        let cfg = topo.build();
+        let trace = generate(
+            &WorkloadConfig::default()
+                .with_requests(400)
+                .with_arrivals(ArrivalProcess::Poisson { rate: 12.0 })
+                .with_deadline_range(2.0, 6.0)
+                .with_seed(17),
+        );
+        let mut s = CsUcb::with_defaults(cfg.n_servers());
+        let rep = simulate(&cfg, &trace, &mut s);
+        assert_eq!(rep.outcomes.len(), 400);
+        assert_eq!(rep.unfinished, 0);
+        assert!(rep.success_rate > 0.5, "success {}", rep.success_rate);
     }
 
     /// A short streaming run on the 10x preset end to end: every layer

@@ -153,6 +153,19 @@ impl WorkloadConfig {
         }
         self
     }
+
+    /// Override the class mix weights, in [`ServiceClass::ALL`] order
+    /// (Chat, Summarize, Translate, Code). Relative frequencies — they
+    /// need not sum to 1. This is the per-tier knob behind
+    /// `paper_scale_sim --mix tiered`: one `WorkloadConfig` per tier,
+    /// each with its own locality-shaped mix, merged through
+    /// `workload::MergedArrivals`.
+    pub fn with_class_weights(mut self, weights: [f64; 4]) -> Self {
+        for (p, w) in self.profiles.iter_mut().zip(weights) {
+            p.weight = w;
+        }
+        self
+    }
 }
 
 /// Streaming workload cursor: draws one request at a time from the same
@@ -317,6 +330,25 @@ mod tests {
     fn with_rate_is_poisson_shorthand() {
         let cfg = WorkloadConfig::default().with_rate(42.0);
         assert_eq!(cfg.arrivals, ArrivalProcess::Poisson { rate: 42.0 });
+    }
+
+    #[test]
+    fn class_weights_shape_the_mix() {
+        // All weight on Code: every request draws that class.
+        let cfg = WorkloadConfig::default()
+            .with_requests(300)
+            .with_class_weights([0.0, 0.0, 0.0, 1.0]);
+        assert!(generate(&cfg)
+            .iter()
+            .all(|r| r.class == ServiceClass::Code));
+        // Skewed weights skew the empirical mix.
+        let cfg = WorkloadConfig::default()
+            .with_requests(4000)
+            .with_class_weights([0.8, 0.1, 0.05, 0.05])
+            .with_seed(4);
+        let trace = generate(&cfg);
+        let chat = trace.iter().filter(|r| r.class == ServiceClass::Chat).count();
+        assert!(chat > trace.len() / 2, "chat {} of {}", chat, trace.len());
     }
 
     #[test]

@@ -174,6 +174,88 @@ mod tests {
         assert!(got.windows(2).all(|w| w[0].arrival <= w[1].arrival));
     }
 
+    /// Three-way merge under strongly unequal per-tier rates: the merged
+    /// stream keeps the ArrivalSource order contract (nondecreasing
+    /// arrivals), relabels ids densely from zero, conserves every
+    /// request, and is deterministic run to run.
+    #[test]
+    fn kway_merge_unequal_rates_contract() {
+        let mk = |n: usize, rate: f64, seed: u64| {
+            WorkloadConfig::default()
+                .with_requests(n)
+                .with_arrivals(ArrivalProcess::Poisson { rate })
+                .with_seed(seed)
+        };
+        // Rates spanning two orders of magnitude: the slow tier's stream
+        // outlives the fast ones, exercising exhausted-source heads.
+        let cfgs = [mk(120, 50.0, 11), mk(40, 2.0, 22), mk(9, 0.5, 33)];
+
+        let run = || {
+            let mut gens: Vec<WorkloadGen> = cfgs.iter().map(WorkloadGen::new).collect();
+            let sources: Vec<&mut dyn ArrivalSource> = gens
+                .iter_mut()
+                .map(|g| g as &mut dyn ArrivalSource)
+                .collect();
+            let mut merged = MergedArrivals::new(sources);
+            assert_eq!(merged.len_hint(), Some(169));
+            let mut got = Vec::new();
+            while let Some(r) = merged.next_arrival() {
+                // Order contract the engine debug_asserts on.
+                if let Some(prev) = got.last().map(|p: &ServiceRequest| p.arrival) {
+                    assert!(r.arrival >= prev, "order broke at {}", r.id);
+                }
+                got.push(r);
+            }
+            assert!(merged.next_arrival().is_none(), "stays exhausted");
+            got
+        };
+
+        let a = run();
+        let b = run();
+        assert_eq!(a.len(), 169, "every request conserved");
+        // Dense id relabeling from zero, in merged order.
+        assert!(a.iter().enumerate().all(|(i, r)| r.id == i as u64));
+        // Deterministic: identical sequences, field for field.
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+        }
+        // The fast tier dominates early, the slow tail survives to the
+        // end: the last arrival must come from the 0.5 req/s source
+        // (its 9 requests stretch past everything else).
+        let span_fast = 120.0 / 50.0;
+        assert!(a.last().unwrap().arrival > 2.0 * span_fast);
+    }
+
+    /// Sources that start empty or exhaust mid-merge never stall the
+    /// stream or distort ids.
+    #[test]
+    fn merge_with_empty_and_short_sources() {
+        let empty_cfg = WorkloadConfig::default().with_requests(0).with_seed(1);
+        let short_cfg = WorkloadConfig::default()
+            .with_requests(3)
+            .with_arrivals(ArrivalProcess::Poisson { rate: 5.0 })
+            .with_seed(2);
+        let long_cfg = WorkloadConfig::default()
+            .with_requests(10)
+            .with_arrivals(ArrivalProcess::Poisson { rate: 5.0 })
+            .with_seed(3);
+        let mut e = WorkloadGen::new(&empty_cfg);
+        let mut s = WorkloadGen::new(&short_cfg);
+        let mut l = WorkloadGen::new(&long_cfg);
+        let mut merged = MergedArrivals::new(vec![&mut e, &mut s, &mut l]);
+        assert_eq!(merged.len_hint(), Some(13));
+        let mut got = Vec::new();
+        while let Some(r) = merged.next_arrival() {
+            got.push(r);
+        }
+        assert_eq!(got.len(), 13);
+        assert!(got.iter().enumerate().all(|(i, r)| r.id == i as u64));
+        assert!(got.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
     #[test]
     fn trace_source_streams_in_order_then_exhausts() {
         let trace = generate(&WorkloadConfig::default().with_requests(5).with_seed(3));

@@ -23,6 +23,7 @@ fn random_view(g: &mut Gen, n: usize) -> ClusterView {
                     ServerKind::Edge
                 },
                 predicted_time: g.f64(0.1, 12.0),
+                predicted_ttft: g.f64(0.05, 6.0),
                 compute_headroom: cap,
                 compute_demand: g.f64(0.0, 25.0),
                 bandwidth_headroom: g.f64(1.0e5, 3.0e8),

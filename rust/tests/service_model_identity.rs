@@ -1,0 +1,312 @@
+//! Run-identity pin for the `ServiceModel` refactor: the PS default must
+//! be **bit-identical** to the pre-trait server layer.
+//!
+//! `ReferencePsModel` below is the pre-PR-4 `ServerSim` service logic,
+//! copied formula for formula onto the trait — an executable
+//! specification in the spirit of `ps_equivalence.rs` (which keeps the
+//! seed's naive PS queue) and PR 3's topology-lowering pin. Each test
+//! builds the engine twice over `ClusterConfig::paper` + a seeded
+//! workload — once with the production `PsServiceModel`, once with every
+//! server swapped to the reference — and requires the two `RunReport`s to
+//! agree outcome for outcome, to the bit: success counts, energy,
+//! completion instants, event counts, per-scheduler diagnostics.
+//!
+//! If a future change to `PsServiceModel` (or the engine's model-agnostic
+//! reschedule path) moves any float by one ulp, this fails — exactly the
+//! alarm the refactor promised.
+
+use perllm::scheduler::csucb::CsUcb;
+use perllm::scheduler::{
+    agod::Agod, fineinfer::FineInfer, rewardless::RewardlessGuidance, Scheduler,
+};
+use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
+use perllm::sim::engine::{simulate, Engine, RunReport};
+use perllm::sim::ps::{batch_efficiency, PsJob, PsQueue};
+use perllm::sim::server::ServerSpec;
+use perllm::sim::service_model::{ServiceModel, ServicePrediction};
+use perllm::sim::time::SimTime;
+use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
+use perllm::workload::service::ServiceRequest;
+use perllm::workload::TraceSource;
+
+/// The pre-trait `ServerSim` service internals, verbatim: a `PsQueue`
+/// over solo-work seconds, rate `rate_mult * eff(n) / n` per job, the
+/// historical predictor. Kept independent of `PsServiceModel` so a
+/// drive-by "simplification" there cannot silently rewrite the spec.
+#[derive(Debug)]
+struct ReferencePsModel {
+    spec: ServerSpec,
+    queue: PsQueue,
+}
+
+impl ReferencePsModel {
+    fn new(spec: ServerSpec) -> Self {
+        let slots = spec.slots;
+        ReferencePsModel {
+            spec,
+            queue: PsQueue::new(slots),
+        }
+    }
+
+    /// Pre-trait `ServerSim::per_job_rate`.
+    fn per_job_rate(&self, rate_mult: f64) -> f64 {
+        let n = self.queue.n_active();
+        if n == 0 {
+            return 0.0;
+        }
+        rate_mult * batch_efficiency(n, self.spec.batch_alpha) / n as f64
+    }
+}
+
+impl ServiceModel for ReferencePsModel {
+    fn admit(&mut self, id: u64, req: &ServiceRequest, now: SimTime) {
+        // Pre-trait engine: `srv.queue.push(id, spec.solo_work(req), now)`.
+        self.queue.push(id, self.spec.solo_work(req), now);
+    }
+
+    fn would_drop(&self) -> bool {
+        // Pre-trait `ServerSim::would_drop`.
+        self.queue.n_active() >= self.queue.max_active()
+            && self.queue.n_waiting() >= self.spec.queue_limit
+    }
+
+    fn advance(&mut self, dt: SimTime, rate_mult: f64, energy_per_job: f64) {
+        // Pre-trait `ServerSim::advance_to` body (rate fixed over dt).
+        let rate = self.per_job_rate(rate_mult);
+        self.queue.advance_energy(dt, rate, energy_per_job);
+    }
+
+    fn next_completion_in(&self, rate_mult: f64) -> Option<SimTime> {
+        self.queue.next_completion_in(self.per_job_rate(rate_mult))
+    }
+
+    fn completion_key(&self, rate_mult: f64) -> Option<(f64, f64)> {
+        // Pre-trait `Engine::reschedule_server` guard inputs:
+        // (heap-top finish work, per-job rate), present iff rate > 0.
+        let rate = self.per_job_rate(rate_mult);
+        if rate > 0.0 {
+            self.queue.peek_finish_work().map(|fw| (fw, rate))
+        } else {
+            None
+        }
+    }
+
+    fn reap_into(&mut self, now: SimTime, rate_mult: f64, out: &mut Vec<PsJob>) {
+        let rate = self.per_job_rate(rate_mult);
+        self.queue.reap_into(now, rate, out);
+    }
+
+    fn predict(
+        &self,
+        req: &ServiceRequest,
+        extra_n: usize,
+        extra_work_s: f64,
+        rate_mult: f64,
+    ) -> ServicePrediction {
+        // Pre-trait `ServerSim::predict_service_time_with`, verbatim.
+        let work = self.spec.solo_work(req);
+        let occupied = self.queue.n_active() + extra_n;
+        let n_after = (occupied + 1).min(self.queue.max_active());
+        let eff = batch_efficiency(n_after, self.spec.batch_alpha).max(1e-9);
+        let stretch = n_after as f64 / eff;
+        let mult = if rate_mult > 0.0 { rate_mult } else { 1e-9 };
+        let wait = if occupied >= self.queue.max_active() {
+            (self.queue.backlog() + extra_work_s) / (eff * mult)
+        } else {
+            0.0
+        };
+        let prefill_s = req.prompt_tokens as f64 / self.spec.prefill_rate;
+        ServicePrediction {
+            ttft_s: wait + prefill_s * stretch / mult,
+            total_s: wait + work * stretch / mult,
+        }
+    }
+
+    fn n_active(&self) -> usize {
+        self.queue.n_active()
+    }
+
+    fn n_waiting(&self) -> usize {
+        self.queue.n_waiting()
+    }
+
+    fn slot_capacity(&self) -> usize {
+        self.queue.max_active()
+    }
+
+    fn queue_capacity(&self) -> usize {
+        self.spec.queue_limit
+    }
+
+    fn backlog_s(&self) -> f64 {
+        self.queue.backlog()
+    }
+}
+
+/// Run `trace` through the engine with every server forced onto the
+/// reference model.
+fn simulate_reference(
+    cfg: &ClusterConfig,
+    trace: &[ServiceRequest],
+    scheduler: &mut dyn Scheduler,
+) -> RunReport {
+    let mut source = TraceSource::new(trace);
+    let mut engine = Engine::new(cfg, &mut source, scheduler);
+    for srv in &mut engine.cluster_mut().servers {
+        srv.model = Box::new(ReferencePsModel::new(srv.spec.clone()));
+    }
+    engine.run()
+}
+
+/// Bit-level equality of two runs: the pinned `RunReport` surface
+/// (success counts, energy, per-outcome instants, event accounting,
+/// diagnostics).
+fn assert_runs_bit_identical(a: &RunReport, b: &RunReport, label: &str) {
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{label}: outcome count");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id, "{label}: id order");
+        assert_eq!(x.server, y.server, "{label}: placement of {}", x.id);
+        assert_eq!(x.tokens, y.tokens, "{label}: tokens of {}", x.id);
+        assert_eq!(
+            x.completed_at.to_bits(),
+            y.completed_at.to_bits(),
+            "{label}: completion instant of {}",
+            x.id
+        );
+        assert_eq!(
+            x.processing_time.to_bits(),
+            y.processing_time.to_bits(),
+            "{label}: processing time of {}",
+            x.id
+        );
+        assert_eq!(
+            x.energy_j.to_bits(),
+            y.energy_j.to_bits(),
+            "{label}: energy of {}",
+            x.id
+        );
+    }
+    assert_eq!(a.dropped, b.dropped, "{label}: dropped");
+    assert_eq!(a.dropped_by_policy, b.dropped_by_policy, "{label}: policy sheds");
+    assert_eq!(a.unfinished, b.unfinished, "{label}: unfinished");
+    assert_eq!(a.late, b.late, "{label}: late");
+    assert_eq!(
+        a.success_rate.to_bits(),
+        b.success_rate.to_bits(),
+        "{label}: success rate"
+    );
+    assert_eq!(
+        a.energy.total_j().to_bits(),
+        b.energy.total_j().to_bits(),
+        "{label}: total energy"
+    );
+    assert_eq!(a.events_processed, b.events_processed, "{label}: events");
+    assert_eq!(a.stale_events, b.stale_events, "{label}: stale events");
+    assert_eq!(
+        a.peak_event_queue_len, b.peak_event_queue_len,
+        "{label}: peak event heap"
+    );
+    assert_eq!(a.diagnostics, b.diagnostics, "{label}: diagnostics");
+}
+
+fn paper_trace(n: usize, rate: f64, seed: u64) -> Vec<ServiceRequest> {
+    generate(
+        &WorkloadConfig::default()
+            .with_requests(n)
+            .with_arrivals(ArrivalProcess::Poisson { rate })
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(seed),
+    )
+}
+
+/// The headline pin: `ClusterConfig::paper` + seeded workload + CS-UCB,
+/// both bandwidth modes, trait-based PS vs the pre-trait reference.
+#[test]
+fn csucb_paper_runs_bit_identical_to_pre_trait_reference() {
+    let trace = paper_trace(1500, 15.0, 42);
+    for mode in [BandwidthMode::Stable, BandwidthMode::Fluctuating] {
+        let cfg = ClusterConfig::paper("llama2-7b", mode);
+        let mut s1 = CsUcb::with_defaults(cfg.n_servers());
+        let mut s2 = CsUcb::with_defaults(cfg.n_servers());
+        let current = simulate(&cfg, &trace, &mut s1);
+        let reference = simulate_reference(&cfg, &trace, &mut s2);
+        assert_runs_bit_identical(&current, &reference, &format!("cs-ucb {mode:?}"));
+        // Sanity: the pinned run does real work.
+        assert!(current.success_rate > 0.5);
+        assert!(current.energy.total_j() > 0.0);
+    }
+}
+
+/// Every baseline scheduler sees the same identity (placement feedback
+/// loops differ per policy, so each exercises different view/feedback
+/// paths through the trait).
+#[test]
+fn baselines_paper_runs_bit_identical_to_pre_trait_reference() {
+    let trace = paper_trace(1000, 15.0, 7);
+    let cfg = ClusterConfig::paper("yi-6b", BandwidthMode::Stable);
+    let mk: Vec<(&str, Box<dyn Fn() -> Box<dyn Scheduler>>)> = vec![
+        (
+            "fineinfer",
+            Box::new(|| Box::new(FineInfer::new(5)) as Box<dyn Scheduler>),
+        ),
+        (
+            "agod",
+            Box::new(|| Box::new(Agod::new(6, 7)) as Box<dyn Scheduler>),
+        ),
+        (
+            "rewardless",
+            Box::new(|| Box::new(RewardlessGuidance::new(6)) as Box<dyn Scheduler>),
+        ),
+    ];
+    for (name, make) in mk {
+        let mut s1 = make();
+        let mut s2 = make();
+        let current = simulate(&cfg, &trace, s1.as_mut());
+        let reference = simulate_reference(&cfg, &trace, s2.as_mut());
+        assert_runs_bit_identical(&current, &reference, name);
+    }
+}
+
+/// The overload/outage paths (admission drops, zero-rate servers,
+/// horizon-unfinished work) also run bit-identical through the trait.
+#[test]
+fn stress_paths_bit_identical_to_pre_trait_reference() {
+    use perllm::scheduler::{Action, ClusterView};
+
+    struct Fixed(usize);
+    impl Scheduler for Fixed {
+        fn name(&self) -> &'static str {
+            "fixed"
+        }
+        fn decide(&mut self, _r: &ServiceRequest, _v: &ClusterView) -> Action {
+            Action::assign(self.0)
+        }
+    }
+
+    // Simultaneous burst onto the cloud: congestion collapse, queue
+    // drops, heavy reschedule churn — the guard's hottest path.
+    let burst = generate(
+        &WorkloadConfig::default()
+            .with_requests(400)
+            .with_arrivals(ArrivalProcess::Simultaneous)
+            .with_seed(3),
+    );
+    let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+    let current = simulate(&cfg, &burst, &mut Fixed(5));
+    let reference = simulate_reference(&cfg, &burst, &mut Fixed(5));
+    assert_runs_bit_identical(&current, &reference, "simultaneous-400");
+    assert!(current.dropped > 0, "stress run must actually shed");
+
+    // Outage window on the target server: zero-rate completion keys.
+    let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable).with_outages(vec![
+        perllm::sim::cluster::Outage {
+            server: 0,
+            start: 0.5,
+            end: 3.0,
+        },
+    ]);
+    let trace = paper_trace(120, 10.0, 13);
+    let current = simulate(&cfg, &trace, &mut Fixed(0));
+    let reference = simulate_reference(&cfg, &trace, &mut Fixed(0));
+    assert_runs_bit_identical(&current, &reference, "outage");
+}

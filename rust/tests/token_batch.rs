@@ -1,0 +1,208 @@
+//! Integration tests for the token-batch service model: the fluid-limit
+//! differential against the PS queue, end-to-end solo reduction, and the
+//! honest-predictor regression on both models (acceptance criteria of
+//! the `ServiceModel` refactor).
+
+use perllm::scheduler::{Action, ClusterView, Scheduler};
+use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
+use perllm::sim::energy::EnergyWeights;
+use perllm::sim::engine::simulate;
+use perllm::sim::net::LinkSpec;
+use perllm::sim::server::{ServerKind, ServerSpec};
+use perllm::sim::service_model::ServiceModelKind;
+use perllm::sim::topology::TopologyConfig;
+use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
+use perllm::workload::service::ServiceRequest;
+
+/// Fixed-target scheduler that records the decision-time view of its
+/// target (predicted completion + TTFT).
+struct Capture {
+    target: usize,
+    predicted: Vec<(f64, f64)>,
+}
+
+impl Capture {
+    fn new(target: usize) -> Self {
+        Capture {
+            target,
+            predicted: Vec::new(),
+        }
+    }
+}
+
+impl Scheduler for Capture {
+    fn name(&self) -> &'static str {
+        "capture"
+    }
+    fn decide(&mut self, _r: &ServiceRequest, v: &ClusterView) -> Action {
+        let sv = &v.servers[self.target];
+        self.predicted.push((sv.predicted_time, sv.predicted_ttft));
+        Action::assign(self.target)
+    }
+}
+
+/// One server behind one edge link; `slots`/`alpha` parameterized so the
+/// fluid limit (slots = 1, linear curve) is constructible.
+fn single_server_cfg(model: ServiceModelKind, slots: usize, alpha: f64) -> ClusterConfig {
+    ClusterConfig {
+        servers: vec![ServerSpec {
+            name: "solo".into(),
+            kind: ServerKind::Edge,
+            prefill_rate: 1550.0,
+            decode_rate: 51.0,
+            slots,
+            batch_alpha: alpha,
+            p_infer: 45.0,
+            p_idle: 6.0,
+            compute_capacity: 8.0,
+            queue_limit: 64,
+            service_model: model,
+        }],
+        links: vec![LinkSpec::edge(0, false)],
+        bandwidth: BandwidthMode::Stable,
+        weights: EnergyWeights::default(),
+        outages: Vec::new(),
+        seed: 1,
+        churn_guard: true,
+    }
+}
+
+fn light_trace(n: usize, rate: f64, seed: u64) -> Vec<ServiceRequest> {
+    generate(
+        &WorkloadConfig::default()
+            .with_requests(n)
+            .with_arrivals(ArrivalProcess::Poisson { rate })
+            .with_deadline_range(20.0, 40.0) // generous: physics, not SLOs
+            .with_seed(seed),
+    )
+}
+
+/// Fluid-limit differential: at batch = 1 with a linear efficiency curve
+/// both models are FIFO servers at the solo rate; the only divergence the
+/// token-batch model may show is its whole-iteration quantization (at
+/// most one iteration per completed service, accumulated through the
+/// FIFO queue). Checked per outcome against the PS run.
+#[test]
+fn fluid_limit_matches_ps_within_iteration_quantization() {
+    let trace = light_trace(60, 0.8, 5);
+    let cfg_ps = single_server_cfg(ServiceModelKind::Ps, 1, 1.0);
+    let cfg_tb = single_server_cfg(
+        ServiceModelKind::TokenBatch { kv_tokens: 1536 },
+        1,
+        1.0,
+    );
+    let r_ps = simulate(&cfg_ps, &trace, &mut Capture::new(0));
+    let r_tb = simulate(&cfg_tb, &trace, &mut Capture::new(0));
+    assert_eq!(r_ps.outcomes.len(), r_tb.outcomes.len());
+    assert_eq!(r_ps.unfinished, 0);
+    assert_eq!(r_tb.unfinished, 0);
+    assert_eq!(r_ps.dropped, 0);
+    assert_eq!(r_tb.dropped, 0);
+    let d1 = 1.0 / 51.0; // one solo iteration
+    for (i, (a, b)) in r_ps.outcomes.iter().zip(&r_tb.outcomes).enumerate() {
+        assert_eq!(a.id, b.id, "completion order diverged at {i}");
+        // Quantization only rounds service *up*…
+        assert!(
+            b.processing_time + 1e-9 >= a.processing_time,
+            "token-batch finished {} early: {} vs {}",
+            a.id,
+            b.processing_time,
+            a.processing_time
+        );
+        // …by at most one iteration per service completed so far (FIFO
+        // queue accumulates the rounding).
+        let bound = (i + 1) as f64 * d1 + 1e-6;
+        assert!(
+            b.processing_time - a.processing_time <= bound,
+            "fluid limit diverged at {}: {} vs {} (bound {bound})",
+            a.id,
+            b.processing_time,
+            a.processing_time
+        );
+    }
+}
+
+/// End-to-end solo reduction: one request through the full engine on a
+/// token-batch server spends exactly its quantized prefill + decode time
+/// in service.
+#[test]
+fn single_request_reduces_to_solo_prefill_plus_decode() {
+    let cfg = single_server_cfg(ServiceModelKind::TokenBatch { kv_tokens: 1536 }, 8, 0.58);
+    let trace = light_trace(1, 1.0, 9);
+    let rep = simulate(&cfg, &trace, &mut Capture::new(0));
+    assert_eq!(rep.outcomes.len(), 1);
+    let o = &rep.outcomes[0];
+    assert!(o.success(), "uncontended request must succeed");
+    let r = &trace[0];
+    let solo = r.prompt_tokens as f64 / 1550.0 + r.output_tokens as f64 / 51.0;
+    let d1 = 1.0 / 51.0;
+    assert!(
+        o.infer_time >= solo - 1e-9 && o.infer_time <= solo + d1 + 1e-9,
+        "infer {} vs solo {solo} (+ at most one iteration {d1})",
+        o.infer_time
+    );
+}
+
+/// Honest-predictor regression, both models: on an uncontended server the
+/// decision-time `predicted_time` must equal the realized processing
+/// time, and `predicted_ttft` must be a positive estimate below it. (The
+/// PS predictor was already exact here; the token-batch predictor uses
+/// the same whole-iteration schedule as its completions, so it is exact
+/// too — not a fluid approximation of itself.)
+#[test]
+fn uncontended_predictions_match_realized_time_on_both_models() {
+    for (label, model) in [
+        ("ps", ServiceModelKind::Ps),
+        ("token-batch", ServiceModelKind::TokenBatch { kv_tokens: 1536 }),
+    ] {
+        let cfg = single_server_cfg(model, 8, 0.58);
+        // Arrivals pinned 50 s apart: each request finds the server idle
+        // and fully drained (no Poisson luck involved).
+        let mut trace = light_trace(5, 1.0, 23);
+        for (i, r) in trace.iter_mut().enumerate() {
+            r.arrival = i as f64 * 50.0;
+        }
+        let mut sched = Capture::new(0);
+        let rep = simulate(&cfg, &trace, &mut sched);
+        assert_eq!(rep.outcomes.len(), 5, "{label}");
+        assert_eq!(rep.unfinished + rep.dropped, 0, "{label}");
+        for (o, &(predicted, ttft)) in rep.outcomes.iter().zip(&sched.predicted) {
+            assert!(
+                (o.processing_time - predicted).abs() <= 1e-6 * predicted.max(1.0),
+                "{label}: request {} realized {} vs predicted {predicted}",
+                o.id,
+                o.processing_time
+            );
+            assert!(ttft > 0.0 && ttft <= predicted + 1e-12, "{label}: ttft {ttft}");
+        }
+    }
+}
+
+/// The paper topology fully on token-batch servers completes a paper-rate
+/// workload end to end with every scheduler-facing layer intact
+/// (feasibility filters, candidate pruning, feedback views).
+#[test]
+fn token_batch_paper_topology_completes_paper_rate_load() {
+    use perllm::scheduler::csucb::CsUcb;
+    let topo = TopologyConfig::paper("llama2-7b", BandwidthMode::Stable)
+        .with_service_model_by_name("token-batch")
+        .expect("known model");
+    let cfg = topo.build();
+    let trace = generate(
+        &WorkloadConfig::default()
+            .with_requests(600)
+            .with_arrivals(ArrivalProcess::Poisson { rate: 12.0 })
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(31),
+    );
+    let mut s = CsUcb::with_defaults(cfg.n_servers());
+    let rep = simulate(&cfg, &trace, &mut s);
+    assert_eq!(rep.outcomes.len(), 600);
+    assert_eq!(rep.unfinished, 0, "token-batch servers must drain");
+    assert!(rep.success_rate > 0.5, "success {}", rep.success_rate);
+    assert!(rep.energy.total_j() > 0.0);
+    // Iteration-granular completions still play by the DES accounting
+    // rules: bounded heap, sane stale ratio.
+    assert!(rep.stale_ratio < 1.0);
+    assert!(rep.peak_event_queue_len < 600);
+}
