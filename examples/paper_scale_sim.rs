@@ -20,10 +20,12 @@
 //!                   [--topology paper|edgeshard-10x|edgeshard-100x]
 //!                   [--service-model ps|token-batch|token-batch-edge]
 //!                   [--mix single|tiered]
+//!                   [--slo completion-only|per-class] [--gate]
 //!                   [--rate R]
-//!                   [--schedulers fineinfer,agod,rewardless,cs-ucb]
+//!                   [--schedulers fineinfer,agod,rewardless,cs-ucb,cs-ucb-slo]
 //!                   [--modes stable|fluctuating|both]
 //!                   [--min-success F] [--min-events-per-sec F]
+//!                   [--min-gate-sheds N]
 //!
 //! `--topology` swaps the paper's 6-server testbed for an EdgeShard-style
 //! multi-tier preset (60 / 600 servers); the Poisson arrival rate then
@@ -41,6 +43,22 @@
 //! proportional rates — k-way merged through `workload::MergedArrivals`:
 //! the EdgeShard locality scenario from the CLI.
 //!
+//! `--slo per-class` swaps the paper's uniform U[2, 6] scalar deadline
+//! for class-conditioned **SLO vectors**: chat/translate draw a TTFT
+//! bound on top of their class completion range, summarize/code stay
+//! completion-bound with their loose class ranges (workload::SloSpec).
+//! The default `completion-only` reproduces the pre-PR5 workload byte
+//! for byte, which is what keeps the default CS-UCB rows bit-identical
+//! to earlier revisions (pinned by `rust/tests/slo_identity.rs`). Per-
+//! class runs print an extra SLO row: per-class TTFT/completion
+//! attainment and the violation split by constraint family.
+//!
+//! `--gate` installs `scheduler::admission::TokenBucketGate` in front of
+//! every scheduler: requests whose SLO vector is predicted to be violated
+//! on every server are shed at the door (a bounded per-class token budget
+//! still admits a trickle to keep probing), surfaced as `gate sheds` and
+//! gated by `--min-gate-sheds` in CI overload smokes.
+//!
 //! The 100x fleet-scale acceptance run:
 //!
 //! ```text
@@ -53,13 +71,18 @@
 //! rate or DES events/s lands below the floor (or the event-heap peak
 //! above the cap), the process exits 1.
 
+use perllm::scheduler::admission::{GateParams, TokenBucketGate};
 use perllm::scheduler::{
-    agod::Agod, csucb::CsUcb, fineinfer::FineInfer, rewardless::RewardlessGuidance, Scheduler,
+    agod::Agod,
+    csucb::{CsUcb, CsUcbSlo},
+    fineinfer::FineInfer,
+    rewardless::RewardlessGuidance,
+    Scheduler,
 };
 use perllm::sim::cluster::BandwidthMode;
 use perllm::sim::engine::simulate_stream;
 use perllm::sim::topology::TopologyConfig;
-use perllm::workload::generator::{ArrivalProcess, WorkloadConfig, WorkloadGen};
+use perllm::workload::generator::{ArrivalProcess, SloSampling, WorkloadConfig, WorkloadGen};
 use perllm::workload::{ArrivalSource, MergedArrivals};
 
 /// Locality-shaped class weights per tier (`--mix tiered`), in
@@ -83,6 +106,7 @@ fn tier_workloads(
     n: usize,
     rate: f64,
     seed: u64,
+    slo: SloSampling,
 ) -> Vec<WorkloadConfig> {
     let total_slots = topo.total_slots() as f64;
     let mut out = Vec::with_capacity(topo.tiers.len());
@@ -98,15 +122,29 @@ fn tier_workloads(
         };
         assigned += tier_n;
         out.push(
-            WorkloadConfig::default()
-                .with_requests(tier_n)
-                .with_arrivals(ArrivalProcess::Poisson { rate: rate * share })
-                .with_deadline_range(2.0, 6.0)
-                .with_class_weights(tier_class_weights(&tier.name))
-                .with_seed(seed ^ (0x9E37_79B9 * (i as u64 + 1))),
+            shape_slo(
+                WorkloadConfig::default()
+                    .with_requests(tier_n)
+                    .with_arrivals(ArrivalProcess::Poisson { rate: rate * share }),
+                slo,
+            )
+            .with_class_weights(tier_class_weights(&tier.name))
+            .with_seed(seed ^ (0x9E37_79B9 * (i as u64 + 1))),
         );
     }
     out
+}
+
+/// Apply the `--slo` mode: completion-only keeps the paper's uniform
+/// U[2, 6] scalar deadline (byte-identical pre-PR5 workload); per-class
+/// keeps each class's own completion range (tight chat, loose code) and
+/// layers the class TTFT bounds on top — genuinely heterogeneous
+/// contracts, which is the point of the vector API.
+fn shape_slo(cfg: WorkloadConfig, slo: SloSampling) -> WorkloadConfig {
+    match slo {
+        SloSampling::CompletionOnly => cfg.with_deadline_range(2.0, 6.0),
+        SloSampling::PerClass => cfg.with_per_class_slos(),
+    }
 }
 
 fn main() {
@@ -128,6 +166,12 @@ fn main() {
         mix == "single" || mix == "tiered",
         "bad --mix {mix} (single|tiered)"
     );
+    let slo = match get("--slo", "completion-only").as_str() {
+        "completion-only" => SloSampling::CompletionOnly,
+        "per-class" => SloSampling::PerClass,
+        other => panic!("bad --slo {other} (completion-only|per-class)"),
+    };
+    let gate = args.iter().any(|a| a == "--gate");
     let schedulers: Vec<String> = get("--schedulers", "fineinfer,agod,rewardless,cs-ucb")
         .split(',')
         .map(|s| s.trim().to_string())
@@ -146,6 +190,9 @@ fn main() {
     let max_peak_heap: usize = get("--max-peak-event-heap", "0")
         .parse()
         .expect("bad --max-peak-event-heap");
+    let min_gate_sheds: u64 = get("--min-gate-sheds", "0")
+        .parse()
+        .expect("bad --min-gate-sheds");
 
     // Arrival rate: the paper's 15 req/s scaled by topology capacity
     // unless pinned explicitly — a 60-server fleet at paper load would
@@ -160,11 +207,13 @@ fn main() {
 
     // One workload description; every run streams a fresh cursor from it,
     // so all schedulers and modes see the identical request sequence.
-    let workload = WorkloadConfig::default()
-        .with_requests(n)
-        .with_arrivals(ArrivalProcess::Poisson { rate })
-        .with_deadline_range(2.0, 6.0)
-        .with_seed(seed);
+    let workload = shape_slo(
+        WorkloadConfig::default()
+            .with_requests(n)
+            .with_arrivals(ArrivalProcess::Poisson { rate }),
+        slo,
+    )
+    .with_seed(seed);
 
     let mut floor_violations = 0usize;
     for mode in modes {
@@ -177,27 +226,34 @@ fn main() {
         let cfg = topo.build();
         println!(
             "\n=== topology {topology} ({} servers, capacity {:.1}x paper), edge model {model}, \
-             service model {service_model}, {mix} mix, {mode:?} bandwidth, \
+             service model {service_model}, {mix} mix, {slo:?} SLOs{}, {mode:?} bandwidth, \
              {n} requests at {rate:.1} req/s (streamed) ===",
             cfg.n_servers(),
-            capacity_scale
+            capacity_scale,
+            if gate { " + admission gate" } else { "" },
         );
         let cloud = cfg.cloud_index();
         let ns = cfg.n_servers();
 
         let mut throughputs: Vec<(String, f64)> = Vec::new();
         for name in &schedulers {
-            let mut s: Box<dyn Scheduler> = match name.as_str() {
+            let inner: Box<dyn Scheduler> = match name.as_str() {
                 "fineinfer" => Box::new(FineInfer::new(cloud)),
                 "agod" => Box::new(Agod::new(ns, seed)),
                 "rewardless" => Box::new(RewardlessGuidance::new(ns)),
                 "cs-ucb" => Box::new(CsUcb::with_defaults(ns)),
+                "cs-ucb-slo" => Box::new(CsUcbSlo::with_defaults(ns)),
                 other => panic!("unknown scheduler {other}"),
+            };
+            let mut s: Box<dyn Scheduler> = if gate {
+                Box::new(TokenBucketGate::new(inner, GateParams::default()))
+            } else {
+                inner
             };
             let rep = if mix == "tiered" {
                 // One locality-shaped stream per tier, k-way merged: every
                 // scheduler still sees the identical merged sequence.
-                let tier_cfgs = tier_workloads(&topo, n, rate, seed);
+                let tier_cfgs = tier_workloads(&topo, n, rate, seed, slo);
                 let mut gens: Vec<WorkloadGen> =
                     tier_cfgs.iter().map(WorkloadGen::new).collect();
                 let sources: Vec<&mut dyn ArrivalSource> = gens
@@ -215,6 +271,9 @@ fn main() {
                 "    dropped {} (policy {}) late {} unfinished {}",
                 rep.dropped, rep.dropped_by_policy, rep.late, rep.unfinished
             );
+            if slo == SloSampling::PerClass || gate {
+                println!("    {}", rep.slo_summary_row());
+            }
             println!(
                 "    DES: {} events in {:.2}s wall = {:.0} events/s, \
                  stale ratio {:.4} ({} stale), peak heap {}",
@@ -247,12 +306,22 @@ fn main() {
                 );
                 floor_violations += 1;
             }
+            if min_gate_sheds > 0 && rep.gate_sheds < min_gate_sheds {
+                eprintln!(
+                    "FLOOR VIOLATION: {name} gate sheds {} < {min_gate_sheds} \
+                     (the admission gate stopped converting predicted misses)",
+                    rep.gate_sheds
+                );
+                floor_violations += 1;
+            }
             throughputs.push((name.clone(), rep.throughput_tok_s));
             for (k, v) in rep.diagnostics {
                 if k == "cum_regret"
                     || k == "regret_bound"
                     || k == "fallback_decisions"
                     || k == "shed_decisions"
+                    || k == "gate_sheds"
+                    || k == "gate_token_admissions"
                 {
                     println!("    {k}: {v:.1}");
                 }

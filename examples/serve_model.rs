@@ -86,6 +86,9 @@ fn main() -> anyhow::Result<()> {
             prompt: p.to_string(),
             max_new_tokens: max_new,
             deadline_s: rng.uniform(10.0, 30.0),
+            // Interactive classes carry their default TTFT bound scaled to
+            // CPU-testbed speeds; batch classes stay completion-only.
+            ttft_slo_s: class.default_ttft().map(|t| t * 20.0),
             class,
             temperature: 0.0, // greedy: reproducible output
             top_k: 1,

@@ -78,6 +78,12 @@ pub struct GenResult {
     pub prompt_tokens: usize,
     /// Iterations this request spent queued before prefill.
     pub queued_iters: u64,
+    /// Wall-clock instant the request's first token was sampled (end of
+    /// its prefill step) — the honest realized-TTFT anchor; callers
+    /// subtract their own submit instant. Measured, not estimated: the
+    /// prefill iteration can be much longer than a decode step, which is
+    /// exactly the regime TTFT SLOs care about.
+    pub first_token_at: std::time::Instant,
 }
 
 struct Lane {
@@ -94,6 +100,8 @@ struct Lane {
     /// hardcode 0, losing queue-wait attribution for every request that
     /// survived past prefill).
     queued_iters: u64,
+    /// See [`GenResult::first_token_at`]; stamped at prefill sampling.
+    first_token_at: std::time::Instant,
 }
 
 /// The continuous batcher over one model.
@@ -191,6 +199,7 @@ impl<M: StepModel> Batcher<M> {
                 temperature: req.temperature,
                 top_k: req.top_k,
                 queued_iters: self.iter - 1 - submitted_iter,
+                first_token_at: std::time::Instant::now(),
             };
             lane.max_new = lane.max_new.max(1);
             // A 1-token budget finishes immediately after prefill.
@@ -203,6 +212,7 @@ impl<M: StepModel> Batcher<M> {
                     tokens: lane.generated,
                     prompt_tokens: prompt_len,
                     queued_iters: lane.queued_iters,
+                    first_token_at: lane.first_token_at,
                 });
             } else {
                 self.lanes.push(lane);
@@ -248,6 +258,7 @@ impl<M: StepModel> Batcher<M> {
                         tokens: lane.generated,
                         prompt_tokens: lane.pos + 1 - n_gen,
                         queued_iters: lane.queued_iters,
+                        first_token_at: lane.first_token_at,
                     });
                 } else {
                     i += 1;

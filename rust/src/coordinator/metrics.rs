@@ -16,8 +16,13 @@ pub struct ServingMetrics {
     pub tokens_out: AtomicU64,
     pub prefill_steps: AtomicU64,
     pub decode_steps: AtomicU64,
+    /// SLO violations by constraint family (requests whose contract
+    /// carried the constraint and missed it).
+    slo_ttft_violations: AtomicU64,
+    slo_completion_violations: AtomicU64,
     latencies_ms: Mutex<Percentiles>,
     queue_waits_ms: Mutex<Percentiles>,
+    ttft_ms: Mutex<Percentiles>,
 }
 
 impl Default for ServingMetrics {
@@ -35,8 +40,11 @@ impl ServingMetrics {
             tokens_out: AtomicU64::new(0),
             prefill_steps: AtomicU64::new(0),
             decode_steps: AtomicU64::new(0),
+            slo_ttft_violations: AtomicU64::new(0),
+            slo_completion_violations: AtomicU64::new(0),
             latencies_ms: Mutex::new(Percentiles::new()),
             queue_waits_ms: Mutex::new(Percentiles::new()),
+            ttft_ms: Mutex::new(Percentiles::new()),
         }
     }
 
@@ -49,6 +57,35 @@ impl ServingMetrics {
         self.tokens_out.fetch_add(tokens, Ordering::Relaxed);
         self.latencies_ms.lock().unwrap().push(latency_ms);
         self.queue_waits_ms.lock().unwrap().push(queue_wait_ms);
+    }
+
+    /// Record a completion's SLO verdicts (None = the contract did not
+    /// carry that constraint) and its realized TTFT.
+    pub fn record_slo(
+        &self,
+        ttft_met: Option<bool>,
+        completion_met: Option<bool>,
+        ttft_ms: f64,
+    ) {
+        self.ttft_ms.lock().unwrap().push(ttft_ms);
+        if ttft_met == Some(false) {
+            self.slo_ttft_violations.fetch_add(1, Ordering::Relaxed);
+        }
+        if completion_met == Some(false) {
+            self.slo_completion_violations.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn slo_ttft_violations(&self) -> u64 {
+        self.slo_ttft_violations.load(Ordering::Relaxed)
+    }
+
+    pub fn slo_completion_violations(&self) -> u64 {
+        self.slo_completion_violations.load(Ordering::Relaxed)
+    }
+
+    pub fn p95_ttft_ms(&self) -> f64 {
+        self.ttft_ms.lock().unwrap().p95()
     }
 
     pub fn elapsed_s(&self) -> f64 {
@@ -67,11 +104,13 @@ impl ServingMetrics {
     pub fn report(&self) -> String {
         let mut lat = self.latencies_ms.lock().unwrap();
         let mut qw = self.queue_waits_ms.lock().unwrap();
+        let mut tt = self.ttft_ms.lock().unwrap();
         format!(
             "requests: {} in / {} done | tokens out: {} | elapsed {:.2}s\n\
              throughput: {:.1} tok/s, {:.2} req/s\n\
              latency ms: mean {:.1} p50 {:.1} p95 {:.1} p99 {:.1}\n\
-             queue wait ms: p50 {:.1} p95 {:.1}",
+             ttft ms: p50 {:.1} p95 {:.1} | queue wait ms: p50 {:.1} p95 {:.1}\n\
+             slo violations: ttft {} completion {}",
             self.requests_in.load(Ordering::Relaxed),
             self.requests_done.load(Ordering::Relaxed),
             self.tokens_out.load(Ordering::Relaxed),
@@ -82,8 +121,12 @@ impl ServingMetrics {
             lat.p50(),
             lat.p95(),
             lat.p99(),
+            tt.p50(),
+            tt.p95(),
             qw.p50(),
             qw.p95(),
+            self.slo_ttft_violations.load(Ordering::Relaxed),
+            self.slo_completion_violations.load(Ordering::Relaxed),
         )
     }
 
@@ -112,6 +155,20 @@ mod tests {
         assert!(m.mean_latency_ms() > 9.9);
         let rep = m.report();
         assert!(rep.contains("tokens out: 42"), "{rep}");
+    }
+
+    #[test]
+    fn slo_counters_split_by_family() {
+        let m = ServingMetrics::new();
+        m.record_slo(Some(true), Some(true), 5.0);
+        m.record_slo(Some(false), Some(true), 50.0);
+        m.record_slo(None, Some(false), 8.0);
+        m.record_slo(None, None, 2.0);
+        assert_eq!(m.slo_ttft_violations(), 1);
+        assert_eq!(m.slo_completion_violations(), 1);
+        assert!(m.p95_ttft_ms() > 0.0);
+        let rep = m.report();
+        assert!(rep.contains("slo violations: ttft 1 completion 1"), "{rep}");
     }
 
     #[test]

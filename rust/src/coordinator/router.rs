@@ -16,7 +16,7 @@ use std::sync::Arc;
 use crate::scheduler::{Action, ClusterView, Scheduler, ServerView, ShedReason, ViewSource};
 use crate::sim::energy::EnergyWeights;
 use crate::sim::server::ServerKind;
-use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest};
+use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest, SloSpec};
 
 /// Telemetry one worker exposes to the router (all lock-free). Capacity
 /// fields are atomics because the engine loads inside the worker thread
@@ -123,6 +123,12 @@ pub struct Router {
     /// Out-of-range scheduler targets recovered via least-violating — a
     /// scheduler bug, logged rather than silently clamped.
     bad_assignments: u64,
+    /// Observation clock stamped into every view (`ClusterView::now`).
+    /// Defaults to 0.0 (frozen — the historical behavior); owners that
+    /// host time-dependent policies (deferred batching windows, the
+    /// admission gate's token refill) advance it via [`Self::set_now`],
+    /// e.g. from an `Instant` at the serving front door.
+    now_s: f64,
 }
 
 impl Router {
@@ -137,6 +143,18 @@ impl Router {
             decisions: 0,
             sheds: 0,
             bad_assignments: 0,
+            now_s: 0.0,
+        }
+    }
+
+    /// Advance the router's observation clock (monotone; earlier stamps
+    /// are ignored). Views filled afterwards carry it as
+    /// `ClusterView::now`, which is what drives time-dependent policies —
+    /// the admission gate's token refill, FineInfer's batch windows — on
+    /// the live substrate.
+    pub fn set_now(&mut self, now_s: f64) {
+        if now_s > self.now_s {
+            self.now_s = now_s;
         }
     }
 
@@ -163,7 +181,7 @@ impl Router {
     /// move `expected_tokens` tokens. This is the single fill routine
     /// behind both the [`ViewSource`] impl and `complete()`.
     fn fill_view(&self, expected_tokens: usize, out: &mut ClusterView) {
-        out.now = 0.0;
+        out.now = self.now_s;
         out.weights = self.weights;
         // No admissibility index on the live substrate (telemetry is
         // already O(workers) to read): empty = full-scan sentinel.
@@ -293,7 +311,8 @@ impl Router {
     }
 
     /// Helper to build the ServiceRequest the scheduler expects from a raw
-    /// serving request.
+    /// serving request with the compat scalar deadline
+    /// (completion-only contract).
     pub fn service_request(
         id: u64,
         class: ServiceClass,
@@ -301,13 +320,31 @@ impl Router {
         output_tokens: usize,
         deadline_s: f64,
     ) -> ServiceRequest {
+        Self::service_request_slo(
+            id,
+            class,
+            prompt_tokens,
+            output_tokens,
+            SloSpec::completion_only(deadline_s),
+        )
+    }
+
+    /// [`Self::service_request`] with a full SLO contract — the serving
+    /// front door's entry into TTFT/energy-aware routing.
+    pub fn service_request_slo(
+        id: u64,
+        class: ServiceClass,
+        prompt_tokens: usize,
+        output_tokens: usize,
+        slo: SloSpec,
+    ) -> ServiceRequest {
         ServiceRequest {
             id,
             class,
             arrival: 0.0,
             prompt_tokens: prompt_tokens as u32,
             output_tokens: output_tokens as u32,
-            deadline: deadline_s,
+            slo,
             payload_bytes: 4096 + prompt_tokens as u64 * 64,
         }
     }
@@ -457,6 +494,71 @@ mod tests {
         for _ in 0..20 {
             let w = router.route(&req).worker().expect("placed");
             assert!(w < 60);
+        }
+    }
+
+    /// The admission gate runs unchanged on the live substrate: hopeless
+    /// load is shed at the door (`Routed::Shed`) after the token burst,
+    /// the diagnostics carry `gate_sheds`, and advancing the router clock
+    /// refills the bucket.
+    #[test]
+    fn gated_router_sheds_hopeless_load_at_the_door() {
+        use crate::scheduler::admission::{GateParams, TokenBucketGate};
+        let workers = vec![telemetry(ServerKind::Edge), telemetry(ServerKind::Edge)];
+        for w in &workers {
+            // Saturated and slow: zero compute headroom, ~21 s predicted.
+            w.queued.store(12, Ordering::Relaxed);
+            w.record_step_time(50_000.0);
+        }
+        let gate = TokenBucketGate::new(
+            Box::new(CsUcb::with_defaults(2)),
+            GateParams {
+                refill_per_s: 0.5,
+                burst: 2.0,
+                margin: 0.0,
+            },
+        );
+        let mut router = Router::new(Box::new(gate), workers);
+        let req = Router::service_request(1, ServiceClass::Chat, 16, 16, 2.0);
+        // Burst admissions pass (least-violating fallback inside CS-UCB)…
+        assert!(router.route(&req).worker().is_some());
+        assert!(router.route(&req).worker().is_some());
+        // …then the door closes.
+        for _ in 0..4 {
+            assert_eq!(
+                router.route(&req),
+                Routed::Shed {
+                    reason: ShedReason::Overloaded
+                }
+            );
+        }
+        assert_eq!(router.sheds(), 4);
+        let d = router.diagnostics();
+        assert!(d.iter().any(|(k, v)| k == "gate_sheds" && *v == 4.0));
+        // Clock advance refills the bucket through the stamped view.
+        router.set_now(10.0);
+        assert!(router.route(&req).worker().is_some());
+    }
+
+    /// TTFT contracts route on the live substrate too: a worker that is
+    /// fast end-to-end but slow to first token loses interactive traffic
+    /// under the SLO-aware policy.
+    #[test]
+    fn slo_router_avoids_ttft_violating_worker() {
+        use crate::scheduler::csucb::CsUcbSlo;
+        let workers = vec![telemetry(ServerKind::Edge), telemetry(ServerKind::Cloud)];
+        // Worker 1: a big backlog ahead of the first token.
+        workers[1].queued.store(8, Ordering::Relaxed);
+        workers[1].record_step_time(4000.0);
+        let mut router = Router::new(Box::new(CsUcbSlo::with_defaults(2)), workers);
+        let slo = SloSpec::completion_only(20.0).with_ttft(0.2);
+        let req = Router::service_request_slo(1, ServiceClass::Chat, 16, 16, slo);
+        // Few routes only: the router's own outstanding bookkeeping raises
+        // worker 0's predicted TTFT as we pile work on it (that's the
+        // feature), which would eventually push this request to the
+        // fallback path.
+        for _ in 0..3 {
+            assert_eq!(router.route(&req).worker(), Some(0));
         }
     }
 

@@ -28,7 +28,7 @@ use super::metrics::ServingMetrics;
 use super::router::{Routed, Router, WorkerTelemetry};
 use crate::scheduler::{Scheduler, ShedReason};
 use crate::sim::server::ServerKind;
-use crate::workload::service::{ServiceClass, ServiceOutcome};
+use crate::workload::service::{ServiceClass, ServiceOutcome, SloSpec};
 
 /// A request entering the serving cluster.
 #[derive(Debug, Clone)]
@@ -37,9 +37,21 @@ pub struct ServeRequest {
     pub prompt: String,
     pub max_new_tokens: usize,
     pub deadline_s: f64,
+    /// Optional TTFT bound, seconds — the interactive half of the SLO
+    /// contract. `None` = completion-bound only (the historical scalar).
+    pub ttft_slo_s: Option<f64>,
     pub class: ServiceClass,
     pub temperature: f32,
     pub top_k: usize,
+}
+
+impl ServeRequest {
+    /// The SLO contract this request carries into the router.
+    pub fn slo(&self) -> SloSpec {
+        let mut slo = SloSpec::completion_only(self.deadline_s);
+        slo.ttft = self.ttft_slo_s;
+        slo
+    }
 }
 
 /// A finished generation leaving the cluster.
@@ -51,7 +63,14 @@ pub struct ServeReply {
     pub tokens: u64,
     pub latency_ms: f64,
     pub queue_wait_ms: f64,
+    /// Realized time to first token, **measured**: wall clock from submit
+    /// to the batcher sampling the request's first token at the end of
+    /// its prefill step (`GenResult::first_token_at`) — mailbox wait,
+    /// admission queueing, and the (possibly long) prefill iteration all
+    /// included.
+    pub ttft_ms: f64,
     pub deadline_s: f64,
+    pub ttft_slo_s: Option<f64>,
     pub class: ServiceClass,
     pub prompt_tokens: usize,
 }
@@ -59,6 +78,20 @@ pub struct ServeReply {
 impl ServeReply {
     pub fn met_deadline(&self) -> bool {
         self.latency_ms / 1000.0 <= self.deadline_s
+    }
+
+    /// Whether the TTFT bound held, if the request carried one.
+    pub fn met_ttft(&self) -> Option<bool> {
+        self.ttft_slo_s.map(|t| self.ttft_ms / 1000.0 <= t)
+    }
+
+    /// The SLO contract this reply is judged against — the one
+    /// construction both the feedback outcome and external consumers
+    /// share with [`ServeRequest::slo`].
+    pub fn slo(&self) -> SloSpec {
+        let mut slo = SloSpec::completion_only(self.deadline_s);
+        slo.ttft = self.ttft_slo_s;
+        slo
     }
 }
 
@@ -186,6 +219,14 @@ fn worker_loop<M: StepModel>(
             };
             let latency_ms = item.submitted.elapsed().as_secs_f64() * 1000.0;
             let queue_wait_ms = result.queued_iters as f64 * step_dt * 1000.0;
+            // Measured first-token latency (see ServeReply::ttft_ms):
+            // saturating, in case clock granularity puts the prefill
+            // sample at the submit instant.
+            let ttft_ms = result
+                .first_token_at
+                .saturating_duration_since(item.submitted)
+                .as_secs_f64()
+                * 1000.0;
             let text = crate::runtime::tokenizer::decode(&result.tokens);
             let reply = ServeReply {
                 id: result.id,
@@ -194,11 +235,14 @@ fn worker_loop<M: StepModel>(
                 text,
                 latency_ms,
                 queue_wait_ms,
+                ttft_ms,
                 deadline_s: item.req.deadline_s,
+                ttft_slo_s: item.req.ttft_slo_s,
                 class: item.req.class,
                 prompt_tokens: result.prompt_tokens,
             };
             metrics.record_completion(latency_ms, queue_wait_ms, reply.tokens);
+            metrics.record_slo(reply.met_ttft(), Some(reply.met_deadline()), ttft_ms);
             if done_tx.send(Done { reply }).is_err() {
                 return;
             }
@@ -272,12 +316,17 @@ impl ServingCluster {
     /// the bandit already received feedback inside the router, no
     /// completion will arrive, and the caller must not wait for one.
     pub fn submit(&mut self, req: ServeRequest) -> Result<SubmitOutcome> {
-        let sreq = Router::service_request(
+        // Keep the router's observation clock moving: time-dependent
+        // policies (the admission gate's token refill, deferred-batching
+        // windows) read it from the view, and a frozen clock would leave
+        // a gate's bucket never refilling after the initial burst.
+        self.router.set_now(self.metrics.elapsed_s());
+        let sreq = Router::service_request_slo(
             req.id,
             req.class,
             req.prompt.len(),
             req.max_new_tokens,
-            req.deadline_s,
+            req.slo(),
         );
         match self.router.route(&sreq) {
             // A Defer degenerates to immediate dispatch on the live
@@ -315,7 +364,8 @@ impl ServingCluster {
                     tx_time: 0.0,
                     infer_time: done.reply.latency_ms / 1000.0,
                     processing_time: done.reply.latency_ms / 1000.0,
-                    deadline: done.reply.deadline_s,
+                    ttft_time: done.reply.ttft_ms / 1000.0,
+                    slo: done.reply.slo(),
                     energy_j: self.router.workers[done.reply.worker].j_per_token
                         * done.reply.tokens as f64,
                     tokens: done.reply.tokens,
@@ -376,6 +426,7 @@ mod tests {
             prompt: "hello".into(),
             max_new_tokens: 8,
             deadline_s: 10.0,
+            ttft_slo_s: None,
             class: ServiceClass::Chat,
             temperature: 0.0,
             top_k: 1,
@@ -386,7 +437,12 @@ mod tests {
     fn serves_requests_end_to_end_with_fake_models() {
         let mut cluster = fake_cluster(2);
         for i in 0..10 {
-            let out = cluster.submit(req(i)).unwrap();
+            let mut r = req(i);
+            // Half the load carries an (easily met) interactive contract.
+            if i % 2 == 0 {
+                r.ttft_slo_s = Some(30.0);
+            }
+            let out = cluster.submit(r).unwrap();
             assert!(out.worker().is_some(), "idle cluster must not shed");
         }
         let mut got = 0;
@@ -396,9 +452,21 @@ mod tests {
                 .expect("completion");
             assert!(!r.text.is_empty() || r.tokens > 0);
             assert!(r.tokens as usize <= 8);
+            // Realized TTFT: present, and never after completion.
+            assert!(r.ttft_ms >= 0.0 && r.ttft_ms <= r.latency_ms + 1e-6);
+            if r.id % 2 == 0 {
+                assert_eq!(r.met_ttft(), Some(true), "ttft {} ms", r.ttft_ms);
+            } else {
+                assert_eq!(r.met_ttft(), None);
+            }
             got += 1;
         }
         assert_eq!(cluster.outstanding(), 0);
+        assert_eq!(
+            cluster.metrics.slo_completion_violations(),
+            0,
+            "10 s deadline on fake models must hold"
+        );
         cluster.shutdown();
     }
 

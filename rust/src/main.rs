@@ -179,6 +179,7 @@ fn cmd_serve(p: &cli::Parsed) -> Result<()> {
             prompt: prompts[k].to_string(),
             max_new_tokens: max_new,
             deadline_s: rng.uniform(2.0, 6.0),
+            ttft_slo_s: None,
             class: classes[k],
             temperature: 0.8,
             top_k: 200,

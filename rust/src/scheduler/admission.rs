@@ -1,0 +1,277 @@
+//! Front-door admission control: a per-class token bucket that converts
+//! *predicted* SLO violation into a first-class [`Action::Shed`] before
+//! the wrapped policy spends an arm pull.
+//!
+//! The ROADMAP's "exploit `Shed` upstream" direction: the scheduling API
+//! made shedding first-class (PR 2) and the SLO vector made violation
+//! predictable per constraint family (PR 5) — this gate sits in front of
+//! any [`Scheduler`] and rejects requests that are hopeless *everywhere*,
+//! at a bounded per-class rate. The bucket is the safety valve: a few
+//! predicted-violating requests per second are still admitted (they feed
+//! the bandit's penalty/fallback machinery and keep its estimates honest
+//! under recoverable congestion), but a flash crowd that would drown the
+//! cluster in guaranteed deadline misses is clipped at the door, before
+//! any upload energy or link share is spent and before the bandit's
+//! decision state is churned by unwinnable placements.
+//!
+//! Wiring: the gate *is* a `Scheduler`, so both substrates take it
+//! unchanged — the DES engine counts its sheds into
+//! `RunReport::dropped_by_policy` and surfaces the gate's own counter as
+//! `RunReport::gate_sheds`; the live `Router` counts them into
+//! `router_sheds` and forwards the diagnostics. Feedback for gated
+//! requests flows through to the inner policy as a shed outcome
+//! ([`crate::workload::ServiceOutcome::was_shed`]), which every policy
+//! already handles (no arm was pulled).
+
+use super::{Action, ClusterView, Scheduler, ShedReason};
+use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest};
+
+/// Gate tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct GateParams {
+    /// Token refill rate per class, tokens per simulated second: the
+    /// sustained rate of predicted-violating requests still admitted (to
+    /// keep probing for recovery).
+    pub refill_per_s: f64,
+    /// Bucket capacity per class: the burst of predicted-violating
+    /// requests tolerated before the gate starts shedding.
+    pub burst: f64,
+    /// Feasibility threshold: a request passes freely when some placement
+    /// has f(y) >= margin (SLO-vector satisfaction). Must be >= 0 — the
+    /// gate's scan prunes provably-infeasible servers, which is only
+    /// sound for non-negative margins.
+    pub margin: f64,
+}
+
+impl Default for GateParams {
+    fn default() -> Self {
+        GateParams {
+            refill_per_s: 2.0,
+            burst: 8.0,
+            margin: 0.0,
+        }
+    }
+}
+
+/// Per-class token-bucket admission gate around an inner [`Scheduler`].
+pub struct TokenBucketGate {
+    inner: Box<dyn Scheduler>,
+    params: GateParams,
+    /// Current tokens per class (starts full).
+    tokens: [f64; ServiceClass::ALL.len()],
+    /// Clock of the last refill (view observation time).
+    last_refill: f64,
+    /// Requests rejected at the door, total and per class.
+    gate_sheds: u64,
+    gate_sheds_by_class: [u64; ServiceClass::ALL.len()],
+    /// Predicted-violating requests admitted on a token (the bucket's
+    /// probing budget at work).
+    token_admissions: u64,
+}
+
+impl TokenBucketGate {
+    pub fn new(inner: Box<dyn Scheduler>, params: GateParams) -> Self {
+        assert!(
+            params.margin >= 0.0,
+            "gate margin must be non-negative (candidate pruning soundness)"
+        );
+        TokenBucketGate {
+            inner,
+            tokens: [params.burst; ServiceClass::ALL.len()],
+            last_refill: 0.0,
+            gate_sheds: 0,
+            gate_sheds_by_class: [0; ServiceClass::ALL.len()],
+            token_admissions: 0,
+            params,
+        }
+    }
+
+    pub fn with_defaults(inner: Box<dyn Scheduler>) -> Self {
+        Self::new(inner, GateParams::default())
+    }
+
+    pub fn gate_sheds(&self) -> u64 {
+        self.gate_sheds
+    }
+
+    /// Refill every bucket for the time elapsed since the last decision.
+    /// Sources whose views carry no clock (the live router defaults to a
+    /// frozen `now`) simply get no refill beyond the initial burst unless
+    /// the owner advances the router clock (`Router::set_now`).
+    fn refill(&mut self, now: f64) {
+        let dt = now - self.last_refill;
+        if dt > 0.0 {
+            for t in &mut self.tokens {
+                *t = (*t + dt * self.params.refill_per_s).min(self.params.burst);
+            }
+            self.last_refill = now;
+        }
+    }
+}
+
+impl Scheduler for TokenBucketGate {
+    /// Transparent: report rows stay labeled by the wrapped policy; the
+    /// gate's presence shows up in the `gate_*` diagnostics.
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
+        self.refill(view.now);
+        // Best SLO-vector satisfaction over the candidate scan. Pruned
+        // servers are provably infeasible (f(y) <= -1), so for the
+        // non-negative margin this max is decision-identical to a full
+        // scan — the gate never misses a feasible placement.
+        let best_fy = view
+            .scan()
+            .map(|j| view.constraint_satisfaction(req, j))
+            .fold(f64::NEG_INFINITY, f64::max);
+        if best_fy >= self.params.margin {
+            return self.inner.decide(req, view);
+        }
+        // Every placement is predicted to violate the request's SLO
+        // vector: admit on a token (bounded probing) or shed at the door.
+        let class = req.class.index();
+        if self.tokens[class] >= 1.0 {
+            self.tokens[class] -= 1.0;
+            self.token_admissions += 1;
+            return self.inner.decide(req, view);
+        }
+        self.gate_sheds += 1;
+        self.gate_sheds_by_class[class] += 1;
+        Action::shed(ShedReason::Overloaded)
+    }
+
+    fn feedback(&mut self, outcome: &ServiceOutcome, view: &ClusterView) {
+        // Gated requests come back as shed outcomes; the inner policy
+        // already treats those as "no arm pulled".
+        self.inner.feedback(outcome, view);
+    }
+
+    fn diagnostics(&self) -> Vec<(String, f64)> {
+        let mut d = self.inner.diagnostics();
+        d.push(("gate_sheds".into(), self.gate_sheds as f64));
+        d.push(("gate_token_admissions".into(), self.token_admissions as f64));
+        for c in ServiceClass::ALL {
+            d.push((
+                format!("gate_sheds_{}", c.name()),
+                self.gate_sheds_by_class[c.index()] as f64,
+            ));
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::{test_req, test_view};
+    use super::*;
+    use crate::scheduler::csucb::CsUcb;
+
+    fn gated(n: usize, params: GateParams) -> TokenBucketGate {
+        TokenBucketGate::new(Box::new(CsUcb::with_defaults(n)), params)
+    }
+
+    #[test]
+    fn feasible_requests_pass_untouched() {
+        let mut g = gated(2, GateParams::default());
+        let view = test_view(vec![1.0, 1.5]);
+        let req = test_req(4.0);
+        for _ in 0..50 {
+            assert!(!g.decide(&req, &view).is_shed());
+        }
+        assert_eq!(g.gate_sheds(), 0);
+        assert_eq!(g.token_admissions, 0, "no tokens spent on feasible work");
+    }
+
+    #[test]
+    fn hopeless_requests_drain_the_bucket_then_shed() {
+        let params = GateParams {
+            refill_per_s: 1.0,
+            burst: 3.0,
+            margin: 0.0,
+        };
+        let mut g = gated(2, params);
+        let view = test_view(vec![10.0, 8.0]); // both far past the deadline
+        let req = test_req(1.0);
+        // First `burst` hopeless requests are admitted on tokens (the
+        // inner policy falls back least-violating), then the door closes.
+        for i in 0..3 {
+            assert!(!g.decide(&req, &view).is_shed(), "burst admission {i}");
+        }
+        for _ in 0..5 {
+            assert_eq!(
+                g.decide(&req, &view),
+                Action::shed(ShedReason::Overloaded)
+            );
+        }
+        assert_eq!(g.gate_sheds(), 5);
+        assert_eq!(g.token_admissions, 3);
+        let d = g.diagnostics();
+        assert!(d.iter().any(|(k, v)| k == "gate_sheds" && *v == 5.0));
+        assert!(d.iter().any(|(k, v)| k == "gate_sheds_chat" && *v == 5.0));
+    }
+
+    #[test]
+    fn tokens_refill_with_view_time() {
+        let params = GateParams {
+            refill_per_s: 2.0,
+            burst: 1.0,
+            margin: 0.0,
+        };
+        let mut g = gated(1, params);
+        let mut view = test_view(vec![10.0]);
+        let req = test_req(1.0);
+        assert!(!g.decide(&req, &view).is_shed(), "initial token");
+        assert!(g.decide(&req, &view).is_shed(), "bucket empty");
+        // Half a second at 2 tokens/s refills one token.
+        view.now = 0.5;
+        assert!(!g.decide(&req, &view).is_shed(), "refilled");
+        assert!(g.decide(&req, &view).is_shed());
+    }
+
+    #[test]
+    fn buckets_are_per_class() {
+        let params = GateParams {
+            refill_per_s: 0.0,
+            burst: 1.0,
+            margin: 0.0,
+        };
+        let mut g = gated(1, params);
+        let view = test_view(vec![10.0]);
+        let chat = test_req(1.0); // test_req builds a Chat request
+        let mut code = test_req(1.0);
+        code.class = ServiceClass::Code;
+        assert!(!g.decide(&chat, &view).is_shed());
+        assert!(g.decide(&chat, &view).is_shed(), "chat bucket drained");
+        assert!(!g.decide(&code, &view).is_shed(), "code bucket untouched");
+        assert!(g.decide(&code, &view).is_shed());
+        assert_eq!(g.gate_sheds_by_class[ServiceClass::Chat.index()], 1);
+        assert_eq!(g.gate_sheds_by_class[ServiceClass::Code.index()], 1);
+    }
+
+    /// A gate shed happens BEFORE the inner policy sees the request: the
+    /// bandit's decision counter must not move, and the shed feedback is
+    /// consumed without touching any arm.
+    #[test]
+    fn gate_sheds_spend_no_arm_pull() {
+        let params = GateParams {
+            refill_per_s: 0.0,
+            burst: 0.0,
+            margin: 0.0,
+        };
+        let mut g = gated(2, params);
+        let view = test_view(vec![10.0, 8.0]);
+        let req = test_req(1.0);
+        assert!(g.decide(&req, &view).is_shed());
+        let inner_decisions: f64 = g
+            .diagnostics()
+            .iter()
+            .find(|(k, _)| k == "decisions")
+            .map(|(_, v)| *v)
+            .expect("inner cs-ucb diagnostics present");
+        assert_eq!(inner_decisions, 0.0, "inner policy must not be consulted");
+        let o = ServiceOutcome::shed(&req, 0.0);
+        g.feedback(&o, &view); // must not panic / touch arms
+    }
+}

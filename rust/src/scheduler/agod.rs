@@ -136,7 +136,8 @@ mod tests {
                 tx_time: 0.05,
                 infer_time: 0.95,
                 processing_time: 1.0,
-                deadline: 4.0,
+                ttft_time: 0.1,
+                slo: crate::workload::service::SloSpec::completion_only(4.0),
                 energy_j: energy,
                 tokens: 80,
                 completed_at: 1.0,

@@ -53,6 +53,18 @@ pub struct CsUcbParams {
     /// (only triggers when the binding constraint is violated ~3x over);
     /// the ablation example carries that variant.
     pub shed_threshold: f64,
+    /// Constraint lens (PR 5). `false` — the paper's scalar behavior:
+    /// decisions filter on [`ClusterView::completion_satisfaction`] and
+    /// rewards on the realized completion slack, ignoring any TTFT/energy
+    /// constraints the request carries (`with_defaults` stays
+    /// paper-identical, and on SLO-vector workloads this IS the honest
+    /// "completion-only CS-UCB" baseline). `true` — the [`CsUcbSlo`]
+    /// variant: decisions filter on the full SLO vector
+    /// ([`ClusterView::constraint_satisfaction`], TTFT slack from
+    /// `predicted_ttft`) and rewards on the realized
+    /// [`ServiceOutcome::slo_slack`], so interactive requests route by
+    /// first-token slack.
+    pub slo_aware: bool,
 }
 
 impl Default for CsUcbParams {
@@ -65,6 +77,7 @@ impl Default for CsUcbParams {
             theta: 0.3,
             slack_margin: 0.2,
             shed_threshold: f64::INFINITY,
+            slo_aware: false,
         }
     }
 }
@@ -169,11 +182,28 @@ impl CsUcb {
 
     /// Eq. 4 reward for a realized outcome: negative weighted energy plus
     /// λ times the realized constraint slack (success gives positive slack,
-    /// deadline misses drive it negative).
+    /// deadline misses drive it negative). Under `params.slo_aware` the
+    /// slack is the realized minimum across the SLO vector — a completed
+    /// request that blew its TTFT bound is penalized like a late one.
     pub fn reward(params: &CsUcbParams, outcome: &ServiceOutcome) -> f64 {
         let energy_term = outcome.energy_j / ENERGY_SCALE_J;
-        let fy = outcome.slack().clamp(-2.0, 1.0);
+        let slack = if params.slo_aware {
+            outcome.slo_slack()
+        } else {
+            outcome.slack()
+        };
+        let fy = slack.clamp(-2.0, 1.0);
         -energy_term + params.lambda * fy
+    }
+
+    /// The configured constraint lens (see `CsUcbParams::slo_aware`).
+    #[inline]
+    fn fy(&self, view: &ClusterView, req: &ServiceRequest, j: usize) -> f64 {
+        if self.params.slo_aware {
+            view.constraint_satisfaction(req, j)
+        } else {
+            view.completion_satisfaction(req, j)
+        }
     }
 
     /// Eq. 6 index for arm (class, server).
@@ -215,7 +245,11 @@ impl CsUcb {
 
 impl Scheduler for CsUcb {
     fn name(&self) -> &'static str {
-        "cs-ucb (PerLLM)"
+        if self.params.slo_aware {
+            "cs-ucb-slo (PerLLM)"
+        } else {
+            "cs-ucb (PerLLM)"
+        }
     }
 
     fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
@@ -238,7 +272,7 @@ impl Scheduler for CsUcb {
         let mut best_margin: Option<(usize, f64)> = None;
         let mut best_bare: Option<(usize, f64)> = None;
         for j in view.scan() {
-            let fy = view.constraint_satisfaction(req, j);
+            let fy = self.fy(view, req, j);
             if fy < 0.0 {
                 continue;
             }
@@ -273,7 +307,7 @@ impl Scheduler for CsUcb {
                 let mut best_fy = f64::NEG_INFINITY;
                 let mut least_violating = 0usize;
                 for j in 0..view.servers.len() {
-                    let fy = view.constraint_satisfaction(req, j);
+                    let fy = self.fy(view, req, j);
                     if fy > best_fy {
                         best_fy = fy;
                         least_violating = j;
@@ -349,11 +383,61 @@ impl Scheduler for CsUcb {
     }
 }
 
+/// CS-UCB over the full **SLO constraint vector** (PR 5): the same
+/// Algorithm-1 machinery as [`CsUcb`], but the constraint-satisfaction
+/// family is the per-request [`crate::workload::SloSpec`] — interactive
+/// requests filter placements by TTFT slack (`ServerView::predicted_ttft`),
+/// energy-budgeted requests by predicted price, and rewards carry the
+/// realized minimum vector slack ([`ServiceOutcome::slo_slack`]). On
+/// completion-only workloads this is decision-identical to [`CsUcb`]; the
+/// divergence (and the point) is on heterogeneous contracts, where a
+/// token-batch edge tier that prefills quickly wins interactive traffic
+/// the completion lens would happily upload to the slow-first-token cloud.
+pub struct CsUcbSlo(CsUcb);
+
+impl CsUcbSlo {
+    pub fn new(n_servers: usize, params: CsUcbParams) -> Self {
+        CsUcbSlo(CsUcb::new(
+            n_servers,
+            CsUcbParams {
+                slo_aware: true,
+                ..params
+            },
+        ))
+    }
+
+    pub fn with_defaults(n_servers: usize) -> Self {
+        Self::new(n_servers, CsUcbParams::default())
+    }
+
+    pub fn cumulative_regret(&self) -> f64 {
+        self.0.cumulative_regret()
+    }
+}
+
+impl Scheduler for CsUcbSlo {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
+        self.0.decide(req, view)
+    }
+
+    fn feedback(&mut self, outcome: &ServiceOutcome, view: &ClusterView) {
+        self.0.feedback(outcome, view)
+    }
+
+    fn diagnostics(&self) -> Vec<(String, f64)> {
+        self.0.diagnostics()
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    use super::super::tests::{test_req, test_view};
+    use super::super::tests::{test_req, test_req_slo, test_view};
     use super::*;
-    use crate::workload::service::ServiceClass;
+    use crate::workload::service::{ServiceClass, SloSpec};
 
     fn outcome(server: usize, energy: f64, processing: f64, deadline: f64) -> ServiceOutcome {
         ServiceOutcome {
@@ -363,7 +447,8 @@ mod tests {
             tx_time: 0.1,
             infer_time: processing - 0.1,
             processing_time: processing,
-            deadline,
+            ttft_time: 0.2,
+            slo: SloSpec::completion_only(deadline),
             energy_j: energy,
             tokens: 80,
             completed_at: processing,
@@ -449,6 +534,75 @@ mod tests {
         let b = pruned.decide(&test_req(2.0), &view_pruned);
         assert_eq!(a, b);
         assert_eq!(a, Action::assign(1), "least violating of the full set");
+    }
+
+    /// The SLO lens diverges from the completion lens exactly where the
+    /// issue says it should: a TTFT-bound request avoids the server whose
+    /// first token comes too late even though its completion is fastest.
+    #[test]
+    fn slo_lens_routes_interactive_by_ttft_slack() {
+        // Server 1 is completion-fastest but late to its first token (the
+        // shared-uplink cloud shape); server 0 completes later but
+        // prefills immediately (the edge shape).
+        let mut view = test_view(vec![1.6, 1.0]);
+        view.servers[0].predicted_ttft = 0.2; // edge: slow total, quick first token
+        view.servers[1].predicted_ttft = 0.9; // cloud: quick total, late first token
+        let req = test_req_slo(SloSpec::completion_only(4.0).with_ttft(0.4));
+        let mut slo = CsUcbSlo::with_defaults(2);
+        let mut plain = CsUcb::with_defaults(2);
+        // Only server 0 satisfies the vector; both satisfy the scalar, so
+        // the completion lens is free to pick either (untried-arm
+        // tie-break: lower energy/predicted time — server 1 here).
+        for _ in 0..10 {
+            assert_eq!(slo.decide(&req, &view), Action::assign(0));
+        }
+        assert_eq!(plain.decide(&req, &view), Action::assign(1));
+    }
+
+    /// On completion-only contracts the two lenses are decision-identical
+    /// (the vector degenerates to the scalar).
+    #[test]
+    fn slo_lens_matches_plain_on_completion_only() {
+        let view = test_view(vec![1.0, 5.0, 1.4]);
+        let req = test_req(2.0);
+        let mut slo = CsUcbSlo::with_defaults(3);
+        let mut plain = CsUcb::with_defaults(3);
+        for i in 0..60 {
+            let a = plain.decide(&req, &view);
+            let b = slo.decide(&req, &view);
+            assert_eq!(a, b, "diverged at decision {i}");
+            let j = a.server().expect("assigns");
+            let mut o = outcome(j, if j == 0 { 60.0 } else { 500.0 }, 1.0, 2.0);
+            o.id = req.id;
+            plain.feedback(&o, &view);
+            slo.feedback(&o, &view);
+        }
+        assert_eq!(slo.name(), "cs-ucb-slo (PerLLM)");
+        assert_eq!(plain.name(), "cs-ucb (PerLLM)");
+    }
+
+    /// SLO-aware reward penalizes a TTFT miss the completion reward
+    /// cannot see.
+    #[test]
+    fn slo_reward_sees_ttft_misses() {
+        let plain = CsUcbParams::default();
+        let aware = CsUcbParams {
+            slo_aware: true,
+            ..plain
+        };
+        let mut o = outcome(0, 100.0, 1.0, 4.0);
+        o.slo = o.slo.with_ttft(0.1);
+        o.ttft_time = 0.9; // violated 9x over
+        let r_plain = CsUcb::reward(&plain, &o);
+        let r_aware = CsUcb::reward(&aware, &o);
+        assert!(r_aware < r_plain, "{r_aware} !< {r_plain}");
+        // Comfortably met TTFT (slack 0.9 > the 0.75 completion slack):
+        // the vector min is bound by completion again and the two rewards
+        // agree.
+        o.ttft_time = 0.01;
+        let met_aware = CsUcb::reward(&aware, &o);
+        let met_plain = CsUcb::reward(&plain, &o);
+        assert!((met_aware - met_plain).abs() < 1e-12);
     }
 
     #[test]

@@ -27,6 +27,17 @@
 //! resource snapshots) — differences in the results come from decision
 //! logic, not from information asymmetry.
 //!
+//! Constraints are **SLO vectors** (PR 5): each request carries a
+//! [`crate::workload::SloSpec`] — optional TTFT, completion, and
+//! energy-budget bounds — and [`ClusterView::constraint_satisfaction`]
+//! takes the minimum normalized slack across the *present* constraints
+//! (TTFT judged against `ServerView::predicted_ttft`). Schedulers that
+//! want the paper's scalar behavior opt into the
+//! [`ClusterView::completion_satisfaction`] lens instead, which reads
+//! only `SloSpec::completion` — that is how `CsUcb::with_defaults` stays
+//! paper-identical while `CsUcbSlo` and the admission gate consume the
+//! full vector (migration guide: ROADMAP.md "SLO contracts").
+//!
 //! Porting a scheduler to this API: implement
 //! `fn decide(&mut self, req, view) -> Action`; return
 //! `Action::assign(j)` for immediate dispatch, `Action::defer(j, s)` to
@@ -38,6 +49,7 @@
 //! [`ServiceOutcome::was_shed`] set — skip arm updates for those (no arm
 //! was pulled) but do count them.
 
+pub mod admission;
 pub mod agod;
 pub mod csucb;
 pub mod fineinfer;
@@ -46,7 +58,7 @@ pub mod rewardless;
 
 use crate::sim::energy::EnergyWeights;
 use crate::sim::server::ServerKind;
-use crate::workload::service::{ServiceOutcome, ServiceRequest};
+use crate::workload::service::{ServiceOutcome, ServiceRequest, SloSpec};
 
 /// Per-candidate-server snapshot handed to the scheduler for one request.
 #[derive(Debug, Clone, PartialEq)]
@@ -145,12 +157,54 @@ impl ClusterView {
             .chain(full)
     }
 
-    /// Paper Eq. 3 for a single assignment y = (request → server j): the
-    /// minimum normalized slack across the three constraint families.
-    /// f(y) >= 0 iff C1, C2, C3 all hold.
+    /// Paper Eq. 3 for a single assignment y = (request → server j),
+    /// generalized to the SLO vector: the minimum normalized slack across
+    /// every *present* request constraint (C1 completion via
+    /// `predicted_time`, TTFT via `predicted_ttft`, energy budget via the
+    /// raw tx+infer energy estimate) and the resource families (C2
+    /// compute, C3 bandwidth). f(y) >= 0 iff every binding constraint
+    /// holds.
+    ///
+    /// A completion-only contract reproduces the pre-PR5 scalar formula
+    /// `(D∆ - predicted) / D∆` bit for bit (pinned by
+    /// `rust/tests/slo_identity.rs`), except that a non-positive D∆ now
+    /// yields `-inf` instead of NaN — NaN compared false against every
+    /// `>= margin` filter AND fell out of `min` (Rust's `f64::min` ignores
+    /// NaN), so a zero-deadline request used to be judged on C2/C3 alone
+    /// and could be admitted as "feasible".
     pub fn constraint_satisfaction(&self, req: &ServiceRequest, server: usize) -> f64 {
         let sv = &self.servers[server];
-        let d = (req.deadline - sv.predicted_time) / req.deadline;
+        let d = req.slo.min_slack(
+            sv.predicted_ttft,
+            sv.predicted_time,
+            sv.tx_energy_est + sv.infer_energy_est,
+        );
+        self.resource_slack_min(d, server)
+    }
+
+    /// The pre-PR5 **completion-only lens** on the same Eq.-3 mechanism:
+    /// judge the placement on the scalar completion deadline (plus C2/C3),
+    /// ignoring any TTFT or energy constraints the request carries. This
+    /// is what the paper-identical `CsUcb::with_defaults` consumes — the
+    /// honest "completion-only CS-UCB" baseline that `CsUcbSlo` is
+    /// measured against on SLO-vector workloads. Requests without a
+    /// completion bound contribute `+inf` (only C2/C3 bind).
+    pub fn completion_satisfaction(&self, req: &ServiceRequest, server: usize) -> f64 {
+        let sv = &self.servers[server];
+        let d = match req.slo.completion {
+            Some(dl) => SloSpec::norm_slack(dl, sv.predicted_time),
+            None => f64::INFINITY,
+        };
+        self.resource_slack_min(d, server)
+    }
+
+    /// Fold the C2 (compute) and C3 (bandwidth) normalized slacks into an
+    /// already-computed request-constraint slack — the shared tail of both
+    /// satisfaction lenses, kept identical to the historical
+    /// `d.min(c).min(b)` expression.
+    #[inline]
+    fn resource_slack_min(&self, d: f64, server: usize) -> f64 {
+        let sv = &self.servers[server];
         let c = if sv.compute_headroom > 0.0 {
             (sv.compute_headroom - sv.compute_demand) / sv.compute_headroom.max(1e-9)
         } else {
@@ -409,13 +463,17 @@ mod tests {
     }
 
     pub(crate) fn test_req(deadline: f64) -> ServiceRequest {
+        test_req_slo(SloSpec::completion_only(deadline))
+    }
+
+    pub(crate) fn test_req_slo(slo: SloSpec) -> ServiceRequest {
         ServiceRequest {
             id: 7,
             class: ServiceClass::Chat,
             arrival: 0.0,
             prompt_tokens: 50,
             output_tokens: 30,
-            deadline,
+            slo,
             payload_bytes: 100_000,
         }
     }
@@ -427,6 +485,67 @@ mod tests {
         assert!(view.constraint_satisfaction(&req, 0) >= 0.0);
         assert!(view.constraint_satisfaction(&req, 1) < 0.0); // misses deadline
         assert_eq!(view.feasible_servers(&req), vec![0]);
+    }
+
+    /// TTFT constraints bind through `predicted_ttft`: a server fast on
+    /// completion but slow to first token is infeasible for an
+    /// interactive contract, while the completion-only lens ignores it.
+    #[test]
+    fn fy_ttft_constraint_binds_on_predicted_ttft() {
+        // test_view: predicted_ttft = 0.5 * predicted_time.
+        let view = test_view(vec![1.0, 3.0]);
+        let req = test_req_slo(SloSpec::completion_only(4.0).with_ttft(0.8));
+        // Server 0: ttft 0.5 <= 0.8 → feasible. Server 1: ttft 1.5 > 0.8.
+        assert!(view.constraint_satisfaction(&req, 0) >= 0.0);
+        assert!(view.constraint_satisfaction(&req, 1) < 0.0);
+        assert_eq!(view.feasible_servers(&req), vec![0]);
+        // The completion lens sees both as feasible (4 s is generous).
+        assert!(view.completion_satisfaction(&req, 1) >= 0.0);
+    }
+
+    /// Energy budgets bind through the raw tx+infer estimate.
+    #[test]
+    fn fy_energy_budget_binds() {
+        let view = test_view(vec![1.0]); // tx 1 J + infer 5 J = 6 J est
+        let within = test_req_slo(SloSpec::completion_only(4.0).with_energy_budget(10.0));
+        let beyond = test_req_slo(SloSpec::completion_only(4.0).with_energy_budget(4.0));
+        assert!(view.constraint_satisfaction(&within, 0) >= 0.0);
+        assert!(view.constraint_satisfaction(&beyond, 0) < 0.0);
+        assert!(view.completion_satisfaction(&beyond, 0) >= 0.0);
+    }
+
+    /// Regression (satellite): a zero/negative deadline used to make the
+    /// C1 term NaN, which `f64::min` silently dropped — the request was
+    /// then judged on C2/C3 alone and could be "feasible". It must be
+    /// `-inf`: infeasible everywhere, filtered by every margin.
+    #[test]
+    fn zero_deadline_is_neg_inf_not_nan() {
+        let view = test_view(vec![1.0]);
+        for slo in [
+            SloSpec::completion_only(0.0),
+            SloSpec::completion_only(-1.0),
+            SloSpec::ttft_only(0.0),
+            SloSpec::completion_only(4.0).with_energy_budget(0.0),
+        ] {
+            let req = test_req_slo(slo);
+            let fy = view.constraint_satisfaction(&req, 0);
+            assert_eq!(fy, f64::NEG_INFINITY, "slo {slo:?} gave {fy}");
+            assert!(view.feasible_servers(&req).is_empty());
+            assert!(view.feasible_servers_with_slack(&req, -1000.0).is_empty());
+        }
+        // The completion lens gets the same guard.
+        let req = test_req(0.0);
+        assert_eq!(view.completion_satisfaction(&req, 0), f64::NEG_INFINITY);
+    }
+
+    /// A request with no completion bound passes the completion lens on
+    /// C2/C3 alone (vacuous C1), and the vector lens on its own terms.
+    #[test]
+    fn absent_completion_is_vacuous_for_the_lens() {
+        let view = test_view(vec![1.0]);
+        let req = test_req_slo(SloSpec::ttft_only(0.8));
+        assert!(view.completion_satisfaction(&req, 0) >= 0.0);
+        assert!(view.constraint_satisfaction(&req, 0) >= 0.0); // ttft 0.5
     }
 
     #[test]

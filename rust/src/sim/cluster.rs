@@ -319,7 +319,7 @@ mod tests {
             arrival: 0.0,
             prompt_tokens: 100,
             output_tokens: 40,
-            deadline: 4.0,
+            slo: crate::workload::service::SloSpec::completion_only(4.0),
             payload_bytes: 200_000,
         }
     }

@@ -66,7 +66,40 @@ struct SvcState {
     dispatched_at: SimTime,
     upload_done_at: SimTime,
     compute_started_at: SimTime,
+    /// Absolute instant the first token lands: stamped at server
+    /// admission from the service model's own `predict` (upload already
+    /// elapsed, queue wait + stretched prefill from the model) — the
+    /// honest-predictor regression pins `predict` exact against the
+    /// completion schedule when uncontended, so this is a measurement
+    /// there and the model's best estimate under contention. `+inf` until
+    /// admission (and forever for drops/sheds).
+    first_token_at: SimTime,
     tx_energy_j: f64,
+}
+
+/// Per-class attainment counter for one SLO constraint family: how many
+/// outcomes carried the constraint, and how many met it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Attainment {
+    pub met: usize,
+    pub total: usize,
+}
+
+impl Attainment {
+    fn add(&mut self, met: bool) {
+        self.total += 1;
+        self.met += met as usize;
+    }
+
+    /// Attainment rate; NaN when no outcome carried the constraint
+    /// (render as "—", never as a fake 100%).
+    pub fn rate(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.met as f64 / self.total as f64
+        }
+    }
 }
 
 /// Aggregate results of one simulation run (one cell of a paper table).
@@ -93,8 +126,25 @@ pub struct RunReport {
     /// The subset of `dropped` rejected by an explicit scheduler
     /// `Action::Shed` (no upload energy spent).
     pub dropped_by_policy: usize,
-    /// Requests completed after their deadline.
+    /// Requests that finished but violated some timing constraint of
+    /// their SLO contract (late completion OR late first token).
     pub late: usize,
+    /// Per-class TTFT attainment (outcomes carrying a TTFT bound only).
+    pub ttft_attainment: [Attainment; 4],
+    /// Per-class completion attainment (outcomes carrying a completion
+    /// bound only).
+    pub completion_attainment: [Attainment; 4],
+    /// SLO violations split by constraint family, over all outcomes that
+    /// carry the constraint (sheds/drops/unfinished count against every
+    /// constraint they carry — the contract was not honored).
+    pub slo_ttft_violations: usize,
+    pub slo_completion_violations: usize,
+    pub slo_energy_violations: usize,
+    /// Requests rejected at the admission gate
+    /// (`scheduler::admission::TokenBucketGate`), surfaced from the
+    /// gate's diagnostics; a subset of `dropped_by_policy`. Zero when no
+    /// gate is installed.
+    pub gate_sheds: u64,
     /// Scheduler-specific diagnostics (e.g. CS-UCB regret).
     pub diagnostics: Vec<(String, f64)>,
     /// Wall-clock perf of the DES itself.
@@ -133,6 +183,37 @@ impl RunReport {
             self.energy.tran_j / 1e3,
             self.energy.infer_j / 1e3,
             self.energy.idle_j / 1e3,
+        )
+    }
+
+    /// One-line SLO attainment summary: per-class TTFT / completion
+    /// attainment plus the per-family violation split and gate sheds.
+    /// Classes with no constrained outcomes render "—".
+    pub fn slo_summary_row(&self) -> String {
+        let pct = |a: &Attainment| {
+            if a.total == 0 {
+                format!("{:>5}", "—")
+            } else {
+                format!("{:4.1}%", a.rate() * 100.0)
+            }
+        };
+        use crate::workload::service::ServiceClass;
+        let mut ttft = String::new();
+        let mut comp = String::new();
+        for c in ServiceClass::ALL {
+            ttft.push_str(&format!(" {}={}", c.name(), pct(&self.ttft_attainment[c.index()])));
+            comp.push_str(&format!(
+                " {}={}",
+                c.name(),
+                pct(&self.completion_attainment[c.index()])
+            ));
+        }
+        format!(
+            "SLO: ttft{ttft} | completion{comp} | violations ttft {} / completion {} / energy {} | gate sheds {}",
+            self.slo_ttft_violations,
+            self.slo_completion_violations,
+            self.slo_energy_violations,
+            self.gate_sheds,
         )
     }
 }
@@ -319,7 +400,17 @@ impl<'a> Engine<'a> {
                     tx_time: 0.0,
                     infer_time: 0.0,
                     processing_time: f64::INFINITY,
-                    deadline: st.req.deadline,
+                    // A horizon-stranded request may still have produced
+                    // its first token (admitted, mid-decode): judge the
+                    // TTFT constraint on the stamped instant when it falls
+                    // inside the horizon, `+inf` only when no token ever
+                    // landed.
+                    ttft_time: if st.first_token_at <= end {
+                        st.first_token_at - st.req.arrival
+                    } else {
+                        f64::INFINITY
+                    },
+                    slo: st.req.slo,
                     energy_j: st.tx_energy_j,
                     tokens: 0,
                     completed_at: end,
@@ -332,6 +423,9 @@ impl<'a> Engine<'a> {
         let mut pcts = Percentiles::new();
         let mut ok = 0usize;
         let mut late = 0usize;
+        let mut ttft_attainment = [Attainment::default(); 4];
+        let mut completion_attainment = [Attainment::default(); 4];
+        let (mut v_ttft, mut v_completion, mut v_energy) = (0usize, 0usize, 0usize);
         for o in &self.outcomes {
             if o.processing_time.is_finite() {
                 proc.push(o.processing_time);
@@ -342,6 +436,20 @@ impl<'a> Engine<'a> {
             }
             if o.success() {
                 ok += 1;
+            }
+            // Per-constraint attainment: judged on every outcome carrying
+            // the constraint — a shed/dropped/unfinished request missed
+            // whatever its contract promised.
+            if let Some(met) = o.ttft_met() {
+                ttft_attainment[o.class.index()].add(met);
+                v_ttft += !met as usize;
+            }
+            if let Some(met) = o.completion_met() {
+                completion_attainment[o.class.index()].add(met);
+                v_completion += !met as usize;
+            }
+            if let Some(met) = o.energy_met() {
+                v_energy += !met as usize;
             }
         }
         // Shed requests are counted at shed time (policy sheds and queue
@@ -355,6 +463,12 @@ impl<'a> Engine<'a> {
         let n = self.outcomes.len().max(1);
         let energy = self.cluster.energy();
         let mut diagnostics = self.scheduler.diagnostics();
+        // Admission-gate wiring: surface the gate's door-shed counter as a
+        // first-class report field (stays 0 without a gate installed).
+        let gate_sheds = diagnostics
+            .iter()
+            .find_map(|(k, v)| (k == "gate_sheds").then_some(*v as u64))
+            .unwrap_or(0);
         if self.bad_actions > 0 {
             // Surface scheduler bugs (out-of-range targets) in the report
             // instead of hiding them behind the fallback.
@@ -379,6 +493,12 @@ impl<'a> Engine<'a> {
             dropped,
             dropped_by_policy: self.policy_shed,
             late,
+            ttft_attainment,
+            completion_attainment,
+            slo_ttft_violations: v_ttft,
+            slo_completion_violations: v_completion,
+            slo_energy_violations: v_energy,
+            gate_sheds,
             diagnostics,
             wall_s: wall,
             events_processed: self.events.processed(),
@@ -419,6 +539,7 @@ impl<'a> Engine<'a> {
                     dispatched_at: 0.0,
                     upload_done_at: 0.0,
                     compute_started_at: 0.0,
+                    first_token_at: f64::INFINITY,
                     tx_energy_j: 0.0,
                 });
                 match action {
@@ -482,6 +603,13 @@ impl<'a> Engine<'a> {
                     self.fail(now, svc, server);
                     return;
                 }
+                // Stamp the first-token instant from the model's own
+                // prediction *at admission* (extra in-flight work excluded:
+                // this request is the one landing). Pure float work — no
+                // RNG, no events — so completion-only runs stay
+                // bit-identical to pre-PR5.
+                let ttft_s = srv.predict(&self.svc[svc].req, 0, 0.0).ttft_s;
+                self.svc[svc].first_token_at = now + ttft_s;
                 srv.admit(svc as u64, &self.svc[svc].req, now);
                 self.cluster.refresh_admissibility(server);
                 self.svc[svc].phase = Phase::Computing;
@@ -672,7 +800,8 @@ impl<'a> Engine<'a> {
             tx_time: st.upload_done_at - st.dispatched_at,
             infer_time: 0.0,
             processing_time: f64::INFINITY,
-            deadline: st.req.deadline,
+            ttft_time: f64::INFINITY,
+            slo: st.req.slo,
             energy_j: st.tx_energy_j,
             tokens: 0,
             completed_at: now,
@@ -700,7 +829,10 @@ impl<'a> Engine<'a> {
             tx_time: st.upload_done_at - st.dispatched_at,
             infer_time: now - st.compute_started_at,
             processing_time: now - st.req.arrival,
-            deadline: st.req.deadline,
+            // A first token cannot land after the whole answer did: clamp
+            // the admission-time estimate to the realized completion.
+            ttft_time: st.first_token_at.min(now) - st.req.arrival,
+            slo: st.req.slo,
             energy_j: st.tx_energy_j + infer_energy_j,
             tokens,
             completed_at: now,
@@ -1008,7 +1140,7 @@ mod tests {
             arrival,
             prompt_tokens: 100,
             output_tokens: output,
-            deadline: 100.0,
+            slo: crate::workload::service::SloSpec::completion_only(100.0),
             payload_bytes: 100_000,
         };
         // Ten ~8s-solo jobs each at t=0 saturate edges 0 and 1 (8 slots +
@@ -1137,6 +1269,105 @@ mod tests {
         assert!(rep.stale_events > 0, "congestion must strand events");
         assert!(rep.stale_ratio > 0.0 && rep.stale_ratio < 1.0);
         assert!(rep.stale_events < rep.events_processed);
+    }
+
+    /// SLO accounting pin (issue satellite): a request that *completes*
+    /// inside its deadline but blows its TTFT bound is a violation — it
+    /// lands in `late` and `slo_ttft_violations` — and is NOT counted as
+    /// `dropped` (nothing was shed).
+    #[test]
+    fn ttft_violation_counts_as_violation_not_dropped() {
+        use crate::workload::service::{ServiceClass, SloSpec};
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let trace = vec![ServiceRequest {
+            id: 0,
+            class: ServiceClass::Chat,
+            arrival: 0.0,
+            prompt_tokens: 100,
+            output_tokens: 40,
+            // Generous completion, impossible first token: upload alone
+            // takes longer than 1 ms.
+            slo: SloSpec::completion_only(100.0).with_ttft(0.001),
+            payload_bytes: 100_000,
+        }];
+        let mut s = Fixed(0);
+        let rep = simulate(&cfg, &trace, &mut s);
+        let o = &rep.outcomes[0];
+        assert!(o.processing_time.is_finite(), "request must complete");
+        assert_eq!(o.completion_met(), Some(true));
+        assert_eq!(o.ttft_met(), Some(false));
+        assert!(o.ttft_time > 0.001 && o.ttft_time <= o.processing_time);
+        assert!(!o.success(), "TTFT miss fails the contract");
+        assert_eq!(rep.late, 1, "counted as a (timing) violation");
+        assert_eq!(rep.dropped, 0, "…not as a drop");
+        assert_eq!(rep.slo_ttft_violations, 1);
+        assert_eq!(rep.slo_completion_violations, 0);
+        let chat = ServiceClass::Chat.index();
+        assert_eq!(rep.ttft_attainment[chat].total, 1);
+        assert_eq!(rep.ttft_attainment[chat].met, 0);
+        assert_eq!(rep.completion_attainment[chat].met, 1);
+        assert!(rep.slo_summary_row().contains("violations ttft 1"));
+    }
+
+    /// Realized TTFT on completed requests is sane: after the upload
+    /// begins, at or before completion, and recorded per class.
+    #[test]
+    fn realized_ttft_between_dispatch_and_completion() {
+        use crate::workload::generator::SloSampling;
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let trace = generate(
+            &WorkloadConfig::default()
+                .with_requests(60)
+                .with_arrivals(ArrivalProcess::Poisson { rate: 2.0 })
+                .with_slo_sampling(SloSampling::PerClass)
+                .with_seed(11),
+        );
+        let mut s = Fixed(5);
+        let rep = simulate(&cfg, &trace, &mut s);
+        assert_eq!(rep.unfinished, 0);
+        for o in &rep.outcomes {
+            assert!(o.ttft_time > 0.0, "ttft {}", o.ttft_time);
+            assert!(
+                o.ttft_time <= o.processing_time + 1e-9,
+                "ttft {} > processing {}",
+                o.ttft_time,
+                o.processing_time
+            );
+            assert!(o.ttft_time >= o.tx_time - 1e-9, "first token before upload");
+        }
+        // Interactive classes carry TTFT attainment entries, batch ones
+        // don't (per-class contracts).
+        use crate::workload::service::ServiceClass;
+        assert!(rep.ttft_attainment[ServiceClass::Chat.index()].total > 0);
+        assert_eq!(rep.ttft_attainment[ServiceClass::Code.index()].total, 0);
+    }
+
+    /// Admission-gate wiring: under the simultaneous-400 overload the
+    /// gate turns would-be deadline misses into counted door sheds —
+    /// `gate_sheds > 0`, mirrored in `dropped_by_policy`, and no upload
+    /// energy is spent on gated requests.
+    #[test]
+    fn gate_converts_overload_into_counted_door_sheds() {
+        use crate::scheduler::admission::{GateParams, TokenBucketGate};
+        use crate::scheduler::csucb::CsUcb;
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let trace = generate(
+            &WorkloadConfig::default()
+                .with_requests(400)
+                .with_arrivals(ArrivalProcess::Simultaneous)
+                .with_seed(3),
+        );
+        let inner = Box::new(CsUcb::with_defaults(cfg.n_servers()));
+        let mut gated = TokenBucketGate::new(inner, GateParams::default());
+        let rep = simulate(&cfg, &trace, &mut gated);
+        assert!(rep.gate_sheds > 0, "overload must trip the gate");
+        assert!(rep.dropped_by_policy as u64 >= rep.gate_sheds);
+        assert!(rep.dropped >= rep.dropped_by_policy);
+        assert_eq!(rep.outcomes.len(), 400);
+        // And without a gate the report's counter stays zero.
+        let mut plain = CsUcb::with_defaults(cfg.n_servers());
+        let rep_plain = simulate(&cfg, &trace, &mut plain);
+        assert_eq!(rep_plain.gate_sheds, 0);
     }
 
     #[test]

@@ -284,7 +284,7 @@ impl ServiceModel for PsServiceModel {
 mod tests {
     use super::*;
     use crate::sim::server::paper_testbed;
-    use crate::workload::service::{ServiceClass, ServiceRequest};
+    use crate::workload::service::{ServiceClass, ServiceRequest, SloSpec};
 
     fn req(id: u64, prompt: u32, output: u32) -> ServiceRequest {
         ServiceRequest {
@@ -293,7 +293,7 @@ mod tests {
             arrival: 0.0,
             prompt_tokens: prompt,
             output_tokens: output,
-            deadline: 4.0,
+            slo: SloSpec::completion_only(4.0),
             payload_bytes: 10_000,
         }
     }

@@ -410,7 +410,7 @@ mod tests {
             arrival: 0.0,
             prompt_tokens: prompt,
             output_tokens: output,
-            deadline: 10.0,
+            slo: crate::workload::service::SloSpec::completion_only(10.0),
             payload_bytes: 10_000,
         }
     }

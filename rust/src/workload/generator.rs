@@ -6,9 +6,30 @@
 //! token-length distributions (log-normal, heavy-tailed like production
 //! traces), all pinned to a seed so every bench row is reproducible.
 
-use super::service::{ServiceClass, ServiceRequest};
+use super::service::{ServiceClass, ServiceRequest, SloSpec};
 use super::ArrivalSource;
 use crate::util::rng::Rng;
+
+/// How per-request SLO contracts are drawn.
+///
+/// `CompletionOnly` is the paper's workload: one uniform completion
+/// deadline per request, nothing else — byte-identical to the pre-PR5
+/// generator (same RNG stream, same draws). `PerClass` layers the class's
+/// interactive constraints on top: classes whose [`ClassProfile`] carries
+/// a `ttft` range (chat, translate by default) draw a TTFT bound, classes
+/// with an `energy_budget_j` range draw a price ceiling. The extra draws
+/// come from a **separate RNG stream** (seeded `seed ^ SLO_STREAM_SALT`),
+/// so switching modes never shifts the arrival/class/token/deadline
+/// sequence — the two modes produce field-identical requests except for
+/// the added constraints (pinned by test).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloSampling {
+    CompletionOnly,
+    PerClass,
+}
+
+/// Seed salt for the SLO side-stream (see [`SloSampling`]).
+const SLO_STREAM_SALT: u64 = 0x510_C0_47AC7;
 
 /// Arrival process shape.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -38,6 +59,13 @@ pub struct ClassProfile {
     /// Deadline range [lo, hi] seconds for this class.
     pub deadline_lo: f64,
     pub deadline_hi: f64,
+    /// TTFT-bound range [lo, hi] seconds, drawn under
+    /// [`SloSampling::PerClass`]; `None` = the class carries no TTFT
+    /// constraint (batch classes).
+    pub ttft: Option<(f64, f64)>,
+    /// Energy-budget range [lo, hi] joules, drawn under
+    /// [`SloSampling::PerClass`]; `None` = no price ceiling.
+    pub energy_budget_j: Option<(f64, f64)>,
     /// Mix weight (relative frequency).
     pub weight: f64,
 }
@@ -53,6 +81,12 @@ impl ClassProfile {
                 output_sigma: 0.5,
                 deadline_lo: 2.0,
                 deadline_hi: 4.0,
+                // Tight first-token bound: a conversational turn stalls on
+                // it. Satisfiable on an idle edge (~0.1 s TTFT), marginal
+                // through the shared cloud uplink (~0.36 s idle, worse
+                // under load) — exactly the tier split TTFT routing exploits.
+                ttft: Some((0.35, 0.85)),
+                energy_budget_j: None,
                 weight: 0.4,
             },
             ServiceClass::Summarize => ClassProfile {
@@ -62,6 +96,8 @@ impl ClassProfile {
                 output_sigma: 0.4,
                 deadline_lo: 3.0,
                 deadline_hi: 6.0,
+                ttft: None, // batch class: completion-bound
+                energy_budget_j: None,
                 weight: 0.2,
             },
             ServiceClass::Translate => ClassProfile {
@@ -71,6 +107,8 @@ impl ClassProfile {
                 output_sigma: 0.4,
                 deadline_lo: 2.0,
                 deadline_hi: 5.0,
+                ttft: Some((0.7, 1.5)), // interactive, looser than chat
+                energy_budget_j: None,
                 weight: 0.25,
             },
             ServiceClass::Code => ClassProfile {
@@ -79,7 +117,9 @@ impl ClassProfile {
                 output_mu: 4.5, // ~90 tokens
                 output_sigma: 0.5,
                 deadline_lo: 3.0,
-                deadline_hi: 6.0,
+                deadline_hi: 6.0, // loosest completion: nobody reads it live
+                ttft: None,
+                energy_budget_j: None,
                 weight: 0.15,
             },
         }
@@ -92,6 +132,9 @@ pub struct WorkloadConfig {
     pub n_requests: usize,
     pub arrivals: ArrivalProcess,
     pub seed: u64,
+    /// How SLO contracts are drawn (default: the paper's completion-only
+    /// scalar, byte-identical to the pre-PR5 stream).
+    pub slo: SloSampling,
     pub profiles: [ClassProfile; 4],
     /// Payload model: fixed header + per-prompt-token context bytes.
     pub payload_base_bytes: u64,
@@ -107,6 +150,7 @@ impl Default for WorkloadConfig {
             n_requests: 10_000,
             arrivals: ArrivalProcess::Poisson { rate: 15.0 },
             seed: 0x9E11,
+            slo: SloSampling::CompletionOnly,
             profiles: [
                 ClassProfile::default_for(ServiceClass::Chat),
                 ClassProfile::default_for(ServiceClass::Summarize),
@@ -154,6 +198,39 @@ impl WorkloadConfig {
         self
     }
 
+    /// Select the SLO sampling mode (see [`SloSampling`]).
+    pub fn with_slo_sampling(mut self, slo: SloSampling) -> Self {
+        self.slo = slo;
+        self
+    }
+
+    /// Shorthand: class-conditioned SLO vectors — chat/translate draw
+    /// TTFT bounds from their profile ranges, summarize/code stay
+    /// completion-bound. Non-SLO fields (arrivals, classes, tokens,
+    /// completion deadlines) remain byte-identical to the
+    /// completion-only stream.
+    pub fn with_per_class_slos(self) -> Self {
+        self.with_slo_sampling(SloSampling::PerClass)
+    }
+
+    /// Override one class's TTFT-bound range (drawn under
+    /// [`SloSampling::PerClass`]); `None` removes the constraint.
+    pub fn with_ttft_range(mut self, class: ServiceClass, range: Option<(f64, f64)>) -> Self {
+        self.profiles[class.index()].ttft = range;
+        self
+    }
+
+    /// Override one class's energy-budget range in joules (drawn under
+    /// [`SloSampling::PerClass`]); `None` removes the ceiling.
+    pub fn with_energy_budget_range(
+        mut self,
+        class: ServiceClass,
+        range: Option<(f64, f64)>,
+    ) -> Self {
+        self.profiles[class.index()].energy_budget_j = range;
+        self
+    }
+
     /// Override the class mix weights, in [`ServiceClass::ALL`] order
     /// (Chat, Summarize, Translate, Code). Relative frequencies — they
     /// need not sum to 1. This is the per-tier knob behind
@@ -176,6 +253,10 @@ impl WorkloadConfig {
 pub struct WorkloadGen {
     cfg: WorkloadConfig,
     rng: Rng,
+    /// Side-stream for SLO-vector draws (TTFT bounds, energy budgets):
+    /// independent of `rng`, so [`SloSampling::PerClass`] adds constraints
+    /// without shifting the arrival/class/token/deadline sequence.
+    slo_rng: Rng,
     t: f64,
     emitted: usize,
     wsum: f64,
@@ -185,6 +266,7 @@ impl WorkloadGen {
     pub fn new(cfg: &WorkloadConfig) -> Self {
         WorkloadGen {
             rng: Rng::new(cfg.seed),
+            slo_rng: Rng::new(cfg.seed ^ SLO_STREAM_SALT),
             t: 0.0,
             emitted: 0,
             wsum: cfg.profiles.iter().map(|p| p.weight).sum(),
@@ -223,13 +305,24 @@ impl ArrivalSource for WorkloadGen {
             .round()
             .clamp(1.0, self.cfg.max_output_tokens as f64) as u32;
         let deadline = self.rng.uniform(p.deadline_lo, p.deadline_hi);
+        let mut slo = SloSpec::completion_only(deadline);
+        if self.cfg.slo == SloSampling::PerClass {
+            // Side-stream draws only: the main sequence above is
+            // byte-identical across sampling modes.
+            if let Some((lo, hi)) = p.ttft {
+                slo.ttft = Some(self.slo_rng.uniform(lo, hi));
+            }
+            if let Some((lo, hi)) = p.energy_budget_j {
+                slo.energy_budget_j = Some(self.slo_rng.uniform(lo, hi));
+            }
+        }
         Some(ServiceRequest {
             id,
             class,
             arrival: self.t,
             prompt_tokens: prompt,
             output_tokens: output,
-            deadline,
+            slo,
             payload_bytes: self.cfg.payload_base_bytes
                 + prompt as u64 * self.cfg.payload_bytes_per_token,
         })
@@ -299,7 +392,7 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.prompt_tokens, y.prompt_tokens);
             assert_eq!(x.arrival, y.arrival);
-            assert_eq!(x.deadline, y.deadline);
+            assert_eq!(x.slo, y.slo);
         }
         let c = generate(&cfg.clone().with_seed(10));
         assert!(a.iter().zip(&c).any(|(x, y)| x.prompt_tokens != y.prompt_tokens));
@@ -311,7 +404,9 @@ mod tests {
             .with_requests(2000)
             .with_deadline_range(2.0, 6.0);
         for r in generate(&cfg) {
-            assert!(r.deadline >= 2.0 && r.deadline <= 6.0, "d={}", r.deadline);
+            let d = r.deadline();
+            assert!((2.0..=6.0).contains(&d), "d={d}");
+            assert!(r.slo.is_completion_only(), "default mode is scalar");
         }
     }
 
@@ -392,11 +487,101 @@ mod tests {
             assert_eq!(got.class, want.class);
             assert_eq!(got.prompt_tokens, want.prompt_tokens);
             assert_eq!(got.output_tokens, want.output_tokens);
-            assert_eq!(got.deadline, want.deadline);
+            assert_eq!(got.slo, want.slo);
             assert_eq!(got.payload_bytes, want.payload_bytes);
         }
         assert!(stream.next_arrival().is_none());
         assert_eq!(stream.len_hint(), Some(0));
+    }
+
+    /// The class-conditioned SLO mode draws from a *separate* RNG stream:
+    /// every non-SLO field — arrival instants, classes, token lengths,
+    /// payloads, and the completion deadline itself — is bit-identical to
+    /// the completion-only stream; only the constraint vector grows.
+    #[test]
+    fn per_class_mode_only_adds_constraints() {
+        let base = WorkloadConfig::default().with_requests(800).with_seed(31);
+        let scalar = generate(&base);
+        let vector = generate(&base.clone().with_per_class_slos());
+        assert_eq!(scalar.len(), vector.len());
+        for (s, v) in scalar.iter().zip(&vector) {
+            assert_eq!(s.id, v.id);
+            assert_eq!(s.arrival.to_bits(), v.arrival.to_bits());
+            assert_eq!(s.class, v.class);
+            assert_eq!(s.prompt_tokens, v.prompt_tokens);
+            assert_eq!(s.output_tokens, v.output_tokens);
+            assert_eq!(s.payload_bytes, v.payload_bytes);
+            assert_eq!(
+                s.slo.completion.unwrap().to_bits(),
+                v.slo.completion.unwrap().to_bits(),
+                "completion draw moved between modes"
+            );
+            assert!(s.slo.is_completion_only());
+            // Interactive classes gained a TTFT bound inside the profile
+            // range; batch classes stayed scalar.
+            match v.class {
+                ServiceClass::Chat | ServiceClass::Translate => {
+                    let (lo, hi) = base.profiles[v.class.index()].ttft.unwrap();
+                    let t = v.slo.ttft.expect("interactive class is TTFT-bound");
+                    assert!((lo..=hi).contains(&t), "ttft {t} outside [{lo}, {hi}]");
+                }
+                ServiceClass::Summarize | ServiceClass::Code => {
+                    assert!(v.slo.is_completion_only());
+                }
+            }
+            assert!(v.slo.energy_budget_j.is_none(), "no default price ceiling");
+        }
+    }
+
+    /// Bit-determinism of the new side-stream draws: same seed, same SLO
+    /// vectors to the bit; different seed, different TTFT draws.
+    #[test]
+    fn slo_side_stream_deterministic_per_seed() {
+        let cfg = WorkloadConfig::default()
+            .with_requests(400)
+            .with_seed(77)
+            .with_per_class_slos();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.slo, y.slo);
+            if let (Some(tx), Some(ty)) = (x.slo.ttft, y.slo.ttft) {
+                assert_eq!(tx.to_bits(), ty.to_bits());
+            }
+        }
+        let c = generate(&cfg.clone().with_seed(78));
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.slo.ttft.map(f64::to_bits)
+                != y.slo.ttft.map(f64::to_bits)),
+            "TTFT draws must depend on the seed"
+        );
+    }
+
+    /// Per-class overrides: TTFT ranges can be reshaped or removed and
+    /// energy budgets added, per class.
+    #[test]
+    fn slo_range_overrides_apply() {
+        let cfg = WorkloadConfig::default()
+            .with_requests(600)
+            .with_seed(5)
+            .with_per_class_slos()
+            .with_ttft_range(ServiceClass::Chat, Some((0.1, 0.2)))
+            .with_ttft_range(ServiceClass::Translate, None)
+            .with_energy_budget_range(ServiceClass::Code, Some((50.0, 120.0)));
+        for r in generate(&cfg) {
+            match r.class {
+                ServiceClass::Chat => {
+                    let t = r.slo.ttft.unwrap();
+                    assert!((0.1..=0.2).contains(&t), "ttft {t}");
+                }
+                ServiceClass::Translate => assert!(r.slo.ttft.is_none()),
+                ServiceClass::Code => {
+                    let b = r.slo.energy_budget_j.unwrap();
+                    assert!((50.0..=120.0).contains(&b), "budget {b}");
+                }
+                ServiceClass::Summarize => assert!(r.slo.is_completion_only()),
+            }
+        }
     }
 
     #[test]

@@ -12,8 +12,10 @@
 pub mod generator;
 pub mod service;
 
-pub use generator::{generate, ArrivalProcess, ClassProfile, WorkloadConfig, WorkloadGen};
-pub use service::{ServiceClass, ServiceOutcome, ServiceRequest};
+pub use generator::{
+    generate, ArrivalProcess, ClassProfile, SloSampling, WorkloadConfig, WorkloadGen,
+};
+pub use service::{ServiceClass, ServiceOutcome, ServiceRequest, SloSpec};
 
 /// Pull-based workload cursor: the engine asks for one arrival at a time.
 ///

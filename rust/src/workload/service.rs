@@ -2,8 +2,25 @@
 //!
 //! Each request carries a service class (chat, summarization, translation,
 //! code — the diversity the paper's intro motivates), token counts, a
-//! personalized processing-time requirement D∆ drawn from [2 s, 6 s]
-//! (paper §4.2), and the upload payload implied by its prompt.
+//! **personalized SLO vector** [`SloSpec`] generalizing the paper's scalar
+//! processing-time requirement D∆ (§4.2), and the upload payload implied
+//! by its prompt.
+//!
+//! # SLO contracts (PR 5)
+//!
+//! The paper's C1 constraint is a single completion deadline. Real service
+//! diversity is a *vector* of constraints: interactive classes (chat,
+//! translate) care about time-to-first-token, batch classes (summarize,
+//! code) about completion and energy price. [`SloSpec`] carries each as an
+//! `Option` — absent means "not part of this request's contract" — and
+//! every consumer (the constraint-satisfaction mechanism, the engine's
+//! attainment accounting, admission control) treats only the *present*
+//! constraints as binding.
+//!
+//! Compat: the scalar `deadline` survives as the deprecated accessor
+//! [`ServiceRequest::deadline`] over `SloSpec::completion`, and a
+//! completion-only spec reproduces the pre-PR5 pipeline bit for bit
+//! (pinned by `rust/tests/slo_identity.rs`).
 
 use crate::sim::time::SimTime;
 
@@ -45,6 +62,113 @@ impl ServiceClass {
             ServiceClass::Code => "code",
         }
     }
+
+    /// Default TTFT bound for this class, if it is interactive. Chat is
+    /// tightest (a conversational turn stalls on the first token),
+    /// translate a little looser; summarize/code stream into a buffer
+    /// nobody watches token-by-token, so they carry no TTFT constraint.
+    pub fn default_ttft(self) -> Option<SimTime> {
+        match self {
+            ServiceClass::Chat => Some(0.6),
+            ServiceClass::Translate => Some(1.1),
+            ServiceClass::Summarize | ServiceClass::Code => None,
+        }
+    }
+
+    /// The class's default constraint vector around a drawn completion
+    /// requirement: interactive classes (chat, translate) are TTFT-bound
+    /// on top of completion, batch classes (summarize, code)
+    /// completion-bound only.
+    pub fn default_slo(self, completion: SimTime) -> SloSpec {
+        SloSpec {
+            ttft: self.default_ttft(),
+            completion: Some(completion),
+            energy_budget_j: None,
+        }
+    }
+}
+
+/// Per-request SLO contract: the constraint vector replacing the scalar
+/// deadline. Absent (`None`) constraints are not part of the contract and
+/// never bind — a completion-only spec is exactly the paper's D∆.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SloSpec {
+    /// Time-to-first-token bound, seconds from arrival.
+    pub ttft: Option<SimTime>,
+    /// End-to-end completion bound, seconds from arrival (the paper's D∆).
+    pub completion: Option<SimTime>,
+    /// Energy-price ceiling for serving this request, joules.
+    pub energy_budget_j: Option<f64>,
+}
+
+impl SloSpec {
+    /// The compat constructor: the paper's scalar deadline as a
+    /// completion-only contract.
+    pub fn completion_only(deadline: SimTime) -> SloSpec {
+        SloSpec {
+            ttft: None,
+            completion: Some(deadline),
+            energy_budget_j: None,
+        }
+    }
+
+    pub fn ttft_only(ttft: SimTime) -> SloSpec {
+        SloSpec {
+            ttft: Some(ttft),
+            completion: None,
+            energy_budget_j: None,
+        }
+    }
+
+    pub fn with_ttft(mut self, ttft: SimTime) -> SloSpec {
+        self.ttft = Some(ttft);
+        self
+    }
+
+    pub fn with_energy_budget(mut self, joules: f64) -> SloSpec {
+        self.energy_budget_j = Some(joules);
+        self
+    }
+
+    /// True when the contract is exactly the paper's scalar form.
+    pub fn is_completion_only(&self) -> bool {
+        self.ttft.is_none() && self.energy_budget_j.is_none() && self.completion.is_some()
+    }
+
+    /// Normalized slack of one constraint: `(target - value) / target`.
+    /// A non-positive target can never be met and used to produce NaN
+    /// (`(0 - v) / 0`) that silently slipped through every `>= margin`
+    /// filter — it is normalized to `-inf` instead (regression-tested in
+    /// scheduler/mod.rs).
+    #[inline]
+    pub fn norm_slack(target: SimTime, value: f64) -> f64 {
+        if target <= 0.0 {
+            f64::NEG_INFINITY
+        } else {
+            (target - value) / target
+        }
+    }
+
+    /// Minimum normalized slack across the *present* constraints of this
+    /// contract, evaluated against predictions (decision time) or realized
+    /// values (feedback time). Absent constraints contribute `+inf`
+    /// (vacuously satisfied); an empty contract is always satisfied.
+    ///
+    /// Float-identity note: for a completion-only spec this is exactly
+    /// `(D∆ - value) / D∆` — the pre-PR5 C1 term, bit for bit.
+    pub fn min_slack(&self, ttft: f64, completion: f64, energy_j: f64) -> f64 {
+        let mut worst = match self.completion {
+            Some(d) => Self::norm_slack(d, completion),
+            None => f64::INFINITY,
+        };
+        if let Some(t) = self.ttft {
+            worst = worst.min(Self::norm_slack(t, ttft));
+        }
+        if let Some(b) = self.energy_budget_j {
+            worst = worst.min(Self::norm_slack(b, energy_j));
+        }
+        worst
+    }
 }
 
 /// One inference service request (one "arm pull context" for the bandit).
@@ -58,8 +182,8 @@ pub struct ServiceRequest {
     pub prompt_tokens: u32,
     /// Expected/decoded output length in tokens.
     pub output_tokens: u32,
-    /// Personalized processing-time requirement D∆ (paper C1).
-    pub deadline: SimTime,
+    /// Personalized SLO contract (paper C1, generalized to a vector).
+    pub slo: SloSpec,
     /// Upload payload in bytes (prompt + conversation context).
     pub payload_bytes: u64,
 }
@@ -70,6 +194,13 @@ impl ServiceRequest {
     /// used for throughput accounting).
     pub fn total_tokens(&self) -> u64 {
         self.prompt_tokens as u64 + self.output_tokens as u64
+    }
+
+    /// Deprecated compat accessor: the scalar completion deadline
+    /// (`+inf` when the contract carries no completion bound). New code
+    /// should read `self.slo` and treat constraints individually.
+    pub fn deadline(&self) -> SimTime {
+        self.slo.completion.unwrap_or(f64::INFINITY)
     }
 }
 
@@ -85,7 +216,12 @@ pub struct ServiceOutcome {
     pub infer_time: SimTime,
     /// End-to-end processing time (tx + queue + inference).
     pub processing_time: SimTime,
-    pub deadline: SimTime,
+    /// Realized time from arrival to first token (`+inf` when no token
+    /// was ever produced: sheds, queue drops, and work still waiting for
+    /// its first token at the horizon).
+    pub ttft_time: SimTime,
+    /// The SLO contract this outcome is judged against.
+    pub slo: SloSpec,
     /// Energy attributed to this service (transmission + inference share), J.
     pub energy_j: f64,
     pub tokens: u64,
@@ -117,21 +253,65 @@ impl ServiceOutcome {
             tx_time: 0.0,
             infer_time: 0.0,
             processing_time: f64::INFINITY,
-            deadline: req.deadline,
+            ttft_time: f64::INFINITY,
+            slo: req.slo,
             energy_j: 0.0,
             tokens: 0,
             completed_at,
         }
     }
 
-    /// Paper's success criterion: processing time under the requirement.
-    pub fn success(&self) -> bool {
-        self.processing_time <= self.deadline
+    /// Deprecated compat accessor: the scalar completion deadline of the
+    /// contract (`+inf` when absent).
+    pub fn deadline(&self) -> SimTime {
+        self.slo.completion.unwrap_or(f64::INFINITY)
     }
 
-    /// Normalized slack: (D∆ - D) / D∆, the C1 term of f(y) (Eq. 3).
+    /// Whether the completion constraint was met, if the contract has one.
+    pub fn completion_met(&self) -> Option<bool> {
+        self.slo.completion.map(|d| self.processing_time <= d)
+    }
+
+    /// Whether the TTFT constraint was met, if the contract has one.
+    pub fn ttft_met(&self) -> Option<bool> {
+        self.slo.ttft.map(|t| self.ttft_time <= t)
+    }
+
+    /// Whether the energy budget held, if the contract has one.
+    pub fn energy_met(&self) -> Option<bool> {
+        self.slo.energy_budget_j.map(|b| self.energy_j <= b)
+    }
+
+    /// Paper's success criterion, generalized: every present *timing*
+    /// constraint holds (completion under D∆, first token under the TTFT
+    /// bound). The energy budget is a price preference, not a timing SLO —
+    /// it is reported via [`Self::energy_met`] and the engine's
+    /// `slo_energy_violations`, but does not flip success (the paper's
+    /// success rate stays a timing metric).
+    ///
+    /// A completion-only contract reduces to the historical
+    /// `processing_time <= deadline`.
+    pub fn success(&self) -> bool {
+        self.completion_met().unwrap_or(true) && self.ttft_met().unwrap_or(true)
+    }
+
+    /// Normalized completion slack: (D∆ - D) / D∆, the C1 term of f(y)
+    /// (Eq. 3). Compat for completion-bound contracts — when the contract
+    /// has no completion constraint this falls back to [`Self::slo_slack`]
+    /// so reward shaping never divides by a missing deadline.
     pub fn slack(&self) -> f64 {
-        (self.deadline - self.processing_time) / self.deadline
+        match self.slo.completion {
+            Some(d) => SloSpec::norm_slack(d, self.processing_time),
+            None => self.slo_slack(),
+        }
+    }
+
+    /// Realized minimum normalized slack across the present constraints —
+    /// the vector generalization of [`Self::slack`] that SLO-aware reward
+    /// shaping (`CsUcbSlo`) consumes.
+    pub fn slo_slack(&self) -> f64 {
+        self.slo
+            .min_slack(self.ttft_time, self.processing_time, self.energy_j)
     }
 }
 
@@ -147,7 +327,8 @@ mod tests {
             tx_time: 0.1,
             infer_time: processing - 0.1,
             processing_time: processing,
-            deadline,
+            ttft_time: 0.2,
+            slo: SloSpec::completion_only(deadline),
             energy_j: 10.0,
             tokens: 100,
             completed_at: processing,
@@ -193,9 +374,99 @@ mod tests {
             arrival: 0.0,
             prompt_tokens: 10,
             output_tokens: 32,
-            deadline: 4.0,
+            slo: SloSpec::completion_only(4.0),
             payload_bytes: 1024,
         };
         assert_eq!(r.total_tokens(), 42);
+        assert_eq!(r.deadline(), 4.0);
+    }
+
+    #[test]
+    fn default_slos_split_interactive_from_batch() {
+        for c in [ServiceClass::Chat, ServiceClass::Translate] {
+            let s = c.default_slo(4.0);
+            assert!(s.ttft.is_some(), "{c:?} must be TTFT-bound");
+            assert_eq!(s.completion, Some(4.0));
+        }
+        for c in [ServiceClass::Summarize, ServiceClass::Code] {
+            let s = c.default_slo(5.0);
+            assert!(s.ttft.is_none(), "{c:?} must be completion-bound only");
+            assert!(s.is_completion_only());
+        }
+        // Chat is tighter on first token than translate.
+        assert!(
+            ServiceClass::Chat.default_ttft().unwrap()
+                < ServiceClass::Translate.default_ttft().unwrap()
+        );
+    }
+
+    /// A ttft-violated-but-completed request fails success() even though
+    /// its completion constraint held — the per-constraint accessors tell
+    /// the two families apart.
+    #[test]
+    fn ttft_violation_fails_success_independently() {
+        let mut o = outcome(1.5, 2.0);
+        o.slo = SloSpec::completion_only(2.0).with_ttft(0.1);
+        o.ttft_time = 0.5; // first token too late
+        assert_eq!(o.completion_met(), Some(true));
+        assert_eq!(o.ttft_met(), Some(false));
+        assert!(!o.success());
+        // slo_slack is bound by the violated TTFT constraint.
+        assert!(o.slo_slack() < 0.0);
+        // compat slack still reads the completion constraint.
+        assert!(o.slack() > 0.0);
+    }
+
+    #[test]
+    fn energy_budget_reported_but_not_success() {
+        let mut o = outcome(1.0, 2.0);
+        o.slo = o.slo.with_energy_budget(5.0); // energy_j is 10.0
+        assert_eq!(o.energy_met(), Some(false));
+        assert!(o.success(), "energy is a price preference, not timing");
+        assert!(o.slo_slack() < 0.0, "but the vector slack sees it");
+    }
+
+    #[test]
+    fn absent_constraints_never_bind() {
+        let mut o = outcome(100.0, 2.0);
+        o.slo = SloSpec::ttft_only(1.0);
+        o.ttft_time = 0.4;
+        assert_eq!(o.completion_met(), None);
+        assert!(o.success(), "no completion constraint to violate");
+        assert_eq!(o.deadline(), f64::INFINITY);
+        // compat slack falls back to the vector (ttft) slack.
+        assert!((o.slack() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_target_norm_slack_is_neg_inf_not_nan() {
+        assert_eq!(SloSpec::norm_slack(0.0, 0.0), f64::NEG_INFINITY);
+        assert_eq!(SloSpec::norm_slack(-1.0, 3.0), f64::NEG_INFINITY);
+        assert!(SloSpec::norm_slack(2.0, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn min_slack_is_binding_constraint() {
+        let s = SloSpec {
+            ttft: Some(1.0),
+            completion: Some(4.0),
+            energy_budget_j: Some(100.0),
+        };
+        // completion slack 0.5, ttft slack 0.2, energy slack 0.9 → ttft binds.
+        let m = s.min_slack(0.8, 2.0, 10.0);
+        assert!((m - 0.2).abs() < 1e-12, "got {m}");
+        // Empty contract is always satisfied.
+        assert_eq!(SloSpec::default().min_slack(9.0, 9.0, 9.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn completion_only_min_slack_matches_scalar_formula() {
+        let s = SloSpec::completion_only(3.0);
+        let direct = (3.0f64 - 1.25) / 3.0;
+        assert_eq!(
+            s.min_slack(f64::NAN, 1.25, f64::NAN).to_bits(),
+            direct.to_bits(),
+            "completion-only vector slack must be the pre-PR5 C1 float"
+        );
     }
 }

@@ -16,7 +16,7 @@ use std::time::Duration;
 use perllm::coordinator::router::{Router, WorkerTelemetry};
 use perllm::scheduler::csucb::CsUcb;
 use perllm::sim::server::ServerKind;
-use perllm::workload::service::{ServiceClass, ServiceOutcome};
+use perllm::workload::service::{ServiceClass, ServiceOutcome, SloSpec};
 
 struct CountingAlloc;
 
@@ -63,7 +63,8 @@ fn route_and_complete_do_not_allocate_once_warm() {
         tx_time: 0.0,
         infer_time: 0.1,
         processing_time: 0.1,
-        deadline: 10.0,
+        ttft_time: 0.05,
+        slo: SloSpec::completion_only(10.0),
         energy_j: 30.0,
         tokens: 64,
         completed_at: 0.0,

@@ -10,7 +10,7 @@ use perllm::sim::ps::PsQueue;
 use perllm::sim::server::ServerKind;
 use perllm::util::proptest::{check, Gen};
 use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig};
-use perllm::workload::service::{ServiceClass, ServiceRequest};
+use perllm::workload::service::{ServiceClass, ServiceRequest, SloSpec};
 
 fn random_view(g: &mut Gen, n: usize) -> ClusterView {
     let servers = (0..n)
@@ -45,28 +45,63 @@ fn random_view(g: &mut Gen, n: usize) -> ClusterView {
     }
 }
 
+/// Random SLO contract covering every variant: completion-only (the
+/// paper's scalar), TTFT-only, both, with and without an energy budget.
+fn random_slo(g: &mut Gen) -> SloSpec {
+    let ttft = g.bool().then(|| g.f64(0.05, 4.0));
+    // Keep at least one timing constraint present: all-absent contracts
+    // are legal but vacuous (everything trivially feasible).
+    let completion = if ttft.is_some() && g.bool() {
+        None
+    } else {
+        Some(g.f64(0.5, 8.0))
+    };
+    SloSpec {
+        ttft,
+        completion,
+        energy_budget_j: g.bool().then(|| g.f64(1.0, 300.0)),
+    }
+}
+
 fn random_req(g: &mut Gen) -> ServiceRequest {
+    req_with_slo(g, SloSpec::completion_only(g.f64(0.5, 8.0)))
+}
+
+fn req_with_slo(g: &mut Gen, slo: SloSpec) -> ServiceRequest {
     ServiceRequest {
         id: g.u64(0, 1 << 40),
         class: *g.pick(&ServiceClass::ALL),
         arrival: 0.0,
         prompt_tokens: g.usize(1, 1024) as u32,
         output_tokens: g.usize(1, 512) as u32,
-        deadline: g.f64(0.5, 8.0),
+        slo,
         payload_bytes: g.u64(1_000, 5_000_000),
     }
 }
 
 #[test]
 fn prop_constraint_filter_soundness() {
-    // f(y) >= 0 implies every individual constraint holds (Eq. 3).
+    // f(y) >= 0 implies every individual *present* constraint holds
+    // (Eq. 3, generalized to the SLO vector).
     check("f(y) soundness", 300, |g| {
         let n = g.usize(1, 8);
         let view = random_view(g, n);
-        let req = random_req(g);
+        let slo = random_slo(g);
+        let req = req_with_slo(g, slo);
         for j in view.feasible_servers(&req) {
             let sv = &view.servers[j];
-            assert!(sv.predicted_time <= req.deadline + 1e-9, "C1 violated");
+            if let Some(d) = req.slo.completion {
+                assert!(sv.predicted_time <= d + 1e-9, "C1 completion violated");
+            }
+            if let Some(t) = req.slo.ttft {
+                assert!(sv.predicted_ttft <= t + 1e-9, "C1 TTFT violated");
+            }
+            if let Some(b) = req.slo.energy_budget_j {
+                assert!(
+                    sv.tx_energy_est + sv.infer_energy_est <= b + 1e-9,
+                    "energy budget violated"
+                );
+            }
             assert!(sv.compute_demand <= sv.compute_headroom + 1e-9, "C2 violated");
             assert!(
                 sv.bandwidth_demand <= sv.bandwidth_headroom + 1e-9,
@@ -76,30 +111,87 @@ fn prop_constraint_filter_soundness() {
     });
 }
 
+/// The `_into` feasibility helpers must equal a brute-force scan of
+/// `constraint_satisfaction` over every server — under every SLO variant
+/// (completion-only, TTFT-only, both, energy budget) and under candidate
+/// pruning that honors the source's invariant (pruned ⇒ zero compute
+/// headroom ⇒ provably infeasible).
+#[test]
+fn prop_feasible_set_equals_full_scan_under_slo_variants() {
+    check("feasible ≡ full scan (SLO)", 400, |g| {
+        let n = g.usize(1, 8);
+        let mut view = random_view(g, n);
+        // Emulate the ClusterSim admissibility index: some servers
+        // saturated (zero headroom), the candidate list naming the rest.
+        if g.bool() {
+            let mut candidates = Vec::new();
+            for j in 0..n {
+                if g.bool() {
+                    view.servers[j].compute_headroom = 0.0;
+                } else {
+                    candidates.push(j as u32);
+                }
+            }
+            // Empty list is the "no pruning info" sentinel — only export
+            // the index when it actually excludes someone (the source
+            // does the same).
+            if candidates.len() < n {
+                view.candidates = candidates;
+            }
+        }
+        let slo = random_slo(g);
+        let req = req_with_slo(g, slo);
+        let margin = g.f64(0.0, 0.5);
+        let brute: Vec<usize> = (0..n)
+            .filter(|&j| view.constraint_satisfaction(&req, j) >= margin)
+            .collect();
+        let mut buf = vec![usize::MAX; g.usize(0, 12)];
+        view.feasible_servers_with_slack_into(&req, margin, &mut buf);
+        assert_eq!(buf, brute, "pruned scan diverged from brute force");
+        if margin == 0.0 {
+            assert_eq!(view.feasible_servers(&req), brute);
+        }
+    });
+}
+
 #[test]
 fn prop_csucb_picks_feasible_when_any_exists() {
+    // Plain CS-UCB filters through the completion-only lens; CsUcbSlo
+    // through the full vector. Each must stay inside its own feasible
+    // set whenever that set is non-empty.
+    use perllm::scheduler::csucb::CsUcbSlo;
     check("cs-ucb feasibility", 300, |g| {
         let n = g.usize(2, 8);
         let view = random_view(g, n);
-        let req = random_req(g);
-        let feasible = view.feasible_servers(&req);
-        let mut s = CsUcb::with_defaults(n);
-        match s.decide(&req, &view) {
-            Action::Assign { server } => {
-                assert!(server < n, "out of range");
-                if !feasible.is_empty() {
-                    assert!(
-                        feasible.contains(&server),
-                        "picked infeasible {server} with feasible set {feasible:?}"
-                    );
+        let slo = random_slo(g);
+        let req = req_with_slo(g, slo);
+        let completion_feasible: Vec<usize> = (0..n)
+            .filter(|&j| view.completion_satisfaction(&req, j) >= 0.0)
+            .collect();
+        let vector_feasible = view.feasible_servers(&req);
+        let mut plain = CsUcb::with_defaults(n);
+        let mut slo = CsUcbSlo::with_defaults(n);
+        for (name, action, feasible) in [
+            ("cs-ucb", plain.decide(&req, &view), &completion_feasible),
+            ("cs-ucb-slo", slo.decide(&req, &view), &vector_feasible),
+        ] {
+            match action {
+                Action::Assign { server } => {
+                    assert!(server < n, "{name} out of range");
+                    if !feasible.is_empty() {
+                        assert!(
+                            feasible.contains(&server),
+                            "{name} picked infeasible {server} with feasible {feasible:?}"
+                        );
+                    }
                 }
+                Action::Shed { .. } => {
+                    // Shedding is only legal when nothing is feasible
+                    // (deep violation everywhere).
+                    assert!(feasible.is_empty(), "{name} shed despite {feasible:?}");
+                }
+                Action::Defer { .. } => panic!("{name} never defers"),
             }
-            Action::Shed { .. } => {
-                // Shedding is only legal when nothing is feasible (deep
-                // violation everywhere).
-                assert!(feasible.is_empty(), "shed despite feasible {feasible:?}");
-            }
-            Action::Defer { .. } => panic!("cs-ucb never defers"),
         }
     });
 }
@@ -231,7 +323,8 @@ fn prop_ucb_reward_monotone_in_energy() {
             tx_time: 0.1,
             infer_time: proc,
             processing_time: proc,
-            deadline,
+            ttft_time: 0.1,
+            slo: SloSpec::completion_only(deadline),
             energy_j: energy,
             tokens: 10,
             completed_at: proc,
@@ -259,7 +352,7 @@ fn prop_workload_generation_valid() {
         for r in generate(&cfg) {
             assert!(r.prompt_tokens >= 1);
             assert!(r.output_tokens >= 1);
-            assert!((2.0..=6.0).contains(&r.deadline));
+            assert!((2.0..=6.0).contains(&r.deadline()));
             assert!(r.payload_bytes > 0);
             assert!(r.arrival >= 0.0);
         }

@@ -49,6 +49,7 @@ fn serves_real_models_through_the_full_stack() {
                 prompt: "Edge-cloud collab".into(),
                 max_new_tokens: 12,
                 deadline_s: 120.0,
+                ttft_slo_s: None,
                 class: ServiceClass::Chat,
                 temperature: 0.0,
                 top_k: 1,
@@ -102,6 +103,9 @@ fn mixed_workload_all_complete_and_metrics_consistent() {
                 prompt: prompts[i as usize % prompts.len()].into(),
                 max_new_tokens: 8 + (i as usize % 3) * 4,
                 deadline_s: 300.0,
+                // Interactive classes carry a (loose) TTFT bound through
+                // the full stack; batch classes stay completion-only.
+                ttft_slo_s: ServiceClass::ALL[i as usize % 4].default_ttft().map(|_| 150.0),
                 class: ServiceClass::ALL[i as usize % 4],
                 temperature: 0.8,
                 top_k: 200,

@@ -1,0 +1,413 @@
+//! Run-identity pins for the SLO-contract redesign (PR 5), in the style
+//! of `service_model_identity.rs`: executable specifications of the
+//! pre-PR5 behavior run against the production code, bit for bit.
+//!
+//! Three contracts are pinned:
+//!
+//! 1. **Scalar-lens identity** — `ReferenceScalarCsUcb` below is the
+//!    pre-PR5 CS-UCB decision/feedback logic, copied formula for formula
+//!    (the scalar `(D∆ - predicted) / D∆` C1 term, the fused UCB loop,
+//!    the first-max fallback, the Eq.-4 reward on completion slack). On
+//!    completion-only workloads the production `CsUcb::with_defaults`
+//!    must reproduce it outcome for outcome, to the bit.
+//! 2. **Vector degeneration** — `CsUcbSlo` (the full SLO-vector lens) is
+//!    decision-identical to `CsUcb` when every contract is
+//!    completion-only: the vector min_slack collapses to the scalar C1
+//!    float exactly.
+//! 3. **Workload-mode isolation** — switching the generator to per-class
+//!    SLO sampling must not move a single arrival, token draw, or
+//!    completion instant (the SLO side-stream is independent); only the
+//!    contract fields and the attainment accounting may change.
+
+use perllm::scheduler::csucb::{CsUcb, CsUcbParams, CsUcbSlo};
+use perllm::scheduler::{Action, ClusterView, Scheduler, ShedReason};
+use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
+use perllm::sim::engine::{simulate, RunReport};
+use perllm::sim::topology::TopologyConfig;
+use perllm::workload::generator::{generate, ArrivalProcess, SloSampling, WorkloadConfig};
+use perllm::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest};
+
+/// Pre-PR5 CS-UCB, verbatim: the scalar deadline C1 term, one arm per
+/// (class, server), the fused margin/bare scan, the first-max fallback,
+/// Eq.-4 reward on completion slack. Kept independent of the production
+/// `CsUcb` so a drive-by change there cannot silently rewrite the spec.
+/// (`PendingPenalties`' dense-vec storage is replaced by a HashMap — the
+/// stored/loaded floats are identical, only the container differs.)
+struct ReferenceScalarCsUcb {
+    params: CsUcbParams,
+    arms: Vec<Vec<(u64, f64)>>, // (pulls, mean_reward)
+    t: u64,
+    pending: std::collections::HashMap<u64, f64>,
+    cum_regret: f64,
+    fallback_decisions: u64,
+    shed_decisions: u64,
+    n_servers: usize,
+}
+
+impl ReferenceScalarCsUcb {
+    fn new(n_servers: usize) -> Self {
+        ReferenceScalarCsUcb {
+            params: CsUcbParams::default(),
+            arms: vec![vec![(0, 0.0); n_servers]; ServiceClass::ALL.len()],
+            t: 0,
+            pending: std::collections::HashMap::new(),
+            cum_regret: 0.0,
+            fallback_decisions: 0,
+            shed_decisions: 0,
+            n_servers,
+        }
+    }
+
+    /// The pre-PR5 Eq.-3 formula, literally: scalar deadline slack (no
+    /// zero-deadline guard — these workloads draw D∆ in [2, 6]), then the
+    /// compute and bandwidth terms, `d.min(c).min(b)`.
+    fn scalar_fy(view: &ClusterView, req: &ServiceRequest, j: usize) -> f64 {
+        let sv = &view.servers[j];
+        let deadline = req.deadline();
+        let d = (deadline - sv.predicted_time) / deadline;
+        let c = if sv.compute_headroom > 0.0 {
+            (sv.compute_headroom - sv.compute_demand) / sv.compute_headroom.max(1e-9)
+        } else {
+            -1.0
+        };
+        let b = if sv.bandwidth_headroom > 0.0 {
+            (sv.bandwidth_headroom - sv.bandwidth_demand) / sv.bandwidth_headroom.max(1e-9)
+        } else {
+            -1.0
+        };
+        d.min(c).min(b)
+    }
+
+    fn ucb(&self, class: usize, server: usize) -> f64 {
+        let (pulls, mean) = self.arms[class][server];
+        if pulls == 0 {
+            return f64::INFINITY;
+        }
+        let t = (self.t.max(2)) as f64;
+        mean + self.params.delta * (t.ln() / pulls as f64).sqrt()
+    }
+
+    fn best_estimate(&self, class: usize) -> f64 {
+        self.arms[class]
+            .iter()
+            .filter(|(p, _)| *p > 0)
+            .map(|(_, m)| *m)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+impl Scheduler for ReferenceScalarCsUcb {
+    fn name(&self) -> &'static str {
+        "cs-ucb (PerLLM)" // same label: RunReport.scheduler compares equal
+    }
+
+    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
+        self.t += 1;
+        let class = req.class.index();
+        let margin = self.params.slack_margin;
+        let mut best_margin: Option<(usize, f64)> = None;
+        let mut best_bare: Option<(usize, f64)> = None;
+        for j in view.scan() {
+            let fy = Self::scalar_fy(view, req, j);
+            if fy < 0.0 {
+                continue;
+            }
+            let v = self.ucb(class, j);
+            let v = if v.is_infinite() {
+                f64::MAX / 2.0
+                    - view.energy_cost(j) * 1.0e6
+                    - view.servers[j].predicted_time * 1.0e3
+                    - view.servers[j].occupancy * 1.0e3
+            } else {
+                v
+            };
+            if fy >= margin && best_margin.is_none_or(|(_, bv)| v > bv) {
+                best_margin = Some((j, v));
+            }
+            if best_bare.is_none_or(|(_, bv)| v > bv) {
+                best_bare = Some((j, v));
+            }
+        }
+        let (choice, penalty) = match best_margin.or(best_bare) {
+            Some((j, _)) => (j, 0.0),
+            None => {
+                let mut best_fy = f64::NEG_INFINITY;
+                let mut least_violating = 0usize;
+                for j in 0..view.servers.len() {
+                    let fy = Self::scalar_fy(view, req, j);
+                    if fy > best_fy {
+                        best_fy = fy;
+                        least_violating = j;
+                    }
+                }
+                if best_fy < -self.params.shed_threshold {
+                    self.shed_decisions += 1;
+                    return Action::shed(ShedReason::Infeasible);
+                }
+                self.fallback_decisions += 1;
+                (least_violating, best_fy.min(0.0))
+            }
+        };
+        if penalty < 0.0 {
+            self.pending.insert(req.id, penalty);
+        }
+        Action::assign(choice)
+    }
+
+    fn feedback(&mut self, outcome: &ServiceOutcome, _view: &ClusterView) {
+        if outcome.was_shed() {
+            self.pending.remove(&outcome.id);
+            return;
+        }
+        let class = outcome.class.index();
+        let penalty = self.pending.remove(&outcome.id).unwrap_or(0.0);
+        // Pre-PR5 Eq. 4: completion slack only.
+        let energy_term = outcome.energy_j / 1000.0;
+        let deadline = outcome.deadline();
+        let fy = ((deadline - outcome.processing_time) / deadline).clamp(-2.0, 1.0);
+        let mut r = -energy_term + self.params.lambda * fy;
+        if penalty < 0.0 {
+            r += self.params.theta * penalty;
+        }
+        let (pulls, mean) = &mut self.arms[class][outcome.server];
+        *pulls += 1;
+        *mean += (r - *mean) / *pulls as f64;
+        let best = self.best_estimate(class);
+        if best.is_finite() {
+            let gap = self.params.alpha * self.params.beta * best - r;
+            if gap > 0.0 {
+                self.cum_regret += gap;
+            }
+        }
+    }
+
+    fn diagnostics(&self) -> Vec<(String, f64)> {
+        // Same keys and float pipelines as production CsUcb, so the
+        // diagnostics vectors compare equal.
+        let explored: u64 = self
+            .arms
+            .iter()
+            .flat_map(|row| row.iter())
+            .filter(|(p, _)| *p > 0)
+            .count() as u64;
+        let m = self.arms.len() as f64;
+        let n = self.n_servers as f64;
+        let l = (self.t.max(2)) as f64;
+        vec![
+            ("cum_regret".into(), self.cum_regret),
+            ("regret_bound".into(), (2.0 * m * n * l.ln()).sqrt()),
+            ("fallback_decisions".into(), self.fallback_decisions as f64),
+            ("shed_decisions".into(), self.shed_decisions as f64),
+            ("explored_arms".into(), explored as f64),
+            ("decisions".into(), self.t as f64),
+        ]
+    }
+}
+
+/// Bit-level equality of two runs over the pinned `RunReport` surface.
+fn assert_runs_bit_identical(a: &RunReport, b: &RunReport, label: &str) {
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{label}: outcome count");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id, "{label}: id order");
+        assert_eq!(x.server, y.server, "{label}: placement of {}", x.id);
+        assert_eq!(x.tokens, y.tokens, "{label}: tokens of {}", x.id);
+        assert_eq!(
+            x.completed_at.to_bits(),
+            y.completed_at.to_bits(),
+            "{label}: completion instant of {}",
+            x.id
+        );
+        assert_eq!(
+            x.processing_time.to_bits(),
+            y.processing_time.to_bits(),
+            "{label}: processing time of {}",
+            x.id
+        );
+        assert_eq!(
+            x.energy_j.to_bits(),
+            y.energy_j.to_bits(),
+            "{label}: energy of {}",
+            x.id
+        );
+    }
+    assert_eq!(a.dropped, b.dropped, "{label}: dropped");
+    assert_eq!(a.dropped_by_policy, b.dropped_by_policy, "{label}: policy sheds");
+    assert_eq!(a.unfinished, b.unfinished, "{label}: unfinished");
+    assert_eq!(a.late, b.late, "{label}: late");
+    assert_eq!(
+        a.success_rate.to_bits(),
+        b.success_rate.to_bits(),
+        "{label}: success rate"
+    );
+    assert_eq!(
+        a.energy.total_j().to_bits(),
+        b.energy.total_j().to_bits(),
+        "{label}: total energy"
+    );
+    assert_eq!(a.events_processed, b.events_processed, "{label}: events");
+    assert_eq!(a.stale_events, b.stale_events, "{label}: stale events");
+}
+
+fn completion_only_trace(n: usize, rate: f64, seed: u64) -> Vec<ServiceRequest> {
+    generate(
+        &WorkloadConfig::default()
+            .with_requests(n)
+            .with_arrivals(ArrivalProcess::Poisson { rate })
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(seed),
+    )
+}
+
+/// The headline compat pin: on the paper testbed with completion-only
+/// contracts, production CS-UCB (completion lens) reproduces the literal
+/// pre-PR5 scalar implementation bit for bit — both bandwidth modes,
+/// diagnostics included.
+#[test]
+fn csucb_completion_only_bit_identical_to_scalar_reference() {
+    let trace = completion_only_trace(1500, 15.0, 42);
+    for mode in [BandwidthMode::Stable, BandwidthMode::Fluctuating] {
+        let cfg = ClusterConfig::paper("llama2-7b", mode);
+        let mut current = CsUcb::with_defaults(cfg.n_servers());
+        let mut reference = ReferenceScalarCsUcb::new(cfg.n_servers());
+        let a = simulate(&cfg, &trace, &mut current);
+        let b = simulate(&cfg, &trace, &mut reference);
+        assert_runs_bit_identical(&a, &b, &format!("cs-ucb vs scalar ref {mode:?}"));
+        assert_eq!(a.diagnostics, b.diagnostics, "{mode:?}: diagnostics");
+        assert!(a.success_rate > 0.5, "pinned run does real work");
+    }
+}
+
+/// Overload pin: the simultaneous-400 collapse regime exercises the
+/// fallback scan (first-max tie-break) and the penalty path.
+#[test]
+fn csucb_scalar_reference_identity_under_overload() {
+    let trace = generate(
+        &WorkloadConfig::default()
+            .with_requests(400)
+            .with_arrivals(ArrivalProcess::Simultaneous)
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(3),
+    );
+    let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+    let mut current = CsUcb::with_defaults(cfg.n_servers());
+    let mut reference = ReferenceScalarCsUcb::new(cfg.n_servers());
+    let a = simulate(&cfg, &trace, &mut current);
+    let b = simulate(&cfg, &trace, &mut reference);
+    assert_runs_bit_identical(&a, &b, "overload");
+    assert_eq!(a.diagnostics, b.diagnostics, "overload diagnostics");
+}
+
+/// Vector degeneration: on completion-only contracts `CsUcbSlo` is
+/// run-identical to `CsUcb` — the SLO min_slack collapses to the scalar
+/// C1 float exactly (pinned across a learning run with feedback).
+#[test]
+fn csucb_slo_degenerates_to_plain_on_completion_only() {
+    let trace = completion_only_trace(1200, 15.0, 9);
+    for mode in [BandwidthMode::Stable, BandwidthMode::Fluctuating] {
+        let cfg = ClusterConfig::paper("yi-6b", mode);
+        let mut plain = CsUcb::with_defaults(cfg.n_servers());
+        let mut slo = CsUcbSlo::with_defaults(cfg.n_servers());
+        let a = simulate(&cfg, &trace, &mut plain);
+        let b = simulate(&cfg, &trace, &mut slo);
+        assert_runs_bit_identical(&a, &b, &format!("slo degeneration {mode:?}"));
+    }
+}
+
+/// Workload-mode isolation: per-class SLO sampling must not move the
+/// physics. With a scheduler that ignores contracts entirely, the two
+/// modes produce identical placements and completion instants — only the
+/// contract fields, success accounting, and attainment tables differ.
+#[test]
+fn per_class_sampling_leaves_the_physics_untouched() {
+    struct Fixed(usize);
+    impl Scheduler for Fixed {
+        fn name(&self) -> &'static str {
+            "fixed"
+        }
+        fn decide(&mut self, _r: &ServiceRequest, _v: &ClusterView) -> Action {
+            Action::assign(self.0)
+        }
+    }
+    let base = WorkloadConfig::default()
+        .with_requests(600)
+        .with_arrivals(ArrivalProcess::Poisson { rate: 10.0 })
+        .with_seed(21);
+    let scalar_trace = generate(&base);
+    let vector_trace = generate(&base.clone().with_slo_sampling(SloSampling::PerClass));
+    let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+    let a = simulate(&cfg, &scalar_trace, &mut Fixed(5));
+    let b = simulate(&cfg, &vector_trace, &mut Fixed(5));
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.server, y.server);
+        assert_eq!(x.processing_time.to_bits(), y.processing_time.to_bits());
+        assert_eq!(x.completed_at.to_bits(), y.completed_at.to_bits());
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+        assert_eq!(x.ttft_time.to_bits(), y.ttft_time.to_bits());
+    }
+    assert_eq!(a.events_processed, b.events_processed);
+    // The vector run judges TTFT where the scalar run had nothing to
+    // judge: attainment tables populate, success can only tighten.
+    let interactive_ttft: usize = [ServiceClass::Chat, ServiceClass::Translate]
+        .iter()
+        .map(|c| b.ttft_attainment[c.index()].total)
+        .sum();
+    assert!(interactive_ttft > 0, "per-class mode must add TTFT contracts");
+    assert_eq!(
+        a.ttft_attainment.iter().map(|t| t.total).sum::<usize>(),
+        0,
+        "scalar mode has no TTFT contracts"
+    );
+    assert!(b.success_rate <= a.success_rate + 1e-12);
+}
+
+/// The issue's acceptance comparison, pinned conservatively: on the
+/// token-batch-edge testbed with per-class contracts, `CsUcbSlo` must
+/// not lose to completion-only CS-UCB on interactive-class TTFT
+/// attainment, and must hold the total success rate to within a small
+/// tolerance. (The strict "beats" demonstration is the
+/// `paper_scale_sim --slo per-class` run; a bit-level inequality would
+/// be flaky to pin across calibrations.)
+#[test]
+fn slo_lens_holds_interactive_ttft_attainment_on_token_batch_edge() {
+    let wl = WorkloadConfig::default()
+        .with_requests(4000)
+        .with_arrivals(ArrivalProcess::Poisson { rate: 18.0 })
+        .with_seed(42)
+        .with_per_class_slos();
+    let trace = generate(&wl);
+    let cfg = TopologyConfig::paper("llama2-7b", BandwidthMode::Stable)
+        .with_service_model_by_name("token-batch-edge")
+        .expect("known service model")
+        .build();
+    let mut plain = CsUcb::with_defaults(cfg.n_servers());
+    let mut slo = CsUcbSlo::with_defaults(cfg.n_servers());
+    let a = simulate(&cfg, &trace, &mut plain);
+    let b = simulate(&cfg, &trace, &mut slo);
+    let interactive = |r: &RunReport| {
+        let mut met = 0usize;
+        let mut total = 0usize;
+        for c in [ServiceClass::Chat, ServiceClass::Translate] {
+            met += r.ttft_attainment[c.index()].met;
+            total += r.ttft_attainment[c.index()].total;
+        }
+        (met, total)
+    };
+    let (met_a, total_a) = interactive(&a);
+    let (met_b, total_b) = interactive(&b);
+    assert_eq!(total_a, total_b, "same contracts judged on both runs");
+    assert!(total_a > 0);
+    let rate_a = met_a as f64 / total_a as f64;
+    let rate_b = met_b as f64 / total_b as f64;
+    assert!(
+        rate_b + 0.01 >= rate_a,
+        "SLO lens lost interactive TTFT attainment: {rate_b:.4} vs {rate_a:.4}"
+    );
+    assert!(
+        b.success_rate + 0.03 >= a.success_rate,
+        "SLO lens lost total success: {:.4} vs {:.4}",
+        b.success_rate,
+        a.success_rate
+    );
+}
