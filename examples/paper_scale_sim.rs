@@ -22,10 +22,12 @@
 //!                   [--mix single|tiered]
 //!                   [--slo completion-only|per-class] [--gate]
 //!                   [--rate R]
-//!                   [--schedulers fineinfer,agod,rewardless,cs-ucb,cs-ucb-slo]
+//!                   [--schedulers fineinfer,agod,rewardless,cs-ucb,cs-ucb-slo,
+//!                                 cs-ucb-sw,cs-ucb-disc]
 //!                   [--modes stable|fluctuating|both]
+//!                   [--faults off|crash|generative] [--mttf S] [--mttr S]
 //!                   [--min-success F] [--min-events-per-sec F]
-//!                   [--min-gate-sheds N]
+//!                   [--min-gate-sheds N] [--min-recovered-attainment F]
 //!
 //! `--topology` swaps the paper's 6-server testbed for an EdgeShard-style
 //! multi-tier preset (60 / 600 servers); the Poisson arrival rate then
@@ -67,9 +69,23 @@
 //!     --schedulers cs-ucb --modes stable
 //! ```
 //!
+//! `--faults` layers the PR-6 chaos subsystem (`sim::faults`) onto every
+//! run: `crash` scripts one hard crash of edge server 0 at the midpoint
+//! of the arrival horizon, recovering after `--mttr` seconds;
+//! `generative` runs a seeded MTTF/MTTR crash-repair process over the
+//! whole fleet (`--mttf`/`--mttr`, exponential windows, non-overlapping
+//! per server). Both install the default lagged health monitor (probe
+//! 1 s, publish 5 s late), so schedulers act on `observed_health`, not
+//! ground truth — which is what makes the sliding-window (`cs-ucb-sw`)
+//! and discounted (`cs-ucb-disc`) CS-UCB variants earn their keep. The
+//! run then prints an extra availability row: incidents, per-phase SLO
+//! attainment (pre/during/post), time-to-recover, in-flight casualties,
+//! and gate sheds by phase.
+//!
 //! The `--min-*` flags turn the run into a CI gate: if any run's success
 //! rate or DES events/s lands below the floor (or the event-heap peak
-//! above the cap), the process exits 1.
+//! above the cap, or post-recovery attainment below
+//! `--min-recovered-attainment` in a faulted run), the process exits 1.
 
 use perllm::scheduler::admission::{GateParams, TokenBucketGate};
 use perllm::scheduler::{
@@ -80,8 +96,9 @@ use perllm::scheduler::{
     Scheduler,
 };
 use perllm::sim::cluster::BandwidthMode;
-use perllm::sim::engine::simulate_stream;
+use perllm::sim::engine::simulate_stream_faulted;
 use perllm::sim::topology::TopologyConfig;
+use perllm::sim::{FaultKind, FaultPlan, GenerativeFaults, HealthConfig};
 use perllm::workload::generator::{ArrivalProcess, SloSampling, WorkloadConfig, WorkloadGen};
 use perllm::workload::{ArrivalSource, MergedArrivals};
 
@@ -193,6 +210,12 @@ fn main() {
     let min_gate_sheds: u64 = get("--min-gate-sheds", "0")
         .parse()
         .expect("bad --min-gate-sheds");
+    let min_recovered: f64 = get("--min-recovered-attainment", "0")
+        .parse()
+        .expect("bad --min-recovered-attainment");
+    let faults = get("--faults", "off");
+    let mttf: f64 = get("--mttf", "300").parse().expect("bad --mttf");
+    let mttr: f64 = get("--mttr", "30").parse().expect("bad --mttr");
 
     // Arrival rate: the paper's 15 req/s scaled by topology capacity
     // unless pinned explicitly — a 60-server fleet at paper load would
@@ -214,6 +237,37 @@ fn main() {
         slo,
     )
     .with_seed(seed);
+
+    // Chaos layer. The empty plan replays bit-identically to a plan-less
+    // run (pinned by rust/tests/faults_identity.rs), so every run goes
+    // through the faulted entry point unconditionally.
+    let horizon = n as f64 / rate;
+    let plan = match faults.as_str() {
+        "off" => FaultPlan::default(),
+        // One hard crash of edge server 0 at the midpoint of the arrival
+        // horizon, repaired after --mttr: the canonical incident the
+        // availability row's pre/during/post phases are built around.
+        "crash" => FaultPlan::default()
+            .with_event(
+                0.5 * horizon,
+                FaultKind::Crash {
+                    server: 0,
+                    recover: Some(0.5 * horizon + mttr),
+                },
+            )
+            .with_health(HealthConfig::default()),
+        // Seeded fleet-wide MTTF/MTTR crash-repair process.
+        "generative" => FaultPlan::default()
+            .with_generative(GenerativeFaults {
+                mttf_s: mttf,
+                mttr_s: mttr,
+                horizon_s: horizon,
+                targets: Vec::new(),
+                kill: true,
+            })
+            .with_health(HealthConfig::default()),
+        other => panic!("bad --faults {other} (off|crash|generative)"),
+    };
 
     let mut floor_violations = 0usize;
     for mode in modes {
@@ -243,6 +297,8 @@ fn main() {
                 "rewardless" => Box::new(RewardlessGuidance::new(ns)),
                 "cs-ucb" => Box::new(CsUcb::with_defaults(ns)),
                 "cs-ucb-slo" => Box::new(CsUcbSlo::with_defaults(ns)),
+                "cs-ucb-sw" => Box::new(CsUcb::windowed(ns, 50)),
+                "cs-ucb-disc" => Box::new(CsUcb::discounted(ns, 0.98)),
                 other => panic!("unknown scheduler {other}"),
             };
             let mut s: Box<dyn Scheduler> = if gate {
@@ -261,10 +317,10 @@ fn main() {
                     .map(|g| g as &mut dyn ArrivalSource)
                     .collect();
                 let mut source = MergedArrivals::new(sources);
-                simulate_stream(&cfg, &mut source, s.as_mut())
+                simulate_stream_faulted(&cfg, &plan, &mut source, s.as_mut())
             } else {
                 let mut source = WorkloadGen::new(&workload);
-                simulate_stream(&cfg, &mut source, s.as_mut())
+                simulate_stream_faulted(&cfg, &plan, &mut source, s.as_mut())
             };
             println!("{}", rep.summary_row());
             println!(
@@ -273,6 +329,9 @@ fn main() {
             );
             if slo == SloSampling::PerClass || gate {
                 println!("    {}", rep.slo_summary_row());
+            }
+            if let Some(av) = &rep.availability {
+                println!("    {}", av.availability_row());
             }
             println!(
                 "    DES: {} events in {:.2}s wall = {:.0} events/s, \
@@ -306,6 +365,34 @@ fn main() {
                 );
                 floor_violations += 1;
             }
+            if min_recovered > 0.0 {
+                // Only meaningful for a faulted run that actually
+                // recovered; a run with no post-recovery outcomes fails
+                // the gate loudly rather than vacuously passing.
+                let post = rep
+                    .availability
+                    .as_ref()
+                    .map(|av| av.attainment[2])
+                    .filter(|a| a.total > 0);
+                match post {
+                    Some(a) if a.rate() >= min_recovered => {}
+                    Some(a) => {
+                        eprintln!(
+                            "FLOOR VIOLATION: {name} post-recovery attainment {:.3} \
+                             < {min_recovered}",
+                            a.rate()
+                        );
+                        floor_violations += 1;
+                    }
+                    None => {
+                        eprintln!(
+                            "FLOOR VIOLATION: {name} has no post-recovery outcomes \
+                             to hold --min-recovered-attainment against"
+                        );
+                        floor_violations += 1;
+                    }
+                }
+            }
             if min_gate_sheds > 0 && rep.gate_sheds < min_gate_sheds {
                 eprintln!(
                     "FLOOR VIOLATION: {name} gate sheds {} < {min_gate_sheds} \
@@ -322,6 +409,7 @@ fn main() {
                     || k == "shed_decisions"
                     || k == "gate_sheds"
                     || k == "gate_token_admissions"
+                    || k == "arm_resets"
                 {
                     println!("    {k}: {v:.1}");
                 }

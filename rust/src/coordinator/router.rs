@@ -222,6 +222,9 @@ impl Router {
                     n_waiting: queued,
                     solo_time_est: expected_tokens as f64 * us_tok / 1.0e6,
                     occupancy: used / cap,
+                    // The live substrate has no probe pipeline yet: a
+                    // worker in the telemetry list is presumed healthy.
+                    observed_health: 1.0,
                 }
             }));
     }

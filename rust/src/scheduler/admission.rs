@@ -23,7 +23,7 @@
 //! ([`crate::workload::ServiceOutcome::was_shed`]), which every policy
 //! already handles (no arm was pulled).
 
-use super::{Action, ClusterView, Scheduler, ShedReason};
+use super::{Action, ClusterView, FleetEvent, Scheduler, ShedReason};
 use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest};
 
 /// Gate tuning.
@@ -41,6 +41,14 @@ pub struct GateParams {
     /// gate's scan prunes provably-infeasible servers, which is only
     /// sound for non-negative margins.
     pub margin: f64,
+    /// Scale the refill rate by the fleet's mean *observed* health
+    /// (PR 6, opt-in): during an incident the probing budget shrinks
+    /// with the capacity the health monitor believes is left, so the
+    /// gate sheds harder instead of admitting its full rate of
+    /// hopeless work into a half-dead fleet. With no monitor installed
+    /// every `observed_health` is 1.0 and the scale is exactly 1 — the
+    /// pre-PR6 refill, bit for bit.
+    pub adaptive: bool,
 }
 
 impl Default for GateParams {
@@ -49,6 +57,7 @@ impl Default for GateParams {
             refill_per_s: 2.0,
             burst: 8.0,
             margin: 0.0,
+            adaptive: false,
         }
     }
 }
@@ -97,12 +106,22 @@ impl TokenBucketGate {
     /// Refill every bucket for the time elapsed since the last decision.
     /// Sources whose views carry no clock (the live router defaults to a
     /// frozen `now`) simply get no refill beyond the initial burst unless
-    /// the owner advances the router clock (`Router::set_now`).
-    fn refill(&mut self, now: f64) {
+    /// the owner advances the router clock (`Router::set_now`). Under
+    /// `params.adaptive` the rate is scaled by the mean observed health
+    /// across the view — the lagged probe signal, so the gate tightens
+    /// only once the monitor has *seen* the incident, and loosens again
+    /// only once it has seen the recovery.
+    fn refill(&mut self, now: f64, view: &ClusterView) {
         let dt = now - self.last_refill;
         if dt > 0.0 {
+            let rate = if self.params.adaptive && !view.servers.is_empty() {
+                let h: f64 = view.servers.iter().map(|s| s.observed_health).sum();
+                self.params.refill_per_s * (h / view.servers.len() as f64).clamp(0.0, 1.0)
+            } else {
+                self.params.refill_per_s
+            };
             for t in &mut self.tokens {
-                *t = (*t + dt * self.params.refill_per_s).min(self.params.burst);
+                *t = (*t + dt * rate).min(self.params.burst);
             }
             self.last_refill = now;
         }
@@ -117,7 +136,7 @@ impl Scheduler for TokenBucketGate {
     }
 
     fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
-        self.refill(view.now);
+        self.refill(view.now, view);
         // Best SLO-vector satisfaction over the candidate scan. Pruned
         // servers are provably infeasible (f(y) <= -1), so for the
         // non-negative margin this max is decision-identical to a full
@@ -146,6 +165,12 @@ impl Scheduler for TokenBucketGate {
         // Gated requests come back as shed outcomes; the inner policy
         // already treats those as "no arm pulled".
         self.inner.feedback(outcome, view);
+    }
+
+    fn fleet_event(&mut self, ev: &FleetEvent, now: f64) {
+        // The gate itself keys off observed health in the view; fleet
+        // transitions are the inner policy's business (arm resets).
+        self.inner.fleet_event(ev, now);
     }
 
     fn diagnostics(&self) -> Vec<(String, f64)> {
@@ -190,6 +215,7 @@ mod tests {
             refill_per_s: 1.0,
             burst: 3.0,
             margin: 0.0,
+            adaptive: false,
         };
         let mut g = gated(2, params);
         let view = test_view(vec![10.0, 8.0]); // both far past the deadline
@@ -218,6 +244,7 @@ mod tests {
             refill_per_s: 2.0,
             burst: 1.0,
             margin: 0.0,
+            adaptive: false,
         };
         let mut g = gated(1, params);
         let mut view = test_view(vec![10.0]);
@@ -236,6 +263,7 @@ mod tests {
             refill_per_s: 0.0,
             burst: 1.0,
             margin: 0.0,
+            adaptive: false,
         };
         let mut g = gated(1, params);
         let view = test_view(vec![10.0]);
@@ -250,6 +278,50 @@ mod tests {
         assert_eq!(g.gate_sheds_by_class[ServiceClass::Code.index()], 1);
     }
 
+    /// Under `adaptive`, refill is scaled by mean observed health: an
+    /// observed-dead fleet earns no probing tokens, and refill resumes
+    /// at the normal rate once the (lagged) probes report recovery.
+    #[test]
+    fn adaptive_refill_tracks_observed_health() {
+        let params = GateParams {
+            refill_per_s: 2.0,
+            burst: 1.0,
+            margin: 0.0,
+            adaptive: true,
+        };
+        let mut g = gated(1, params);
+        let mut view = test_view(vec![10.0]); // hopeless placement
+        let req = test_req(1.0);
+        assert!(!g.decide(&req, &view).is_shed(), "initial burst token");
+        assert!(g.decide(&req, &view).is_shed(), "bucket empty");
+        // Fleet observed dead: half a second earns 0.5 s * 2/s * 0 = 0
+        // tokens — the gate stays shut.
+        view.servers[0].observed_health = 0.0;
+        view.now = 0.5;
+        assert!(g.decide(&req, &view).is_shed(), "no refill while observed dead");
+        // Probes report recovery: the next half second refills at the
+        // full rate (one token).
+        view.servers[0].observed_health = 1.0;
+        view.now = 1.0;
+        assert!(!g.decide(&req, &view).is_shed(), "refill resumes on recovery");
+        assert!(g.decide(&req, &view).is_shed());
+    }
+
+    /// Fleet events must reach the wrapped policy: a windowed CS-UCB
+    /// behind the gate still resets its arms on rejoin.
+    #[test]
+    fn fleet_events_forward_to_inner_policy() {
+        let mut g = TokenBucketGate::with_defaults(Box::new(CsUcb::windowed(2, 8)));
+        g.fleet_event(&FleetEvent::Up { server: 0 }, 1.0);
+        let resets: f64 = g
+            .diagnostics()
+            .iter()
+            .find(|(k, _)| k == "arm_resets")
+            .map(|(_, v)| *v)
+            .expect("inner cs-ucb-sw diagnostics present");
+        assert_eq!(resets, 1.0, "Up event must reach the wrapped bandit");
+    }
+
     /// A gate shed happens BEFORE the inner policy sees the request: the
     /// bandit's decision counter must not move, and the shed feedback is
     /// consumed without touching any arm.
@@ -259,6 +331,7 @@ mod tests {
             refill_per_s: 0.0,
             burst: 0.0,
             margin: 0.0,
+            adaptive: false,
         };
         let mut g = gated(2, params);
         let view = test_view(vec![10.0, 8.0]);

@@ -19,7 +19,9 @@
 //! (the paper: "assigned to a more resource-rich server") and the penalty
 //! term P(t) carries the violation severity into the index (Eq. 7).
 
-use super::{Action, ClusterView, Scheduler, ShedReason};
+use std::collections::VecDeque;
+
+use super::{Action, ClusterView, FleetEvent, Scheduler, ShedReason};
 use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest};
 
 /// Reward scale: 1 kJ of weighted energy ≡ 1.0 reward unit, keeping the
@@ -65,6 +67,24 @@ pub struct CsUcbParams {
     /// [`ServiceOutcome::slo_slack`], so interactive requests route by
     /// first-token slack.
     pub slo_aware: bool,
+    /// Non-stationarity, opt-in (PR 6): `Some(w)` switches every arm to
+    /// **sliding-window** statistics (SW-UCB) — the mean and the
+    /// exploration bonus see only the last `w` rewards, so a server
+    /// whose behavior changed (crash, restart, degradation) stops being
+    /// judged on ancient history after at most `w` pulls. `None` keeps
+    /// the classic incremental mean, code-path-identical to pre-PR6.
+    /// Mutually exclusive with `discount`.
+    pub window: Option<usize>,
+    /// **Discounted** statistics (D-UCB): per update, the arm's
+    /// accumulated reward mass and sample weight decay by `gamma`
+    /// (0 < gamma < 1), giving an effective memory of ~1/(1-gamma)
+    /// pulls. `None` = classic mean. Mutually exclusive with `window`.
+    pub discount: Option<f64>,
+    /// Reset a server's arms (every class) when it comes back —
+    /// [`FleetEvent::Up`]/[`FleetEvent::Joined`]: a restarted server
+    /// shares little with its pre-crash statistics, and the reset turns
+    /// its arms optimistic-untried so they are re-explored immediately.
+    pub reset_on_rejoin: bool,
 }
 
 impl Default for CsUcbParams {
@@ -78,6 +98,9 @@ impl Default for CsUcbParams {
             slack_margin: 0.2,
             shed_threshold: f64::INFINITY,
             slo_aware: false,
+            window: None,
+            discount: None,
+            reset_on_rejoin: false,
         }
     }
 }
@@ -127,17 +150,53 @@ impl PendingPenalties {
     }
 }
 
-/// Per-arm statistics: estimated reward R̄(a) and pull count L(a, t).
-#[derive(Debug, Clone, Copy, Default)]
+/// Per-arm statistics: estimated reward R̄(a) and pull count L(a, t),
+/// plus the opt-in non-stationary accumulators (unused — and empty — in
+/// the stationary default, whose update path is exactly the pre-PR6
+/// incremental mean). `mean_reward` is always the current estimate under
+/// whichever mode is active, so readers (`ucb`, `best_estimate`) never
+/// branch on mode.
+#[derive(Debug, Clone, Default)]
 struct Arm {
     pulls: u64,
     mean_reward: f64,
+    /// Sliding-window mode: the last `w` rewards and their running sum.
+    window: VecDeque<f64>,
+    win_sum: f64,
+    /// Discounted mode: geometrically decayed reward mass and sample
+    /// weight (D-UCB's N_gamma).
+    disc_sum: f64,
+    disc_weight: f64,
 }
 
 impl Arm {
+    /// Stationary incremental mean — the pre-PR6 update, untouched.
     fn update(&mut self, r: f64) {
         self.pulls += 1;
         self.mean_reward += (r - self.mean_reward) / self.pulls as f64;
+    }
+
+    fn update_windowed(&mut self, r: f64, w: usize) {
+        self.pulls += 1;
+        self.window.push_back(r);
+        self.win_sum += r;
+        while self.window.len() > w {
+            self.win_sum -= self.window.pop_front().expect("len > w >= 1");
+        }
+        self.mean_reward = self.win_sum / self.window.len() as f64;
+    }
+
+    fn update_discounted(&mut self, r: f64, gamma: f64) {
+        self.pulls += 1;
+        self.disc_sum = gamma * self.disc_sum + r;
+        self.disc_weight = gamma * self.disc_weight + 1.0;
+        self.mean_reward = self.disc_sum / self.disc_weight;
+    }
+
+    /// Back to optimistic-untried (server rejoined: its history is about
+    /// a machine that no longer exists).
+    fn reset(&mut self) {
+        *self = Arm::default();
     }
 }
 
@@ -159,10 +218,25 @@ pub struct CsUcb {
     /// Count of requests explicitly shed (violation beyond shed_threshold).
     shed_decisions: u64,
     feedbacks: u64,
+    /// Arm resets performed on fleet rejoin events.
+    arm_resets: u64,
 }
 
 impl CsUcb {
     pub fn new(n_servers: usize, params: CsUcbParams) -> Self {
+        if let Some(w) = params.window {
+            assert!(w >= 1, "sliding window must hold at least one reward");
+        }
+        if let Some(g) = params.discount {
+            assert!(
+                g > 0.0 && g < 1.0,
+                "discount factor must be in (0, 1), got {g}"
+            );
+        }
+        assert!(
+            !(params.window.is_some() && params.discount.is_some()),
+            "window and discount are mutually exclusive"
+        );
         CsUcb {
             params,
             arms: vec![vec![Arm::default(); n_servers]; ServiceClass::ALL.len()],
@@ -173,11 +247,40 @@ impl CsUcb {
             fallback_decisions: 0,
             shed_decisions: 0,
             feedbacks: 0,
+            arm_resets: 0,
         }
     }
 
     pub fn with_defaults(n_servers: usize) -> Self {
         Self::new(n_servers, CsUcbParams::default())
+    }
+
+    /// SW-UCB variant: sliding-window statistics over the last `window`
+    /// rewards per arm, plus arm reset on rejoin — the non-stationary
+    /// configuration the chaos scenarios run as `cs-ucb-sw`.
+    pub fn windowed(n_servers: usize, window: usize) -> Self {
+        Self::new(
+            n_servers,
+            CsUcbParams {
+                window: Some(window),
+                reset_on_rejoin: true,
+                ..CsUcbParams::default()
+            },
+        )
+    }
+
+    /// D-UCB variant: discounted statistics with factor `gamma`
+    /// (effective memory ~1/(1-gamma) pulls), plus arm reset on rejoin —
+    /// `cs-ucb-disc` in the chaos scenarios.
+    pub fn discounted(n_servers: usize, gamma: f64) -> Self {
+        Self::new(
+            n_servers,
+            CsUcbParams {
+                discount: Some(gamma),
+                reset_on_rejoin: true,
+                ..CsUcbParams::default()
+            },
+        )
     }
 
     /// Eq. 4 reward for a realized outcome: negative weighted energy plus
@@ -213,8 +316,17 @@ impl CsUcb {
             // Untried arms are optimistic: forced exploration.
             return f64::INFINITY;
         }
+        // Effective sample count for the exploration bonus: what the
+        // estimator actually remembers — window occupancy (SW-UCB),
+        // decayed weight (D-UCB), or raw pulls (stationary, the pre-PR6
+        // expression bit for bit).
+        let eff = match (self.params.window, self.params.discount) {
+            (Some(_), _) => arm.window.len() as f64,
+            (None, Some(_)) => arm.disc_weight,
+            (None, None) => arm.pulls as f64,
+        };
         let t = (self.t.max(2)) as f64;
-        let bonus = self.params.delta * (t.ln() / arm.pulls as f64).sqrt();
+        let bonus = self.params.delta * (t.ln() / eff).sqrt();
         arm.mean_reward + bonus + self.params.theta * penalty
     }
 
@@ -245,7 +357,11 @@ impl CsUcb {
 
 impl Scheduler for CsUcb {
     fn name(&self) -> &'static str {
-        if self.params.slo_aware {
+        if self.params.window.is_some() {
+            "cs-ucb-sw (PerLLM)"
+        } else if self.params.discount.is_some() {
+            "cs-ucb-disc (PerLLM)"
+        } else if self.params.slo_aware {
             "cs-ucb-slo (PerLLM)"
         } else {
             "cs-ucb (PerLLM)"
@@ -272,6 +388,17 @@ impl Scheduler for CsUcb {
         let mut best_margin: Option<(usize, f64)> = None;
         let mut best_bare: Option<(usize, f64)> = None;
         for j in view.scan() {
+            // Health gate: never *choose* a server the monitor says is
+            // dead. `observed_health` is the lagged probe signal, so a
+            // just-crashed server still reads 1.0 and can be picked (and
+            // paid for) until the lag elapses; without a monitor the
+            // field is pinned at 1.0 and this gate never fires —
+            // decisions on fault-free runs are exactly pre-PR6. The
+            // all-infeasible fallback below deliberately does not gate:
+            // any server is a legal fallback target.
+            if view.servers[j].observed_health <= 0.0 {
+                continue;
+            }
             let fy = self.fy(view, req, j);
             if fy < 0.0 {
                 continue;
@@ -353,7 +480,12 @@ impl Scheduler for CsUcb {
         if penalty < 0.0 {
             r += self.params.theta * penalty;
         }
-        self.arms[class][outcome.server].update(r);
+        let arm = &mut self.arms[class][outcome.server];
+        match (self.params.window, self.params.discount) {
+            (Some(w), _) => arm.update_windowed(r, w),
+            (None, Some(g)) => arm.update_discounted(r, g),
+            (None, None) => arm.update(r),
+        }
 
         // Empirical approximate regret (Eq. 5).
         let best = self.best_estimate(class);
@@ -361,6 +493,20 @@ impl Scheduler for CsUcb {
             let gap = self.params.alpha * self.params.beta * best - r;
             if gap > 0.0 {
                 self.cum_regret += gap;
+            }
+        }
+    }
+
+    fn fleet_event(&mut self, ev: &FleetEvent, _now: f64) {
+        if !self.params.reset_on_rejoin {
+            return;
+        }
+        if let FleetEvent::Up { server } | FleetEvent::Joined { server } = *ev {
+            if server < self.n_servers {
+                for row in &mut self.arms {
+                    row[server].reset();
+                }
+                self.arm_resets += 1;
             }
         }
     }
@@ -379,6 +525,7 @@ impl Scheduler for CsUcb {
             ("shed_decisions".into(), self.shed_decisions as f64),
             ("explored_arms".into(), explored as f64),
             ("decisions".into(), self.t as f64),
+            ("arm_resets".into(), self.arm_resets as f64),
         ]
     }
 }
@@ -426,6 +573,10 @@ impl Scheduler for CsUcbSlo {
 
     fn feedback(&mut self, outcome: &ServiceOutcome, view: &ClusterView) {
         self.0.feedback(outcome, view)
+    }
+
+    fn fleet_event(&mut self, ev: &FleetEvent, now: f64) {
+        self.0.fleet_event(ev, now)
     }
 
     fn diagnostics(&self) -> Vec<(String, f64)> {
@@ -707,5 +858,117 @@ mod tests {
         let names: Vec<_> = d.iter().map(|(n, _)| n.as_str()).collect();
         assert!(names.contains(&"cum_regret"));
         assert!(names.contains(&"regret_bound"));
+        assert!(names.contains(&"arm_resets"));
+    }
+
+    /// After a mid-run reward shift (server 0 turns pricey, server 1
+    /// turns cheap), the sliding-window and discounted estimators
+    /// migrate to the newly-good server within roughly one memory span,
+    /// while the stationary mean — dragged only 1/n per pull across ~100
+    /// pre-shift pulls — keeps riding the stale arm for hundreds of
+    /// decisions.
+    #[test]
+    fn nonstationary_variants_adapt_after_reward_shift() {
+        let view = test_view(vec![1.0, 1.0]);
+        let req = test_req(4.0);
+        let feed = |s: &mut dyn Scheduler, j: usize, energy: f64| {
+            let mut o = outcome(j, energy, 1.0, 4.0);
+            o.id = req.id;
+            s.feedback(&o, &view);
+        };
+        let run = |s: &mut dyn Scheduler| -> usize {
+            // Phase 1: both arms well-sampled; server 0 cheap (50 J),
+            // server 1 pricey (800 J).
+            for _ in 0..100 {
+                feed(s, 0, 50.0);
+                feed(s, 1, 800.0);
+            }
+            // Phase 2 (shifted world): server 0 now costs 900 J, server
+            // 1 costs 50 J. Burn in 100 decisions...
+            for _ in 0..100 {
+                let j = s.decide(&req, &view).server().expect("assigns");
+                feed(s, j, if j == 0 { 900.0 } else { 50.0 });
+            }
+            // ...then count picks of the newly-good server over 50 more.
+            let mut picks1 = 0;
+            for _ in 0..50 {
+                let j = s.decide(&req, &view).server().expect("assigns");
+                if j == 1 {
+                    picks1 += 1;
+                }
+                feed(s, j, if j == 0 { 900.0 } else { 50.0 });
+            }
+            picks1
+        };
+        let mut sw = CsUcb::windowed(2, 20);
+        let mut disc = CsUcb::discounted(2, 0.9);
+        let mut stationary = CsUcb::with_defaults(2);
+        let (sw, disc, stationary) = (run(&mut sw), run(&mut disc), run(&mut stationary));
+        assert!(sw >= 40, "sliding window picked new-best only {sw}/50");
+        assert!(disc >= 40, "discounted picked new-best only {disc}/50");
+        assert!(
+            stationary <= 10,
+            "stationary mean should still ride the stale arm, picked new-best {stationary}/50"
+        );
+    }
+
+    /// `fleet_event(Up/Joined)` with `reset_on_rejoin` wipes the
+    /// rejoining server's arms across every class (untried → optimistic
+    /// re-exploration) and leaves other servers' statistics intact;
+    /// without the flag (every pre-PR6 configuration) it is a no-op.
+    #[test]
+    fn rejoin_resets_arms_only_when_opted_in() {
+        let view = test_view(vec![1.0, 1.0]);
+        let req = test_req(4.0);
+        let mut s = CsUcb::windowed(2, 20);
+        for _ in 0..10 {
+            let j = s.decide(&req, &view).server().expect("assigns");
+            let mut o = outcome(j, 100.0, 1.0, 4.0);
+            o.id = req.id;
+            s.feedback(&o, &view);
+        }
+        let chat = ServiceClass::Chat.index();
+        assert!(s.arms[chat][0].pulls > 0);
+        s.fleet_event(&FleetEvent::Down { server: 0 }, 5.0);
+        assert!(s.arms[chat][0].pulls > 0, "down never resets");
+        s.fleet_event(&FleetEvent::Up { server: 0 }, 9.0);
+        assert!(s.arms.iter().all(|row| row[0].pulls == 0), "rejoin resets");
+        assert!(
+            s.arms.iter().any(|row| row[1].pulls > 0),
+            "other servers keep their statistics"
+        );
+        assert_eq!(s.arm_resets, 1);
+        // Reset arm is optimistic-untried again: explored immediately.
+        assert_eq!(s.decide(&req, &view), Action::assign(0));
+
+        let mut plain = CsUcb::with_defaults(2);
+        for _ in 0..10 {
+            let j = plain.decide(&req, &view).server().expect("assigns");
+            let mut o = outcome(j, 100.0, 1.0, 4.0);
+            o.id = req.id;
+            plain.feedback(&o, &view);
+        }
+        let pulls_before: Vec<u64> = plain.arms.iter().map(|row| row[0].pulls).collect();
+        plain.fleet_event(&FleetEvent::Joined { server: 0 }, 9.0);
+        let pulls_after: Vec<u64> = plain.arms.iter().map(|row| row[0].pulls).collect();
+        assert_eq!(pulls_before, pulls_after, "stationary default ignores fleet events");
+        assert_eq!(plain.arm_resets, 0);
+    }
+
+    /// The health gate: a server the (lagged) monitor reports dead is
+    /// never *chosen*, even if its predictions look feasible; at the
+    /// default `observed_health = 1.0` the gate never fires.
+    #[test]
+    fn observed_dead_server_is_not_chosen() {
+        let mut view = test_view(vec![1.0, 1.2]);
+        view.servers[0].observed_health = 0.0;
+        let req = test_req(4.0);
+        let mut s = CsUcb::with_defaults(2);
+        for _ in 0..10 {
+            assert_eq!(s.decide(&req, &view), Action::assign(1));
+        }
+        // Back to healthy: server 0 is optimistic-untried and wins.
+        view.servers[0].observed_health = 1.0;
+        assert_eq!(s.decide(&req, &view), Action::assign(0));
     }
 }

@@ -95,6 +95,13 @@ pub struct ServerView {
     pub solo_time_est: f64,
     /// Fraction of the server's slots + bounded queue currently occupied.
     pub occupancy: f64,
+    /// *Observed* health signal in [0, 1]: the server's service-rate
+    /// multiplier as seen through the lagged health-probe pipeline
+    /// (`sim::faults::HealthMonitor`), NOT ground truth — a just-crashed
+    /// server still reads 1.0 until the probe lag elapses, so schedulers
+    /// can route to it and pay for it. Pinned at 1.0 when no monitor is
+    /// installed (every pre-fault run).
+    pub observed_health: f64,
 }
 
 /// Cluster snapshot at decision time (the CMAB state space s of §3.2).
@@ -411,6 +418,27 @@ pub trait ViewSource {
     fn view_into(&self, req: &ServiceRequest, out: &mut ClusterView);
 }
 
+/// Fleet-membership and availability transitions, pushed to schedulers
+/// as they happen (the engine emits them from the fault layer; the
+/// legacy scripted-outage path emits them too). `Down`/`Up` are
+/// *ground-truth* transitions — a scheduler that wants the production
+/// experience should act on `observed_health` instead and use these only
+/// for bookkeeping that a real control plane would also see (e.g. a
+/// registry webhook on rejoin).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetEvent {
+    /// Server went down (outage or crash).
+    Down { server: usize },
+    /// Server recovered from an outage or crash.
+    Up { server: usize },
+    /// Server gracefully left the fleet (drains, admits nothing).
+    Left { server: usize },
+    /// Server rejoined the fleet. Non-stationary bandits typically reset
+    /// the server's arms here: post-restart behavior shares little with
+    /// pre-crash statistics.
+    Joined { server: usize },
+}
+
 /// Common interface for PerLLM and baselines.
 pub trait Scheduler: Send {
     fn name(&self) -> &'static str;
@@ -422,6 +450,11 @@ pub trait Scheduler: Send {
     /// Shed requests are delivered too ([`ServiceOutcome::was_shed`]);
     /// implementations must not index arms by `outcome.server` for those.
     fn feedback(&mut self, _outcome: &ServiceOutcome, _view: &ClusterView) {}
+
+    /// Observe a fleet transition ([`FleetEvent`]). Default: ignore —
+    /// stationary policies are oblivious to fleet dynamics, which keeps
+    /// every existing scheduler bit-identical on fault-free runs.
+    fn fleet_event(&mut self, _ev: &FleetEvent, _now: f64) {}
 
     /// Scheduler-specific diagnostics for reports (e.g. cumulative regret).
     fn diagnostics(&self) -> Vec<(String, f64)> {
@@ -452,6 +485,7 @@ mod tests {
                 n_waiting: 0,
                 solo_time_est: p,
                 occupancy: 0.0,
+                observed_health: 1.0,
             })
             .collect();
         ClusterView {

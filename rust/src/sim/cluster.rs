@@ -10,6 +10,7 @@
 //! same simulation substrate.
 
 use super::energy::{EnergyBreakdown, EnergyWeights};
+use super::faults::HealthMonitor;
 use super::net::{LinkSim, LinkSpec};
 use super::server::{paper_testbed, ServerKind, ServerSim, ServerSpec};
 use super::service_model::ServiceModel;
@@ -114,6 +115,17 @@ pub struct ClusterSim {
     pub weights: EnergyWeights,
     /// Per-server in-flight dispatch accounting.
     pub in_flight: Vec<InFlight>,
+    /// Fleet membership: a server that has gracefully left (fault-plan
+    /// `Leave`) finishes its in-service work but admits nothing new and
+    /// is never a scheduling candidate. Always `true` without a fault
+    /// plan.
+    pub accepting: Vec<bool>,
+    /// Lagged health observation (fault-plan `HealthConfig`). When
+    /// installed, [`Self::view_into_at`] prices servers with *observed*
+    /// health instead of ground-truth `rate_mult` and exports it as
+    /// `ServerView::observed_health`; when absent, views see ground
+    /// truth exactly as before and `observed_health` is pinned at 1.0.
+    pub health: Option<HealthMonitor>,
     /// Observation clock: the time of the last event the owner processed.
     /// `ViewSource::view_into` stamps snapshots with it, so the engine and
     /// the live router expose the same two-argument view-filling API.
@@ -142,6 +154,8 @@ impl ClusterSim {
         );
         ClusterSim {
             in_flight: vec![InFlight::default(); cfg.servers.len()],
+            accepting: vec![true; cfg.servers.len()],
+            health: None,
             servers: cfg.servers.iter().cloned().map(ServerSim::new).collect(),
             links: cfg.links.iter().cloned().map(LinkSim::new).collect(),
             weights: cfg.weights,
@@ -172,7 +186,7 @@ impl ClusterSim {
     /// this after every touch that can flip `would_drop()` so the
     /// candidate set handed to schedulers never goes stale.
     pub fn refresh_admissibility(&mut self, server: usize) {
-        let ok = !self.servers[server].would_drop();
+        let ok = self.accepting[server] && !self.servers[server].would_drop();
         if ok != self.admissible[server] {
             self.admissible[server] = ok;
             if ok {
@@ -230,9 +244,21 @@ impl ClusterSim {
                 .iter()
                 .zip(&self.links)
                 .zip(&self.in_flight)
-                .map(|((srv, link), fl)| {
+                .enumerate()
+                .map(|(i, ((srv, link), fl))| {
                     let tx = link.predict_tx_time(req.payload_bytes);
-                    let service = srv.predict(req, fl.n, fl.work_s);
+                    // Without a health monitor the view prices ground
+                    // truth (identity with every pre-fault run); with
+                    // one, predictions use the *lagged* observed rate —
+                    // a just-crashed server keeps quoting healthy
+                    // predictions until the probe pipeline catches up.
+                    let (service, observed_health) = match &self.health {
+                        None => (srv.predict(req, fl.n, fl.work_s), 1.0),
+                        Some(h) => {
+                            let o = h.observed(i);
+                            (srv.predict_with_rate(req, fl.n, fl.work_s, o), o)
+                        }
+                    };
                     // Bandwidth the upload needs to finish inside a nominal
                     // 1-second window (paper C3's B_i).
                     let bw_demand = req.payload_bytes as f64 * 8.0;
@@ -258,6 +284,7 @@ impl ClusterSim {
                         // external observer without router state sees.
                         occupancy: (srv.n_active() + srv.n_waiting()) as f64
                             / (srv.model.slot_capacity() + srv.model.queue_capacity()) as f64,
+                        observed_health,
                     }
                 }),
         );
@@ -463,5 +490,60 @@ mod tests {
         assert_eq!(sim.n_admissible(), 6);
         sim.view_into_at(&req(), t, &mut v);
         assert!(v.candidates.is_empty());
+    }
+
+    /// A server that gracefully left the fleet is not a candidate even
+    /// though its queue has room.
+    #[test]
+    fn left_server_disappears_from_candidates() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let mut sim = ClusterSim::new(&cfg);
+        sim.accepting[0] = false;
+        sim.refresh_admissibility(0);
+        assert_eq!(sim.n_admissible(), 5);
+        let mut v = ClusterView::default();
+        sim.view_into_at(&req(), 0.0, &mut v);
+        assert_eq!(v.candidates, vec![1, 2, 3, 4, 5]);
+        sim.accepting[0] = true;
+        sim.refresh_admissibility(0);
+        assert_eq!(sim.n_admissible(), 6);
+    }
+
+    /// With a health monitor installed, views price servers at the
+    /// *lagged* observed rate: a crashed server keeps quoting healthy
+    /// predictions until the probe pipeline catches up, then goes
+    /// (effectively) infinitely slow.
+    #[test]
+    fn monitored_view_prices_lagged_health() {
+        use crate::sim::faults::{HealthConfig, HealthMonitor};
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let mut sim = ClusterSim::new(&cfg);
+        sim.health = Some(HealthMonitor::new(
+            HealthConfig {
+                period_s: 1.0,
+                lag_s: 2.0,
+            },
+            6,
+        ));
+        // Ground truth: server 0 is down.
+        sim.servers[0].rate_mult = 0.0;
+        let v = sim.view(&req(), 0.0);
+        assert_eq!(v.servers[0].observed_health, 1.0, "lag hides the crash");
+        let healthy_pred = v.servers[0].predicted_time;
+        assert!(healthy_pred.is_finite());
+        // Drive the truth through the probe pipeline past the lag.
+        let truth = [0.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let h = sim.health.as_mut().expect("monitor installed");
+        h.probe(0.0, &truth);
+        h.probe(1.0, &truth);
+        h.probe(2.0, &truth);
+        let v2 = sim.view(&req(), 2.0);
+        assert_eq!(v2.servers[0].observed_health, 0.0);
+        assert!(
+            v2.servers[0].predicted_time > 1e6 * healthy_pred,
+            "observed-down server must price near-infinitely slow"
+        );
+        // Unmonitored sibling keeps observed_health pinned at 1.0.
+        assert_eq!(v2.servers[1].observed_health, 1.0);
     }
 }

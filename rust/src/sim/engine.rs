@@ -22,9 +22,10 @@ use std::time::Instant;
 
 use super::cluster::{ClusterConfig, ClusterSim, Outage};
 use super::energy::EnergyBreakdown;
+use super::faults::{CrashPolicy, FaultAction, FaultPlan, HealthMonitor};
 use super::ps::PsJob;
 use super::time::{EventQueue, SimTime};
-use crate::scheduler::{Action, ClusterView, Scheduler, ShedReason, ViewSource};
+use crate::scheduler::{Action, ClusterView, FleetEvent, Scheduler, ShedReason, ViewSource};
 use crate::util::rng::Rng;
 use crate::util::stats::{Percentiles, Running};
 use crate::workload::service::{ServiceOutcome, ServiceRequest};
@@ -46,6 +47,11 @@ enum Ev {
     FluctTick { link: usize },
     OutageStart { server: usize },
     OutageEnd { server: usize },
+    /// Replay one lowered fault-plan action (see `sim::faults`).
+    Fault { action: FaultAction },
+    /// Probe ground-truth health into the lagged monitor; re-arms itself
+    /// every `health_period` while one is configured.
+    HealthProbe,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -102,6 +108,81 @@ impl Attainment {
     }
 }
 
+/// Incident accounting for a faulted run (PR 6): what went down, what it
+/// cost in flight, and how fast the scheduler earned its success rate
+/// back after recovery.
+#[derive(Debug, Clone)]
+pub struct AvailabilityReport {
+    /// Per-server down transitions (each time a server's covering-window
+    /// stack goes from empty to covered counts once, however nested).
+    pub incidents: u64,
+    /// First instant any server went down (`inf` when only membership
+    /// churn happened).
+    pub incident_start_s: f64,
+    /// Instant the fleet last returned to fully up; `inf` when some
+    /// server never recovered inside the run.
+    pub incident_end_s: f64,
+    /// In-flight requests killed by hard crashes under
+    /// [`CrashPolicy::Fail`], including uploads that landed on a crashed
+    /// or departed server.
+    pub failed_in_flight: u64,
+    /// In-flight requests bounced back through the scheduler under
+    /// [`CrashPolicy::Requeue`].
+    pub requeued_in_flight: u64,
+    pub leaves: u64,
+    pub joins: u64,
+    /// SLO success attainment bucketed by completion time:
+    /// `[pre-incident, during, post-recovery]`.
+    pub attainment: [Attainment; 3],
+    /// Seconds after full recovery until the cumulative post-recovery
+    /// success rate (over at least 20 outcomes) reaches 90 % of the
+    /// pre-incident rate; `inf` when it never does, or when nothing
+    /// completed pre-incident to compare against.
+    pub time_to_recover_s: f64,
+    /// Admission-gate door sheds bucketed the same way (all zero without
+    /// a gate installed).
+    pub gate_sheds_by_phase: [u64; 3],
+}
+
+impl AvailabilityReport {
+    /// One-line incident summary for the example binaries.
+    pub fn availability_row(&self) -> String {
+        let pct = |a: &Attainment| {
+            if a.total == 0 {
+                format!("{:>5}", "—")
+            } else {
+                format!("{:4.1}%", a.rate() * 100.0)
+            }
+        };
+        let ttr = if self.time_to_recover_s.is_finite() {
+            format!("{:.1}s", self.time_to_recover_s)
+        } else {
+            "—".into()
+        };
+        let end = if self.incident_end_s.is_finite() {
+            format!("{:.1}s", self.incident_end_s)
+        } else {
+            "never".into()
+        };
+        format!(
+            "availability: incidents {} ({:.1}s → {end}) | attainment pre {} / during {} / post {} \
+             | ttr {ttr} | in-flight failed {} requeued {} | leave/join {}/{} | gate sheds {}/{}/{}",
+            self.incidents,
+            self.incident_start_s,
+            pct(&self.attainment[0]),
+            pct(&self.attainment[1]),
+            pct(&self.attainment[2]),
+            self.failed_in_flight,
+            self.requeued_in_flight,
+            self.leaves,
+            self.joins,
+            self.gate_sheds_by_phase[0],
+            self.gate_sheds_by_phase[1],
+            self.gate_sheds_by_phase[2],
+        )
+    }
+}
+
 /// Aggregate results of one simulation run (one cell of a paper table).
 pub struct RunReport {
     pub scheduler: &'static str,
@@ -145,6 +226,9 @@ pub struct RunReport {
     /// gate's diagnostics; a subset of `dropped_by_policy`. Zero when no
     /// gate is installed.
     pub gate_sheds: u64,
+    /// Incident accounting when the run saw fleet faults or membership
+    /// churn; `None` for fault-free runs.
+    pub availability: Option<AvailabilityReport>,
     /// Scheduler-specific diagnostics (e.g. CS-UCB regret).
     pub diagnostics: Vec<(String, f64)>,
     /// Wall-clock perf of the DES itself.
@@ -242,6 +326,31 @@ struct SchedCache {
 /// `last_arrival + HORIZON_SLACK_S` are recorded as failures.
 const HORIZON_SLACK_S: f64 = 300.0;
 
+/// Per-server fault bookkeeping: how many down windows and hard crashes
+/// currently cover the server, plus the composed degradation factor.
+/// Depth-counted so overlapping windows only clear when the *last* one
+/// ends (the nested-outage bug this PR fixes), and the factor snaps back
+/// to exactly 1.0 at depth zero so fault-free rates carry no float
+/// residue.
+#[derive(Debug, Clone, Copy)]
+struct ServerFault {
+    down: u32,
+    crash: u32,
+    degrade: u32,
+    degrade_factor: f64,
+}
+
+impl Default for ServerFault {
+    fn default() -> Self {
+        ServerFault {
+            down: 0,
+            crash: 0,
+            degrade: 0,
+            degrade_factor: 1.0,
+        }
+    }
+}
+
 pub struct Engine<'a> {
     cluster: ClusterSim,
     events: EventQueue<Ev>,
@@ -281,6 +390,28 @@ pub struct Engine<'a> {
     /// From `ClusterConfig::churn_guard`: skip the invalidate+push when a
     /// touch provably left the next completion unchanged.
     churn_guard: bool,
+    /// Per-server fault window stack (down/crash depth + degradation).
+    fault: Vec<ServerFault>,
+    /// Link-flap depth per link: while > 0 the fluctuation process keeps
+    /// drawing (stream-preserving) but its draws are not applied.
+    link_flap: Vec<u32>,
+    crash_policy: CrashPolicy,
+    /// Probe period when a health monitor is installed; drives the
+    /// self-rearming `Ev::HealthProbe` chain.
+    health_period: Option<f64>,
+    /// Scratch ground-truth snapshot reused across health probes.
+    health_snap: Vec<f64>,
+    // Incident accounting feeding `AvailabilityReport`.
+    incidents: u64,
+    down_servers: usize,
+    incident_first_at: Option<SimTime>,
+    incident_last_end: Option<SimTime>,
+    failed_in_flight: u64,
+    requeued_in_flight: u64,
+    leaves: u64,
+    joins: u64,
+    gate_sheds_at_incident: u64,
+    gate_sheds_at_recovery: Option<u64>,
 }
 
 impl<'a> Engine<'a> {
@@ -289,7 +420,24 @@ impl<'a> Engine<'a> {
         source: &'a mut dyn ArrivalSource,
         scheduler: &'a mut dyn Scheduler,
     ) -> Self {
-        let cluster = ClusterSim::new(cfg);
+        // The empty plan pushes no events and installs no monitor, so this
+        // path stays bit-identical to the pre-fault engine
+        // (tests/faults_identity.rs pins it).
+        Self::new_with_faults(cfg, source, scheduler, &FaultPlan::default())
+    }
+
+    /// Build an engine with a chaos layer: the plan's lowered timeline is
+    /// pushed as ordinary events *after* the legacy outage seeding (so
+    /// outage replays keep identical event sequence numbers), and the
+    /// health monitor, when configured, starts its probe chain one period
+    /// in.
+    pub fn new_with_faults(
+        cfg: &ClusterConfig,
+        source: &'a mut dyn ArrivalSource,
+        scheduler: &'a mut dyn Scheduler,
+        plan: &FaultPlan,
+    ) -> Self {
+        let mut cluster = ClusterSim::new(cfg);
         let mut events = EventQueue::new();
         for (li, link) in cluster.links.iter().enumerate() {
             if link.spec.fluctuation > 0.0 {
@@ -300,10 +448,20 @@ impl<'a> Engine<'a> {
             events.push_at(*start, Ev::OutageStart { server: *server });
             events.push_at(*end, Ev::OutageEnd { server: *server });
         }
+        let n_links = cluster.links.len();
+        for (at, action) in plan.materialize(cfg.servers.len(), n_links, cfg.seed) {
+            events.push_at(at, Ev::Fault { action });
+        }
+        let health_period = plan.health.map(|hc| {
+            cluster.health = Some(HealthMonitor::new(hc, cfg.servers.len()));
+            events.push_at(hc.period_s, Ev::HealthProbe);
+            hc.period_s
+        });
         let view = ClusterView::with_capacity(cfg.servers.len(), cfg.weights);
         // len_hint only sizes buffers (capped so a huge hint cannot force
         // a huge reservation); correctness never depends on it.
         let hint = source.len_hint().unwrap_or(0).min(1 << 20);
+        let n_servers = cfg.servers.len();
         let mut engine = Engine {
             cluster,
             events,
@@ -322,9 +480,24 @@ impl<'a> Engine<'a> {
             bad_actions: 0,
             view,
             reap_buf: Vec::new(),
-            link_sched: vec![SchedCache::default(); cfg.servers.len()],
-            server_sched: vec![SchedCache::default(); cfg.servers.len()],
+            link_sched: vec![SchedCache::default(); n_servers],
+            server_sched: vec![SchedCache::default(); n_servers],
             churn_guard: cfg.churn_guard,
+            fault: vec![ServerFault::default(); n_servers],
+            link_flap: vec![0; n_links],
+            crash_policy: plan.crash_policy,
+            health_period,
+            health_snap: Vec::with_capacity(n_servers),
+            incidents: 0,
+            down_servers: 0,
+            incident_first_at: None,
+            incident_last_end: None,
+            failed_in_flight: 0,
+            requeued_in_flight: 0,
+            leaves: 0,
+            joins: 0,
+            gate_sheds_at_incident: 0,
+            gate_sheds_at_recovery: None,
         };
         engine.prefetch_arrival();
         engine
@@ -474,6 +647,74 @@ impl<'a> Engine<'a> {
             // instead of hiding them behind the fallback.
             diagnostics.push(("engine_bad_actions".into(), self.bad_actions as f64));
         }
+        let availability = if self.incidents > 0 || self.leaves > 0 || self.joins > 0 {
+            let start = self.incident_first_at.unwrap_or(f64::INFINITY);
+            // "Recovered" means the fleet is fully up at run end; a
+            // mid-run recovery followed by a still-open incident leaves
+            // the during-phase open-ended.
+            let end_rec = if self.down_servers == 0 {
+                self.incident_last_end.unwrap_or(f64::INFINITY)
+            } else {
+                f64::INFINITY
+            };
+            let mut attainment = [Attainment::default(); 3];
+            for o in &self.outcomes {
+                let ph = if o.completed_at < start {
+                    0
+                } else if o.completed_at < end_rec {
+                    1
+                } else {
+                    2
+                };
+                attainment[ph].add(o.success());
+            }
+            // Time to recover: first instant the cumulative post-recovery
+            // success rate (>= 20 outcomes) reaches 90 % of the
+            // pre-incident rate. Outcomes are pushed in completion order,
+            // so this pass is chronological.
+            let pre_rate = attainment[0].rate();
+            let mut ttr = f64::INFINITY;
+            if end_rec.is_finite() && pre_rate.is_finite() {
+                let (mut met, mut total) = (0usize, 0usize);
+                for o in &self.outcomes {
+                    if o.completed_at < end_rec {
+                        continue;
+                    }
+                    total += 1;
+                    met += o.success() as usize;
+                    if total >= 20 && met as f64 / total as f64 >= 0.9 * pre_rate {
+                        ttr = o.completed_at - end_rec;
+                        break;
+                    }
+                }
+            }
+            let (g1, g2) = match self.incident_first_at {
+                // Membership churn only: every gate shed is "pre".
+                None => (gate_sheds, gate_sheds),
+                Some(_) => {
+                    let g1 = self.gate_sheds_at_incident.min(gate_sheds);
+                    let g2 = self
+                        .gate_sheds_at_recovery
+                        .unwrap_or(gate_sheds)
+                        .clamp(g1, gate_sheds);
+                    (g1, g2)
+                }
+            };
+            Some(AvailabilityReport {
+                incidents: self.incidents,
+                incident_start_s: start,
+                incident_end_s: end_rec,
+                failed_in_flight: self.failed_in_flight,
+                requeued_in_flight: self.requeued_in_flight,
+                leaves: self.leaves,
+                joins: self.joins,
+                attainment,
+                time_to_recover_s: ttr,
+                gate_sheds_by_phase: [g1, g2 - g1, gate_sheds - g2],
+            })
+        } else {
+            None
+        };
         RunReport {
             scheduler: self.scheduler.name(),
             // Zero successes have no per-success energy: infinity, not
@@ -499,6 +740,7 @@ impl<'a> Engine<'a> {
             slo_completion_violations: v_completion,
             slo_energy_violations: v_energy,
             gate_sheds,
+            availability,
             diagnostics,
             wall_s: wall,
             events_processed: self.events.processed(),
@@ -542,23 +784,7 @@ impl<'a> Engine<'a> {
                     first_token_at: f64::INFINITY,
                     tx_energy_j: 0.0,
                 });
-                match action {
-                    Action::Assign { server } => {
-                        let server = self.checked_server(idx, server);
-                        self.svc[idx].server = server;
-                        self.dispatch(now, idx, server);
-                    }
-                    Action::Defer { server, delay_s } => {
-                        let server = self.checked_server(idx, server);
-                        self.svc[idx].server = server;
-                        if delay_s.is_finite() && delay_s > 0.0 {
-                            self.events.push_in(delay_s, Ev::Dispatch { svc: idx, server });
-                        } else {
-                            self.dispatch(now, idx, server);
-                        }
-                    }
-                    Action::Shed { reason } => self.shed_at_decision(now, idx, reason),
-                }
+                self.act_on(now, idx, action);
             }
             Ev::Dispatch { svc, server } => {
                 self.dispatch(now, svc, server);
@@ -594,6 +820,21 @@ impl<'a> Engine<'a> {
             }
             Ev::ComputeArrive { svc, server } => {
                 self.cluster.land_in_flight(server, &self.svc[svc].req);
+                // Landing on a hard-crashed or departed server is an
+                // explicit casualty — the upload was already paid for and
+                // the router learns about it through feedback. Soft
+                // outages keep the legacy behavior (admit and stall).
+                if self.fault[server].crash > 0 || !self.cluster.accepting[server] {
+                    self.cluster.servers[server].advance_to(now);
+                    if self.fault[server].crash > 0 && self.crash_policy == CrashPolicy::Requeue {
+                        self.requeued_in_flight += 1;
+                        self.requeue(now, svc);
+                    } else {
+                        self.failed_in_flight += 1;
+                        self.fail(now, svc, server);
+                    }
+                    return;
+                }
                 let srv = &mut self.cluster.servers[server];
                 srv.advance_to(now);
                 if srv.would_drop() {
@@ -637,22 +878,231 @@ impl<'a> Engine<'a> {
                 let l = &mut self.cluster.links[link];
                 l.advance_to(now);
                 let a = l.spec.fluctuation;
-                l.mult = self.rng.uniform(1.0 - a, 1.0 + a);
+                // Always consume the draw so a flap never desynchronizes
+                // the fluctuation stream; only apply it when no flap
+                // window pins the multiplier.
+                let m = self.rng.uniform(1.0 - a, 1.0 + a);
+                if self.link_flap[link] == 0 {
+                    l.mult = m;
+                }
                 let period = l.spec.fluct_period;
                 self.reschedule_link(link);
                 self.events.push_in(period, Ev::FluctTick { link });
             }
-            Ev::OutageStart { server } => {
+            Ev::OutageStart { server } => self.fault_down(now, server, false),
+            Ev::OutageEnd { server } => self.fault_up(now, server, false),
+            Ev::Fault { action } => self.apply_fault(now, action),
+            Ev::HealthProbe => self.health_probe(now),
+        }
+    }
+
+    /// Execute a scheduler [`Action`] for request `idx` (shared by the
+    /// arrival path and crash requeues — pure code motion from the
+    /// `Ev::Arrival` arm).
+    fn act_on(&mut self, now: SimTime, idx: usize, action: Action) {
+        match action {
+            Action::Assign { server } => {
+                let server = self.checked_server(idx, server);
+                self.svc[idx].server = server;
+                self.dispatch(now, idx, server);
+            }
+            Action::Defer { server, delay_s } => {
+                let server = self.checked_server(idx, server);
+                self.svc[idx].server = server;
+                if delay_s.is_finite() && delay_s > 0.0 {
+                    self.events.push_in(delay_s, Ev::Dispatch { svc: idx, server });
+                } else {
+                    self.dispatch(now, idx, server);
+                }
+            }
+            Action::Shed { reason } => self.shed_at_decision(now, idx, reason),
+        }
+    }
+
+    /// Replay one lowered fault-plan action on the shared event clock.
+    fn apply_fault(&mut self, now: SimTime, action: FaultAction) {
+        match action {
+            FaultAction::Down { server, crash } => self.fault_down(now, server, crash),
+            FaultAction::Up { server, crash } => self.fault_up(now, server, crash),
+            FaultAction::DegradeStart { server, factor } => {
                 self.cluster.servers[server].advance_to(now);
-                self.cluster.servers[server].rate_mult = 0.0;
+                let f = &mut self.fault[server];
+                f.degrade += 1;
+                f.degrade_factor *= factor;
+                self.apply_rate(server);
                 self.reschedule_server(server);
             }
-            Ev::OutageEnd { server } => {
+            FaultAction::DegradeEnd { server, factor } => {
                 self.cluster.servers[server].advance_to(now);
-                self.cluster.servers[server].rate_mult = 1.0;
+                let f = &mut self.fault[server];
+                f.degrade -= 1;
+                if f.degrade == 0 {
+                    // Snap back to exactly 1.0: dividing the factor out
+                    // would leave float residue on the healthy rate.
+                    f.degrade_factor = 1.0;
+                } else {
+                    f.degrade_factor /= factor;
+                }
+                self.apply_rate(server);
                 self.reschedule_server(server);
+            }
+            FaultAction::FlapStart { link, factor } => {
+                self.link_flap[link] += 1;
+                let l = &mut self.cluster.links[link];
+                l.advance_to(now);
+                l.mult = factor;
+                self.reschedule_link(link);
+            }
+            FaultAction::FlapEnd { link } => {
+                self.link_flap[link] -= 1;
+                if self.link_flap[link] == 0 {
+                    let l = &mut self.cluster.links[link];
+                    l.advance_to(now);
+                    l.mult = 1.0;
+                    self.reschedule_link(link);
+                }
+            }
+            FaultAction::Leave { server } => {
+                self.cluster.accepting[server] = false;
+                self.cluster.refresh_admissibility(server);
+                self.leaves += 1;
+                self.scheduler.fleet_event(&FleetEvent::Left { server }, now);
+            }
+            FaultAction::Join { server } => {
+                self.cluster.accepting[server] = true;
+                self.cluster.refresh_admissibility(server);
+                self.joins += 1;
+                self.scheduler.fleet_event(&FleetEvent::Joined { server }, now);
             }
         }
+    }
+
+    /// Effective service rate from the fault stack: a covering down
+    /// window wins, otherwise the composed degradation (exactly 1.0 when
+    /// nothing covers the server).
+    fn apply_rate(&mut self, server: usize) {
+        let f = self.fault[server];
+        self.cluster.servers[server].rate_mult = if f.down > 0 { 0.0 } else { f.degrade_factor };
+    }
+
+    /// One more down window covers `server`. Shared by the legacy outage
+    /// events and the fault layer: same advance/set/reschedule order as
+    /// the pre-PR6 `OutageStart` arm, so single-window replays stay
+    /// bit-identical.
+    fn fault_down(&mut self, now: SimTime, server: usize, crash: bool) {
+        self.cluster.servers[server].advance_to(now);
+        self.fault[server].down += 1;
+        if crash {
+            self.fault[server].crash += 1;
+        }
+        self.apply_rate(server);
+        self.reschedule_server(server);
+        if crash {
+            self.crash_in_flight(now, server);
+        }
+        if self.fault[server].down == 1 {
+            self.incidents += 1;
+            if self.down_servers == 0 && self.incident_first_at.is_none() {
+                self.incident_first_at = Some(now);
+                self.gate_sheds_at_incident = self.current_gate_sheds();
+            }
+            self.down_servers += 1;
+            self.scheduler.fleet_event(&FleetEvent::Down { server }, now);
+        }
+    }
+
+    /// One covering window ends. Only when the stack empties does the
+    /// rate return to the composed healthy value — the nested-outage fix:
+    /// the old `OutageEnd` arm blindly restored `rate_mult = 1.0`, so an
+    /// inner window's end revived a server still covered by an outer one.
+    fn fault_up(&mut self, now: SimTime, server: usize, crash: bool) {
+        self.cluster.servers[server].advance_to(now);
+        let f = &mut self.fault[server];
+        debug_assert!(f.down > 0, "Up without covering Down on server {server}");
+        f.down = f.down.saturating_sub(1);
+        if crash {
+            f.crash = f.crash.saturating_sub(1);
+        }
+        self.apply_rate(server);
+        self.reschedule_server(server);
+        if self.fault[server].down == 0 {
+            self.down_servers = self.down_servers.saturating_sub(1);
+            if self.down_servers == 0 {
+                self.incident_last_end = Some(now);
+                self.gate_sheds_at_recovery = Some(self.current_gate_sheds());
+            }
+            self.scheduler.fleet_event(&FleetEvent::Up { server }, now);
+        }
+    }
+
+    /// Hard-crash cleanup: every request computing on the server is a
+    /// casualty (failed or requeued per [`CrashPolicy`]) and the server
+    /// restarts cold — its service-model state is rebuilt, so queue
+    /// contents and batch history are lost while cumulative accounting
+    /// (tokens served, energy) survives. The linear scan over request
+    /// state is fine even on million-request runs: crashes are
+    /// O(incidents), not O(events).
+    fn crash_in_flight(&mut self, now: SimTime, server: usize) {
+        let victims: Vec<usize> = (0..self.svc.len())
+            .filter(|&i| self.svc[i].phase == Phase::Computing && self.svc[i].server == server)
+            .collect();
+        self.cluster.servers[server].crash_reset(now);
+        self.reschedule_server(server);
+        self.cluster.refresh_admissibility(server);
+        for i in victims {
+            match self.crash_policy {
+                CrashPolicy::Fail => {
+                    self.failed_in_flight += 1;
+                    self.fail(now, i, server);
+                }
+                CrashPolicy::Requeue => {
+                    self.requeued_in_flight += 1;
+                    self.requeue(now, i);
+                }
+            }
+        }
+    }
+
+    /// Bounce a crash casualty back through the scheduler: the request
+    /// keeps its identity and arrival clock (its SLO keeps ticking) and
+    /// pays a fresh upload to wherever it lands next.
+    fn requeue(&mut self, now: SimTime, i: usize) {
+        self.svc[i].phase = Phase::Pending;
+        self.svc[i].server = usize::MAX;
+        self.svc[i].first_token_at = f64::INFINITY;
+        self.cluster.advance_all(now);
+        ViewSource::view_into(&self.cluster, &self.svc[i].req, &mut self.view);
+        let action = self.scheduler.decide(&self.svc[i].req, &self.view);
+        self.act_on(now, i, action);
+    }
+
+    /// Snapshot ground truth into the lagged monitor and re-arm. The
+    /// chain only exists when a monitor is configured, and the run loop's
+    /// exit condition ignores it, so it never extends a run past its last
+    /// real work.
+    fn health_probe(&mut self, now: SimTime) {
+        let Some(period) = self.health_period else {
+            return;
+        };
+        self.health_snap.clear();
+        for (i, srv) in self.cluster.servers.iter().enumerate() {
+            self.health_snap
+                .push(if self.cluster.accepting[i] { srv.rate_mult } else { 0.0 });
+        }
+        if let Some(h) = self.cluster.health.as_mut() {
+            h.probe(now, &self.health_snap);
+        }
+        self.events.push_in(period, Ev::HealthProbe);
+    }
+
+    /// Cumulative admission-gate door sheds right now (diagnostics
+    /// scrape; only called at incident boundaries).
+    fn current_gate_sheds(&self) -> u64 {
+        self.scheduler
+            .diagnostics()
+            .iter()
+            .find_map(|(k, v)| (k == "gate_sheds").then_some(*v as u64))
+            .unwrap_or(0)
     }
 
     /// Validate a scheduler-chosen server index. An out-of-range target is
@@ -872,6 +1322,28 @@ pub fn simulate_stream(
     scheduler: &mut dyn Scheduler,
 ) -> RunReport {
     Engine::new(cfg, source, scheduler).run()
+}
+
+/// [`simulate`] with a chaos layer: replay `plan` on top of the config.
+pub fn simulate_faulted(
+    cfg: &ClusterConfig,
+    plan: &FaultPlan,
+    trace: &[ServiceRequest],
+    scheduler: &mut dyn Scheduler,
+) -> RunReport {
+    let mut source = TraceSource::new(trace);
+    Engine::new_with_faults(cfg, &mut source, scheduler, plan).run()
+}
+
+/// [`simulate_stream`] with a chaos layer — the entry point the chaos
+/// scenarios and `paper_scale_sim --faults` use.
+pub fn simulate_stream_faulted(
+    cfg: &ClusterConfig,
+    plan: &FaultPlan,
+    source: &mut dyn ArrivalSource,
+    scheduler: &mut dyn Scheduler,
+) -> RunReport {
+    Engine::new_with_faults(cfg, source, scheduler, plan).run()
 }
 
 #[cfg(test)]
@@ -1409,5 +1881,163 @@ mod tests {
         assert!((r_trace.mean_processing_s - r_stream.mean_processing_s).abs() < 1e-12);
         assert!((r_trace.energy.total_j() - r_stream.energy.total_j()).abs() < 1e-9);
         assert_eq!(r_trace.events_processed, r_stream.events_processed);
+    }
+
+    fn long_job(id: u64, arrival: f64, output: u32) -> ServiceRequest {
+        ServiceRequest {
+            id,
+            class: crate::workload::service::ServiceClass::Chat,
+            arrival,
+            prompt_tokens: 100,
+            output_tokens: output,
+            slo: crate::workload::service::SloSpec::completion_only(1000.0),
+            payload_bytes: 100_000,
+        }
+    }
+
+    /// Regression (PR 6 bugfix): overlapping outage windows used to end
+    /// early — `OutageEnd` blindly restored `rate_mult = 1.0`, so an
+    /// inner window's end revived a server still covered by an outer one.
+    /// With depth tracking the server stays down until every covering
+    /// window has ended.
+    #[test]
+    fn nested_outage_windows_keep_server_down_until_all_end() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable).with_outages(vec![
+            Outage {
+                server: 0,
+                start: 0.0,
+                end: 20.0,
+            },
+            Outage {
+                server: 0,
+                start: 5.0,
+                end: 6.0, // nested inside the first window
+            },
+        ]);
+        let trace = vec![long_job(0, 0.0, 40)];
+        let rep = simulate(&cfg, &trace, &mut Fixed(0));
+        assert_eq!(rep.unfinished, 0, "server must come back at 20 s");
+        assert!(
+            rep.outcomes[0].completed_at >= 20.0,
+            "inner window's end revived the server early: completed at {}",
+            rep.outcomes[0].completed_at
+        );
+        let av = rep.availability.expect("outages must produce a report");
+        assert_eq!(av.incidents, 1, "nested windows are one incident");
+        assert_eq!(av.incident_end_s, 20.0);
+    }
+
+    /// An outage starting at t = 0 is in force before the first arrival
+    /// (fault events are seeded ahead of the arrival prefetch, so
+    /// same-instant ordering favors the outage).
+    #[test]
+    fn outage_at_time_zero_applies_before_first_arrival() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable).with_outages(vec![
+            Outage {
+                server: 0,
+                start: 0.0,
+                end: 2.0,
+            },
+        ]);
+        let trace = vec![long_job(0, 0.0, 40)];
+        let rep = simulate(&cfg, &trace, &mut Fixed(0));
+        assert_eq!(rep.unfinished, 0);
+        assert!(
+            rep.outcomes[0].completed_at >= 2.0,
+            "request completed during the outage: {}",
+            rep.outcomes[0].completed_at
+        );
+    }
+
+    /// A hard crash kills the work computing on the server: failed
+    /// outcomes with bandit feedback for each, counted as drops and as
+    /// `failed_in_flight`, and the incident lands in the availability
+    /// report.
+    #[test]
+    fn crash_fails_in_flight_with_feedback() {
+        use crate::sim::faults::{FaultKind, FaultPlan};
+        #[derive(Default)]
+        struct CountFails {
+            fails: usize,
+        }
+        impl Scheduler for CountFails {
+            fn name(&self) -> &'static str {
+                "count-fails"
+            }
+            fn decide(&mut self, _r: &ServiceRequest, _v: &ClusterView) -> Action {
+                Action::assign(0)
+            }
+            fn feedback(&mut self, o: &ServiceOutcome, _v: &ClusterView) {
+                if !o.processing_time.is_finite() {
+                    self.fails += 1;
+                }
+            }
+        }
+        // Five ~8s-solo jobs at t=0 are all computing on edge 0 at t=5.
+        let trace: Vec<ServiceRequest> = (0..5).map(|i| long_job(i, 0.0, 400)).collect();
+        let plan = FaultPlan::default().with_event(
+            5.0,
+            FaultKind::Crash {
+                server: 0,
+                recover: Some(50.0),
+            },
+        );
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let mut s = CountFails::default();
+        let rep = simulate_faulted(&cfg, &plan, &trace, &mut s);
+        assert_eq!(rep.dropped, 5, "all in-flight work dies with the server");
+        assert_eq!(s.fails, 5, "feedback delivered per casualty");
+        let av = rep.availability.expect("crash must produce a report");
+        assert_eq!(av.failed_in_flight, 5);
+        assert_eq!(av.incidents, 1);
+        assert_eq!(av.incident_start_s, 5.0);
+    }
+
+    /// Under `CrashPolicy::Requeue` crash casualties bounce back through
+    /// the scheduler instead of dying: a second decision places them on
+    /// the cloud and they still complete.
+    #[test]
+    fn crash_requeue_bounces_work_through_the_scheduler() {
+        use crate::sim::faults::{CrashPolicy, FaultKind, FaultPlan};
+        /// Edge 0 for the first decision on each id, cloud afterwards.
+        #[derive(Default)]
+        struct EdgeThenCloud {
+            seen: std::collections::HashSet<u64>,
+        }
+        impl Scheduler for EdgeThenCloud {
+            fn name(&self) -> &'static str {
+                "edge-then-cloud"
+            }
+            fn decide(&mut self, r: &ServiceRequest, _v: &ClusterView) -> Action {
+                if self.seen.insert(r.id) {
+                    Action::assign(0)
+                } else {
+                    Action::assign(5)
+                }
+            }
+        }
+        let trace: Vec<ServiceRequest> = (0..3).map(|i| long_job(i, 0.0, 400)).collect();
+        let plan = FaultPlan::default()
+            .with_event(
+                5.0,
+                FaultKind::Crash {
+                    server: 0,
+                    recover: None,
+                },
+            )
+            .with_crash_policy(CrashPolicy::Requeue);
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let mut s = EdgeThenCloud::default();
+        let rep = simulate_faulted(&cfg, &plan, &trace, &mut s);
+        assert_eq!(rep.dropped, 0, "requeued work must not be dropped");
+        assert_eq!(rep.unfinished, 0);
+        let av = rep.availability.expect("crash must produce a report");
+        assert_eq!(av.requeued_in_flight, 3);
+        assert_eq!(av.failed_in_flight, 0);
+        assert!(av.incident_end_s.is_infinite(), "server 0 never recovers");
+        for o in &rep.outcomes {
+            assert_eq!(o.server, 5, "casualties must finish on the cloud");
+            assert!(o.processing_time.is_finite());
+        }
     }
 }

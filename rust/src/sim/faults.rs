@@ -1,0 +1,743 @@
+//! Fault injection and lagged health observation: the chaos layer that
+//! turns the static testbed into a dynamic fleet (ROADMAP item 4).
+//!
+//! A [`FaultPlan`] is a declarative description of everything that goes
+//! wrong during a run: scripted [`FaultEvent`]s (crash at t = 120 s,
+//! degrade to 40 % for a minute, flap a link, drain a server out of the
+//! fleet) plus an optional generative MTTF/MTTR process that draws
+//! per-server failure windows from a salted side-stream RNG. The engine
+//! lowers the plan to a timeline of [`FaultAction`]s at construction time
+//! ([`FaultPlan::materialize`]) and replays them as ordinary DES events,
+//! so fault handling shares the clock, FIFO ordering, and determinism
+//! guarantees of every other event — and never consumes a draw from the
+//! engine's own RNG stream.
+//!
+//! The [`HealthMonitor`] sits between ground truth and the scheduler:
+//! periodic probes snapshot each server's true service rate, but the
+//! snapshot only becomes the *observed* health after a configurable lag.
+//! `ServerView::observed_health` (and, when a monitor is installed, the
+//! view's service-time predictions) are driven by the lagged signal, so a
+//! scheduler can route to a just-crashed server and pay for it — exactly
+//! the probe-staleness window a production registry/health/balancer stack
+//! exhibits.
+//!
+//! Identity discipline: an empty plan materializes to nothing and installs
+//! no monitor, leaving the engine bit-identical to the pre-fault code
+//! path; [`FaultPlan::from_outages`] lowers the legacy scripted
+//! `ClusterConfig::outages` list to the same per-outage adjacent
+//! start/end push order the dedicated outage events used, so event
+//! sequence numbers — and therefore every outcome bit — match
+//! (`tests/faults_identity.rs` pins both).
+
+use std::collections::VecDeque;
+
+use super::cluster::Outage;
+use super::time::SimTime;
+use crate::util::rng::Rng;
+
+/// Salt folded into the generative-fault RNG seed so fault schedules are
+/// a side stream: changing the plan never perturbs arrival, fluctuation,
+/// or SLO draws, and vice versa (same pattern as the workload generator's
+/// `SLO_STREAM_SALT`).
+pub const FAULT_STREAM_SALT: u64 = 0xFA_017_5EED;
+
+/// What happens to requests already computing on a server when it
+/// crashes (soft outages never kill work; only `Crash` and generative
+/// `kill: true` windows do).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CrashPolicy {
+    /// Fail them on the spot: counted as dropped, infinite processing
+    /// time, recorded under `failed_in_flight` incident accounting.
+    #[default]
+    Fail,
+    /// Bounce them back through the scheduler as if they had just
+    /// arrived (upload is not repeated; the decision is). Recorded under
+    /// `requeued_in_flight`.
+    Requeue,
+}
+
+/// One scripted fault. All times are absolute simulation seconds —
+/// absolute (not durations) so lowering involves no float arithmetic and
+/// legacy outage replays stay bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Hard crash: service rate drops to zero, in-flight computing
+    /// requests are failed or requeued per [`CrashPolicy`], and the
+    /// server restarts cold (service-model state rebuilt) at `recover`.
+    /// `recover: None` means the server never comes back.
+    Crash {
+        server: usize,
+        recover: Option<SimTime>,
+    },
+    /// Partial degradation: service rate multiplied by `rate_factor`
+    /// (e.g. 0.4 = thermal throttling to 40 %) until `until`. Nested
+    /// degradations compose multiplicatively.
+    Degrade {
+        server: usize,
+        rate_factor: f64,
+        until: SimTime,
+    },
+    /// Pin one uplink's bandwidth multiplier to `rate_factor` until
+    /// `until`, overriding (but not desynchronizing) the fluctuation
+    /// process.
+    LinkFlap {
+        link: usize,
+        rate_factor: f64,
+        until: SimTime,
+    },
+    /// Graceful drain: the server stops accepting new work but finishes
+    /// what it has (fleet membership change, not a failure).
+    Leave { server: usize },
+    /// Rejoin the fleet and accept work again. Schedulers see a
+    /// [`crate::scheduler::FleetEvent::Joined`] and may reset stale arm
+    /// statistics.
+    Join { server: usize },
+    /// Legacy soft outage: rate to zero until `until`, in-flight work
+    /// stalls rather than dying — exactly what
+    /// `ClusterConfig::outages` always did.
+    Outage { server: usize, until: SimTime },
+}
+
+/// A scripted fault at an absolute time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: SimTime,
+    pub kind: FaultKind,
+}
+
+/// Generative failure process: independent alternating-renewal up/down
+/// cycles per server with exponential time-to-failure (mean `mttf_s`)
+/// and time-to-repair (mean `mttr_s`), drawn from a per-server salted
+/// side-stream RNG. Windows never overlap on one server by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerativeFaults {
+    pub mttf_s: f64,
+    pub mttr_s: f64,
+    /// Stop generating failures past this horizon (repairs may land
+    /// after it so no window is left open).
+    pub horizon_s: f64,
+    /// Servers subject to the process; empty = every server.
+    pub targets: Vec<usize>,
+    /// `true` → windows are hard crashes (in-flight killed per policy);
+    /// `false` → soft outages.
+    pub kill: bool,
+}
+
+/// Health-probe configuration: probe every `period_s`, publish each
+/// probe's snapshot to the observed view `lag_s` later. Publication
+/// happens on probe ticks, so the effective lag is quantized up to the
+/// next probe boundary (lag 5.0 with period 1.0 → observed health is
+/// 5–6 s stale).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthConfig {
+    pub period_s: f64,
+    pub lag_s: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            period_s: 1.0,
+            lag_s: 5.0,
+        }
+    }
+}
+
+/// The full chaos description for one run. `FaultPlan::default()` is the
+/// empty plan: no scripted events, no generative process, no health
+/// monitor — and the engine is bit-identical to a plan-less run.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub scripted: Vec<FaultEvent>,
+    pub generative: Option<GenerativeFaults>,
+    /// Install a lagged health monitor; `None` keeps views on ground
+    /// truth (`observed_health` pinned at 1.0).
+    pub health: Option<HealthConfig>,
+    pub crash_policy: CrashPolicy,
+}
+
+/// Lowered, engine-facing fault action. Scripted events and generative
+/// windows both reduce to this vocabulary; the engine replays them as
+/// `Ev::Fault` events.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// Server goes down (`crash` distinguishes hard crashes from soft
+    /// outages). Nested windows stack: a server is up again only when
+    /// every covering window has ended.
+    Down { server: usize, crash: bool },
+    Up { server: usize, crash: bool },
+    DegradeStart { server: usize, factor: f64 },
+    DegradeEnd { server: usize, factor: f64 },
+    FlapStart { link: usize, factor: f64 },
+    FlapEnd { link: usize },
+    Leave { server: usize },
+    Join { server: usize },
+}
+
+impl FaultPlan {
+    /// True when the plan changes nothing about a run.
+    pub fn is_empty(&self) -> bool {
+        self.scripted.is_empty() && self.generative.is_none() && self.health.is_none()
+    }
+
+    /// Lower the legacy scripted outage list into a plan that replays
+    /// through the fault layer bit-identically (same adjacent
+    /// start/end push order per outage, same absolute times).
+    pub fn from_outages(outages: &[Outage]) -> Self {
+        FaultPlan {
+            scripted: outages
+                .iter()
+                .map(|o| FaultEvent {
+                    at: o.start,
+                    kind: FaultKind::Outage {
+                        server: o.server,
+                        until: o.end,
+                    },
+                })
+                .collect(),
+            ..FaultPlan::default()
+        }
+    }
+
+    pub fn with_event(mut self, at: SimTime, kind: FaultKind) -> Self {
+        self.scripted.push(FaultEvent { at, kind });
+        self
+    }
+
+    pub fn with_generative(mut self, g: GenerativeFaults) -> Self {
+        self.generative = Some(g);
+        self
+    }
+
+    pub fn with_health(mut self, h: HealthConfig) -> Self {
+        self.health = Some(h);
+        self
+    }
+
+    pub fn with_crash_policy(mut self, p: CrashPolicy) -> Self {
+        self.crash_policy = p;
+        self
+    }
+
+    /// Lower the plan to a `(time, action)` timeline. The list is NOT
+    /// sorted: scripted events emit their start/end action pairs
+    /// adjacently in scripted order (matching the legacy outage push
+    /// order so replays keep identical event sequence numbers — the
+    /// calendar queue orders by `(time, seq)` and handles out-of-order
+    /// pushes), with generative windows appended after. Panics on
+    /// out-of-range indices or nonsensical parameters: a fault plan is
+    /// experiment configuration, and a typo should fail loudly at
+    /// construction, not corrupt a long run.
+    pub fn materialize(
+        &self,
+        n_servers: usize,
+        n_links: usize,
+        seed: u64,
+    ) -> Vec<(SimTime, FaultAction)> {
+        let mut out = Vec::new();
+        for ev in &self.scripted {
+            assert!(ev.at >= 0.0, "fault time must be nonnegative");
+            match ev.kind {
+                FaultKind::Crash { server, recover } => {
+                    assert!(server < n_servers, "crash target {server} out of range");
+                    out.push((ev.at, FaultAction::Down { server, crash: true }));
+                    if let Some(r) = recover {
+                        assert!(r >= ev.at, "crash recovery precedes the crash");
+                        out.push((r, FaultAction::Up { server, crash: true }));
+                    }
+                }
+                FaultKind::Degrade {
+                    server,
+                    rate_factor,
+                    until,
+                } => {
+                    assert!(server < n_servers, "degrade target {server} out of range");
+                    assert!(
+                        rate_factor > 0.0 && rate_factor.is_finite(),
+                        "degrade factor must be positive and finite (use Crash for zero-rate)"
+                    );
+                    assert!(until >= ev.at, "degrade ends before it starts");
+                    out.push((
+                        ev.at,
+                        FaultAction::DegradeStart {
+                            server,
+                            factor: rate_factor,
+                        },
+                    ));
+                    out.push((
+                        until,
+                        FaultAction::DegradeEnd {
+                            server,
+                            factor: rate_factor,
+                        },
+                    ));
+                }
+                FaultKind::LinkFlap {
+                    link,
+                    rate_factor,
+                    until,
+                } => {
+                    assert!(link < n_links, "flap target link {link} out of range");
+                    assert!(
+                        rate_factor > 0.0 && rate_factor.is_finite(),
+                        "flap factor must be positive and finite"
+                    );
+                    assert!(until >= ev.at, "flap ends before it starts");
+                    out.push((
+                        ev.at,
+                        FaultAction::FlapStart {
+                            link,
+                            factor: rate_factor,
+                        },
+                    ));
+                    out.push((until, FaultAction::FlapEnd { link }));
+                }
+                FaultKind::Leave { server } => {
+                    assert!(server < n_servers, "leave target {server} out of range");
+                    out.push((ev.at, FaultAction::Leave { server }));
+                }
+                FaultKind::Join { server } => {
+                    assert!(server < n_servers, "join target {server} out of range");
+                    out.push((ev.at, FaultAction::Join { server }));
+                }
+                FaultKind::Outage { server, until } => {
+                    assert!(server < n_servers, "outage target {server} out of range");
+                    assert!(until >= ev.at, "outage ends before it starts");
+                    out.push((
+                        ev.at,
+                        FaultAction::Down {
+                            server,
+                            crash: false,
+                        },
+                    ));
+                    out.push((
+                        until,
+                        FaultAction::Up {
+                            server,
+                            crash: false,
+                        },
+                    ));
+                }
+            }
+        }
+        if let Some(g) = &self.generative {
+            assert!(g.mttf_s > 0.0 && g.mttr_s > 0.0, "MTTF/MTTR must be positive");
+            assert!(g.horizon_s >= 0.0, "generative horizon must be nonnegative");
+            let all: Vec<usize>;
+            let targets: &[usize] = if g.targets.is_empty() {
+                all = (0..n_servers).collect();
+                &all
+            } else {
+                &g.targets
+            };
+            for &s in targets {
+                assert!(s < n_servers, "generative target {s} out of range");
+                // One independent stream per (seed, server): schedules
+                // are reproducible and adding a server never reshuffles
+                // another server's windows.
+                let mut rng = Rng::new(
+                    seed ^ FAULT_STREAM_SALT
+                        ^ (s as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
+                let mut t = rng.exp(1.0 / g.mttf_s);
+                while t < g.horizon_s {
+                    let d = rng.exp(1.0 / g.mttr_s);
+                    out.push((
+                        t,
+                        FaultAction::Down {
+                            server: s,
+                            crash: g.kill,
+                        },
+                    ));
+                    out.push((
+                        t + d,
+                        FaultAction::Up {
+                            server: s,
+                            crash: g.kill,
+                        },
+                    ));
+                    // Repair completes before the next failure draw:
+                    // windows on one server can never overlap.
+                    t += d + rng.exp(1.0 / g.mttf_s);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Lagged health observation: the scheduler-facing view of fleet health,
+/// deliberately out of date. The engine probes ground truth every
+/// `period_s`; each snapshot becomes the published observation once
+/// `lag_s` has elapsed (checked at probe ticks, see [`HealthConfig`]).
+/// Until a crash propagates through the pipeline, schedulers keep seeing
+/// — and routing to — a healthy server.
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    /// Published (lagged) per-server health: the server's effective
+    /// service-rate multiplier as of `lag_s` ago. 1.0 = healthy,
+    /// 0.0 = down/left.
+    observed: Vec<f64>,
+    /// Probes waiting out their lag, oldest first.
+    pending: VecDeque<(SimTime, Vec<f64>)>,
+    /// Recycled snapshot buffers (probes run every period for the whole
+    /// run; no steady-state allocation).
+    spare: Vec<Vec<f64>>,
+}
+
+impl HealthMonitor {
+    pub fn new(cfg: HealthConfig, n_servers: usize) -> Self {
+        assert!(cfg.period_s > 0.0, "probe period must be positive");
+        assert!(cfg.lag_s >= 0.0, "observation lag must be nonnegative");
+        HealthMonitor {
+            cfg,
+            observed: vec![1.0; n_servers],
+            pending: VecDeque::new(),
+            spare: Vec::new(),
+        }
+    }
+
+    pub fn cfg(&self) -> HealthConfig {
+        self.cfg
+    }
+
+    /// The lagged health signal for one server.
+    #[inline]
+    pub fn observed(&self, server: usize) -> f64 {
+        self.observed[server]
+    }
+
+    /// Record a probe of ground truth at `now`, then publish every
+    /// pending snapshot whose lag has elapsed (lag 0 publishes the new
+    /// probe immediately).
+    pub fn probe(&mut self, now: SimTime, truth: &[f64]) {
+        debug_assert_eq!(truth.len(), self.observed.len());
+        let mut snap = self.spare.pop().unwrap_or_default();
+        snap.clear();
+        snap.extend_from_slice(truth);
+        self.pending.push_back((now, snap));
+        while let Some((t, _)) = self.pending.front() {
+            if *t + self.cfg.lag_s <= now {
+                let (_, v) = self.pending.pop_front().expect("non-empty front");
+                self.observed.copy_from_slice(&v);
+                self.spare.push(v);
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_materializes_to_nothing() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        assert!(plan.materialize(6, 6, 42).is_empty());
+    }
+
+    /// `from_outages` must reproduce the legacy engine's push pattern:
+    /// per outage, the start action immediately followed by the end
+    /// action, in outage-list order, at the exact scripted times.
+    #[test]
+    fn from_outages_preserves_legacy_push_order_and_times() {
+        let outages = vec![
+            Outage {
+                server: 2,
+                start: 5.0,
+                end: 9.0,
+            },
+            Outage {
+                server: 0,
+                start: 1.5,
+                end: 2.5,
+            },
+        ];
+        let plan = FaultPlan::from_outages(&outages);
+        assert!(!plan.is_empty());
+        let tl = plan.materialize(6, 6, 7);
+        assert_eq!(
+            tl,
+            vec![
+                (
+                    5.0,
+                    FaultAction::Down {
+                        server: 2,
+                        crash: false
+                    }
+                ),
+                (
+                    9.0,
+                    FaultAction::Up {
+                        server: 2,
+                        crash: false
+                    }
+                ),
+                (
+                    1.5,
+                    FaultAction::Down {
+                        server: 0,
+                        crash: false
+                    }
+                ),
+                (
+                    2.5,
+                    FaultAction::Up {
+                        server: 0,
+                        crash: false
+                    }
+                ),
+            ]
+        );
+    }
+
+    #[test]
+    fn scripted_kinds_lower_to_expected_actions() {
+        let plan = FaultPlan::default()
+            .with_event(
+                10.0,
+                FaultKind::Crash {
+                    server: 1,
+                    recover: Some(40.0),
+                },
+            )
+            .with_event(
+                20.0,
+                FaultKind::Degrade {
+                    server: 3,
+                    rate_factor: 0.4,
+                    until: 50.0,
+                },
+            )
+            .with_event(
+                30.0,
+                FaultKind::LinkFlap {
+                    link: 5,
+                    rate_factor: 0.1,
+                    until: 35.0,
+                },
+            )
+            .with_event(60.0, FaultKind::Leave { server: 4 })
+            .with_event(90.0, FaultKind::Join { server: 4 });
+        let tl = plan.materialize(6, 6, 0);
+        assert_eq!(
+            tl,
+            vec![
+                (
+                    10.0,
+                    FaultAction::Down {
+                        server: 1,
+                        crash: true
+                    }
+                ),
+                (
+                    40.0,
+                    FaultAction::Up {
+                        server: 1,
+                        crash: true
+                    }
+                ),
+                (
+                    20.0,
+                    FaultAction::DegradeStart {
+                        server: 3,
+                        factor: 0.4
+                    }
+                ),
+                (
+                    50.0,
+                    FaultAction::DegradeEnd {
+                        server: 3,
+                        factor: 0.4
+                    }
+                ),
+                (
+                    30.0,
+                    FaultAction::FlapStart {
+                        link: 5,
+                        factor: 0.1
+                    }
+                ),
+                (35.0, FaultAction::FlapEnd { link: 5 }),
+                (60.0, FaultAction::Leave { server: 4 }),
+                (90.0, FaultAction::Join { server: 4 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn permanent_crash_emits_no_recovery() {
+        let plan = FaultPlan::default().with_event(
+            1.0,
+            FaultKind::Crash {
+                server: 0,
+                recover: None,
+            },
+        );
+        let tl = plan.materialize(2, 2, 0);
+        assert_eq!(
+            tl,
+            vec![(
+                1.0,
+                FaultAction::Down {
+                    server: 0,
+                    crash: true
+                }
+            )]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn materialize_rejects_out_of_range_server() {
+        FaultPlan::default()
+            .with_event(
+                0.0,
+                FaultKind::Crash {
+                    server: 6,
+                    recover: None,
+                },
+            )
+            .materialize(6, 6, 0);
+    }
+
+    fn windows_of(tl: &[(SimTime, FaultAction)], server: usize) -> Vec<(SimTime, SimTime)> {
+        let mut out = Vec::new();
+        let mut open: Option<SimTime> = None;
+        for (t, a) in tl {
+            match a {
+                FaultAction::Down { server: s, .. } if *s == server => {
+                    assert!(open.is_none(), "nested generative window");
+                    open = Some(*t);
+                }
+                FaultAction::Up { server: s, .. } if *s == server => {
+                    out.push((open.take().expect("up without down"), *t));
+                }
+                _ => {}
+            }
+        }
+        assert!(open.is_none(), "window left open");
+        out
+    }
+
+    #[test]
+    fn generative_schedules_are_seed_deterministic() {
+        let plan = FaultPlan::default().with_generative(GenerativeFaults {
+            mttf_s: 100.0,
+            mttr_s: 20.0,
+            horizon_s: 2000.0,
+            targets: Vec::new(),
+            kill: true,
+        });
+        let a = plan.materialize(6, 6, 0xC1A0);
+        let b = plan.materialize(6, 6, 0xC1A0);
+        assert!(!a.is_empty(), "2000 s at MTTF 100 s should fail sometimes");
+        assert_eq!(a.len(), b.len());
+        for ((ta, aa), (tb, ab)) in a.iter().zip(&b) {
+            assert_eq!(ta.to_bits(), tb.to_bits());
+            assert_eq!(aa, ab);
+        }
+        let c = plan.materialize(6, 6, 0xC1A1);
+        assert!(
+            a.len() != c.len() || a.iter().zip(&c).any(|(x, y)| x != y),
+            "different seeds should produce different schedules"
+        );
+    }
+
+    #[test]
+    fn generative_windows_never_overlap_per_server() {
+        let plan = FaultPlan::default().with_generative(GenerativeFaults {
+            mttf_s: 50.0,
+            mttr_s: 30.0,
+            horizon_s: 5000.0,
+            targets: Vec::new(),
+            kill: false,
+        });
+        let tl = plan.materialize(4, 4, 99);
+        for s in 0..4 {
+            let ws = windows_of(&tl, s);
+            assert!(!ws.is_empty(), "server {s} drew no windows");
+            for w in &ws {
+                assert!(w.0 < w.1, "window {w:?} is empty or inverted");
+                assert!(w.0 < 5000.0, "window starts past horizon");
+            }
+            for pair in ws.windows(2) {
+                assert!(
+                    pair[0].1 <= pair[1].0,
+                    "windows {:?} and {:?} overlap on server {s}",
+                    pair[0],
+                    pair[1]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn generative_targets_limit_the_blast_radius() {
+        let plan = FaultPlan::default().with_generative(GenerativeFaults {
+            mttf_s: 50.0,
+            mttr_s: 10.0,
+            horizon_s: 3000.0,
+            targets: vec![1],
+            kill: false,
+        });
+        let tl = plan.materialize(6, 6, 5);
+        assert!(!tl.is_empty());
+        for (_, a) in &tl {
+            match a {
+                FaultAction::Down { server, .. } | FaultAction::Up { server, .. } => {
+                    assert_eq!(*server, 1)
+                }
+                other => panic!("unexpected action {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn health_monitor_publishes_after_lag() {
+        let mut hm = HealthMonitor::new(
+            HealthConfig {
+                period_s: 1.0,
+                lag_s: 3.0,
+            },
+            2,
+        );
+        assert_eq!(hm.observed(0), 1.0);
+        assert_eq!(hm.observed(1), 1.0);
+        // Server 0 dies at t=0; probes run every second.
+        for t in 0..3 {
+            hm.probe(t as f64, &[0.0, 1.0]);
+            assert_eq!(hm.observed(0), 1.0, "t={t}: lag not yet elapsed");
+        }
+        // t=3: the t=0 snapshot (0.0, 1.0) becomes visible.
+        hm.probe(3.0, &[0.0, 1.0]);
+        assert_eq!(hm.observed(0), 0.0);
+        assert_eq!(hm.observed(1), 1.0);
+        // Recovery at t=4 likewise takes 3 s to surface.
+        hm.probe(4.0, &[1.0, 1.0]);
+        assert_eq!(hm.observed(0), 0.0);
+        for t in 5..7 {
+            hm.probe(t as f64, &[1.0, 1.0]);
+        }
+        hm.probe(7.0, &[1.0, 1.0]);
+        assert_eq!(hm.observed(0), 1.0);
+    }
+
+    #[test]
+    fn zero_lag_publishes_immediately() {
+        let mut hm = HealthMonitor::new(
+            HealthConfig {
+                period_s: 0.5,
+                lag_s: 0.0,
+            },
+            1,
+        );
+        hm.probe(0.0, &[0.25]);
+        assert_eq!(hm.observed(0), 0.25);
+        hm.probe(0.5, &[0.75]);
+        assert_eq!(hm.observed(0), 0.75);
+    }
+}

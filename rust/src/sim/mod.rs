@@ -6,6 +6,7 @@
 pub mod cluster;
 pub mod energy;
 pub mod engine;
+pub mod faults;
 pub mod net;
 pub mod ps;
 pub mod server;
@@ -16,7 +17,13 @@ pub mod topology;
 
 pub use cluster::{BandwidthMode, ClusterConfig, ClusterSim, Outage};
 pub use energy::{EnergyBreakdown, EnergyWeights};
-pub use engine::{simulate, Engine, RunReport};
+pub use engine::{
+    simulate, simulate_faulted, simulate_stream, simulate_stream_faulted, AvailabilityReport,
+    Engine, RunReport,
+};
+pub use faults::{
+    CrashPolicy, FaultEvent, FaultKind, FaultPlan, GenerativeFaults, HealthConfig, HealthMonitor,
+};
 pub use server::{ServerKind, ServerSpec, EDGE_MODELS};
 pub use service_model::{PsServiceModel, ServiceModel, ServiceModelKind, ServicePrediction};
 pub use token_batch::TokenBatchModel;

@@ -198,6 +198,32 @@ impl ServerSim {
         self.model.predict(req, extra_n, extra_work, self.rate_mult)
     }
 
+    /// Prediction at an explicit rate multiplier instead of ground truth
+    /// — how a lagged health view prices this server: the cluster
+    /// substitutes the monitor's *observed* health for `rate_mult`, so a
+    /// just-crashed server still looks fast until the probe pipeline
+    /// catches up.
+    pub fn predict_with_rate(
+        &self,
+        req: &ServiceRequest,
+        extra_n: usize,
+        extra_work: f64,
+        rate: f64,
+    ) -> ServicePrediction {
+        self.model.predict(req, extra_n, extra_work, rate)
+    }
+
+    /// Hard-crash restart: discard all in-service/queued jobs by
+    /// rebuilding the service model cold, and invalidate any scheduled
+    /// completion event. Energy/busy/token integrators survive — the
+    /// server existed and drew power; its work just died. The caller owns
+    /// failing/requeueing the jobs that were on board.
+    pub fn crash_reset(&mut self, now: SimTime) {
+        self.advance_to(now);
+        self.model = build_model(&self.spec);
+        self.gen.invalidate();
+    }
+
     /// Predicted *additional* time for a request arriving now: queue wait
     /// estimate + stretched service time at the post-admission batch size.
     /// Shared by every scheduler (CS-UCB and baselines see the same

@@ -49,6 +49,56 @@ pub enum ArrivalProcess {
     Simultaneous,
 }
 
+/// Time-varying arrival-intensity modulation layered on any
+/// [`ArrivalProcess`] (PR 6 chaos scenarios): each inter-arrival
+/// increment is rescaled by the instantaneous intensity m(t) evaluated at
+/// the previous arrival — `dt' = dt / m(t)` — a first-order,
+/// thinning-free approximation of an inhomogeneous process (exact when
+/// m is constant across the increment). The rescaling is deterministic
+/// and consumes **zero** extra RNG draws, so [`ArrivalModulation::None`]
+/// leaves the arrival stream bit-identical and every other field
+/// (classes, tokens, SLOs) is untouched by construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalModulation {
+    /// No modulation: the increment is used verbatim.
+    None,
+    /// Diurnal load curve: m(t) = 1 + amplitude · sin(2πt / period_s).
+    /// `amplitude` must be in [0, 1) so the intensity stays positive.
+    DiurnalSine { period_s: f64, amplitude: f64 },
+    /// Flash crowd: m(t) = factor inside [at_s, at_s + duration_s),
+    /// 1 outside — the demand spike the chaos scenarios pair with a
+    /// mid-run crash.
+    FlashCrowd {
+        at_s: f64,
+        duration_s: f64,
+        factor: f64,
+    },
+}
+
+impl ArrivalModulation {
+    /// Instantaneous intensity multiplier at time `t`.
+    pub fn intensity(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalModulation::None => 1.0,
+            ArrivalModulation::DiurnalSine {
+                period_s,
+                amplitude,
+            } => 1.0 + amplitude * (2.0 * std::f64::consts::PI * t / period_s).sin(),
+            ArrivalModulation::FlashCrowd {
+                at_s,
+                duration_s,
+                factor,
+            } => {
+                if t >= at_s && t < at_s + duration_s {
+                    factor
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+}
+
 /// Per-class token profile: log-normal prompt/output lengths.
 #[derive(Debug, Clone, Copy)]
 pub struct ClassProfile {
@@ -131,6 +181,9 @@ impl ClassProfile {
 pub struct WorkloadConfig {
     pub n_requests: usize,
     pub arrivals: ArrivalProcess,
+    /// Time-varying intensity layered on `arrivals` (default: none,
+    /// bit-identical to the unmodulated stream).
+    pub modulation: ArrivalModulation,
     pub seed: u64,
     /// How SLO contracts are drawn (default: the paper's completion-only
     /// scalar, byte-identical to the pre-PR5 stream).
@@ -149,6 +202,7 @@ impl Default for WorkloadConfig {
         WorkloadConfig {
             n_requests: 10_000,
             arrivals: ArrivalProcess::Poisson { rate: 15.0 },
+            modulation: ArrivalModulation::None,
             seed: 0x9E11,
             slo: SloSampling::CompletionOnly,
             profiles: [
@@ -178,6 +232,39 @@ impl WorkloadConfig {
 
     pub fn with_arrivals(mut self, a: ArrivalProcess) -> Self {
         self.arrivals = a;
+        self
+    }
+
+    /// Layer a time-varying intensity over the arrival process (see
+    /// [`ArrivalModulation`]). Panics on nonsensical parameters — a
+    /// modulation is experiment configuration and a typo should fail at
+    /// construction.
+    pub fn with_modulation(mut self, m: ArrivalModulation) -> Self {
+        match m {
+            ArrivalModulation::None => {}
+            ArrivalModulation::DiurnalSine {
+                period_s,
+                amplitude,
+            } => {
+                assert!(period_s > 0.0, "diurnal period must be positive");
+                assert!(
+                    (0.0..1.0).contains(&amplitude),
+                    "diurnal amplitude must be in [0, 1) to keep intensity positive"
+                );
+            }
+            ArrivalModulation::FlashCrowd {
+                at_s,
+                duration_s,
+                factor,
+            } => {
+                assert!(at_s >= 0.0 && duration_s >= 0.0, "flash crowd window invalid");
+                assert!(
+                    factor > 0.0 && factor.is_finite(),
+                    "flash crowd factor must be positive and finite"
+                );
+            }
+        }
+        self.modulation = m;
         self
     }
 
@@ -282,7 +369,16 @@ impl ArrivalSource for WorkloadGen {
         }
         let id = self.emitted as u64;
         self.emitted += 1;
-        self.t = next_arrival(&self.cfg.arrivals, self.t, &mut self.rng);
+        let t_next = next_arrival(&self.cfg.arrivals, self.t, &mut self.rng);
+        self.t = if self.cfg.modulation == ArrivalModulation::None {
+            // Verbatim, not `dt / 1.0`: re-deriving the increment from the
+            // absolute times is not float-exact, and the unmodulated
+            // stream must stay bit-identical.
+            t_next
+        } else {
+            let m = self.cfg.modulation.intensity(self.t);
+            self.t + (t_next - self.t) / m
+        };
         // Class by weighted draw.
         let mut u = self.rng.f64() * self.wsum;
         let mut class = ServiceClass::Chat;
@@ -582,6 +678,75 @@ mod tests {
                 ServiceClass::Summarize => assert!(r.slo.is_completion_only()),
             }
         }
+    }
+
+    /// A flash crowd compresses inter-arrival gaps inside its window:
+    /// the window holds roughly `factor`× the unmodulated arrival count,
+    /// and the stream stays sorted.
+    #[test]
+    fn flash_crowd_compresses_arrivals_inside_the_window() {
+        let base = WorkloadConfig::default()
+            .with_requests(2000)
+            .with_arrivals(ArrivalProcess::Poisson { rate: 10.0 })
+            .with_seed(17);
+        let plain = generate(&base);
+        let crowd = generate(&base.clone().with_modulation(ArrivalModulation::FlashCrowd {
+            at_s: 50.0,
+            duration_s: 10.0,
+            factor: 5.0,
+        }));
+        assert!(crowd.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        let in_window = |t: &[ServiceRequest]| {
+            t.iter()
+                .filter(|r| (50.0..60.0).contains(&r.arrival))
+                .count()
+        };
+        let (p, c) = (in_window(&plain), in_window(&crowd));
+        assert!(
+            c > 2 * p,
+            "flash crowd must pack the window: {c} vs {p} plain"
+        );
+    }
+
+    /// Diurnal modulation shifts density toward the positive half of the
+    /// sine without breaking monotonicity; `None` stays the verbatim
+    /// (bit-identical) stream.
+    #[test]
+    fn diurnal_sine_shapes_density_and_none_is_verbatim() {
+        let base = WorkloadConfig::default()
+            .with_requests(2000)
+            .with_arrivals(ArrivalProcess::Poisson { rate: 10.0 })
+            .with_seed(23);
+        let sine = generate(&base.clone().with_modulation(ArrivalModulation::DiurnalSine {
+            period_s: 100.0,
+            amplitude: 0.8,
+        }));
+        assert!(sine.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        let count = |lo: f64, hi: f64| {
+            sine.iter()
+                .filter(|r| (lo..hi).contains(&r.arrival))
+                .count()
+        };
+        let (peak, trough) = (count(0.0, 50.0), count(50.0, 100.0));
+        assert!(
+            peak > 2 * trough,
+            "sine peak half-period must be denser: {peak} vs {trough}"
+        );
+        // Explicit None is the same code path as the default: verbatim.
+        let a = generate(&base);
+        let b = generate(&base.clone().with_modulation(ArrivalModulation::None));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "amplitude")]
+    fn diurnal_amplitude_of_one_is_rejected() {
+        let _ = WorkloadConfig::default().with_modulation(ArrivalModulation::DiurnalSine {
+            period_s: 60.0,
+            amplitude: 1.0,
+        });
     }
 
     #[test]

@@ -13,7 +13,8 @@ pub mod generator;
 pub mod service;
 
 pub use generator::{
-    generate, ArrivalProcess, ClassProfile, SloSampling, WorkloadConfig, WorkloadGen,
+    generate, ArrivalModulation, ArrivalProcess, ClassProfile, SloSampling, WorkloadConfig,
+    WorkloadGen,
 };
 pub use service::{ServiceClass, ServiceOutcome, ServiceRequest, SloSpec};
 

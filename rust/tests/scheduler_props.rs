@@ -34,6 +34,7 @@ fn random_view(g: &mut Gen, n: usize) -> ClusterView {
                 n_waiting: g.usize(0, 16),
                 solo_time_est: g.f64(0.1, 5.0),
                 occupancy: g.f64(0.0, 1.0),
+                observed_health: 1.0,
             }
         })
         .collect();
