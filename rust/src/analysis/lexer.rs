@@ -1,0 +1,338 @@
+//! Minimal Rust lexer for `pallas-lint`.
+//!
+//! Tokenizes just enough of the language to drive the rule engine:
+//! identifiers, punctuation, and literals, each stamped with a 1-based
+//! line number, plus the line comments the annotation grammar lives in.
+//! It is deliberately not a full lexer — float suffixes and exponents may
+//! split into several tokens — but the identifier/punctuation stream the
+//! rules match on is exact, and strings/chars/comments are consumed as
+//! units so their contents can never masquerade as code.
+
+/// Token class. Literal tokens carry no text (the rules never look inside
+/// them); identifiers and punctuation carry their exact source text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Number,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// A `//` line comment (block comments are skipped outright — the
+/// annotation grammar is line-comment only).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    /// Text after the leading `//`, untrimmed.
+    pub text: String,
+    /// `///` or `//!` doc comment — never an annotation carrier.
+    pub doc: bool,
+    /// A code token precedes this comment on its own line.
+    pub trailing: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut out = Lexed::default();
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            let text: String = cs[start..j].iter().collect();
+            let doc = matches!(text.chars().next(), Some('/') | Some('!'));
+            let trailing = out.toks.last().is_some_and(|t| t.line == line);
+            out.comments.push(Comment {
+                line,
+                text,
+                doc,
+                trailing,
+            });
+            i = j;
+            continue;
+        }
+        // Block comment (nesting-aware, counts newlines).
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if cs[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if cs[j] == '/' && j + 1 < n && cs[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if cs[j] == '*' && j + 1 < n && cs[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Raw (and byte-raw) strings must beat plain ident lexing of the
+        // `r`/`b` prefix.
+        if c == 'r' || c == 'b' {
+            if let Some((end, nl)) = raw_string(&cs, i) {
+                out.toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: String::new(),
+                    line,
+                });
+                line += nl;
+                i = end;
+                continue;
+            }
+        }
+        // Plain (and byte) string literal.
+        if c == '"' || (c == 'b' && i + 1 < n && cs[i + 1] == '"') {
+            let tok_line = line;
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            while j < n {
+                match cs[j] {
+                    '\\' => {
+                        if j + 1 < n && cs[j + 1] == '\n' {
+                            line += 1;
+                        }
+                        j += 2;
+                    }
+                    '"' => {
+                        j += 1;
+                        break;
+                    }
+                    '\n' => {
+                        line += 1;
+                        j += 1;
+                    }
+                    _ => j += 1,
+                }
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Str,
+                text: String::new(),
+                line: tok_line,
+            });
+            i = j;
+            continue;
+        }
+        // Lifetime or char literal.
+        if c == '\'' {
+            let next_is_name = i + 1 < n && (cs[i + 1].is_alphabetic() || cs[i + 1] == '_');
+            let closes = i + 2 < n && cs[i + 2] == '\'';
+            if next_is_name && !closes {
+                let mut j = i + 1;
+                while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: String::new(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            let mut j = i + 1;
+            if j < n && cs[j] == '\\' {
+                j += 2;
+                while j < n && cs[j] != '\'' {
+                    j += 1;
+                }
+                j += 1;
+            } else {
+                j += 1; // the char itself (multibyte-safe: one `char`)
+                if j < n && cs[j] == '\'' {
+                    j += 1;
+                }
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Char,
+                text: String::new(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Number: digits, `_`, hex/suffix letters; `.` only when a digit
+        // follows (so `0..n` ranges survive as three tokens).
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n {
+                let d = cs[j];
+                if d.is_ascii_alphanumeric() || d == '_' {
+                    j += 1;
+                } else if d == '.' && j + 1 < n && cs[j + 1].is_ascii_digit() {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Number,
+                text: String::new(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: cs[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Everything else: single-char punctuation.
+        out.toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+
+    out
+}
+
+/// If `cs[i..]` starts a raw string (`r"`, `r#"`, `br"`, ...), return the
+/// index one past the closing quote+hashes and the newline count inside.
+fn raw_string(cs: &[char], i: usize) -> Option<(usize, u32)> {
+    let n = cs.len();
+    let mut j = i;
+    if cs[j] == 'b' {
+        j += 1;
+    }
+    if j >= n || cs[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < n && cs[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || cs[j] != '"' {
+        return None;
+    }
+    j += 1;
+    let mut nl = 0u32;
+    while j < n {
+        if cs[j] == '\n' {
+            nl += 1;
+            j += 1;
+        } else if cs[j] == '"' {
+            let mut k = j + 1;
+            let mut h = 0usize;
+            while k < n && h < hashes && cs[k] == '#' {
+                h += 1;
+                k += 1;
+            }
+            if h == hashes {
+                return Some((k, nl));
+            }
+            j += 1;
+        } else {
+            j += 1;
+        }
+    }
+    Some((n, nl))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_their_contents() {
+        let src = "let x = \"panic! inside\"; // trailing panic! note\n/* block panic! */ call();\n";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "x", "call"]);
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 1);
+        assert!(lx.comments[0].trailing);
+    }
+
+    #[test]
+    fn raw_strings_and_chars_lex_as_units() {
+        let src = "let s = r#\"quote \" inside\"#; let c = 'x'; let nl = '\\n'; fn f<'a>(x: &'a str) {}";
+        let ids = idents(src);
+        assert_eq!(
+            ids,
+            vec!["let", "s", "let", "c", "let", "nl", "fn", "f", "x", "str"]
+        );
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_literals() {
+        let src = "let a = \"two\nlines\";\nmarker();\n";
+        let lx = lex(src);
+        let m = lx.toks.iter().find(|t| t.text == "marker").expect("marker");
+        assert_eq!(m.line, 3);
+    }
+
+    #[test]
+    fn ranges_do_not_eat_dots() {
+        let src = "for i in 0..10 { x.min(1.5); }";
+        let lx = lex(src);
+        let dots = lx.toks.iter().filter(|t| t.text == ".").count();
+        // `0..10` contributes two dot puncts, `x.min` one, `1.5` none.
+        assert_eq!(dots, 3);
+    }
+
+    #[test]
+    fn doc_comments_are_marked() {
+        let lx = lex("/// docs\n//! inner\n// plain\n");
+        let flags: Vec<bool> = lx.comments.iter().map(|c| c.doc).collect();
+        assert_eq!(flags, vec![true, true, false]);
+    }
+}

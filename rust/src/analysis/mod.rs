@@ -1,0 +1,68 @@
+//! `pallas-lint` — a dependency-free static-analysis pass over this
+//! crate's own sources.
+//!
+//! The simulator's bit-identity pins (`ps_equivalence`, `slo_identity`,
+//! `faults_identity`) and the fixed-seed ⇒ bit-identical-outcomes goal
+//! rest on source-level invariants that no type checker sees: no
+//! wall-clock reads in the DES, no unordered hash-map iteration on
+//! result paths, salted RNG side-streams, allocation-free decide/route
+//! loops, and the `-inf`-not-NaN slack convention. This module turns
+//! those norms into checked rules (see [`rules`] for the rule list and
+//! `lib.rs` for the crate-level invariant docs).
+//!
+//! The pass is a lightweight lexer + token-pattern engine — deliberately
+//! not `syn`-based, so it builds under the offline vendored-shim Cargo
+//! setup with zero new dependencies. Run it as `cargo run --bin
+//! pallas-lint` (defaults to this crate's `src/`), or via the
+//! `tests/lint.rs` harness which makes a clean tree part of tier-1
+//! `cargo test`.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lint_source, Diagnostic};
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Outcome of linting a file tree.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+/// Lint every `.rs` file under `root` (sorted walk, so output order and
+/// diagnostics are stable across platforms and runs).
+pub fn lint_tree(root: &Path) -> io::Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut diagnostics = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)?;
+        let rel = f.strip_prefix(root).unwrap_or(f.as_path());
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        diagnostics.extend(lint_source(&rel, &src));
+    }
+    Ok(LintReport {
+        files: files.len(),
+        diagnostics,
+    })
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<io::Result<Vec<_>>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}

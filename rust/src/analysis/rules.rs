@@ -1,0 +1,721 @@
+//! The pallas-lint rule engine.
+//!
+//! Six rules enforce the crate's determinism/allocation/panic contracts
+//! (see the crate docs in `lib.rs` for the invariant each one guards):
+//!
+//! * **D1** — no wall-clock (`Instant::now`) or ambient-entropy sources
+//!   outside `coordinator/` and `util/logging.rs`.
+//! * **D2** — no order-sensitive iteration of `HashMap`/`HashSet` in
+//!   `sim/`, `scheduler/`, `workload/` or `coordinator/kv.rs`.
+//! * **D3** — seed construction in feature code goes through the
+//!   `seed ^ <X>_STREAM_SALT` side-stream idiom.
+//! * **A1** — marker-delimited no-alloc regions ban allocating calls.
+//! * **P1** — panic paths in `sim/` + `scheduler/` carry justifications.
+//! * **N1** — NaN-unsafe comparisons on slack-typed values.
+//!
+//! Suppression is annotation-only (see [`parse_directive`]); module
+//! scoping is path-based (see [`Scope::for_path`]). `#[cfg(test)]`
+//! regions are exempt from every rule. Malformed annotations surface as
+//! unsuppressible `lint-syntax` diagnostics.
+
+use super::lexer::{lex, Lexed, Tok, TokKind};
+use std::collections::HashMap;
+
+/// Canonical rule ids, as printed in diagnostics and named (long or
+/// short, case-insensitively) in suppression annotations.
+pub const RULES: &[(&str, &str)] = &[
+    ("D1", "wall-clock"),
+    ("D2", "unordered-iter"),
+    ("D3", "raw-seed"),
+    ("A1", "alloc"),
+    ("P1", "panic"),
+    ("N1", "nan-cmp"),
+];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub path: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Which rules apply to a file, derived from its path relative to the
+/// lint root (`src/`), with `/` separators.
+#[derive(Debug, Clone, Copy)]
+struct Scope {
+    d1: bool,
+    d2: bool,
+    d3: bool,
+    p1: bool,
+    n1: bool,
+}
+
+impl Scope {
+    fn for_path(path: &str) -> Scope {
+        let in_sim = path.starts_with("sim/");
+        let in_sched = path.starts_with("scheduler/");
+        let in_work = path.starts_with("workload/");
+        let core = in_sim || in_sched || in_work;
+        Scope {
+            d1: !(path.starts_with("coordinator/") || path == "util/logging.rs"),
+            d2: core || path == "coordinator/kv.rs",
+            d3: core,
+            p1: in_sim || in_sched,
+            n1: core,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Directive {
+    /// `lint: allow(<rules>) <reason>` or `lint: order-insensitive <reason>`.
+    Allow(Vec<&'static str>),
+    /// `lint: no-alloc [reason]` — opens an A1 region.
+    RegionStart,
+    /// `lint: end-no-alloc` — closes it.
+    RegionEnd,
+}
+
+/// Parse a lint control comment. `None` when the comment is not a lint
+/// directive at all; `Some(Err(_))` for a malformed one.
+fn parse_directive(text: &str) -> Option<Result<Directive, String>> {
+    let rest = text.trim().strip_prefix("lint:")?.trim_start();
+    if rest.strip_prefix("end-no-alloc").is_some() {
+        return Some(Ok(Directive::RegionEnd));
+    }
+    if rest.strip_prefix("no-alloc").is_some() {
+        // The reason is recommended but optional on region markers.
+        return Some(Ok(Directive::RegionStart));
+    }
+    if let Some(r) = rest.strip_prefix("order-insensitive") {
+        if r.trim().is_empty() {
+            return Some(Err("`order-insensitive` needs a reason".to_string()));
+        }
+        return Some(Ok(Directive::Allow(vec!["D2"])));
+    }
+    if let Some(r) = rest.strip_prefix("allow") {
+        let Some(r) = r.trim_start().strip_prefix('(') else {
+            return Some(Err("expected `allow(<rules>) <reason>`".to_string()));
+        };
+        let Some(close) = r.find(')') else {
+            return Some(Err("unclosed `allow(` rule list".to_string()));
+        };
+        let (list, after) = r.split_at(close);
+        if after[1..].trim().is_empty() {
+            return Some(Err(
+                "`allow(..)` needs a justification after the rule list".to_string(),
+            ));
+        }
+        let mut rules = Vec::new();
+        for part in list.split(',') {
+            match canon_rule(part.trim()) {
+                Some(id) => rules.push(id),
+                None => return Some(Err(format!("unknown rule {:?}", part.trim()))),
+            }
+        }
+        if rules.is_empty() {
+            return Some(Err("empty rule list in `allow()`".to_string()));
+        }
+        return Some(Ok(Directive::Allow(rules)));
+    }
+    Some(Err(format!(
+        "unrecognized lint directive {:?} (expected allow/order-insensitive/no-alloc/end-no-alloc)",
+        text.trim()
+    )))
+}
+
+fn canon_rule(name: &str) -> Option<&'static str> {
+    let lower = name.to_ascii_lowercase();
+    RULES
+        .iter()
+        .find(|(id, long)| lower == id.to_ascii_lowercase() || lower == *long)
+        .map(|(id, _)| *id)
+}
+
+fn is_punct(t: &Tok, c: char) -> bool {
+    t.kind == TokKind::Punct && t.text.len() == 1 && t.text.starts_with(c)
+}
+
+fn is_ident(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+/// Match a mixed ident/punct pattern starting at `from`. Single-char
+/// non-alphanumeric entries match punctuation; the rest match idents.
+fn matches_seq(toks: &[Tok], from: usize, pat: &[&str]) -> bool {
+    if from + pat.len() > toks.len() {
+        return false;
+    }
+    pat.iter().enumerate().all(|(k, p)| {
+        let t = &toks[from + k];
+        if p.chars().all(|c| c.is_alphanumeric() || c == '_') {
+            is_ident(t, p)
+        } else {
+            t.kind == TokKind::Punct && t.text == *p
+        }
+    })
+}
+
+fn match_delim(toks: &[Tok], open: usize, oc: char, cc: char) -> usize {
+    let mut depth = 0i32;
+    let mut k = open;
+    while k < toks.len() {
+        if is_punct(&toks[k], oc) {
+            depth += 1;
+        } else if is_punct(&toks[k], cc) {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+        k += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Mark every token belonging to a `#[cfg(test)]` item (attribute through
+/// the end of the following `{..}` block or `;`).
+fn mark_test_regions(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0;
+    while i < toks.len() {
+        if is_punct(&toks[i], '#') && matches_seq(toks, i + 1, &["[", "cfg", "(", "test", ")", "]"])
+        {
+            let mut k = i + 7;
+            let mut end = toks.len().saturating_sub(1);
+            while k < toks.len() {
+                if is_punct(&toks[k], ';') {
+                    end = k;
+                    break;
+                }
+                if is_punct(&toks[k], '{') {
+                    end = match_delim(toks, k, '{', '}');
+                    break;
+                }
+                k += 1;
+            }
+            for m in mask.iter_mut().take(end + 1).skip(i) {
+                *m = true;
+            }
+            i = end + 1;
+        } else {
+            i += 1;
+        }
+    }
+    mask
+}
+
+/// Line spans covered by test regions (for exempting comments).
+fn test_line_spans(toks: &[Tok], mask: &[bool]) -> Vec<(u32, u32)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if mask[i] {
+            let start = toks[i].line;
+            let mut j = i;
+            while j + 1 < toks.len() && mask[j + 1] {
+                j += 1;
+            }
+            spans.push((start, toks[j].line));
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    spans
+}
+
+/// Lint one file. `path` is relative to the lint root with `/` separators
+/// (the harness passes virtual paths like `sim/fixture.rs` to pick scope).
+pub fn lint_source(path: &str, src: &str) -> Vec<Diagnostic> {
+    let lexed = lex(src);
+    let scope = Scope::for_path(path);
+    let toks = &lexed.toks;
+    let in_test = mark_test_regions(toks);
+    let test_spans = test_line_spans(toks, &in_test);
+
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let (allows, regions) = collect_directives(path, &lexed, &test_spans, &mut diags);
+
+    let allowed = |line: u32, rule: &str| {
+        allows
+            .get(&line)
+            .is_some_and(|v| v.iter().any(|r| *r == rule))
+    };
+    let mut pending: Vec<Diagnostic> = Vec::new();
+    let mut emit = |line: u32, rule: &'static str, msg: String| {
+        pending.push(Diagnostic {
+            path: path.to_string(),
+            line,
+            rule,
+            msg,
+        });
+    };
+
+    // ---- D1: wall-clock / ambient entropy --------------------------------
+    const D1_BANNED: &[&str] = &[
+        "SystemTime",
+        "UNIX_EPOCH",
+        "thread_rng",
+        "from_entropy",
+        "getrandom",
+        "RandomState",
+    ];
+    if scope.d1 {
+        for i in 0..toks.len() {
+            if in_test[i] || toks[i].kind != TokKind::Ident {
+                continue;
+            }
+            let t = &toks[i];
+            if t.text == "Instant" && matches_seq(toks, i + 1, &[":", ":", "now"]) {
+                emit(
+                    t.line,
+                    "D1",
+                    "wall-clock `Instant::now` in deterministic code; move timing to \
+                     coordinator/ or util/logging.rs, or justify"
+                        .to_string(),
+                );
+            } else if D1_BANNED.contains(&t.text.as_str()) {
+                emit(
+                    t.line,
+                    "D1",
+                    format!("ambient time/entropy source `{}`", t.text),
+                );
+            }
+        }
+    }
+
+    // ---- D2: unordered hash-container iteration --------------------------
+    if scope.d2 {
+        let names = collect_hash_names(toks, &in_test);
+        const METHODS: &[&str] = &[
+            "iter",
+            "iter_mut",
+            "keys",
+            "values",
+            "values_mut",
+            "drain",
+            "into_iter",
+        ];
+        for i in 0..toks.len() {
+            if in_test[i] || toks[i].kind != TokKind::Ident || !names.contains(&toks[i].text) {
+                continue;
+            }
+            let name = &toks[i].text;
+            if i + 3 < toks.len()
+                && is_punct(&toks[i + 1], '.')
+                && toks[i + 2].kind == TokKind::Ident
+                && METHODS.contains(&toks[i + 2].text.as_str())
+                && is_punct(&toks[i + 3], '(')
+            {
+                emit(
+                    toks[i + 2].line,
+                    "D2",
+                    format!(
+                        "unordered iteration `{}.{}()` on a hash container; sort first or \
+                         annotate order-insensitive",
+                        name, toks[i + 2].text
+                    ),
+                );
+            } else if i + 1 < toks.len() && is_punct(&toks[i + 1], '{') {
+                // `for pat in [&][mut] [self.]name {` — direct iteration.
+                let mut k = i;
+                while k > 0 {
+                    k -= 1;
+                    let p = &toks[k];
+                    if is_punct(p, '.')
+                        || is_punct(p, '&')
+                        || is_ident(p, "self")
+                        || is_ident(p, "mut")
+                    {
+                        continue;
+                    }
+                    if is_ident(p, "in") {
+                        emit(
+                            toks[i].line,
+                            "D2",
+                            format!("unordered `for .. in {name}` over a hash container"),
+                        );
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    // ---- D3: raw seed construction ---------------------------------------
+    if scope.d3 {
+        for i in 0..toks.len() {
+            if in_test[i] {
+                continue;
+            }
+            if is_ident(&toks[i], "Rng") && matches_seq(toks, i + 1, &[":", ":", "new", "("]) {
+                let close = match_delim(toks, i + 4, '(', ')');
+                let salted = toks[i + 4..=close].iter().any(|t| {
+                    t.kind == TokKind::Ident && t.text.to_ascii_uppercase().contains("SALT")
+                });
+                if !salted {
+                    emit(
+                        toks[i].line,
+                        "D3",
+                        "raw seed construction; derive side-streams as \
+                         `seed ^ <X>_STREAM_SALT`, or justify the primary stream"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- A1: allocation inside no-alloc regions --------------------------
+    {
+        let in_region = |l: u32| regions.iter().any(|&(a, b)| l > a && l < b);
+        for i in 0..toks.len() {
+            if in_test[i] || !in_region(toks[i].line) {
+                continue;
+            }
+            let t = &toks[i];
+            if (is_ident(t, "Vec") || is_ident(t, "Box"))
+                && matches_seq(toks, i + 1, &[":", ":", "new"])
+            {
+                emit(
+                    t.line,
+                    "A1",
+                    format!("`{}::new` inside a no-alloc region", t.text),
+                );
+            } else if (is_ident(t, "vec") || is_ident(t, "format"))
+                && i + 1 < toks.len()
+                && is_punct(&toks[i + 1], '!')
+            {
+                emit(
+                    t.line,
+                    "A1",
+                    format!("`{}!` inside a no-alloc region", t.text),
+                );
+            } else if is_punct(t, '.')
+                && i + 2 < toks.len()
+                && (is_ident(&toks[i + 1], "collect") || is_ident(&toks[i + 1], "to_string"))
+                && is_punct(&toks[i + 2], '(')
+            {
+                emit(
+                    toks[i + 1].line,
+                    "A1",
+                    format!("`.{}()` inside a no-alloc region", toks[i + 1].text),
+                );
+            }
+        }
+    }
+
+    // ---- P1: justified panic paths ---------------------------------------
+    if scope.p1 {
+        for i in 0..toks.len() {
+            if in_test[i] || toks[i].kind != TokKind::Ident {
+                continue;
+            }
+            let t = &toks[i];
+            let bang = i + 1 < toks.len() && is_punct(&toks[i + 1], '!');
+            let method_call = i > 0
+                && is_punct(&toks[i - 1], '.')
+                && i + 1 < toks.len()
+                && is_punct(&toks[i + 1], '(');
+            match t.text.as_str() {
+                "panic" | "unreachable" | "todo" | "unimplemented" if bang => emit(
+                    t.line,
+                    "P1",
+                    format!("`{}!` in sim/scheduler needs a justification annotation", t.text),
+                ),
+                "unwrap" | "expect" if method_call => emit(
+                    t.line,
+                    "P1",
+                    format!(
+                        "`.{}()` in sim/scheduler: justify why it cannot fire, or recover",
+                        t.text
+                    ),
+                ),
+                _ => {}
+            }
+        }
+    }
+
+    // ---- N1: NaN-unsafe comparisons on slack values ----------------------
+    if scope.n1 {
+        let slackish = |s: &str| {
+            let l = s.to_ascii_lowercase();
+            l.contains("slack") || l.contains("satisf") || l.split('_').any(|seg| seg == "fy")
+        };
+        let mut cur_fn = String::new();
+        for i in 0..toks.len() {
+            if in_test[i] {
+                continue;
+            }
+            let t = &toks[i];
+            if is_ident(t, "fn") && i + 1 < toks.len() && toks[i + 1].kind == TokKind::Ident {
+                cur_fn = toks[i + 1].text.clone();
+            }
+            // N1a: `partial_cmp(..).unwrap()` / `.expect(..)`.
+            if is_ident(t, "partial_cmp")
+                && (i == 0 || !is_ident(&toks[i - 1], "fn"))
+                && i + 1 < toks.len()
+                && is_punct(&toks[i + 1], '(')
+            {
+                let close = match_delim(toks, i + 1, '(', ')');
+                if close + 2 < toks.len()
+                    && is_punct(&toks[close + 1], '.')
+                    && (is_ident(&toks[close + 2], "unwrap")
+                        || is_ident(&toks[close + 2], "expect"))
+                {
+                    emit(
+                        toks[close + 2].line,
+                        "N1",
+                        "NaN-unsafe `partial_cmp(..).unwrap()`; document why operands are \
+                         finite or handle None"
+                            .to_string(),
+                    );
+                }
+            }
+            // N1b: `.min(`/`.max(` or `f64::min`/`f64::max` in a slack context.
+            let mm_line = if is_punct(t, '.')
+                && i + 2 < toks.len()
+                && (is_ident(&toks[i + 1], "min") || is_ident(&toks[i + 1], "max"))
+                && is_punct(&toks[i + 2], '(')
+            {
+                Some(toks[i + 1].line)
+            } else if is_ident(t, "f64")
+                && (matches_seq(toks, i + 1, &[":", ":", "min"])
+                    || matches_seq(toks, i + 1, &[":", ":", "max"]))
+            {
+                Some(t.line)
+            } else {
+                None
+            };
+            if let Some(line) = mm_line {
+                let mut hit = slackish(&cur_fn);
+                let mut k = i;
+                while !hit && k > 0 {
+                    k -= 1;
+                    let p = &toks[k];
+                    if p.kind == TokKind::Punct && matches!(p.text.as_str(), ";" | "{" | "}") {
+                        break;
+                    }
+                    if p.kind == TokKind::Ident && slackish(&p.text) {
+                        hit = true;
+                    }
+                }
+                if hit {
+                    emit(
+                        line,
+                        "N1",
+                        "`min`/`max` on a slack-typed value silently drops NaN; uphold the \
+                         -inf-not-NaN convention or justify"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+
+    diags.extend(pending.into_iter().filter(|d| !allowed(d.line, d.rule)));
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    diags
+}
+
+/// Names declared (or bound) in this file with `HashMap`/`HashSet` type or
+/// initializer — the receiver set rule D2 watches.
+fn collect_hash_names(toks: &[Tok], in_test: &[bool]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for i in 0..toks.len() {
+        if in_test[i] {
+            continue;
+        }
+        // `name: ..HashMap/HashSet..` up to a depth-0 `,;{}=` terminator
+        // (fields, params, typed lets). `::` paths are excluded by the
+        // second-colon check.
+        if toks[i].kind == TokKind::Ident
+            && i + 2 < toks.len()
+            && is_punct(&toks[i + 1], ':')
+            && !is_punct(&toks[i + 2], ':')
+            && (i == 0 || !is_punct(&toks[i - 1], ':'))
+        {
+            let mut depth = 0i32;
+            let mut saw = false;
+            for (steps, t) in toks[i + 2..].iter().enumerate() {
+                if steps > 64 {
+                    break;
+                }
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "<" | "(" | "[" => depth += 1,
+                        ">" | ")" | "]" if depth == 0 => break,
+                        ">" | ")" | "]" => depth -= 1,
+                        "," | ";" | "{" | "}" | "=" if depth == 0 => break,
+                        _ => {}
+                    }
+                } else if is_ident(t, "HashMap") || is_ident(t, "HashSet") {
+                    saw = true;
+                }
+            }
+            if saw && !names.contains(&toks[i].text) {
+                names.push(toks[i].text.clone());
+            }
+        }
+        // `let [mut] name = ..HashMap/HashSet..;`
+        if is_ident(&toks[i], "let") {
+            let mut j = i + 1;
+            if j < toks.len() && is_ident(&toks[j], "mut") {
+                j += 1;
+            }
+            if j + 1 < toks.len()
+                && toks[j].kind == TokKind::Ident
+                && is_punct(&toks[j + 1], '=')
+            {
+                let saw = toks[j + 2..]
+                    .iter()
+                    .take(64)
+                    .take_while(|t| !is_punct(t, ';'))
+                    .any(|t| is_ident(t, "HashMap") || is_ident(t, "HashSet"));
+                if saw && !names.contains(&toks[j].text) {
+                    names.push(toks[j].text.clone());
+                }
+            }
+        }
+    }
+    names
+}
+
+type AllowMap = HashMap<u32, Vec<&'static str>>;
+
+/// Walk the comments: build the per-line allow map and the A1 region list,
+/// pushing unsuppressible `lint-syntax` diagnostics for malformed input.
+fn collect_directives(
+    path: &str,
+    lexed: &Lexed,
+    test_spans: &[(u32, u32)],
+    diags: &mut Vec<Diagnostic>,
+) -> (AllowMap, Vec<(u32, u32)>) {
+    let mut allows: AllowMap = HashMap::new();
+    let mut regions: Vec<(u32, u32)> = Vec::new();
+    let mut open: Option<u32> = None;
+    let in_test = |l: u32| test_spans.iter().any(|&(a, b)| l >= a && l <= b);
+    let mut syntax = |line: u32, msg: String| {
+        diags.push(Diagnostic {
+            path: path.to_string(),
+            line,
+            rule: "lint-syntax",
+            msg,
+        });
+    };
+
+    for c in &lexed.comments {
+        if c.doc || in_test(c.line) {
+            continue;
+        }
+        let Some(parsed) = parse_directive(&c.text) else {
+            continue;
+        };
+        match parsed {
+            Err(msg) => syntax(c.line, msg),
+            Ok(Directive::Allow(rules)) => {
+                // Trailing annotations cover their own line; standalone
+                // ones cover the next line that has code on it.
+                let covered = if c.trailing {
+                    c.line
+                } else {
+                    lexed
+                        .toks
+                        .iter()
+                        .find(|t| t.line > c.line)
+                        .map(|t| t.line)
+                        .unwrap_or(c.line)
+                };
+                allows.entry(covered).or_default().extend(rules);
+            }
+            Ok(Directive::RegionStart) => {
+                if open.is_some() {
+                    syntax(
+                        c.line,
+                        "nested `no-alloc` region; close the previous one first".to_string(),
+                    );
+                } else {
+                    open = Some(c.line);
+                }
+            }
+            Ok(Directive::RegionEnd) => match open.take() {
+                Some(s) => regions.push((s, c.line)),
+                None => syntax(
+                    c.line,
+                    "`end-no-alloc` without an open `no-alloc` region".to_string(),
+                ),
+            },
+        }
+    }
+    if let Some(s) = open {
+        syntax(s, "unclosed `no-alloc` region".to_string());
+    }
+    (allows, regions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(path: &str, src: &str) -> Vec<&'static str> {
+        lint_source(path, src).into_iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn scope_table_matches_the_module_layout() {
+        let s = Scope::for_path("sim/engine.rs");
+        assert!(s.d1 && s.d2 && s.d3 && s.p1 && s.n1);
+        let s = Scope::for_path("coordinator/router.rs");
+        assert!(!s.d1 && !s.d2 && !s.p1);
+        let s = Scope::for_path("coordinator/kv.rs");
+        assert!(s.d2 && !s.p1);
+        let s = Scope::for_path("util/logging.rs");
+        assert!(!s.d1);
+        let s = Scope::for_path("workload/generator.rs");
+        assert!(s.d3 && s.n1 && !s.p1);
+    }
+
+    #[test]
+    fn trailing_and_standalone_annotations_bind_correctly() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   \x20   // lint: allow(p1) standalone covers the next line\n\
+                   \x20   x.unwrap()\n\
+                   }\n\
+                   fn g(x: Option<u32>) -> u32 {\n\
+                   \x20   x.unwrap() // lint: allow(p1) trailing covers its own line\n\
+                   }\n";
+        assert!(rules_fired("sim/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
+        assert!(rules_fired("sim/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn malformed_directives_are_unsuppressible_syntax_errors() {
+        let src = "// lint: allow(p1)\nfn f() {}\n";
+        let d = lint_source("sim/x.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "lint-syntax");
+        let src = "// lint: allow(bogus) reason\nfn f() {}\n";
+        assert_eq!(rules_fired("sim/x.rs", src), vec!["lint-syntax"]);
+    }
+
+    #[test]
+    fn long_rule_names_are_accepted() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   \x20   x.unwrap() // lint: allow(panic) long name for P1\n\
+                   }\n";
+        assert!(rules_fired("sim/x.rs", src).is_empty());
+    }
+}

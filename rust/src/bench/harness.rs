@@ -112,7 +112,7 @@ pub fn bench_fn(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) ->
     let mut min = f64::INFINITY;
     let mut total = 0.0;
     for _ in 0..iters {
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // lint: allow(wall-clock) wall time is the measurement here
         f();
         let ns = t0.elapsed().as_nanos() as f64;
         samples.push(ns);

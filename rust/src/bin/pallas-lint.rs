@@ -1,0 +1,37 @@
+//! `pallas-lint` — invariant checker for the perllm crate.
+//!
+//! Usage: `cargo run --bin pallas-lint [root]`. With no argument it lints
+//! this crate's `src/` tree. Exit codes: 0 clean, 1 violations, 2 I/O
+//! error. Diagnostics print as `path:line: RULE: message`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("src"));
+    match perllm::analysis::lint_tree(&root) {
+        Ok(report) => {
+            for d in &report.diagnostics {
+                println!("{d}");
+            }
+            if report.diagnostics.is_empty() {
+                println!("pallas-lint: {} files clean", report.files);
+                ExitCode::SUCCESS
+            } else {
+                eprintln!(
+                    "pallas-lint: {} violation(s) across {} files scanned",
+                    report.diagnostics.len(),
+                    report.files
+                );
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("pallas-lint: cannot read {}: {e}", root.display());
+            ExitCode::from(2)
+        }
+    }
+}

@@ -146,6 +146,7 @@ impl KvPool {
     pub fn fragmentation(&self) -> f64 {
         let mut cap = 0usize;
         let mut used = 0usize;
+        // lint: order-insensitive commutative sums; visitation order cannot change the totals
         for s in self.seqs.values() {
             cap += s.pages.len() * self.cfg.page_tokens;
             used += s.tokens;
@@ -167,6 +168,7 @@ impl KvPool {
             }
             seen[p] = true;
         }
+        // lint: order-insensitive pass/fail is order-free; order only selects which duplicate is reported first
         for (id, s) in &self.seqs {
             for &p in &s.pages {
                 if seen[p] {

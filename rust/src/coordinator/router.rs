@@ -181,6 +181,7 @@ impl Router {
     /// move `expected_tokens` tokens. This is the single fill routine
     /// behind both the [`ViewSource`] impl and `complete()`.
     fn fill_view(&self, expected_tokens: usize, out: &mut ClusterView) {
+        // lint: no-alloc per-request snapshot refill; `out` buffers amortize to fleet size
         out.now = self.now_s;
         out.weights = self.weights;
         // No admissibility index on the live substrate (telemetry is
@@ -227,6 +228,7 @@ impl Router {
                     observed_health: 1.0,
                 }
             }));
+        // lint: end-no-alloc
     }
 
     /// Snapshot telemetry into a freshly allocated scheduler-facing view.

@@ -20,7 +20,51 @@
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
+//!
+//! ## Enforced invariants (`pallas-lint`)
+//!
+//! The reproducibility contracts below are machine-checked by the
+//! in-tree static pass in [`analysis`] (`cargo run --bin pallas-lint`,
+//! also run over `src/**` by `tests/lint.rs` inside tier-1
+//! `cargo test`). Rule ids, long names, and the invariant each guards:
+//!
+//! * **D1 (`wall-clock`)** — no `Instant::now`, `SystemTime`, or
+//!   ambient-entropy RNG outside `coordinator/` and `util/logging.rs`:
+//!   the DES must be a pure function of config + seed.
+//! * **D2 (`unordered-iter`)** — no `.iter()`/`.keys()`/`.values()`/
+//!   `.drain()` (or `for .. in`) on `HashMap`/`HashSet` state in `sim/`,
+//!   `scheduler/`, `workload/`, `coordinator/kv.rs` unless the use is
+//!   annotated order-insensitive: iteration order must never reach a
+//!   result.
+//! * **D3 (`raw-seed`)** — `Rng::new` in feature code must derive
+//!   side-streams as `seed ^ <X>_STREAM_SALT` (the PR-5/6 idiom), so
+//!   adding a consumer never perturbs another stream.
+//! * **A1 (`alloc`)** — regions bracketed by `no-alloc` markers (the
+//!   `decide`/`view_into`/`advance`/reap hot paths) ban `Vec::new`,
+//!   `vec![..]`, `.collect()`, `format!`, `.to_string()`, `Box::new` —
+//!   the source-level twin of the `tests/router_alloc.rs` runtime check.
+//! * **P1 (`panic`)** — every `unwrap`/`expect`/`panic!`/`unreachable!`
+//!   in `sim/` + `scheduler/` carries a justification or was refactored
+//!   into a recoverable path.
+//! * **N1 (`nan-cmp`)** — `partial_cmp(..).unwrap()` and `min`/`max` on
+//!   slack-typed values are flagged; slacks use the PR-5 `-inf`-not-NaN
+//!   convention and each remaining site documents why NaN cannot occur.
+//!
+//! Annotation grammar (line comments, `#[cfg(test)]` code is exempt):
+//!
+//! * `lint: allow(<rule>[, <rule>..]) <reason>` after `//` — suppress on
+//!   the same line (trailing) or the next code line (standalone). Rule
+//!   names are the short or long ids above, case-insensitive; the reason
+//!   is mandatory.
+//! * `lint: order-insensitive <reason>` after `//` — shorthand for
+//!   `allow(d2)`.
+//! * `lint: no-alloc [reason]` / `lint: end-no-alloc` after `//` —
+//!   open/close an A1 region.
+//!
+//! Malformed annotations are themselves diagnostics (`lint-syntax`) and
+//! cannot be suppressed.
 
+pub mod analysis;
 pub mod bench;
 pub mod cli;
 pub mod config;

@@ -136,6 +136,7 @@ impl Scheduler for TokenBucketGate {
     }
 
     fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
+        // lint: no-alloc the gate fronts the router hot path on every arrival
         self.refill(view.now, view);
         // Best SLO-vector satisfaction over the candidate scan. Pruned
         // servers are provably infeasible (f(y) <= -1), so for the
@@ -144,6 +145,7 @@ impl Scheduler for TokenBucketGate {
         let best_fy = view
             .scan()
             .map(|j| view.constraint_satisfaction(req, j))
+            // lint: allow(nan-cmp) f(y) chains bottom out at -inf, never NaN (PR-5 convention)
             .fold(f64::NEG_INFINITY, f64::max);
         if best_fy >= self.params.margin {
             return self.inner.decide(req, view);
@@ -158,6 +160,7 @@ impl Scheduler for TokenBucketGate {
         }
         self.gate_sheds += 1;
         self.gate_sheds_by_class[class] += 1;
+        // lint: end-no-alloc
         Action::shed(ShedReason::Overloaded)
     }
 

@@ -37,7 +37,7 @@ impl Agod {
         Agod {
             q: vec![vec![0.0; n_servers]; ServiceClass::ALL.len()],
             counts: vec![vec![0; n_servers]; ServiceClass::ALL.len()],
-            rng: Rng::new(seed),
+            rng: Rng::new(seed), // lint: allow(raw-seed) scheduler-local decision stream; the caller supplies a pre-salted seed
             steps: 6,
             lr: 0.15,
             decisions: 0,
@@ -52,6 +52,7 @@ impl Scheduler for Agod {
     }
 
     fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
+        // lint: no-alloc baseline decide shares the router hot path; edge_buf is reused
         self.decisions += 1;
         self.edge_buf.clear();
         self.edge_buf
@@ -78,11 +79,13 @@ impl Scheduler for Agod {
                     .max_by(|&a, &b| {
                         let va = self.q[class][a] - 0.01 * view.servers[a].n_waiting as f64;
                         let vb = self.q[class][b] - 0.01 * view.servers[b].n_waiting as f64;
+                        // lint: allow(p1, n1) q-values and waiting counts are finite by construction
                         va.partial_cmp(&vb).unwrap()
                     })
                     .unwrap_or(current);
             }
         }
+        // lint: end-no-alloc
         Action::assign(current)
     }
 

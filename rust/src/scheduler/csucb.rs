@@ -114,6 +114,9 @@ impl Default for CsUcbParams {
 #[derive(Debug, Default)]
 struct PendingPenalties {
     dense: Vec<f64>,
+    /// Only ever touched via point lookups (`insert`/`remove` by id) —
+    /// never iterated, so map order can't reach a scheduling decision
+    /// (pallas-lint rule D2 enforces this staying true).
     spill: std::collections::HashMap<u64, f64>,
 }
 
@@ -181,7 +184,7 @@ impl Arm {
         self.window.push_back(r);
         self.win_sum += r;
         while self.window.len() > w {
-            self.win_sum -= self.window.pop_front().expect("len > w >= 1");
+            self.win_sum -= self.window.pop_front().expect("len > w >= 1"); // lint: allow(p1) loop condition proves non-empty
         }
         self.mean_reward = self.win_sum / self.window.len() as f64;
     }
@@ -369,6 +372,7 @@ impl Scheduler for CsUcb {
     }
 
     fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
+        // lint: no-alloc router hot path; see tests/router_alloc.rs for the runtime twin
         self.t += 1;
         let class = req.class.index();
 
@@ -452,7 +456,7 @@ impl Scheduler for CsUcb {
                 // Constraint-satisfaction fallback: least-violating server;
                 // its violation severity becomes the penalty term P(t).
                 self.fallback_decisions += 1;
-                (least_violating, best_fy.min(0.0))
+                (least_violating, best_fy.min(0.0)) // lint: allow(nan-cmp) f(y) chains bottom out at -inf, never NaN (PR-5 convention)
             }
         };
         // Only fallback decisions carry a real penalty; feedback() treats
@@ -461,6 +465,7 @@ impl Scheduler for CsUcb {
         if penalty < 0.0 {
             self.pending_penalty.insert(req.id, penalty);
         }
+        // lint: end-no-alloc
         Action::assign(choice)
     }
 

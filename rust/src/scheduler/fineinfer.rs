@@ -31,14 +31,17 @@ impl Scheduler for FineInfer {
     }
 
     fn decide(&mut self, _req: &ServiceRequest, view: &ClusterView) -> Action {
+        // lint: no-alloc baseline decide shares the router hot path
         self.decisions += 1;
         // Hold until the next global batch boundary.
         let phase = view.now % self.window_s;
-        if phase == 0.0 {
+        let action = if phase == 0.0 {
             Action::assign(self.cloud)
         } else {
             Action::defer(self.cloud, self.window_s - phase)
-        }
+        };
+        // lint: end-no-alloc
+        action
     }
 
     fn diagnostics(&self) -> Vec<(String, f64)> {

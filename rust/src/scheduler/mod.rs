@@ -213,15 +213,18 @@ impl ClusterView {
     fn resource_slack_min(&self, d: f64, server: usize) -> f64 {
         let sv = &self.servers[server];
         let c = if sv.compute_headroom > 0.0 {
+            // lint: allow(nan-cmp) denominator clamp on a headroom just checked > 0
             (sv.compute_headroom - sv.compute_demand) / sv.compute_headroom.max(1e-9)
         } else {
             -1.0
         };
         let b = if sv.bandwidth_headroom > 0.0 {
+            // lint: allow(nan-cmp) denominator clamp on a headroom just checked > 0
             (sv.bandwidth_headroom - sv.bandwidth_demand) / sv.bandwidth_headroom.max(1e-9)
         } else {
             -1.0
         };
+        // lint: allow(nan-cmp) operands are -1.0 sentinels or ±inf-bounded slacks, never NaN
         d.min(c).min(b)
     }
 
@@ -275,6 +278,7 @@ impl ClusterView {
         margin: f64,
         out: &mut Vec<usize>,
     ) {
+        // lint: no-alloc per-decision feasibility scan; `out` is a caller-owned scratch buffer
         out.clear();
         if margin >= 0.0 {
             out.extend(
@@ -287,6 +291,7 @@ impl ClusterView {
                     .filter(|&j| self.constraint_satisfaction(req, j) >= margin),
             );
         }
+        // lint: end-no-alloc
     }
 
     /// Fallback when no server is feasible: the paper assigns the service

@@ -469,7 +469,7 @@ impl<'a> Engine<'a> {
             svc: Vec::with_capacity(hint),
             pending_arrival: None,
             scheduler,
-            rng: Rng::new(cfg.seed),
+            rng: Rng::new(cfg.seed), // lint: allow(raw-seed) the engine owns the primary stream; side-streams salt off it
             outcomes: Vec::with_capacity(hint),
             in_flight: 0,
             first_arrival: None,
@@ -539,7 +539,7 @@ impl<'a> Engine<'a> {
 
     /// Run to completion and summarize.
     pub fn run(mut self) -> RunReport {
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // lint: allow(wall-clock) measures simulator throughput only; no sim behavior reads it
         // Hoisted out of the loop: an env lookup per event costs more than
         // the event handling itself on the million-request path.
         let trace_events = std::env::var("PERLLM_TRACE_EVENTS").is_ok();
@@ -759,10 +759,13 @@ impl<'a> Engine<'a> {
         self.cluster.now = now;
         match ev {
             Ev::Arrival => {
-                let req = self
-                    .pending_arrival
-                    .take()
-                    .expect("Arrival event without pending request");
+                let Some(req) = self.pending_arrival.take() else {
+                    // One arrival event exists per prefetched request, so
+                    // this cannot fire on a well-formed run; a stray event
+                    // must not kill a million-request simulation.
+                    log::error!("Arrival event with no pending request; dropping event");
+                    return;
+                };
                 if self.first_arrival.is_none() {
                     self.first_arrival = Some(req.arrival);
                 }
@@ -1203,9 +1206,14 @@ impl<'a> Engine<'a> {
                     return;
                 }
                 let gen = srv.gen.invalidate();
-                let dt = srv
-                    .next_completion_in()
-                    .expect("completion key implies a completion estimate");
+                let Some(dt) = srv.next_completion_in() else {
+                    // completion_key() and next_completion_in() are Some
+                    // together for every service model; recover by leaving
+                    // the server descheduled rather than killing the run.
+                    log::error!("server {si}: completion key without completion estimate");
+                    cache.live = false;
+                    return;
+                };
                 let at = self.events.now() + dt;
                 self.events.push_at(at, Ev::ServerDone { server: si, gen });
                 *cache = SchedCache {

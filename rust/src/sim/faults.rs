@@ -416,13 +416,10 @@ impl HealthMonitor {
         snap.clear();
         snap.extend_from_slice(truth);
         self.pending.push_back((now, snap));
-        while let Some((t, _)) = self.pending.front() {
-            if *t + self.cfg.lag_s <= now {
-                let (_, v) = self.pending.pop_front().expect("non-empty front");
+        while self.pending.front().is_some_and(|(t, _)| *t + self.cfg.lag_s <= now) {
+            if let Some((_, v)) = self.pending.pop_front() {
                 self.observed.copy_from_slice(&v);
                 self.spare.push(v);
-            } else {
-                break;
             }
         }
     }

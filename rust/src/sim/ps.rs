@@ -114,6 +114,7 @@ impl Ord for HeapKey {
         other
             .finish_work
             .partial_cmp(&self.finish_work)
+            // lint: allow(p1, n1) push asserts finite finish_work, so the ordering is total
             .unwrap()
             .then_with(|| other.seq.cmp(&self.seq))
     }
@@ -121,9 +122,12 @@ impl Ord for HeapKey {
 
 #[derive(Debug)]
 pub struct PsQueue {
-    /// In-service jobs by id. Never iterated in an order-sensitive way
-    /// (determinism): completion order comes from the heap, aggregates from
-    /// the incremental sums.
+    /// In-service jobs by id. Never iterated at all (pallas-lint rule D2
+    /// enforces this): completion order comes from the heap, aggregates
+    /// from the incremental sums. The old `active_ids()` accessor, which
+    /// leaked `keys()` in arbitrary order, was removed when the lint
+    /// landed — a sorted snapshot can be rebuilt from `reap` results if a
+    /// caller ever needs one.
     active: HashMap<u64, ActiveJob>,
     /// Completion order over `active`, keyed by (finish_work, seq). Kept
     /// exactly in sync with `active` (cancel retains the heap), so the top
@@ -282,12 +286,14 @@ impl PsQueue {
     /// per-job energy is realized lazily at reap/cancel time as the
     /// difference of the cumulative integral.
     pub fn advance_energy(&mut self, dt: SimTime, per_job_rate: f64, energy_per_job: f64) {
+        // lint: no-alloc O(1) per-event bookkeeping on the DES hot path
         debug_assert!(dt >= 0.0 && per_job_rate >= 0.0);
         if dt == 0.0 || self.active.is_empty() {
             return;
         }
         self.attained += dt * per_job_rate;
         self.energy_acc += energy_per_job;
+        // lint: end-no-alloc
     }
 
     /// Remove finished jobs, promote waiters into freed slots, and return
@@ -307,6 +313,7 @@ impl PsQueue {
     /// caller-owned buffer so the event loop can reuse one Vec across every
     /// completion event.
     pub fn reap_into(&mut self, now: SimTime, per_job_rate: f64, out: &mut Vec<PsJob>) {
+        // lint: no-alloc completion reaping runs per event; `out` is caller-owned
         out.clear();
         let eps = (per_job_rate * DONE_EPS_S).max(f64::MIN_POSITIVE);
         let threshold = self.attained + eps;
@@ -325,12 +332,13 @@ impl PsQueue {
             if top.finish_work > threshold {
                 break;
             }
-            let key = self.heap.pop().expect("peeked entry");
-            let job = self.active.remove(&key.id).expect("validated entry");
+            let key = self.heap.pop().expect("peeked entry"); // lint: allow(p1) peek above proved the heap non-empty
+            let job = self.active.remove(&key.id).expect("validated entry"); // lint: allow(p1) the staleness check above proved membership
             let done = self.finish_service(key.id, job);
             out.push(done);
         }
         self.promote_waiters(now);
+        // lint: end-no-alloc
     }
 
     /// Finish-work stamp of the earliest active job (the heap top), in
@@ -367,7 +375,7 @@ impl PsQueue {
             return Some(out);
         }
         if let Some(i) = self.waiting.iter().position(|w| w.id == id) {
-            let w = self.waiting.remove(i).expect("indexed waiter");
+            let w = self.waiting.remove(i)?;
             self.waiting_work -= w.work;
             if self.waiting.is_empty() {
                 self.waiting_work = 0.0;
@@ -406,11 +414,6 @@ impl PsQueue {
             started_at: None,
             energy_j: 0.0,
         })
-    }
-
-    /// Ids of the jobs currently in service (arbitrary order).
-    pub fn active_ids(&self) -> impl Iterator<Item = u64> + '_ {
-        self.active.keys().copied()
     }
 }
 

@@ -137,6 +137,7 @@ impl ServerSim {
     /// integrals); the token-batch model is O(batch) only when iterations
     /// actually complete.
     pub fn advance_to(&mut self, now: SimTime) {
+        // lint: no-alloc runs on every event that touches this server
         let dt = now - self.last_update;
         if dt <= 0.0 {
             return;
@@ -152,6 +153,7 @@ impl ServerSim {
             self.energy_idle_j += self.spec.p_idle * dt;
         }
         self.last_update = now;
+        // lint: end-no-alloc
     }
 
     /// Marginal inference energy attributed to one job over `dt` seconds
@@ -278,6 +280,7 @@ pub fn paper_testbed(edge_model: &str) -> Vec<ServerSpec> {
         "llama2-7b" => (1550.0, 51.0),
         "llama3-8b" => (1400.0, 48.0),
         "yi-9b" => (1250.0, 45.0),
+        // lint: allow(panic) config-time validation of a CLI preset name; a test pins the message
         other => panic!("unknown edge model {other}"),
     };
     let mut servers: Vec<ServerSpec> = (0..5)

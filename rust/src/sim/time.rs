@@ -196,9 +196,8 @@ impl<E> EventQueue<E> {
         // more than a "year" away) falls back to a direct min search.
         for _ in 0..self.nbuckets {
             let slot = (self.cur_vb % self.nbuckets as u64) as usize;
-            if let Some(tail) = self.buckets[slot].last() {
-                if tail.vb == self.cur_vb {
-                    let e = self.buckets[slot].pop().expect("checked tail");
+            if self.buckets[slot].last().is_some_and(|tail| tail.vb == self.cur_vb) {
+                if let Some(e) = self.buckets[slot].pop() {
                     return Some(self.finish_pop(e));
                 }
             }
@@ -211,13 +210,16 @@ impl<E> EventQueue<E> {
         let slot = (0..self.nbuckets)
             .filter(|&i| !self.buckets[i].is_empty())
             .min_by(|&a, &b| {
-                let ea = self.buckets[a].last().expect("non-empty");
-                let eb = self.buckets[b].last().expect("non-empty");
+                let ea = self.buckets[a].last().expect("non-empty"); // lint: allow(p1) filter keeps only non-empty buckets
+                let eb = self.buckets[b].last().expect("non-empty"); // lint: allow(p1) filter keeps only non-empty buckets
                 (ea.time, ea.seq)
                     .partial_cmp(&(eb.time, eb.seq))
+                    // lint: allow(p1, n1) event times are asserted finite at push
                     .expect("finite times")
             })
+            // lint: allow(p1) len > 0 was checked on entry, so a bucket is non-empty
             .expect("len > 0");
+        // lint: allow(p1) slot was selected among non-empty buckets
         let e = self.buckets[slot].pop().expect("non-empty");
         self.cur_vb = e.vb;
         Some(self.finish_pop(e))
@@ -242,6 +244,7 @@ impl<E> EventQueue<E> {
             .min_by(|a, b| {
                 (a.time, a.seq)
                     .partial_cmp(&(b.time, b.seq))
+                    // lint: allow(p1, n1) event times are asserted finite at push
                     .expect("finite times")
             })
             .map(|e| e.time)
@@ -259,6 +262,7 @@ impl<E> EventQueue<E> {
         all.sort_by(|a, b| {
             (a.time, a.seq)
                 .partial_cmp(&(b.time, b.seq))
+                // lint: allow(p1, n1) event times are asserted finite at push
                 .expect("finite times")
         });
 
@@ -321,6 +325,7 @@ impl<E> Ord for HeapEntry<E> {
         other
             .time
             .partial_cmp(&self.time)
+            // lint: allow(p1, n1) NaN times are rejected at push, so the ordering is total
             .unwrap()
             .then_with(|| other.seq.cmp(&self.seq))
     }

@@ -153,6 +153,7 @@ impl TokenBatchModel {
         self.lanes
             .iter()
             .map(|l| Self::iters_needed(l.tokens_left))
+            // lint: allow(p1, n1) iters_needed is ceil of a finite count, never NaN
             .min_by(|a, b| a.partial_cmp(b).expect("finite iteration counts"))
     }
 
@@ -174,11 +175,11 @@ impl TokenBatchModel {
     /// post-promotion composition.
     fn promote_waiters(&mut self, now: SimTime) {
         while self.lanes.len() < self.spec.slots {
-            let Some(head) = self.waiting.front() else { break };
-            if self.kv_used + head.kv_tokens > self.kv_budget {
+            let Some(&w) = self.waiting.front() else { break };
+            if self.kv_used + w.kv_tokens > self.kv_budget {
                 break; // KV pressure: strict FIFO, retry at the next touch.
             }
-            let w = self.waiting.pop_front().expect("checked head");
+            self.waiting.pop_front();
             self.waiting_work_s -= w.solo_s;
             if self.waiting.is_empty() {
                 self.waiting_work_s = 0.0;
@@ -243,6 +244,7 @@ impl ServiceModel for TokenBatchModel {
     }
 
     fn advance(&mut self, dt: SimTime, rate_mult: f64, energy_per_job: f64) {
+        // lint: no-alloc O(lanes) per-event progress on the DES hot path
         if dt <= 0.0 || self.lanes.is_empty() {
             return;
         }
@@ -287,6 +289,7 @@ impl ServiceModel for TokenBatchModel {
                 i += 1;
             }
         }
+        // lint: end-no-alloc
     }
 
     fn next_completion_in(&self, rate_mult: f64) -> Option<SimTime> {
@@ -325,9 +328,11 @@ impl ServiceModel for TokenBatchModel {
     }
 
     fn reap_into(&mut self, now: SimTime, _rate_mult: f64, out: &mut Vec<PsJob>) {
+        // lint: no-alloc completion reaping runs per event; `out` is caller-owned
         out.clear();
         out.append(&mut self.finished);
         self.promote_waiters(now);
+        // lint: end-no-alloc
     }
 
     fn predict(

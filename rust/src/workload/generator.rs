@@ -352,7 +352,7 @@ pub struct WorkloadGen {
 impl WorkloadGen {
     pub fn new(cfg: &WorkloadConfig) -> Self {
         WorkloadGen {
-            rng: Rng::new(cfg.seed),
+            rng: Rng::new(cfg.seed), // lint: allow(raw-seed) the generator owns the primary arrival stream; side-streams salt off it
             slo_rng: Rng::new(cfg.seed ^ SLO_STREAM_SALT),
             t: 0.0,
             emitted: 0,

@@ -162,9 +162,11 @@ impl SloSpec {
             None => f64::INFINITY,
         };
         if let Some(t) = self.ttft {
+            // lint: allow(nan-cmp) norm_slack returns -inf, never NaN, for degenerate bounds
             worst = worst.min(Self::norm_slack(t, ttft));
         }
         if let Some(b) = self.energy_budget_j {
+            // lint: allow(nan-cmp) norm_slack returns -inf, never NaN, for degenerate bounds
             worst = worst.min(Self::norm_slack(b, energy_j));
         }
         worst

@@ -1,0 +1,149 @@
+//! Tier-1 harness for pallas-lint (src/analysis/): the whole `src/**`
+//! tree must be clean under every rule, and every rule must actually
+//! fire on its known-bad fixture and stay quiet on the annotated
+//! known-good twin.
+//!
+//! Fixtures live in `tests/lint_fixtures/` — a subdirectory, so cargo
+//! never compiles them — and are linted under a virtual `sim/` path to
+//! land inside the strictest rule scope.
+
+use perllm::analysis::lint_tree;
+use perllm::analysis::rules::lint_source;
+use std::path::Path;
+
+/// The self-clean gate: zero unsuppressed violations across the crate.
+/// This is the same check CI runs via `cargo run --bin pallas-lint`.
+#[test]
+fn src_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_tree(&root).expect("walk src tree");
+    // Guard against the walker silently linting nothing (wrong root,
+    // broken recursion): the crate has ~47 source files today.
+    assert!(
+        report.files >= 40,
+        "suspiciously few files linted: {}",
+        report.files
+    );
+    let mut msg = String::new();
+    for d in &report.diagnostics {
+        msg.push_str(&format!("\n  {d}"));
+    }
+    assert!(
+        report.diagnostics.is_empty(),
+        "pallas-lint violations in src/**:{msg}"
+    );
+}
+
+struct Case {
+    name: &'static str,
+    src: &'static str,
+    /// Expected (line, rule) pairs, in diagnostic order (line, then rule).
+    expect: &'static [(u32, &'static str)],
+}
+
+/// Every rule fires on its known-bad fixture at the expected lines, and
+/// the annotated known-good twin is silent — both linted under a
+/// virtual `sim/` path (the strictest scope).
+#[test]
+fn fixtures_fire_and_suppress_as_documented() {
+    const CASES: &[Case] = &[
+        Case {
+            name: "d1_bad",
+            src: include_str!("lint_fixtures/d1_bad.rs"),
+            expect: &[(7, "D1"), (12, "D1")],
+        },
+        Case {
+            name: "d1_good",
+            src: include_str!("lint_fixtures/d1_good.rs"),
+            expect: &[],
+        },
+        Case {
+            name: "d2_bad",
+            src: include_str!("lint_fixtures/d2_bad.rs"),
+            expect: &[(7, "D2")],
+        },
+        Case {
+            name: "d2_good",
+            src: include_str!("lint_fixtures/d2_good.rs"),
+            expect: &[],
+        },
+        Case {
+            name: "d3_bad",
+            src: include_str!("lint_fixtures/d3_bad.rs"),
+            expect: &[(6, "D3")],
+        },
+        Case {
+            name: "d3_good",
+            src: include_str!("lint_fixtures/d3_good.rs"),
+            expect: &[],
+        },
+        Case {
+            name: "a1_bad",
+            src: include_str!("lint_fixtures/a1_bad.rs"),
+            expect: &[(5, "A1"), (9, "A1")],
+        },
+        Case {
+            name: "a1_good",
+            src: include_str!("lint_fixtures/a1_good.rs"),
+            expect: &[],
+        },
+        Case {
+            name: "p1_bad",
+            src: include_str!("lint_fixtures/p1_bad.rs"),
+            expect: &[(4, "P1"), (6, "P1")],
+        },
+        Case {
+            name: "p1_good",
+            src: include_str!("lint_fixtures/p1_good.rs"),
+            expect: &[],
+        },
+        Case {
+            name: "n1_bad",
+            src: include_str!("lint_fixtures/n1_bad.rs"),
+            expect: &[(6, "N1"), (12, "N1"), (12, "P1")],
+        },
+        Case {
+            name: "n1_good",
+            src: include_str!("lint_fixtures/n1_good.rs"),
+            expect: &[],
+        },
+        Case {
+            name: "syntax_bad",
+            src: include_str!("lint_fixtures/syntax_bad.rs"),
+            // Malformed directives are diagnostics themselves AND fail
+            // to suppress, so the unwraps still fire.
+            expect: &[(4, "lint-syntax"), (5, "P1"), (6, "lint-syntax"), (7, "P1")],
+        },
+    ];
+    for case in CASES {
+        let got: Vec<(u32, &str)> = lint_source("sim/fixture.rs", case.src)
+            .into_iter()
+            .map(|d| (d.line, d.rule))
+            .collect();
+        assert_eq!(
+            got, case.expect,
+            "fixture {} fired unexpectedly (got left, expected right)",
+            case.name
+        );
+    }
+}
+
+/// Scope end-to-end: the same wall-clock fixture that fires under a
+/// `sim/` path is legal in `coordinator/` (where real time is the
+/// point) — and the hash-iteration fixture is legal outside the
+/// deterministic modules.
+#[test]
+fn scoping_exempts_the_right_modules() {
+    let d1 = include_str!("lint_fixtures/d1_bad.rs");
+    assert!(
+        lint_source("coordinator/fixture.rs", d1).is_empty(),
+        "coordinator/ may read wall clocks"
+    );
+    assert_eq!(lint_source("sim/fixture.rs", d1).len(), 2);
+
+    let d2 = include_str!("lint_fixtures/d2_bad.rs");
+    assert!(
+        lint_source("bench/fixture.rs", d2).is_empty(),
+        "bench/ is outside the D2 determinism scope"
+    );
+}

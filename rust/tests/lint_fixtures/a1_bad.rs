@@ -1,0 +1,12 @@
+// Known-bad fixture for A1 (alloc): allocating calls inside a declared
+// `// lint: no-alloc` region.
+pub fn hot_path(xs: &[f64]) -> String {
+    // lint: no-alloc fixture region
+    let mut out = Vec::new();
+    for x in xs {
+        out.push(*x);
+    }
+    let label = format!("{} items", out.len());
+    // lint: end-no-alloc
+    label
+}

@@ -1,0 +1,9 @@
+// Known-good twin of a1_bad.rs: the same region rewritten against a
+// caller-owned scratch buffer — no allocation inside the markers.
+pub fn hot_path(xs: &[f64], out: &mut Vec<f64>) -> usize {
+    // lint: no-alloc fixture region
+    out.clear();
+    out.extend(xs.iter().copied());
+    // lint: end-no-alloc
+    out.len()
+}

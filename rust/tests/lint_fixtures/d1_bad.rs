@@ -1,0 +1,13 @@
+// Known-bad fixture for D1 (wall-clock): ambient time and entropy reads
+// outside coordinator/ and util/logging.rs. Linted under a virtual
+// `sim/` path by tests/lint.rs; never compiled.
+use std::time::Instant;
+
+pub fn sample_now() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn seed_from_os() -> u64 {
+    from_entropy()
+}

@@ -1,0 +1,8 @@
+// Known-good twin of d1_bad.rs: the same wall-clock read, justified with
+// a trailing `allow(wall-clock)` annotation.
+use std::time::Instant;
+
+pub fn sample_now() -> f64 {
+    let t0 = Instant::now(); // lint: allow(wall-clock) fixture: measures host throughput only
+    t0.elapsed().as_secs_f64()
+}

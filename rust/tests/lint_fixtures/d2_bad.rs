@@ -1,0 +1,11 @@
+// Known-bad fixture for D2 (unordered-iter): iterating a HashMap in a
+// deterministic module without an order-insensitivity annotation.
+use std::collections::HashMap;
+
+pub fn collect_ids(map: &HashMap<u64, f64>) -> Vec<u64> {
+    let mut ids = Vec::new();
+    for k in map.keys() {
+        ids.push(*k);
+    }
+    ids
+}

@@ -1,0 +1,12 @@
+// Known-good twin of d2_bad.rs: hash iteration whose result is
+// provably order-free, annotated as such.
+use std::collections::HashMap;
+
+pub fn total(map: &HashMap<u64, f64>) -> f64 {
+    let mut sum = 0.0;
+    // lint: order-insensitive commutative sum; visitation order cannot change the total
+    for v in map.values() {
+        sum += *v;
+    }
+    sum
+}

@@ -1,0 +1,7 @@
+// Known-bad fixture for D3 (raw-seed): constructing a side-stream RNG
+// from a raw seed instead of the `seed ^ <X>_STREAM_SALT` idiom.
+use crate::util::rng::Rng;
+
+pub fn make_side_stream(seed: u64) -> Rng {
+    Rng::new(seed)
+}

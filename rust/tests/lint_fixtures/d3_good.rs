@@ -1,0 +1,9 @@
+// Known-good twin of d3_bad.rs: the salted-stream idiom D3 exists to
+// enforce.
+use crate::util::rng::Rng;
+
+const FIXTURE_STREAM_SALT: u64 = 0x9e37_79b9_7f4a_7c15;
+
+pub fn make_side_stream(seed: u64) -> Rng {
+    Rng::new(seed ^ FIXTURE_STREAM_SALT)
+}

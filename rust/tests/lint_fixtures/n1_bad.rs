@@ -1,0 +1,17 @@
+// Known-bad fixture for N1 (nan-cmp): bare f64 min on a slack-typed
+// value (silently absorbs NaN) and a partial_cmp().unwrap() chain.
+pub fn worst_slack(xs: &[f64]) -> f64 {
+    let mut slack = f64::INFINITY;
+    for x in xs {
+        slack = slack.min(*x);
+    }
+    slack
+}
+
+pub fn later(a: f64, b: f64) -> f64 {
+    if a.partial_cmp(&b).unwrap() == std::cmp::Ordering::Less {
+        b
+    } else {
+        a
+    }
+}

@@ -1,0 +1,19 @@
+// Known-good twin of n1_bad.rs: the same comparisons, each annotated
+// with the PR-5 convention that slack chains bottom out at -inf.
+pub fn worst_slack(xs: &[f64]) -> f64 {
+    let mut slack = f64::INFINITY;
+    for x in xs {
+        // lint: allow(nan-cmp) slack inputs bottom out at -inf, never NaN
+        slack = slack.min(*x);
+    }
+    slack
+}
+
+pub fn later(a: f64, b: f64) -> f64 {
+    // lint: allow(p1, n1) both operands are finite by construction
+    if a.partial_cmp(&b).unwrap() == std::cmp::Ordering::Less {
+        b
+    } else {
+        a
+    }
+}

@@ -1,0 +1,9 @@
+// Known-bad fixture for P1 (panic): unjustified unwrap and panic! in a
+// module where a stray panic kills a million-request simulation.
+pub fn pick_first(xs: &[f64]) -> f64 {
+    let first = xs.first().unwrap();
+    if xs.len() > 3 {
+        panic!("too many");
+    }
+    *first
+}

@@ -1,0 +1,7 @@
+// Known-good twin of p1_bad.rs: the same unwrap carrying a justified
+// standalone annotation.
+pub fn pick_first(xs: &[f64]) -> f64 {
+    // lint: allow(p1) caller guarantees a non-empty slice
+    let first = xs.first().unwrap();
+    *first
+}

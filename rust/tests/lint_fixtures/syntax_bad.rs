@@ -1,0 +1,9 @@
+// Known-bad fixture for lint-syntax: malformed directives are
+// themselves diagnostics and never suppress anything.
+pub fn annotated() -> u32 {
+    // lint: allow(p1)
+    let v = Some(1).unwrap();
+    // lint: allow(p2) no such rule exists
+    let w = Some(2).unwrap();
+    v + w
+}
