@@ -26,6 +26,7 @@
 //!                                 cs-ucb-sw,cs-ucb-disc]
 //!                   [--modes stable|fluctuating|both]
 //!                   [--faults off|crash|generative] [--mttf S] [--mttr S]
+//!                   [--shards N|auto]
 //!                   [--min-success F] [--min-events-per-sec F]
 //!                   [--min-gate-sheds N] [--min-recovered-attainment F]
 //!
@@ -82,6 +83,19 @@
 //! attainment (pre/during/post), time-to-recover, in-flight casualties,
 //! and gate sheds by phase.
 //!
+//! `--shards N|auto` runs the **sharded parallel DES engine** instead of
+//! the sequential one: N per-range engine shards (or `auto` = one shard
+//! per topology tier) synchronized by conservative link-lookahead, bit-
+//! identical to the sequential engine at every shard count (pinned by
+//! `rust/tests/sharded_identity.rs`) — only the DES perf row (events/s,
+//! wall) legitimately changes. The fleet-scale scaling run:
+//!
+//! ```text
+//! cargo run --release --example paper_scale_sim -- \
+//!     --topology edgeshard-100x --requests 1000000 \
+//!     --schedulers cs-ucb --modes stable --shards auto
+//! ```
+//!
 //! The `--min-*` flags turn the run into a CI gate: if any run's success
 //! rate or DES events/s lands below the floor (or the event-heap peak
 //! above the cap, or post-recovery attainment below
@@ -96,9 +110,9 @@ use perllm::scheduler::{
     Scheduler,
 };
 use perllm::sim::cluster::BandwidthMode;
-use perllm::sim::engine::simulate_stream_faulted;
+use perllm::sim::engine::{simulate_stream_faulted, simulate_stream_faulted_sharded};
 use perllm::sim::topology::TopologyConfig;
-use perllm::sim::{FaultKind, FaultPlan, GenerativeFaults, HealthConfig};
+use perllm::sim::{FaultKind, FaultPlan, GenerativeFaults, HealthConfig, ShardCount};
 use perllm::workload::generator::{ArrivalProcess, SloSampling, WorkloadConfig, WorkloadGen};
 use perllm::workload::{ArrivalSource, MergedArrivals};
 
@@ -216,6 +230,10 @@ fn main() {
     let faults = get("--faults", "off");
     let mttf: f64 = get("--mttf", "300").parse().expect("bad --mttf");
     let mttr: f64 = get("--mttr", "30").parse().expect("bad --mttr");
+    let shards: Option<ShardCount> = match get("--shards", "").as_str() {
+        "" => None,
+        s => Some(ShardCount::parse(s).unwrap_or_else(|| panic!("bad --shards {s} (N|auto)"))),
+    };
 
     // Arrival rate: the paper's 15 req/s scaled by topology capacity
     // unless pinned explicitly — a 60-server fleet at paper load would
@@ -281,10 +299,17 @@ fn main() {
         println!(
             "\n=== topology {topology} ({} servers, capacity {:.1}x paper), edge model {model}, \
              service model {service_model}, {mix} mix, {slo:?} SLOs{}, {mode:?} bandwidth, \
-             {n} requests at {rate:.1} req/s (streamed) ===",
+             {n} requests at {rate:.1} req/s (streamed{}) ===",
             cfg.n_servers(),
             capacity_scale,
             if gate { " + admission gate" } else { "" },
+            match shards {
+                Some(ShardCount::Auto) => {
+                    format!(", sharded engine: auto = {} shards", topo.tiers.len())
+                }
+                Some(ShardCount::Fixed(k)) => format!(", sharded engine: {k} shards"),
+                None => String::new(),
+            },
         );
         let cloud = cfg.cloud_index();
         let ns = cfg.n_servers();
@@ -306,6 +331,17 @@ fn main() {
             } else {
                 inner
             };
+            // The engine entry point: sequential by default, or the
+            // sharded parallel engine under --shards (bit-identical — see
+            // rust/tests/sharded_identity.rs — so summary rows must match
+            // across shard counts).
+            let run = |source: &mut dyn ArrivalSource, s: &mut dyn Scheduler| match shards {
+                Some(count) => {
+                    let splan = topo.shard_plan(count);
+                    simulate_stream_faulted_sharded(&cfg, &plan, &splan, source, s)
+                }
+                None => simulate_stream_faulted(&cfg, &plan, source, s),
+            };
             let rep = if mix == "tiered" {
                 // One locality-shaped stream per tier, k-way merged: every
                 // scheduler still sees the identical merged sequence.
@@ -317,10 +353,10 @@ fn main() {
                     .map(|g| g as &mut dyn ArrivalSource)
                     .collect();
                 let mut source = MergedArrivals::new(sources);
-                simulate_stream_faulted(&cfg, &plan, &mut source, s.as_mut())
+                run(&mut source, s.as_mut())
             } else {
                 let mut source = WorkloadGen::new(&workload);
-                simulate_stream_faulted(&cfg, &plan, &mut source, s.as_mut())
+                run(&mut source, s.as_mut())
             };
             println!("{}", rep.summary_row());
             println!(

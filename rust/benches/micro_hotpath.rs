@@ -20,9 +20,9 @@ use perllm::bench::{bench_fn, render_json, JsonValue};
 use perllm::scheduler::csucb::CsUcb;
 use perllm::scheduler::{Action, ClusterView, Scheduler};
 use perllm::sim::cluster::{BandwidthMode, ClusterConfig, ClusterSim};
-use perllm::sim::engine::{simulate, simulate_stream};
+use perllm::sim::engine::{simulate, simulate_stream, simulate_stream_sharded};
 use perllm::sim::ps::PsQueue;
-use perllm::sim::topology::TopologyConfig;
+use perllm::sim::topology::{ShardCount, TopologyConfig};
 use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig, WorkloadGen};
 use perllm::workload::service::ServiceRequest;
 
@@ -228,6 +228,54 @@ fn main() {
         json.push(("tokenbatch_4000_events_per_sec", JsonValue::Num(events_per_sec)));
         json.push(("tokenbatch_4000_stale_ratio", JsonValue::Num(stale_ratio)));
         json.push(("tokenbatch_4000_success_rate", JsonValue::Num(success)));
+    }
+
+    // 8. Sharded parallel engine on the 100x fleet (600 servers): the same
+    //    50k-request streamed cs-ucb run at 1 shard, 4 shards, and auto
+    //    (= one shard per tier). Results are bit-identical at every count
+    //    (tests/sharded_identity.rs), so the ONLY signal here is events/s:
+    //    `sharded_100x_scaling_1_to_4` is the wall-clock speedup the
+    //    conservative link-lookahead sync actually delivers on this
+    //    machine, and the acceptance bar is >= 2x (see benches/README.md
+    //    for the lookahead derivation and the full 1M-request command).
+    {
+        let topo = TopologyConfig::edgeshard_100x("llama2-7b", BandwidthMode::Stable);
+        let cfg = topo.build();
+        let workload = WorkloadConfig::default()
+            .with_requests(50_000)
+            .with_arrivals(ArrivalProcess::Poisson {
+                rate: topo.scaled_rate(15.0),
+            })
+            .with_deadline_range(2.0, 6.0)
+            .with_seed(42);
+        let mut eps = [0.0f64; 3];
+        for (slot, (label, count)) in [
+            ("1", ShardCount::Fixed(1)),
+            ("4", ShardCount::Fixed(4)),
+            ("auto", ShardCount::Auto),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let splan = topo.shard_plan(count);
+            let mut events_per_sec = 0.0;
+            let name = format!("simulate cs-ucb 50k reqs (100x, {label} shards)");
+            rows.push(bench_fn(&name, 1, 3, || {
+                let mut s = CsUcb::with_defaults(cfg.n_servers());
+                let mut source = WorkloadGen::new(&workload);
+                let rep = simulate_stream_sharded(&cfg, &splan, &mut source, &mut s);
+                events_per_sec = rep.events_per_sec;
+                std::hint::black_box(rep.success_rate);
+            }));
+            println!("  100x sharded ({label}): DES {events_per_sec:.0} events/s");
+            eps[slot] = events_per_sec;
+        }
+        let scaling = if eps[0] > 0.0 { eps[1] / eps[0] } else { 0.0 };
+        println!("  100x sharded scaling 1 -> 4 shards: {scaling:.2}x");
+        json.push(("sharded_100x_50k_events_per_sec_1", JsonValue::Num(eps[0])));
+        json.push(("sharded_100x_50k_events_per_sec_4", JsonValue::Num(eps[1])));
+        json.push(("sharded_100x_50k_events_per_sec_auto", JsonValue::Num(eps[2])));
+        json.push(("sharded_100x_scaling_1_to_4", JsonValue::Num(scaling)));
     }
 
     println!("\n== L3 hot-path micro benches ==");

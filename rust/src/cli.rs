@@ -170,6 +170,12 @@ pub fn commands() -> Vec<CommandSpec> {
             .opt("model", "edge model deployment", Some("llama2-7b"))
             .opt("rate", "arrival rate req/s", Some("15"))
             .opt("seed", "rng seed", Some("42"))
+            .opt("topology", "paper|edgeshard-10x|edgeshard-100x", Some("paper"))
+            .opt(
+                "shards",
+                "DES engine shards: N or auto (omit = sequential engine)",
+                None,
+            )
             .flag("fluctuating", "±20% bandwidth fluctuation"),
         CommandSpec::new("version", "print version"),
     ]

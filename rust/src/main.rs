@@ -15,9 +15,10 @@ use perllm::runtime::{self, Artifacts, ModelEngine};
 use perllm::scheduler::{
     agod::Agod, csucb::CsUcb, fineinfer::FineInfer, rewardless::RewardlessGuidance, Scheduler,
 };
-use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
-use perllm::sim::engine::simulate_stream;
+use perllm::sim::cluster::BandwidthMode;
+use perllm::sim::engine::{simulate_stream, simulate_stream_sharded};
 use perllm::sim::server::ServerKind;
+use perllm::sim::{ShardCount, TopologyConfig};
 use perllm::util::rng::Rng;
 use perllm::workload::generator::{ArrivalProcess, WorkloadConfig, WorkloadGen};
 use perllm::workload::service::ServiceClass;
@@ -73,13 +74,29 @@ fn make_scheduler(name: &str, n_servers: usize, cloud: usize, seed: u64) -> Resu
 fn cmd_sim(p: &cli::Parsed) -> Result<()> {
     let n = p.usize_or("requests", 10_000)?;
     let model = p.str_or("model", "llama2-7b");
-    let rate = p.f64_or("rate", 15.0)?;
     let seed = p.u64_or("seed", 42)?;
+    let topology = p.str_or("topology", "paper");
     let mode = if p.flag("fluctuating") {
         BandwidthMode::Fluctuating
     } else {
         BandwidthMode::Stable
     };
+    let topo = TopologyConfig::by_name(&topology, &model, mode)
+        .ok_or_else(|| anyhow::anyhow!("unknown --topology {topology:?}"))?;
+    // Arrival rate scales with topology capacity unless pinned, so the
+    // offered load stays comparable across fleet sizes.
+    let rate = match p.get("rate") {
+        Some(r) => r.parse::<f64>().map_err(|_| anyhow::anyhow!("bad --rate {r:?}"))?,
+        None => topo.scaled_rate(15.0),
+    };
+    // `--shards` selects the sharded parallel engine (bit-identical to the
+    // sequential one at every count — pinned by tests/sharded_identity.rs).
+    let shards = p
+        .get("shards")
+        .map(|s| {
+            ShardCount::parse(s).ok_or_else(|| anyhow::anyhow!("bad --shards {s:?} (N or auto)"))
+        })
+        .transpose()?;
     // Streamed workload: each scheduler gets a fresh cursor over the same
     // seeded sequence, so nothing is materialized and the event heap stays
     // bounded at any --requests scale.
@@ -88,12 +105,26 @@ fn cmd_sim(p: &cli::Parsed) -> Result<()> {
         .with_arrivals(ArrivalProcess::Poisson { rate })
         .with_deadline_range(2.0, 6.0)
         .with_seed(seed);
-    let cfg = ClusterConfig::paper(&model, mode);
-    println!("perllm sim: {n} requests, edge model {model}, {mode:?} bandwidth, rate {rate}/s");
+    let cfg = topo.build();
+    println!(
+        "perllm sim: {n} requests, topology {topology} ({} servers), edge model {model}, \
+         {mode:?} bandwidth, rate {rate:.1}/s{}",
+        cfg.n_servers(),
+        match shards {
+            Some(c) => format!(", sharded engine ({c:?})"),
+            None => String::new(),
+        }
+    );
     for name in ["fineinfer", "agod", "rewardless", "cs-ucb"] {
         let mut s = make_scheduler(name, cfg.n_servers(), cfg.cloud_index(), seed)?;
         let mut source = WorkloadGen::new(&workload);
-        let rep = simulate_stream(&cfg, &mut source, s.as_mut());
+        let rep = match shards {
+            Some(count) => {
+                let splan = topo.shard_plan(count);
+                simulate_stream_sharded(&cfg, &splan, &mut source, s.as_mut())
+            }
+            None => simulate_stream(&cfg, &mut source, s.as_mut()),
+        };
         println!("{}", rep.summary_row());
     }
     Ok(())

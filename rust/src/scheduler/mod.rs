@@ -108,6 +108,15 @@ pub struct ServerView {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterView {
     pub now: f64,
+    /// View epoch: a monotone snapshot version stamped by the
+    /// [`ViewSource`] on every fill. Two fills with the same epoch are
+    /// the same snapshot; a larger epoch is a strictly later one. The
+    /// sharded engine's merge barrier (sim/shard.rs) relies on this
+    /// contract: every decision/feedback observes a fully merged,
+    /// epoch-stamped snapshot, never a torn mix of shard states.
+    /// Schedulers may read it for staleness bookkeeping but must not
+    /// assume consecutive integers.
+    pub epoch: u64,
     pub servers: Vec<ServerView>,
     pub weights: EnergyWeights,
     /// Incremental feasible-set hint: the indices of servers that can
@@ -129,6 +138,7 @@ impl Default for ClusterView {
     fn default() -> Self {
         ClusterView {
             now: 0.0,
+            epoch: 0,
             servers: Vec::new(),
             weights: EnergyWeights::default(),
             candidates: Vec::new(),
@@ -145,6 +155,7 @@ impl ClusterView {
     pub fn with_capacity(n: usize, weights: EnergyWeights) -> ClusterView {
         ClusterView {
             now: 0.0,
+            epoch: 0,
             servers: Vec::with_capacity(n),
             weights,
             candidates: Vec::new(),
@@ -417,9 +428,23 @@ impl From<Decision> for Action {
 /// one scheduler implementation run unchanged on either substrate with
 /// zero per-request allocation (callers own one scratch [`ClusterView`]
 /// and refill it per decision).
+///
+/// # Versioned-view contract (sharded engine)
+///
+/// Every fill must stamp [`ClusterView::epoch`] with a monotone
+/// non-decreasing snapshot version, and the snapshot must be
+/// *internally consistent*: all servers observed at the same simulated
+/// instant `out.now`. The sequential substrates satisfy this trivially
+/// (one thread, one clock). The sharded engine satisfies it by
+/// construction: shards park at a merge barrier, are advanced to the
+/// barrier time, and only then is the view assembled and stamped — so a
+/// scheduler can never observe one shard ahead of another. The identity
+/// test (`rust/tests/sharded_identity.rs`) pins that decisions taken
+/// under this contract are bit-identical to the sequential engine's.
 pub trait ViewSource {
     /// Fill `out` with the current cluster snapshot for `req`. Must fully
-    /// overwrite `out` (the buffer is reused across requests).
+    /// overwrite `out` (the buffer is reused across requests) and stamp
+    /// `out.epoch` per the versioned-view contract above.
     fn view_into(&self, req: &ServiceRequest, out: &mut ClusterView);
 }
 
@@ -495,6 +520,7 @@ mod tests {
             .collect();
         ClusterView {
             now: 0.0,
+            epoch: 0,
             servers,
             weights: EnergyWeights::default(),
             candidates: Vec::new(),

@@ -42,10 +42,11 @@ impl RewardlessGuidance {
         // as each server's live compute/bandwidth), but has no calibrated
         // queueing model and no reward learning — the adaptability gap the
         // paper's evaluation exposes.
-        // Compat deadline accessor: a request with no completion bound
-        // reads +inf — zero pressure, which is exactly what "no completion
-        // constraint" means to a risk term.
-        let pressure = sv.solo_time_est * (1.0 + 0.8 * sv.occupancy) / req.deadline();
+        // A request with no completion bound divides by +inf — zero
+        // pressure, which is exactly what "no completion constraint"
+        // means to a risk term.
+        let deadline = req.slo.completion.unwrap_or(f64::INFINITY);
+        let pressure = sv.solo_time_est * (1.0 + 0.8 * sv.occupancy) / deadline;
         // No constraint filter and no superlinear deadline aversion — a
         // preference prior trades time against energy linearly, which is
         // where it gives ground to CS-UCB's C1-C3 mechanism.

@@ -109,6 +109,61 @@ pub struct InFlight {
     pub work_s: f64,
 }
 
+/// Compute one server's scheduler-facing snapshot entry — the single
+/// shared pricing function behind every `ClusterView` fill. Extracted
+/// from [`ClusterSim::view_into_at`] so the sharded engine's per-shard
+/// view-slice fills (sim/shard.rs) run the *identical* float expressions
+/// in the identical order: bit-identical `ServerView`s are what make the
+/// sequential-vs-sharded decision streams comparable at all.
+///
+/// `observed` is `None` for ground-truth pricing (no health monitor) and
+/// `Some(rate)` for the lagged observed rate; the caller owns looking the
+/// rate up so shards can use their barrier-refreshed local copy.
+pub fn fill_server_view(
+    srv: &ServerSim,
+    link: &LinkSim,
+    fl: &InFlight,
+    observed: Option<f64>,
+    req: &ServiceRequest,
+) -> ServerView {
+    // lint: no-alloc per-server snapshot pricing on the decision hot path
+    let tx = link.predict_tx_time(req.payload_bytes);
+    // Without a health monitor the view prices ground truth (identity
+    // with every pre-fault run); with one, predictions use the *lagged*
+    // observed rate — a just-crashed server keeps quoting healthy
+    // predictions until the probe pipeline catches up.
+    let (service, observed_health) = match observed {
+        None => (srv.predict(req, fl.n, fl.work_s), 1.0),
+        Some(o) => (srv.predict_with_rate(req, fl.n, fl.work_s, o), o),
+    };
+    // Bandwidth the upload needs to finish inside a nominal 1-second
+    // window (paper C3's B_i).
+    let bw_demand = req.payload_bytes as f64 * 8.0;
+    let view = ServerView {
+        kind: srv.spec.kind,
+        predicted_time: tx + service.total_s,
+        // Honest first-token estimate from the service model (queue wait
+        // + stretched prefill), behind the same upload.
+        predicted_ttft: tx + service.ttft_s,
+        compute_headroom: srv.compute_headroom_with(fl.n),
+        compute_demand: ServerSpec::compute_demand(req),
+        bandwidth_headroom: link.bandwidth_headroom(),
+        bandwidth_demand: bw_demand,
+        tx_energy_est: link.spec.tx_energy(req.payload_bytes),
+        infer_energy_est: (srv.spec.p_infer - srv.spec.p_idle) * srv.spec.solo_work(req),
+        n_active: srv.n_active(),
+        n_waiting: srv.n_waiting(),
+        solo_time_est: link.spec.solo_time(req.payload_bytes) + srv.spec.solo_work(req),
+        // Raw occupancy (no in-flight bookkeeping): what an external
+        // observer without router state sees.
+        occupancy: (srv.n_active() + srv.n_waiting()) as f64
+            / (srv.model.slot_capacity() + srv.model.queue_capacity()) as f64,
+        observed_health,
+    };
+    // lint: end-no-alloc
+    view
+}
+
 /// Live cluster state: one ServerSim + one LinkSim per server.
 pub struct ClusterSim {
     pub servers: Vec<ServerSim>,
@@ -144,6 +199,12 @@ pub struct ClusterSim {
     /// same-instant calls (one per completion in a reap batch) early-out
     /// instead of touching every server again.
     advanced_at: SimTime,
+    /// Versioned-view counter: bumped on every snapshot fill so each
+    /// `ClusterView` carries a strictly increasing epoch (the
+    /// [`ViewSource`] contract). A `Cell` because `view_into` takes
+    /// `&self`; the simulation is single-owner, so interior mutability
+    /// here is purely an API-shape concession.
+    view_epoch: std::cell::Cell<u64>,
 }
 
 impl ClusterSim {
@@ -164,6 +225,7 @@ impl ClusterSim {
             admissible: vec![true; cfg.servers.len()],
             n_admissible: cfg.servers.len(),
             advanced_at: -1.0,
+            view_epoch: std::cell::Cell::new(0),
         }
     }
 
@@ -203,6 +265,13 @@ impl ClusterSim {
         self.n_admissible
     }
 
+    /// Raw admissibility flags, index-aligned with `servers`. The sharded
+    /// engine reads these out of each sub-cluster to rebuild the global
+    /// candidate set (`ClusterView::candidates`) at the merge barrier.
+    pub fn admissible_flags(&self) -> &[bool] {
+        &self.admissible
+    }
+
     /// Advance every server and link integrator to `now`. O(servers +
     /// links): each queue advance is a constant-time virtual-time bump, so
     /// this stays cheap even mid-congestion-collapse. Repeated calls at
@@ -239,6 +308,10 @@ impl ClusterSim {
     pub fn view_into_at(&self, req: &ServiceRequest, now: SimTime, out: &mut ClusterView) {
         // lint: no-alloc per-decision snapshot refill; `out` buffers amortize to cluster size
         out.now = now;
+        // Versioned-view contract: every fill is a fresh, strictly newer
+        // snapshot.
+        self.view_epoch.set(self.view_epoch.get() + 1);
+        out.epoch = self.view_epoch.get();
         out.weights = self.weights;
         out.servers.clear();
         out.servers.extend(
@@ -248,46 +321,8 @@ impl ClusterSim {
                 .zip(&self.in_flight)
                 .enumerate()
                 .map(|(i, ((srv, link), fl))| {
-                    let tx = link.predict_tx_time(req.payload_bytes);
-                    // Without a health monitor the view prices ground
-                    // truth (identity with every pre-fault run); with
-                    // one, predictions use the *lagged* observed rate —
-                    // a just-crashed server keeps quoting healthy
-                    // predictions until the probe pipeline catches up.
-                    let (service, observed_health) = match &self.health {
-                        None => (srv.predict(req, fl.n, fl.work_s), 1.0),
-                        Some(h) => {
-                            let o = h.observed(i);
-                            (srv.predict_with_rate(req, fl.n, fl.work_s, o), o)
-                        }
-                    };
-                    // Bandwidth the upload needs to finish inside a nominal
-                    // 1-second window (paper C3's B_i).
-                    let bw_demand = req.payload_bytes as f64 * 8.0;
-                    ServerView {
-                        kind: srv.spec.kind,
-                        predicted_time: tx + service.total_s,
-                        // Honest first-token estimate from the service
-                        // model (queue wait + stretched prefill), behind
-                        // the same upload.
-                        predicted_ttft: tx + service.ttft_s,
-                        compute_headroom: srv.compute_headroom_with(fl.n),
-                        compute_demand: ServerSpec::compute_demand(req),
-                        bandwidth_headroom: link.bandwidth_headroom(),
-                        bandwidth_demand: bw_demand,
-                        tx_energy_est: link.spec.tx_energy(req.payload_bytes),
-                        infer_energy_est: (srv.spec.p_infer - srv.spec.p_idle)
-                            * srv.spec.solo_work(req),
-                        n_active: srv.n_active(),
-                        n_waiting: srv.n_waiting(),
-                        solo_time_est: link.spec.solo_time(req.payload_bytes)
-                            + srv.spec.solo_work(req),
-                        // Raw occupancy (no in-flight bookkeeping): what an
-                        // external observer without router state sees.
-                        occupancy: (srv.n_active() + srv.n_waiting()) as f64
-                            / (srv.model.slot_capacity() + srv.model.queue_capacity()) as f64,
-                        observed_health,
-                    }
+                    let observed = self.health.as_ref().map(|h| h.observed(i));
+                    fill_server_view(srv, link, fl, observed, req)
                 }),
         );
         // Candidate pruning: when some servers are saturated (cannot admit
@@ -418,8 +453,53 @@ mod tests {
         let mut scratch = ClusterView::default();
         ViewSource::view_into(&sim, &req(), &mut scratch);
         assert_eq!(scratch.now, 2.5);
-        let direct = sim.view(&req(), 2.5);
+        let mut direct = sim.view(&req(), 2.5);
+        // Epochs are strictly increasing per fill; everything else in the
+        // two snapshots is identical.
+        assert!(direct.epoch > scratch.epoch);
+        direct.epoch = scratch.epoch;
         assert_eq!(scratch, direct);
+    }
+
+    /// Versioned-view contract: every fill stamps a strictly larger
+    /// epoch, whatever mix of entry points produced it.
+    #[test]
+    fn view_epochs_strictly_increase_across_fills() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let mut sim = ClusterSim::new(&cfg);
+        let mut scratch = ClusterView::default();
+        let mut last = 0u64;
+        for step in 0..5 {
+            sim.advance_all(step as f64 * 0.5);
+            ViewSource::view_into(&sim, &req(), &mut scratch);
+            assert!(scratch.epoch > last, "epoch stalled at step {step}");
+            last = scratch.epoch;
+        }
+        let owned = sim.view(&req(), 2.5);
+        assert!(owned.epoch > last);
+    }
+
+    /// The extracted per-server pricing helper is exactly the fill the
+    /// full snapshot performs — the bit-identity bridge the sharded
+    /// engine's view slices stand on.
+    #[test]
+    fn fill_server_view_matches_full_snapshot_entries() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let mut sim = ClusterSim::new(&cfg);
+        sim.servers[2].admit(9, &req(), 0.0);
+        sim.dispatch_in_flight(1, &req());
+        sim.advance_all(0.25);
+        let v = sim.view(&req(), 0.25);
+        for i in 0..sim.servers.len() {
+            let sv = fill_server_view(
+                &sim.servers[i],
+                &sim.links[i],
+                &sim.in_flight[i],
+                None,
+                &req(),
+            );
+            assert_eq!(sv, v.servers[i], "server {i} diverged");
+        }
     }
 
     #[test]

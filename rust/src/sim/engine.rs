@@ -18,14 +18,23 @@
 //! rate change bumps the generation and re-schedules, stale events are
 //! dropped on pop (sim/time.rs).
 
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::Instant;
 
 use super::cluster::{ClusterConfig, ClusterSim, Outage};
 use super::energy::EnergyBreakdown;
 use super::faults::{CrashPolicy, FaultAction, FaultPlan, HealthMonitor};
 use super::ps::PsJob;
+use super::shard::{
+    orch_stamp, worker, BoundaryOut, Cmd, CompletionRec, FailRec, Key, LandKind, Reply,
+    ShardFinish, ShardSim, ShardStatus,
+};
 use super::time::{EventQueue, SimTime};
-use crate::scheduler::{Action, ClusterView, FleetEvent, Scheduler, ShedReason, ViewSource};
+use super::topology::ShardPlan;
+use crate::scheduler::{
+    Action, ClusterView, FleetEvent, Scheduler, ServerView, ShedReason, ViewSource,
+};
 use crate::util::rng::Rng;
 use crate::util::stats::{Percentiles, Running};
 use crate::workload::service::{ServiceOutcome, ServiceRequest};
@@ -351,6 +360,23 @@ impl Default for ServerFault {
     }
 }
 
+/// Incident accounting feeding [`AvailabilityReport`], grouped so both
+/// engine substrates (the sequential [`Engine`] and the sharded
+/// orchestrator) share the exact counting rules and report assembly.
+#[derive(Debug, Default)]
+struct IncidentCounters {
+    incidents: u64,
+    down_servers: usize,
+    incident_first_at: Option<SimTime>,
+    incident_last_end: Option<SimTime>,
+    failed_in_flight: u64,
+    requeued_in_flight: u64,
+    leaves: u64,
+    joins: u64,
+    gate_sheds_at_incident: u64,
+    gate_sheds_at_recovery: Option<u64>,
+}
+
 pub struct Engine<'a> {
     cluster: ClusterSim,
     events: EventQueue<Ev>,
@@ -401,17 +427,8 @@ pub struct Engine<'a> {
     health_period: Option<f64>,
     /// Scratch ground-truth snapshot reused across health probes.
     health_snap: Vec<f64>,
-    // Incident accounting feeding `AvailabilityReport`.
-    incidents: u64,
-    down_servers: usize,
-    incident_first_at: Option<SimTime>,
-    incident_last_end: Option<SimTime>,
-    failed_in_flight: u64,
-    requeued_in_flight: u64,
-    leaves: u64,
-    joins: u64,
-    gate_sheds_at_incident: u64,
-    gate_sheds_at_recovery: Option<u64>,
+    /// Incident accounting feeding `AvailabilityReport`.
+    inc: IncidentCounters,
 }
 
 impl<'a> Engine<'a> {
@@ -488,16 +505,7 @@ impl<'a> Engine<'a> {
             crash_policy: plan.crash_policy,
             health_period,
             health_snap: Vec::with_capacity(n_servers),
-            incidents: 0,
-            down_servers: 0,
-            incident_first_at: None,
-            incident_last_end: None,
-            failed_in_flight: 0,
-            requeued_in_flight: 0,
-            leaves: 0,
-            joins: 0,
-            gate_sheds_at_incident: 0,
-            gate_sheds_at_recovery: None,
+            inc: IncidentCounters::default(),
         };
         engine.prefetch_arrival();
         engine
@@ -592,164 +600,31 @@ impl<'a> Engine<'a> {
         }
 
         let wall = t0.elapsed().as_secs_f64();
-        let mut proc = Running::new();
-        let mut pcts = Percentiles::new();
-        let mut ok = 0usize;
-        let mut late = 0usize;
-        let mut ttft_attainment = [Attainment::default(); 4];
-        let mut completion_attainment = [Attainment::default(); 4];
-        let (mut v_ttft, mut v_completion, mut v_energy) = (0usize, 0usize, 0usize);
-        for o in &self.outcomes {
-            if o.processing_time.is_finite() {
-                proc.push(o.processing_time);
-                pcts.push(o.processing_time);
-                if !o.success() {
-                    late += 1;
-                }
-            }
-            if o.success() {
-                ok += 1;
-            }
-            // Per-constraint attainment: judged on every outcome carrying
-            // the constraint — a shed/dropped/unfinished request missed
-            // whatever its contract promised.
-            if let Some(met) = o.ttft_met() {
-                ttft_attainment[o.class.index()].add(met);
-                v_ttft += !met as usize;
-            }
-            if let Some(met) = o.completion_met() {
-                completion_attainment[o.class.index()].add(met);
-                v_completion += !met as usize;
-            }
-            if let Some(met) = o.energy_met() {
-                v_energy += !met as usize;
-            }
-        }
-        // Shed requests are counted at shed time (policy sheds and queue
-        // admission failures), not inferred from outcome fields:
-        // horizon-unfinished requests also carry (tokens 0, infer 0) and
-        // used to be double-counted here.
-        let dropped = self.shed;
-        let first_arrival = self.first_arrival.unwrap_or(0.0);
-        let makespan = (end - first_arrival).max(1e-9);
-        let tokens = self.cluster.tokens_served();
-        let n = self.outcomes.len().max(1);
         let energy = self.cluster.energy();
-        let mut diagnostics = self.scheduler.diagnostics();
-        // Admission-gate wiring: surface the gate's door-shed counter as a
-        // first-class report field (stays 0 without a gate installed).
-        let gate_sheds = diagnostics
-            .iter()
-            .find_map(|(k, v)| (k == "gate_sheds").then_some(*v as u64))
-            .unwrap_or(0);
-        if self.bad_actions > 0 {
-            // Surface scheduler bugs (out-of-range targets) in the report
-            // instead of hiding them behind the fallback.
-            diagnostics.push(("engine_bad_actions".into(), self.bad_actions as f64));
-        }
-        let availability = if self.incidents > 0 || self.leaves > 0 || self.joins > 0 {
-            let start = self.incident_first_at.unwrap_or(f64::INFINITY);
-            // "Recovered" means the fleet is fully up at run end; a
-            // mid-run recovery followed by a still-open incident leaves
-            // the during-phase open-ended.
-            let end_rec = if self.down_servers == 0 {
-                self.incident_last_end.unwrap_or(f64::INFINITY)
-            } else {
-                f64::INFINITY
-            };
-            let mut attainment = [Attainment::default(); 3];
-            for o in &self.outcomes {
-                let ph = if o.completed_at < start {
-                    0
-                } else if o.completed_at < end_rec {
-                    1
-                } else {
-                    2
-                };
-                attainment[ph].add(o.success());
-            }
-            // Time to recover: first instant the cumulative post-recovery
-            // success rate (>= 20 outcomes) reaches 90 % of the
-            // pre-incident rate. Outcomes are pushed in completion order,
-            // so this pass is chronological.
-            let pre_rate = attainment[0].rate();
-            let mut ttr = f64::INFINITY;
-            if end_rec.is_finite() && pre_rate.is_finite() {
-                let (mut met, mut total) = (0usize, 0usize);
-                for o in &self.outcomes {
-                    if o.completed_at < end_rec {
-                        continue;
-                    }
-                    total += 1;
-                    met += o.success() as usize;
-                    if total >= 20 && met as f64 / total as f64 >= 0.9 * pre_rate {
-                        ttr = o.completed_at - end_rec;
-                        break;
-                    }
-                }
-            }
-            let (g1, g2) = match self.incident_first_at {
-                // Membership churn only: every gate shed is "pre".
-                None => (gate_sheds, gate_sheds),
-                Some(_) => {
-                    let g1 = self.gate_sheds_at_incident.min(gate_sheds);
-                    let g2 = self
-                        .gate_sheds_at_recovery
-                        .unwrap_or(gate_sheds)
-                        .clamp(g1, gate_sheds);
-                    (g1, g2)
-                }
-            };
-            Some(AvailabilityReport {
-                incidents: self.incidents,
-                incident_start_s: start,
-                incident_end_s: end_rec,
-                failed_in_flight: self.failed_in_flight,
-                requeued_in_flight: self.requeued_in_flight,
-                leaves: self.leaves,
-                joins: self.joins,
-                attainment,
-                time_to_recover_s: ttr,
-                gate_sheds_by_phase: [g1, g2 - g1, gate_sheds - g2],
-            })
-        } else {
-            None
-        };
-        RunReport {
-            scheduler: self.scheduler.name(),
-            // Zero successes have no per-success energy: infinity, not
-            // "total energy relabeled" (`summary_row` renders it as "—").
-            energy_per_success_j: if ok == 0 {
-                f64::INFINITY
-            } else {
-                energy.total_j() / ok as f64
-            },
-            energy,
-            makespan_s: makespan,
-            throughput_tok_s: tokens as f64 / makespan,
-            success_rate: ok as f64 / n as f64,
-            mean_processing_s: proc.mean(),
-            p95_processing_s: pcts.p95(),
-            unfinished,
-            dropped,
-            dropped_by_policy: self.policy_shed,
-            late,
-            ttft_attainment,
-            completion_attainment,
-            slo_ttft_violations: v_ttft,
-            slo_completion_violations: v_completion,
-            slo_energy_violations: v_energy,
-            gate_sheds,
-            availability,
-            diagnostics,
-            wall_s: wall,
-            events_processed: self.events.processed(),
-            events_per_sec: self.events.processed() as f64 / wall.max(1e-9),
-            stale_events: self.events.stale(),
+        let tokens = self.cluster.tokens_served();
+        let diagnostics = self.scheduler.diagnostics();
+        let q = QueueStats {
+            processed: self.events.processed(),
+            stale: self.events.stale(),
             stale_ratio: self.events.stale_ratio(),
-            peak_event_queue_len: self.events.peak_len(),
-            outcomes: self.outcomes,
-        }
+            peak: self.events.peak_len(),
+        };
+        assemble_report(
+            self.scheduler.name(),
+            self.outcomes,
+            energy,
+            end,
+            self.first_arrival.unwrap_or(0.0),
+            tokens,
+            unfinished,
+            self.shed,
+            self.policy_shed,
+            self.bad_actions,
+            diagnostics,
+            &self.inc,
+            wall,
+            q,
+        )
     }
 
     fn handle(&mut self, now: SimTime, ev: Ev) {
@@ -830,10 +705,10 @@ impl<'a> Engine<'a> {
                 if self.fault[server].crash > 0 || !self.cluster.accepting[server] {
                     self.cluster.servers[server].advance_to(now);
                     if self.fault[server].crash > 0 && self.crash_policy == CrashPolicy::Requeue {
-                        self.requeued_in_flight += 1;
+                        self.inc.requeued_in_flight += 1;
                         self.requeue(now, svc);
                     } else {
-                        self.failed_in_flight += 1;
+                        self.inc.failed_in_flight += 1;
                         self.fail(now, svc, server);
                     }
                     return;
@@ -968,13 +843,13 @@ impl<'a> Engine<'a> {
             FaultAction::Leave { server } => {
                 self.cluster.accepting[server] = false;
                 self.cluster.refresh_admissibility(server);
-                self.leaves += 1;
+                self.inc.leaves += 1;
                 self.scheduler.fleet_event(&FleetEvent::Left { server }, now);
             }
             FaultAction::Join { server } => {
                 self.cluster.accepting[server] = true;
                 self.cluster.refresh_admissibility(server);
-                self.joins += 1;
+                self.inc.joins += 1;
                 self.scheduler.fleet_event(&FleetEvent::Joined { server }, now);
             }
         }
@@ -1004,12 +879,12 @@ impl<'a> Engine<'a> {
             self.crash_in_flight(now, server);
         }
         if self.fault[server].down == 1 {
-            self.incidents += 1;
-            if self.down_servers == 0 && self.incident_first_at.is_none() {
-                self.incident_first_at = Some(now);
-                self.gate_sheds_at_incident = self.current_gate_sheds();
+            self.inc.incidents += 1;
+            if self.inc.down_servers == 0 && self.inc.incident_first_at.is_none() {
+                self.inc.incident_first_at = Some(now);
+                self.inc.gate_sheds_at_incident = self.current_gate_sheds();
             }
-            self.down_servers += 1;
+            self.inc.down_servers += 1;
             self.scheduler.fleet_event(&FleetEvent::Down { server }, now);
         }
     }
@@ -1029,10 +904,10 @@ impl<'a> Engine<'a> {
         self.apply_rate(server);
         self.reschedule_server(server);
         if self.fault[server].down == 0 {
-            self.down_servers = self.down_servers.saturating_sub(1);
-            if self.down_servers == 0 {
-                self.incident_last_end = Some(now);
-                self.gate_sheds_at_recovery = Some(self.current_gate_sheds());
+            self.inc.down_servers = self.inc.down_servers.saturating_sub(1);
+            if self.inc.down_servers == 0 {
+                self.inc.incident_last_end = Some(now);
+                self.inc.gate_sheds_at_recovery = Some(self.current_gate_sheds());
             }
             self.scheduler.fleet_event(&FleetEvent::Up { server }, now);
         }
@@ -1055,11 +930,11 @@ impl<'a> Engine<'a> {
         for i in victims {
             match self.crash_policy {
                 CrashPolicy::Fail => {
-                    self.failed_in_flight += 1;
+                    self.inc.failed_in_flight += 1;
                     self.fail(now, i, server);
                 }
                 CrashPolicy::Requeue => {
-                    self.requeued_in_flight += 1;
+                    self.inc.requeued_in_flight += 1;
                     self.requeue(now, i);
                 }
             }
@@ -1305,6 +1180,193 @@ impl<'a> Engine<'a> {
     }
 }
 
+/// Event-queue accounting for one run, merged across however many queues
+/// the substrate used (one for the sequential engine; one global + one
+/// per shard for the sharded engine).
+struct QueueStats {
+    processed: u64,
+    stale: u64,
+    stale_ratio: f64,
+    peak: usize,
+}
+
+/// Fold outcomes and accounting into a [`RunReport`] — pure code motion
+/// from the sequential `run()` tail, shared with the sharded engine so
+/// both substrates assemble their reports through byte-identical
+/// arithmetic (same fold orders, same edge-case handling).
+#[allow(clippy::too_many_arguments)]
+fn assemble_report(
+    name: &'static str,
+    outcomes: Vec<ServiceOutcome>,
+    energy: EnergyBreakdown,
+    end: SimTime,
+    first_arrival: f64,
+    tokens: u64,
+    unfinished: usize,
+    shed: usize,
+    policy_shed: usize,
+    bad_actions: u64,
+    mut diagnostics: Vec<(String, f64)>,
+    inc: &IncidentCounters,
+    wall: f64,
+    q: QueueStats,
+) -> RunReport {
+    let mut proc = Running::new();
+    let mut pcts = Percentiles::new();
+    let mut ok = 0usize;
+    let mut late = 0usize;
+    let mut ttft_attainment = [Attainment::default(); 4];
+    let mut completion_attainment = [Attainment::default(); 4];
+    let (mut v_ttft, mut v_completion, mut v_energy) = (0usize, 0usize, 0usize);
+    for o in &outcomes {
+        if o.processing_time.is_finite() {
+            proc.push(o.processing_time);
+            pcts.push(o.processing_time);
+            if !o.success() {
+                late += 1;
+            }
+        }
+        if o.success() {
+            ok += 1;
+        }
+        // Per-constraint attainment: judged on every outcome carrying
+        // the constraint — a shed/dropped/unfinished request missed
+        // whatever its contract promised.
+        if let Some(met) = o.ttft_met() {
+            ttft_attainment[o.class.index()].add(met);
+            v_ttft += !met as usize;
+        }
+        if let Some(met) = o.completion_met() {
+            completion_attainment[o.class.index()].add(met);
+            v_completion += !met as usize;
+        }
+        if let Some(met) = o.energy_met() {
+            v_energy += !met as usize;
+        }
+    }
+    // Shed requests are counted at shed time (policy sheds and queue
+    // admission failures), not inferred from outcome fields:
+    // horizon-unfinished requests also carry (tokens 0, infer 0) and
+    // used to be double-counted here.
+    let dropped = shed;
+    let makespan = (end - first_arrival).max(1e-9);
+    let n = outcomes.len().max(1);
+    // Admission-gate wiring: surface the gate's door-shed counter as a
+    // first-class report field (stays 0 without a gate installed).
+    let gate_sheds = diagnostics
+        .iter()
+        .find_map(|(k, v)| (k == "gate_sheds").then_some(*v as u64))
+        .unwrap_or(0);
+    if bad_actions > 0 {
+        // Surface scheduler bugs (out-of-range targets) in the report
+        // instead of hiding them behind the fallback.
+        diagnostics.push(("engine_bad_actions".into(), bad_actions as f64));
+    }
+    let availability = if inc.incidents > 0 || inc.leaves > 0 || inc.joins > 0 {
+        let start = inc.incident_first_at.unwrap_or(f64::INFINITY);
+        // "Recovered" means the fleet is fully up at run end; a
+        // mid-run recovery followed by a still-open incident leaves
+        // the during-phase open-ended.
+        let end_rec = if inc.down_servers == 0 {
+            inc.incident_last_end.unwrap_or(f64::INFINITY)
+        } else {
+            f64::INFINITY
+        };
+        let mut attainment = [Attainment::default(); 3];
+        for o in &outcomes {
+            let ph = if o.completed_at < start {
+                0
+            } else if o.completed_at < end_rec {
+                1
+            } else {
+                2
+            };
+            attainment[ph].add(o.success());
+        }
+        // Time to recover: first instant the cumulative post-recovery
+        // success rate (>= 20 outcomes) reaches 90 % of the
+        // pre-incident rate. Outcomes are pushed in completion order,
+        // so this pass is chronological.
+        let pre_rate = attainment[0].rate();
+        let mut ttr = f64::INFINITY;
+        if end_rec.is_finite() && pre_rate.is_finite() {
+            let (mut met, mut total) = (0usize, 0usize);
+            for o in &outcomes {
+                if o.completed_at < end_rec {
+                    continue;
+                }
+                total += 1;
+                met += o.success() as usize;
+                if total >= 20 && met as f64 / total as f64 >= 0.9 * pre_rate {
+                    ttr = o.completed_at - end_rec;
+                    break;
+                }
+            }
+        }
+        let (g1, g2) = match inc.incident_first_at {
+            // Membership churn only: every gate shed is "pre".
+            None => (gate_sheds, gate_sheds),
+            Some(_) => {
+                let g1 = inc.gate_sheds_at_incident.min(gate_sheds);
+                let g2 = inc
+                    .gate_sheds_at_recovery
+                    .unwrap_or(gate_sheds)
+                    .clamp(g1, gate_sheds);
+                (g1, g2)
+            }
+        };
+        Some(AvailabilityReport {
+            incidents: inc.incidents,
+            incident_start_s: start,
+            incident_end_s: end_rec,
+            failed_in_flight: inc.failed_in_flight,
+            requeued_in_flight: inc.requeued_in_flight,
+            leaves: inc.leaves,
+            joins: inc.joins,
+            attainment,
+            time_to_recover_s: ttr,
+            gate_sheds_by_phase: [g1, g2 - g1, gate_sheds - g2],
+        })
+    } else {
+        None
+    };
+    RunReport {
+        scheduler: name,
+        // Zero successes have no per-success energy: infinity, not
+        // "total energy relabeled" (`summary_row` renders it as "—").
+        energy_per_success_j: if ok == 0 {
+            f64::INFINITY
+        } else {
+            energy.total_j() / ok as f64
+        },
+        energy,
+        makespan_s: makespan,
+        throughput_tok_s: tokens as f64 / makespan,
+        success_rate: ok as f64 / n as f64,
+        mean_processing_s: proc.mean(),
+        p95_processing_s: pcts.p95(),
+        unfinished,
+        dropped,
+        dropped_by_policy: policy_shed,
+        late,
+        ttft_attainment,
+        completion_attainment,
+        slo_ttft_violations: v_ttft,
+        slo_completion_violations: v_completion,
+        slo_energy_violations: v_energy,
+        gate_sheds,
+        availability,
+        diagnostics,
+        wall_s: wall,
+        events_processed: q.processed,
+        events_per_sec: q.processed as f64 / wall.max(1e-9),
+        stale_events: q.stale,
+        stale_ratio: q.stale_ratio,
+        peak_event_queue_len: q.peak,
+        outcomes,
+    }
+}
+
 /// Convenience: run one (config, trace, scheduler) combination from an
 /// in-memory trace. The trace is streamed through a [`TraceSource`], so
 /// even this path keeps the event heap bounded.
@@ -1352,6 +1414,1062 @@ pub fn simulate_stream_faulted(
     scheduler: &mut dyn Scheduler,
 ) -> RunReport {
     Engine::new_with_faults(cfg, source, scheduler, plan).run()
+}
+
+// ---------------------------------------------------------------------------
+// Sharded parallel engine. The shard side (per-tier worker state machine)
+// and the synchronization-protocol documentation live in sim/shard.rs;
+// this section is the orchestrator: the global calendar, the settle loop,
+// and the merge-barrier handlers that mirror the sequential `handle()`
+// arms one for one.
+// ---------------------------------------------------------------------------
+
+/// Orchestrator-owned events: everything that touches the scheduler or
+/// spans shards. Pure physics events (`LinkDone`/`ServerDone`/
+/// `ComputeArrive`/`FluctTick`) live in the shard-local queues.
+#[derive(Debug, Clone, Copy)]
+enum GlobalEv {
+    /// The prefetched request arrives at the router (at most one pending).
+    Arrival,
+    /// Deferred dispatch of service id to (global) server.
+    Dispatch { svc: usize, server: usize },
+    OutageStart { server: usize },
+    OutageEnd { server: usize },
+    /// Replay one lowered fault-plan action (global indices).
+    Fault { action: FaultAction },
+    /// Probe ground-truth health across all shards; re-arms itself.
+    HealthProbe,
+}
+
+/// Orchestrator-side request state. Flow timing (dispatch/upload/compute
+/// instants) lives on the owning shard; the orchestrator keeps only the
+/// scheduling phase plus what the horizon-stranded outcome pass needs.
+struct GSvc {
+    req: ServiceRequest,
+    /// Global server of the last dispatch decision (`usize::MAX` while
+    /// pending, mirroring the sequential `SvcState`).
+    server: usize,
+    phase: Phase,
+    /// Mirror of the sequential `SvcState::tx_energy_j`: recomputed at
+    /// every dispatch from the link spec (a pure function of the payload,
+    /// so float-identical to the shard's own stamp) and deliberately NOT
+    /// reset on requeue — a horizon-stranded requeued request still
+    /// reports the energy of its last upload.
+    tx_energy_j: f64,
+}
+
+/// One worker thread's command/reply endpoints plus its server range.
+struct ShardHandle {
+    tx: SyncSender<Cmd>,
+    rx: Receiver<Reply>,
+    lo: usize,
+    hi: usize,
+}
+
+impl ShardHandle {
+    fn send(&self, cmd: Cmd) {
+        // lint: allow(p1) a dead worker already panicked with the root cause; propagate
+        self.tx.send(cmd).expect("shard worker hung up");
+    }
+
+    fn recv(&self) -> Reply {
+        // lint: allow(p1) a dead worker already panicked with the root cause; propagate
+        self.rx.recv().expect("shard worker hung up")
+    }
+}
+
+/// Re-arm ranks start above every construction stamp (construction uses
+/// one shared counter < 2^20), so first-period ticks keep construction
+/// (link) order and re-armed ticks order by draw sequence — exactly the
+/// sequential queue's push-sequence tie-break.
+const FLUCT_REARM_RANK_BASE: u64 = 1 << 32;
+
+/// Orchestrator-side replay of the sequential engine's single bandwidth-
+/// fluctuation stream. The sequential engine draws one uniform per
+/// `FluctTick` in event-pop order from the engine RNG; shards own no RNG,
+/// so this calendar re-enacts that exact pop order (time, then a rank
+/// mirroring the sequential tie-break) and ships each tick's multiplier
+/// to the owning shard ahead of the grant that will execute it.
+struct FluctCal {
+    rng: Rng,
+    /// `(Key(tick time, rank), global link)` min-heap.
+    heap: BinaryHeap<std::cmp::Reverse<(Key, usize)>>,
+    next_rank: u64,
+    amp: Vec<f64>,
+    period: Vec<f64>,
+    /// Global link -> (shard, local link).
+    owner: Vec<(usize, u32)>,
+    /// Drawn-but-unshipped `(local link, multiplier)` values per shard;
+    /// buffers recycle through the `Grant`/`Granted` round trip.
+    out: Vec<Vec<(u32, f64)>>,
+}
+
+impl FluctCal {
+    /// Draw every tick with time <= `t` in sequential pop order.
+    /// Time-inclusive on purpose: a grant limit at a tick's exact time may
+    /// admit it (stamp tie-break), and overshooting merely buffers values
+    /// early — the draw order, hence every multiplier, is unchanged.
+    fn draw_until(&mut self, t: SimTime) {
+        while let Some(&std::cmp::Reverse((k, g))) = self.heap.peek() {
+            if k.0 > t {
+                break;
+            }
+            self.heap.pop();
+            let a = self.amp[g];
+            let m = self.rng.uniform(1.0 - a, 1.0 + a);
+            let (s, local) = self.owner[g];
+            self.out[s].push((local, m));
+            self.heap
+                .push(std::cmp::Reverse((Key(k.0 + self.period[g], self.next_rank), g)));
+            self.next_rank += 1;
+        }
+    }
+}
+
+/// The conservative-lookahead orchestrator: drives N shard workers from
+/// the calling thread, interleaving local grants with merge barriers so
+/// that the merged run is bit-identical to the sequential engine on the
+/// same inputs (tests/sharded_identity.rs pins it at every shard count).
+struct ShardedEngine<'a> {
+    cfg: &'a ClusterConfig,
+    shards: Vec<ShardHandle>,
+    /// Latest status per shard; refreshed by every queue-changing reply.
+    statuses: Vec<ShardStatus>,
+    global: EventQueue<GlobalEv>,
+    source: &'a mut dyn ArrivalSource,
+    scheduler: &'a mut dyn Scheduler,
+    fluct: FluctCal,
+    svc: Vec<GSvc>,
+    pending_arrival: Option<ServiceRequest>,
+    outcomes: Vec<ServiceOutcome>,
+    in_flight: usize,
+    first_arrival: Option<SimTime>,
+    last_arrival: SimTime,
+    horizon: SimTime,
+    shed: usize,
+    policy_shed: usize,
+    bad_actions: u64,
+    /// Scratch global snapshot assembled from per-shard slices.
+    view: ClusterView,
+    /// Mirror of the sequential `ClusterSim`'s view-epoch counter: bumped
+    /// exactly once per snapshot fill (same call sites), so schedulers
+    /// observe identical version numbers under both substrates.
+    view_epoch: u64,
+    /// Recycled per-shard (views, admissibility) buffers.
+    view_bufs: Vec<(Vec<ServerView>, Vec<bool>)>,
+    health: Option<HealthMonitor>,
+    health_period: Option<f64>,
+    health_snap: Vec<f64>,
+    health_bufs: Vec<Vec<f64>>,
+    obs_bufs: Vec<Vec<f64>>,
+    crash_policy: CrashPolicy,
+    inc: IncidentCounters,
+    /// Merge-barrier epoch: bumped before every barrier execution. Every
+    /// runtime stamp is `(epoch << 32) | counter` (see sim/shard.rs), so
+    /// events pushed at barrier N sort after everything epoch N-1 pushed
+    /// at the same float time — the sequential push-order tie-break.
+    epoch: u64,
+    /// Orchestrator stamp counter within the current epoch. Starts at the
+    /// construction counter (epoch 0 continues the seeding sequence) and
+    /// resets to 0 at each barrier.
+    orch_k: u64,
+    /// Time of the last executed barrier — the sharded equivalent of the
+    /// sequential queue clock for snapshot stamps.
+    clock: SimTime,
+    /// Set when the next event sits past the horizon: the sequential
+    /// engine pops that event (advancing its clock) before breaking, so
+    /// its time is the run-end clock.
+    past_horizon: Option<SimTime>,
+}
+
+impl<'a> ShardedEngine<'a> {
+    fn next_stamp(&mut self) -> u64 {
+        let s = orch_stamp(self.epoch, self.orch_k);
+        self.orch_k += 1;
+        s
+    }
+
+    /// Sequential `prefetch_arrival`, stamped.
+    fn prefetch_arrival(&mut self) {
+        match self.source.next_arrival() {
+            Some(r) => {
+                debug_assert!(
+                    r.arrival >= self.last_arrival,
+                    "ArrivalSource yielded out-of-order arrival {} after {}",
+                    r.arrival,
+                    self.last_arrival
+                );
+                let stamp = self.next_stamp();
+                self.global.push_at_stamped(r.arrival, stamp, GlobalEv::Arrival);
+                self.pending_arrival = Some(r);
+            }
+            None => {
+                self.horizon = self.last_arrival + HORIZON_SLACK_S;
+            }
+        }
+    }
+
+    fn shard_of(&self, server: usize) -> usize {
+        self.shards
+            .iter()
+            .position(|h| h.lo <= server && server < h.hi)
+            // lint: allow(p1) shard ranges partition [0, n_servers) by construction
+            .expect("server inside the shard plan")
+    }
+
+    fn run(mut self, t0: Instant) -> RunReport {
+        while self.in_flight > 0 || self.pending_arrival.is_some() {
+            self.settle();
+            // The globally minimal revealed event: the next merge barrier.
+            let mut min: Option<(Key, Option<usize>)> =
+                self.global.peek().map(|(t, s, _)| (Key(t, s), None));
+            for (s, st) in self.statuses.iter().enumerate() {
+                if let Some((k, _)) = st.head {
+                    if min.map_or(true, |(m, _)| k < m) {
+                        min = Some((k, Some(s)));
+                    }
+                }
+            }
+            let Some((key, owner)) = min else {
+                // Every queue drained with work notionally in flight: the
+                // sequential engine breaks the same way (pop fails).
+                break;
+            };
+            if key.0 > self.horizon {
+                self.past_horizon = Some(key.0);
+                break;
+            }
+            self.epoch += 1;
+            self.orch_k = 0;
+            self.clock = key.0;
+            match owner {
+                None => {
+                    if let Some((now, ev)) = self.global.pop() {
+                        self.handle_global(now, ev);
+                    }
+                }
+                Some(s) => {
+                    if self.statuses[s].head.is_some_and(|(_, b)| b) {
+                        self.exec_boundary(s, key.0);
+                    } else {
+                        // Settle only stops at boundaries, so a stranded
+                        // non-boundary head here means a zero-lookahead
+                        // time tie pinned it at another shard's bound:
+                        // push exactly that one event through.
+                        self.grant_one(s, key);
+                    }
+                }
+            }
+        }
+        self.finish(t0)
+    }
+
+    /// Conservative-lookahead settle loop: repeatedly grant every shard
+    /// the window strictly below the other shards' barrier bounds (and
+    /// the global calendar head, and the horizon) until no shard can
+    /// reveal anything earlier — at which point the minimal revealed
+    /// event is provably the global next barrier.
+    fn settle(&mut self) {
+        let horizon_cap = Key(self.horizon, u64::MAX);
+        let mut granted: Vec<(usize, Key)> = Vec::new();
+        loop {
+            let gkey = self.global.peek().map(|(t, s, _)| Key(t, s));
+            granted.clear();
+            for s in 0..self.shards.len() {
+                let Some((hk, boundary)) = self.statuses[s].head else {
+                    continue;
+                };
+                if boundary {
+                    continue;
+                }
+                let mut limit = horizon_cap;
+                if let Some(g) = gkey {
+                    limit = limit.min(g);
+                }
+                for (j, st) in self.statuses.iter().enumerate() {
+                    if j != s {
+                        if let Some(b) = st.bound {
+                            limit = limit.min(b);
+                        }
+                    }
+                }
+                if hk < limit {
+                    granted.push((s, limit));
+                }
+            }
+            if granted.is_empty() {
+                return;
+            }
+            // Pre-draw fluctuation multipliers up to the furthest grant so
+            // every tick inside any window ships with its grant.
+            let max_t = granted
+                .iter()
+                .fold(f64::NEG_INFINITY, |m, &(_, l)| m.max(l.0));
+            self.fluct.draw_until(max_t);
+            for &(s, limit) in granted.iter() {
+                let fluct = std::mem::take(&mut self.fluct.out[s]);
+                self.shards[s].send(Cmd::Grant {
+                    limit,
+                    epoch: self.epoch,
+                    fluct,
+                });
+            }
+            for &(s, _) in granted.iter() {
+                match self.shards[s].recv() {
+                    Reply::Granted { status, fluct } => {
+                        self.statuses[s] = status;
+                        self.fluct.out[s] = fluct;
+                    }
+                    // lint: allow(p1) protocol violation is unrecoverable
+                    other => panic!("expected Granted, got {other:?}"),
+                }
+            }
+        }
+    }
+
+    /// Push exactly one stranded head event through shard `s` (the
+    /// zero-lookahead corner: a non-boundary head tied with another
+    /// shard's bound at the same instant, which settle will never grant).
+    fn grant_one(&mut self, s: usize, key: Key) {
+        self.fluct.draw_until(key.0);
+        let fluct = std::mem::take(&mut self.fluct.out[s]);
+        self.shards[s].send(Cmd::Grant {
+            limit: Key(key.0, key.1.saturating_add(1)),
+            epoch: self.epoch,
+            fluct,
+        });
+        match self.shards[s].recv() {
+            Reply::Granted { status, fluct } => {
+                self.statuses[s] = status;
+                self.fluct.out[s] = fluct;
+            }
+            // lint: allow(p1) protocol violation is unrecoverable
+            other => panic!("expected Granted, got {other:?}"),
+        }
+    }
+
+    /// Sequential `ClusterSim::advance_all`, broadcast. The shard side
+    /// early-outs on a same-instant repeat exactly like the sequential
+    /// cluster, so back-to-back barrier calls stay cheap.
+    fn advance_all(&mut self, now: SimTime) {
+        for h in &self.shards {
+            h.send(Cmd::AdvanceTo { now });
+        }
+        for h in &self.shards {
+            match h.recv() {
+                Reply::Advanced => {}
+                // lint: allow(p1) protocol violation is unrecoverable
+                other => panic!("expected Advanced, got {other:?}"),
+            }
+        }
+    }
+
+    /// Rebuild the global scheduler snapshot from per-shard slices — the
+    /// merge-barrier `view_into`. Shards fill their slices concurrently;
+    /// the merge is in shard (= global server) order and the epoch stamp
+    /// advances exactly once per fill, preserving the sequential
+    /// versioned-view contract.
+    fn fill_view(&mut self, req: &ServiceRequest) {
+        for s in 0..self.shards.len() {
+            let (views, admissible) = std::mem::take(&mut self.view_bufs[s]);
+            self.shards[s].send(Cmd::FillView {
+                req: req.clone(),
+                views,
+                admissible,
+            });
+        }
+        self.view.now = self.clock;
+        self.view_epoch += 1;
+        self.view.epoch = self.view_epoch;
+        self.view.weights = self.cfg.weights;
+        self.view.servers.clear();
+        self.view.candidates.clear();
+        let mut total_admissible = 0usize;
+        for s in 0..self.shards.len() {
+            match self.shards[s].recv() {
+                Reply::View {
+                    mut views,
+                    admissible,
+                    n_admissible,
+                } => {
+                    self.view.servers.append(&mut views);
+                    total_admissible += n_admissible;
+                    self.view_bufs[s] = (views, admissible);
+                }
+                // lint: allow(p1) protocol violation is unrecoverable
+                other => panic!("expected View, got {other:?}"),
+            }
+        }
+        // Same sparsity rule as the sequential fill: materialize the
+        // candidate list only when someone is inadmissible.
+        if total_admissible < self.view.servers.len() {
+            for s in 0..self.shards.len() {
+                let lo = self.shards[s].lo;
+                for (i, &ok) in self.view_bufs[s].1.iter().enumerate() {
+                    if ok {
+                        self.view.candidates.push((lo + i) as u32);
+                    }
+                }
+            }
+        }
+    }
+
+    fn handle_global(&mut self, now: SimTime, ev: GlobalEv) {
+        match ev {
+            GlobalEv::Arrival => {
+                let Some(req) = self.pending_arrival.take() else {
+                    log::error!("Arrival event with no pending request; dropping event");
+                    return;
+                };
+                if self.first_arrival.is_none() {
+                    self.first_arrival = Some(req.arrival);
+                }
+                self.last_arrival = req.arrival;
+                self.in_flight += 1;
+                self.prefetch_arrival();
+                self.advance_all(now);
+                self.fill_view(&req);
+                let action = self.scheduler.decide(&req, &self.view);
+                let idx = self.svc.len();
+                self.svc.push(GSvc {
+                    req,
+                    server: usize::MAX,
+                    phase: Phase::Pending,
+                    tx_energy_j: 0.0,
+                });
+                self.act_on(now, idx, action);
+            }
+            GlobalEv::Dispatch { svc, server } => self.dispatch(now, svc, server),
+            GlobalEv::OutageStart { server } => {
+                self.apply_fault(now, FaultAction::Down { server, crash: false })
+            }
+            GlobalEv::OutageEnd { server } => {
+                self.apply_fault(now, FaultAction::Up { server, crash: false })
+            }
+            GlobalEv::Fault { action } => self.apply_fault(now, action),
+            GlobalEv::HealthProbe => self.health_probe(now),
+        }
+    }
+
+    /// Sequential `act_on`, with deferred dispatches stamped into the
+    /// global calendar.
+    fn act_on(&mut self, now: SimTime, idx: usize, action: Action) {
+        match action {
+            Action::Assign { server } => {
+                let server = self.checked_server(idx, server);
+                self.svc[idx].server = server;
+                self.dispatch(now, idx, server);
+            }
+            Action::Defer { server, delay_s } => {
+                let server = self.checked_server(idx, server);
+                self.svc[idx].server = server;
+                if delay_s.is_finite() && delay_s > 0.0 {
+                    let stamp = self.next_stamp();
+                    self.global
+                        .push_at_stamped(now + delay_s, stamp, GlobalEv::Dispatch { svc: idx, server });
+                } else {
+                    self.dispatch(now, idx, server);
+                }
+            }
+            Action::Shed { reason } => self.shed_at_decision(now, idx, reason),
+        }
+    }
+
+    fn checked_server(&mut self, idx: usize, server: usize) -> usize {
+        if server < self.cfg.servers.len() {
+            return server;
+        }
+        self.bad_actions += 1;
+        log::warn!(
+            "scheduler {:?} chose out-of-range server {server} (cluster has {}); \
+             falling back to least-violating",
+            self.scheduler.name(),
+            self.cfg.servers.len()
+        );
+        self.view.least_violating(&self.svc[idx].req)
+    }
+
+    /// Sequential `dispatch`: the upload itself starts shard-side; the
+    /// orchestrator mirrors the phase flip and the (pure-function) upload
+    /// energy stamp for the horizon-stranded outcome pass.
+    fn dispatch(&mut self, now: SimTime, i: usize, server: usize) {
+        let s = self.shard_of(server);
+        let local = server - self.shards[s].lo;
+        let req = self.svc[i].req.clone();
+        self.shards[s].send(Cmd::Dispatch {
+            svc: i as u64,
+            req,
+            server: local,
+            now,
+            epoch: self.epoch,
+        });
+        match self.shards[s].recv() {
+            Reply::Dispatched { status } => self.statuses[s] = status,
+            // lint: allow(p1) protocol violation is unrecoverable
+            other => panic!("expected Dispatched, got {other:?}"),
+        }
+        let st = &mut self.svc[i];
+        st.phase = Phase::Uploading;
+        st.tx_energy_j = self.cfg.links[server].tx_energy(st.req.payload_bytes);
+    }
+
+    /// Sequential `apply_fault` + `fault_down`/`fault_up` incident logic:
+    /// the physics applies shard-side; crash casualties and incident
+    /// transitions merge back here in the sequential order (victims
+    /// first, then the down/up transition, then membership counters).
+    fn apply_fault(&mut self, now: SimTime, action: FaultAction) {
+        let target = action.target_index();
+        let s = self.shard_of(target);
+        let local = localize_action(action, self.shards[s].lo);
+        self.shards[s].send(Cmd::ApplyFault {
+            action: local,
+            now,
+            epoch: self.epoch,
+        });
+        let out = match self.shards[s].recv() {
+            Reply::Fault { out, status } => {
+                self.statuses[s] = status;
+                out
+            }
+            // lint: allow(p1) protocol violation is unrecoverable
+            other => panic!("expected Fault, got {other:?}"),
+        };
+        for rec in out.victims {
+            match self.crash_policy {
+                CrashPolicy::Fail => {
+                    self.inc.failed_in_flight += 1;
+                    self.fail(now, rec, target);
+                }
+                CrashPolicy::Requeue => {
+                    self.inc.requeued_in_flight += 1;
+                    self.requeue(now, rec.svc as usize);
+                }
+            }
+        }
+        if out.newly_down {
+            self.inc.incidents += 1;
+            if self.inc.down_servers == 0 && self.inc.incident_first_at.is_none() {
+                self.inc.incident_first_at = Some(now);
+                self.inc.gate_sheds_at_incident = self.current_gate_sheds();
+            }
+            self.inc.down_servers += 1;
+            self.scheduler.fleet_event(&FleetEvent::Down { server: target }, now);
+        }
+        if out.recovered {
+            self.inc.down_servers = self.inc.down_servers.saturating_sub(1);
+            if self.inc.down_servers == 0 {
+                self.inc.incident_last_end = Some(now);
+                self.inc.gate_sheds_at_recovery = Some(self.current_gate_sheds());
+            }
+            self.scheduler.fleet_event(&FleetEvent::Up { server: target }, now);
+        }
+        match action {
+            FaultAction::Leave { server } => {
+                self.inc.leaves += 1;
+                self.scheduler.fleet_event(&FleetEvent::Left { server }, now);
+            }
+            FaultAction::Join { server } => {
+                self.inc.joins += 1;
+                self.scheduler.fleet_event(&FleetEvent::Joined { server }, now);
+            }
+            _ => {}
+        }
+    }
+
+    /// Execute the boundary event at shard `s`'s queue head and merge its
+    /// outcome exactly as the sequential arm would have.
+    fn exec_boundary(&mut self, s: usize, now: SimTime) {
+        self.shards[s].send(Cmd::ExecuteBoundary {
+            now,
+            epoch: self.epoch,
+        });
+        let out = match self.shards[s].recv() {
+            Reply::Boundary { out, status } => {
+                self.statuses[s] = status;
+                out
+            }
+            // lint: allow(p1) protocol violation is unrecoverable
+            other => panic!("expected Boundary, got {other:?}"),
+        };
+        let lo = self.shards[s].lo;
+        match out {
+            BoundaryOut::None => {}
+            BoundaryOut::Completions { server, recs } => {
+                for rec in recs {
+                    self.complete(now, rec, lo + server);
+                }
+            }
+            BoundaryOut::Landed { server, kind, rec } => match kind {
+                LandKind::Crashed => match self.crash_policy {
+                    CrashPolicy::Fail => {
+                        self.inc.failed_in_flight += 1;
+                        self.fail(now, rec, lo + server);
+                    }
+                    CrashPolicy::Requeue => {
+                        self.inc.requeued_in_flight += 1;
+                        self.requeue(now, rec.svc as usize);
+                    }
+                },
+                LandKind::Departed => {
+                    self.inc.failed_in_flight += 1;
+                    self.fail(now, rec, lo + server);
+                }
+                LandKind::Dropped => self.fail(now, rec, lo + server),
+            },
+        }
+    }
+
+    /// Sequential `health_probe`: snapshot ground truth across shards in
+    /// global order, feed the lagged monitor, publish the (possibly
+    /// updated) observations back so shard-side view slices price servers
+    /// exactly like the sequential monitor-backed snapshot, then re-arm.
+    fn health_probe(&mut self, now: SimTime) {
+        let Some(period) = self.health_period else {
+            return;
+        };
+        for s in 0..self.shards.len() {
+            let buf = std::mem::take(&mut self.health_bufs[s]);
+            self.shards[s].send(Cmd::ProbeHealth { buf });
+        }
+        self.health_snap.clear();
+        for s in 0..self.shards.len() {
+            match self.shards[s].recv() {
+                Reply::Health { buf } => {
+                    self.health_snap.extend_from_slice(&buf);
+                    self.health_bufs[s] = buf;
+                }
+                // lint: allow(p1) protocol violation is unrecoverable
+                other => panic!("expected Health, got {other:?}"),
+            }
+        }
+        if let Some(h) = self.health.as_mut() {
+            h.probe(now, &self.health_snap);
+        }
+        if self.health.is_some() {
+            for s in 0..self.shards.len() {
+                let mut obs = std::mem::take(&mut self.obs_bufs[s]);
+                obs.clear();
+                let (lo, hi) = (self.shards[s].lo, self.shards[s].hi);
+                if let Some(h) = self.health.as_ref() {
+                    for g in lo..hi {
+                        obs.push(h.observed(g));
+                    }
+                }
+                self.shards[s].send(Cmd::PublishObserved { observed: obs });
+            }
+            for s in 0..self.shards.len() {
+                match self.shards[s].recv() {
+                    Reply::Published { observed } => self.obs_bufs[s] = observed,
+                    // lint: allow(p1) protocol violation is unrecoverable
+                    other => panic!("expected Published, got {other:?}"),
+                }
+            }
+        }
+        let stamp = self.next_stamp();
+        self.global
+            .push_at_stamped(now + period, stamp, GlobalEv::HealthProbe);
+    }
+
+    fn current_gate_sheds(&self) -> u64 {
+        self.scheduler
+            .diagnostics()
+            .iter()
+            .find_map(|(k, v)| (k == "gate_sheds").then_some(*v as u64))
+            .unwrap_or(0)
+    }
+
+    /// Sequential `shed_at_decision` verbatim (the decision-time view is
+    /// still current — no cluster state changed since `decide`).
+    fn shed_at_decision(&mut self, now: SimTime, i: usize, _reason: ShedReason) {
+        self.svc[i].phase = Phase::Failed;
+        self.shed += 1;
+        self.policy_shed += 1;
+        let outcome = ServiceOutcome::shed(&self.svc[i].req, now);
+        self.in_flight -= 1;
+        self.scheduler.feedback(&outcome, &self.view);
+        self.outcomes.push(outcome);
+    }
+
+    /// Sequential `fail`, reconstructed from the shard's flow record.
+    fn fail(&mut self, now: SimTime, rec: FailRec, server: usize) {
+        self.shed += 1;
+        let i = rec.svc as usize;
+        let st = &mut self.svc[i];
+        st.phase = Phase::Failed;
+        let outcome = ServiceOutcome {
+            id: st.req.id,
+            class: st.req.class,
+            server,
+            tx_time: rec.upload_done_at - rec.dispatched_at,
+            infer_time: 0.0,
+            processing_time: f64::INFINITY,
+            ttft_time: f64::INFINITY,
+            slo: st.req.slo,
+            energy_j: rec.tx_energy_j,
+            tokens: 0,
+            completed_at: now,
+        };
+        self.in_flight -= 1;
+        self.advance_all(now);
+        let req = self.svc[i].req.clone();
+        self.fill_view(&req);
+        self.scheduler.feedback(&outcome, &self.view);
+        self.outcomes.push(outcome);
+    }
+
+    /// Sequential `complete`, reconstructed from the shard's flow record
+    /// (the shard already bumped its server's `tokens_served`).
+    fn complete(&mut self, now: SimTime, rec: CompletionRec, server: usize) {
+        let i = rec.svc as usize;
+        let st = &mut self.svc[i];
+        st.phase = Phase::Done;
+        let tokens = st.req.total_tokens();
+        let outcome = ServiceOutcome {
+            id: st.req.id,
+            class: st.req.class,
+            server,
+            tx_time: rec.upload_done_at - rec.dispatched_at,
+            infer_time: now - rec.compute_started_at,
+            processing_time: now - st.req.arrival,
+            ttft_time: rec.first_token_at.min(now) - st.req.arrival,
+            slo: st.req.slo,
+            energy_j: rec.tx_energy_j + rec.infer_energy_j,
+            tokens,
+            completed_at: now,
+        };
+        self.in_flight -= 1;
+        self.advance_all(now);
+        let req = self.svc[i].req.clone();
+        self.fill_view(&req);
+        self.scheduler.feedback(&outcome, &self.view);
+        self.outcomes.push(outcome);
+    }
+
+    /// Sequential `requeue`: bounce a crash casualty back through the
+    /// scheduler with its identity and arrival clock intact.
+    fn requeue(&mut self, now: SimTime, i: usize) {
+        self.svc[i].phase = Phase::Pending;
+        self.svc[i].server = usize::MAX;
+        self.advance_all(now);
+        let req = self.svc[i].req.clone();
+        self.fill_view(&req);
+        let action = self.scheduler.decide(&req, &self.view);
+        self.act_on(now, i, action);
+    }
+
+    /// Run-end: compute the end clock, sweep per-shard accounting, fold
+    /// energy/tokens in global order, reconstruct horizon-stranded
+    /// outcomes, and assemble the report through the shared tail.
+    fn finish(mut self, t0: Instant) -> RunReport {
+        let end = match self.past_horizon {
+            Some(t) => t,
+            None => {
+                // Queues drained (or all work resolved): the sequential
+                // clock is the last popped event's time, wherever it was.
+                let mut end = self.clock.max(self.global.now());
+                for st in &self.statuses {
+                    end = end.max(st.now);
+                }
+                end
+            }
+        };
+        for h in &self.shards {
+            h.send(Cmd::Finish { now: end });
+        }
+        let mut fins: Vec<ShardFinish> = Vec::with_capacity(self.shards.len());
+        for h in &self.shards {
+            match h.recv() {
+                Reply::Finished(f) => fins.push(*f),
+                // lint: allow(p1) protocol violation is unrecoverable
+                other => panic!("expected Finished, got {other:?}"),
+            }
+        }
+        // Per-resource energy folds in global order: the same per-field
+        // float-sum sequences as `ClusterSim::energy`.
+        let mut energy = EnergyBreakdown::default();
+        for fin in &fins {
+            for (&a, &b) in fin.infer_j.iter().zip(fin.idle_j.iter()) {
+                energy.infer_j += a;
+                energy.idle_j += b;
+            }
+        }
+        let mut g = 0usize;
+        for fin in &fins {
+            for &bytes in &fin.bytes_moved {
+                energy.tran_j += bytes * 8.0 / 1.0e6 * self.cfg.links[g].energy_j_per_mbit;
+                g += 1;
+            }
+        }
+        let tokens: u64 = fins.iter().map(|f| f.tokens).sum();
+        // First-token instants for flows still resident at run end.
+        let mut ftk = vec![f64::INFINITY; self.svc.len()];
+        for fin in &fins {
+            for &(svc, first_token_at, _tx) in &fin.live_flows {
+                ftk[svc as usize] = first_token_at;
+            }
+        }
+        // Anything still in flight failed the horizon (same pass as the
+        // sequential tail, fed from the mirrored orchestrator state).
+        let n_servers = self.cfg.servers.len();
+        let mut unfinished = 0;
+        for (i, st) in self.svc.iter().enumerate() {
+            if st.phase != Phase::Done && st.phase != Phase::Failed {
+                unfinished += 1;
+                self.outcomes.push(ServiceOutcome {
+                    id: st.req.id,
+                    class: st.req.class,
+                    server: st.server.min(n_servers.saturating_sub(1)),
+                    tx_time: 0.0,
+                    infer_time: 0.0,
+                    processing_time: f64::INFINITY,
+                    ttft_time: if ftk[i] <= end {
+                        ftk[i] - st.req.arrival
+                    } else {
+                        f64::INFINITY
+                    },
+                    slo: st.req.slo,
+                    energy_j: st.tx_energy_j,
+                    tokens: 0,
+                    completed_at: end,
+                });
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let mut processed = self.global.processed();
+        let mut stale = 0u64;
+        let mut peak = self.global.peak_len();
+        for st in &self.statuses {
+            processed += st.processed;
+            stale += st.stale;
+            peak = peak.max(st.peak);
+        }
+        let diagnostics = self.scheduler.diagnostics();
+        let q = QueueStats {
+            processed,
+            stale,
+            stale_ratio: stale as f64 / processed.max(1) as f64,
+            peak,
+        };
+        assemble_report(
+            self.scheduler.name(),
+            self.outcomes,
+            energy,
+            end,
+            self.first_arrival.unwrap_or(0.0),
+            tokens,
+            unfinished,
+            self.shed,
+            self.policy_shed,
+            self.bad_actions,
+            diagnostics,
+            &self.inc,
+            wall,
+            q,
+        )
+    }
+}
+
+/// Re-index a fault action into a shard's local server/link space (links
+/// share server indexing: one uplink per server).
+fn localize_action(action: FaultAction, lo: usize) -> FaultAction {
+    match action {
+        FaultAction::Down { server, crash } => FaultAction::Down { server: server - lo, crash },
+        FaultAction::Up { server, crash } => FaultAction::Up { server: server - lo, crash },
+        FaultAction::DegradeStart { server, factor } => {
+            FaultAction::DegradeStart { server: server - lo, factor }
+        }
+        FaultAction::DegradeEnd { server, factor } => {
+            FaultAction::DegradeEnd { server: server - lo, factor }
+        }
+        FaultAction::FlapStart { link, factor } => {
+            FaultAction::FlapStart { link: link - lo, factor }
+        }
+        FaultAction::FlapEnd { link } => FaultAction::FlapEnd { link: link - lo },
+        FaultAction::Leave { server } => FaultAction::Leave { server: server - lo },
+        FaultAction::Join { server } => FaultAction::Join { server: server - lo },
+    }
+}
+
+/// Core sharded runner: replay `Engine::new_with_faults`'s construction
+/// push order with explicit epoch-0 stamps (so every same-instant tie
+/// among seeded events resolves exactly as in the sequential engine),
+/// spawn one worker thread per shard, and drive the merge-barrier
+/// protocol from the calling thread.
+fn run_sharded(
+    cfg: &ClusterConfig,
+    plan: &FaultPlan,
+    splan: &ShardPlan,
+    source: &mut dyn ArrivalSource,
+    scheduler: &mut dyn Scheduler,
+) -> RunReport {
+    let t0 = Instant::now(); // lint: allow(wall-clock) measures simulator throughput only; no sim behavior reads it
+    let n_shards = splan.n_shards();
+    let n_servers = cfg.servers.len();
+    let n_links = cfg.links.len();
+    let mut k = 0u64;
+    let mut init_ticks: Vec<Vec<(SimTime, u64, usize)>> = vec![Vec::new(); n_shards];
+    let mut fluct_heap = BinaryHeap::new();
+    let mut owner = Vec::with_capacity(n_links);
+    for (li, link) in cfg.links.iter().enumerate() {
+        let s = splan.shard_of(li);
+        let local = li - splan.ranges[s].0;
+        owner.push((s, local as u32));
+        if link.fluctuation > 0.0 {
+            let stamp = orch_stamp(0, k);
+            k += 1;
+            init_ticks[s].push((link.fluct_period, stamp, local));
+            fluct_heap.push(std::cmp::Reverse((Key(link.fluct_period, stamp), li)));
+        }
+    }
+    let mut global: EventQueue<GlobalEv> = EventQueue::new();
+    for Outage { server, start, end } in &cfg.outages {
+        global.push_at_stamped(*start, orch_stamp(0, k), GlobalEv::OutageStart { server: *server });
+        k += 1;
+        global.push_at_stamped(*end, orch_stamp(0, k), GlobalEv::OutageEnd { server: *server });
+        k += 1;
+    }
+    for (at, action) in plan.materialize(n_servers, n_links, cfg.seed) {
+        global.push_at_stamped(at, orch_stamp(0, k), GlobalEv::Fault { action });
+        k += 1;
+    }
+    let mut health = None;
+    let health_period = plan.health.map(|hc| {
+        health = Some(HealthMonitor::new(hc, n_servers));
+        global.push_at_stamped(hc.period_s, orch_stamp(0, k), GlobalEv::HealthProbe);
+        k += 1;
+        hc.period_s
+    });
+    let mut sims = Vec::with_capacity(n_shards);
+    let mut statuses = Vec::with_capacity(n_shards);
+    for (s, &(lo, hi)) in splan.ranges.iter().enumerate() {
+        let sub = ClusterConfig {
+            servers: cfg.servers[lo..hi].to_vec(),
+            links: cfg.links[lo..hi].to_vec(),
+            bandwidth: cfg.bandwidth,
+            weights: cfg.weights,
+            // Outage physics replays through the orchestrator's global
+            // calendar; sub-clusters never see the raw windows.
+            outages: Vec::new(),
+            seed: cfg.seed,
+            churn_guard: cfg.churn_guard,
+        };
+        let sim = ShardSim::new(
+            &sub,
+            s,
+            splan.lookahead_s(&cfg.links, s),
+            &init_ticks[s],
+            plan.health.is_some(),
+        );
+        statuses.push(sim.status());
+        sims.push(sim);
+    }
+    let fluct = FluctCal {
+        rng: Rng::new(cfg.seed), // lint: allow(raw-seed) replays the sequential engine's primary stream verbatim
+        heap: fluct_heap,
+        next_rank: FLUCT_REARM_RANK_BASE,
+        amp: cfg.links.iter().map(|l| l.fluctuation).collect(),
+        period: cfg.links.iter().map(|l| l.fluct_period).collect(),
+        owner,
+        out: vec![Vec::new(); n_shards],
+    };
+    let hint = source.len_hint().unwrap_or(0).min(1 << 20);
+    std::thread::scope(|scope| {
+        let mut shards = Vec::with_capacity(n_shards);
+        for (s, sim) in sims.into_iter().enumerate() {
+            let (lo, hi) = splan.ranges[s];
+            // Capacity 4 keeps both directions non-blocking for the
+            // strict 1-in-flight request/reply protocol while bounding
+            // the mailboxes (the bounded-mailbox part of the contract).
+            let (ctx, crx) = sync_channel::<Cmd>(4);
+            let (rtx, rrx) = sync_channel::<Reply>(4);
+            scope.spawn(move || worker(sim, crx, rtx));
+            shards.push(ShardHandle { tx: ctx, rx: rrx, lo, hi });
+        }
+        let mut eng = ShardedEngine {
+            cfg,
+            shards,
+            statuses,
+            global,
+            source,
+            scheduler,
+            fluct,
+            svc: Vec::with_capacity(hint),
+            pending_arrival: None,
+            outcomes: Vec::with_capacity(hint),
+            in_flight: 0,
+            first_arrival: None,
+            last_arrival: 0.0,
+            horizon: f64::INFINITY,
+            shed: 0,
+            policy_shed: 0,
+            bad_actions: 0,
+            view: ClusterView::with_capacity(n_servers, cfg.weights),
+            view_epoch: 0,
+            view_bufs: vec![(Vec::new(), Vec::new()); n_shards],
+            health,
+            health_period,
+            health_snap: Vec::with_capacity(n_servers),
+            health_bufs: vec![Vec::new(); n_shards],
+            obs_bufs: vec![Vec::new(); n_shards],
+            crash_policy: plan.crash_policy,
+            inc: IncidentCounters::default(),
+            epoch: 0,
+            orch_k: k,
+            clock: 0.0,
+            past_horizon: None,
+        };
+        eng.prefetch_arrival();
+        eng.run(t0)
+    })
+}
+
+/// [`simulate`] on the sharded engine: same inputs plus a [`ShardPlan`].
+/// Fixed seed => bit-identical [`RunReport`] outcomes/energy/diagnostics
+/// at every shard count, pinned against the sequential engine by
+/// tests/sharded_identity.rs (perf counters like `events_processed` and
+/// `peak_event_queue_len` are substrate-specific and out of scope).
+pub fn simulate_sharded(
+    cfg: &ClusterConfig,
+    splan: &ShardPlan,
+    trace: &[ServiceRequest],
+    scheduler: &mut dyn Scheduler,
+) -> RunReport {
+    let mut source = TraceSource::new(trace);
+    run_sharded(cfg, &FaultPlan::default(), splan, &mut source, scheduler)
+}
+
+/// [`simulate_stream`] on the sharded engine.
+pub fn simulate_stream_sharded(
+    cfg: &ClusterConfig,
+    splan: &ShardPlan,
+    source: &mut dyn ArrivalSource,
+    scheduler: &mut dyn Scheduler,
+) -> RunReport {
+    run_sharded(cfg, &FaultPlan::default(), splan, source, scheduler)
+}
+
+/// [`simulate_faulted`] on the sharded engine: chaos plan + shard plan.
+pub fn simulate_faulted_sharded(
+    cfg: &ClusterConfig,
+    plan: &FaultPlan,
+    splan: &ShardPlan,
+    trace: &[ServiceRequest],
+    scheduler: &mut dyn Scheduler,
+) -> RunReport {
+    let mut source = TraceSource::new(trace);
+    run_sharded(cfg, plan, splan, &mut source, scheduler)
+}
+
+/// [`simulate_stream_faulted`] on the sharded engine — the entry point
+/// `paper_scale_sim --shards N` uses.
+pub fn simulate_stream_faulted_sharded(
+    cfg: &ClusterConfig,
+    plan: &FaultPlan,
+    splan: &ShardPlan,
+    source: &mut dyn ArrivalSource,
+    scheduler: &mut dyn Scheduler,
+) -> RunReport {
+    run_sharded(cfg, plan, splan, source, scheduler)
 }
 
 #[cfg(test)]

@@ -174,6 +174,62 @@ pub enum FaultAction {
     Join { server: usize },
 }
 
+impl FaultAction {
+    /// The server this action targets, when it targets one.
+    pub fn server(&self) -> Option<usize> {
+        match *self {
+            FaultAction::Down { server, .. }
+            | FaultAction::Up { server, .. }
+            | FaultAction::DegradeStart { server, .. }
+            | FaultAction::DegradeEnd { server, .. }
+            | FaultAction::Leave { server }
+            | FaultAction::Join { server } => Some(server),
+            FaultAction::FlapStart { .. } | FaultAction::FlapEnd { .. } => None,
+        }
+    }
+
+    /// The link this action targets, when it targets one (link flaps).
+    pub fn link(&self) -> Option<usize> {
+        match *self {
+            FaultAction::FlapStart { link, .. } | FaultAction::FlapEnd { link } => Some(link),
+            _ => None,
+        }
+    }
+
+    /// The server (or same-index link) whose shard must apply this
+    /// action's *physics* — links share their server's index, so one
+    /// accessor routes both families.
+    pub fn target_index(&self) -> usize {
+        match self.server() {
+            Some(s) => s,
+            // lint: allow(p1) the two families are exhaustive: no server target implies a link target
+            None => self.link().expect("fault action targets a server or a link"),
+        }
+    }
+}
+
+/// Partition a materialized fault timeline across the shards of a
+/// [`crate::sim::topology::ShardPlan`]: `out[s]` receives the indices
+/// (into `timeline`) of the actions whose *physics* land on shard `s`,
+/// preserving timeline order within each shard.
+///
+/// The sharded engine still executes every fault action at a global
+/// merge barrier (fault actions feed `FleetEvent`s to the scheduler and
+/// may crash-requeue work, both scheduler interactions); what this
+/// partition answers is *which shard's local state* — server rate
+/// multipliers, link flap factors, crash victims — each action touches,
+/// so the orchestrator routes exactly one shard command per action.
+pub fn partition_timeline_by_shard(
+    timeline: &[(SimTime, FaultAction)],
+    plan: &crate::sim::topology::ShardPlan,
+) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = (0..plan.n_shards()).map(|_| Vec::new()).collect();
+    for (i, (_, action)) in timeline.iter().enumerate() {
+        out[plan.shard_of(action.target_index())].push(i);
+    }
+    out
+}
+
 impl FaultPlan {
     /// True when the plan changes nothing about a run.
     pub fn is_empty(&self) -> bool {
@@ -434,6 +490,35 @@ mod tests {
         let plan = FaultPlan::default();
         assert!(plan.is_empty());
         assert!(plan.materialize(6, 6, 42).is_empty());
+    }
+
+    /// Every action names exactly one physics target (server or link),
+    /// and the shard partition routes each action to its owner in
+    /// timeline order.
+    #[test]
+    fn timeline_partitions_to_owning_shards() {
+        use crate::sim::topology::ShardPlan;
+        let timeline: Vec<(SimTime, FaultAction)> = vec![
+            (1.0, FaultAction::Down { server: 0, crash: true }),
+            (2.0, FaultAction::FlapStart { link: 5, factor: 0.5 }),
+            (3.0, FaultAction::Leave { server: 4 }),
+            (4.0, FaultAction::Up { server: 0, crash: true }),
+            (5.0, FaultAction::FlapEnd { link: 5 }),
+            (6.0, FaultAction::DegradeStart { server: 2, factor: 0.7 }),
+        ];
+        for (_, a) in &timeline {
+            assert!(a.server().is_some() != a.link().is_some(), "{a:?}");
+            assert_eq!(
+                a.target_index(),
+                a.server().or(a.link()).unwrap(),
+                "{a:?}"
+            );
+        }
+        // 6 servers in 2 shards of 3: servers/links 0-2 → shard 0,
+        // 3-5 → shard 1.
+        let plan = ShardPlan::contiguous(6, 2);
+        let parts = partition_timeline_by_shard(&timeline, &plan);
+        assert_eq!(parts, vec![vec![0, 3, 5], vec![1, 2, 4]]);
     }
 
     /// `from_outages` must reproduce the legacy engine's push pattern:

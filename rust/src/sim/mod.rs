@@ -11,6 +11,7 @@ pub mod net;
 pub mod ps;
 pub mod server;
 pub mod service_model;
+pub(crate) mod shard;
 pub mod time;
 pub mod token_batch;
 pub mod topology;
@@ -18,8 +19,9 @@ pub mod topology;
 pub use cluster::{BandwidthMode, ClusterConfig, ClusterSim, Outage};
 pub use energy::{EnergyBreakdown, EnergyWeights};
 pub use engine::{
-    simulate, simulate_faulted, simulate_stream, simulate_stream_faulted, AvailabilityReport,
-    Engine, RunReport,
+    simulate, simulate_faulted, simulate_faulted_sharded, simulate_sharded, simulate_stream,
+    simulate_stream_faulted, simulate_stream_faulted_sharded, simulate_stream_sharded,
+    AvailabilityReport, Engine, RunReport,
 };
 pub use faults::{
     CrashPolicy, FaultEvent, FaultKind, FaultPlan, GenerativeFaults, HealthConfig, HealthMonitor,
@@ -27,4 +29,4 @@ pub use faults::{
 pub use server::{ServerKind, ServerSpec, EDGE_MODELS};
 pub use service_model::{PsServiceModel, ServiceModel, ServiceModelKind, ServicePrediction};
 pub use token_batch::TokenBatchModel;
-pub use topology::{TierSpec, TopologyConfig, TOPOLOGY_PRESETS};
+pub use topology::{ShardCount, ShardPlan, TierSpec, TopologyConfig, TOPOLOGY_PRESETS};

@@ -1,0 +1,1293 @@
+//! Per-tier engine shard for the sharded parallel DES core.
+//!
+//! The sharded engine (`sim::engine`) splits the cluster into contiguous
+//! server ranges — one shard per topology tier by default (see
+//! [`crate::sim::topology::ShardPlan`]) — and gives each shard its own
+//! sub-[`ClusterSim`], its own calendar [`EventQueue`], and its own flow
+//! table. Because link *i* is server *i*'s co-located uplink, every event
+//! a shard schedules lands back on the same shard: there are **no**
+//! shard-to-shard event sends. All cross-shard interaction (scheduling
+//! decisions, outcome feedback, fault accounting, health probes) flows
+//! through the orchestrator at *merge barriers*.
+//!
+//! # Event taxonomy
+//!
+//! A shard's queue holds only physics events:
+//!
+//! | event          | classification                                        |
+//! |----------------|-------------------------------------------------------|
+//! | `FluctTick`    | always local                                           |
+//! | `LinkDone`     | always local (stale drop, or reap → `ComputeArrive`)   |
+//! | `ComputeArrive`| **boundary** iff the landing fails (crashed / departed |
+//! |                | / bounded-queue drop) — the orchestrator must resolve  |
+//! |                | the request; otherwise local (plain admit)             |
+//! | `ServerDone`   | **boundary** iff generation-current (completions feed  |
+//! |                | the scheduler); stale ones are local drops             |
+//!
+//! Local events execute inside `Grant` windows without synchronizing;
+//! boundary events stop the shard and are executed one at a time by the
+//! orchestrator's merge barrier (`ExecuteBoundary`), which re-creates the
+//! sequential engine's advance + snapshot + feedback sequence exactly.
+//!
+//! # Conservative grant rule (link-lookahead sync)
+//!
+//! The orchestrator may let a shard process local events strictly below a
+//! `limit` key only if no *other* shard (and no global event) can reveal a
+//! barrier below that limit. Each shard therefore reports a conservative
+//! lower bound on where its next barrier could appear:
+//!
+//! ```text
+//! bound = min( earliest queued ComputeArrive key,   -- may classify as a drop
+//!              earliest queued ServerDone key,       -- may be a completion
+//!              head.time + lookahead )               -- uploads still draining:
+//!                                                    -- a reap at t lands at
+//!                                                    -- t + rtt >= t + lookahead
+//! ```
+//!
+//! where `lookahead` is the minimum RTT over the shard's links
+//! ([`crate::sim::topology::ShardPlan::lookahead_s`]). New `ServerDone`s
+//! can only appear by admitting a queued `ComputeArrive`, so they are
+//! always later than the `ComputeArrive` minimum already in the bound. A
+//! shard's grant limit is the minimum over the *other* shards' bounds (its
+//! own pending events never gate itself — this self-exclusion keeps the
+//! globally-earliest shard runnable and the protocol deadlock-free), the
+//! global queue head, and the horizon. Processing below such a limit can
+//! never create a barrier inside a window another shard was granted, which
+//! is the bit-identity argument: every advance/feedback interleaving the
+//! sequential engine performs at barriers is replayed at the same
+//! simulated instants in the same order.
+//!
+//! # Deterministic stamps
+//!
+//! Events carry explicit tie-break stamps (`EventQueue::push_at_stamped`)
+//! of the form `(epoch << 32) | counter`. The orchestrator bumps `epoch`
+//! at the start of every barrier; within an epoch the orchestrator's
+//! pushes use counters `< 2^20` and shard `s` uses `((s + 1) << 24) | c`,
+//! so same-float-time ties order as: construction pushes first (epoch 0),
+//! then earlier-epoch pushes, then barrier-ordered orchestrator pushes,
+//! then shard-local pushes in shard order — mirroring the sequential
+//! engine's monotone push counter on every cross-queue comparison that can
+//! affect merged state. The residual (same-float-time *local* events on
+//! different shards) acts on disjoint shard state and commutes;
+//! `tests/sharded_identity.rs` pins the end-to-end identity at every
+//! shard count.
+//!
+//! # Fluctuation side-values
+//!
+//! Shards own no RNG. The orchestrator replays the sequential engine's
+//! single fluctuation stream (drawn in sequential tick-pop order from the
+//! same raw-seeded generator) and ships each tick's multiplier ahead of
+//! its grant; a shard consumes them per link in FIFO order, which is
+//! unambiguous because one link's ticks are strictly time-increasing.
+
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, SyncSender};
+
+use super::cluster::{fill_server_view, ClusterConfig, ClusterSim};
+use super::faults::FaultAction;
+use super::ps::PsJob;
+use super::time::{EventQueue, SimTime};
+use crate::scheduler::ServerView;
+use crate::workload::service::ServiceRequest;
+
+/// Orchestrator per-epoch stamp counters stay below this; shard counters
+/// start at `(shard + 1) << 24`, so barrier-ordered pushes win same-time
+/// ties within an epoch.
+pub(crate) const ORCH_STAMP_LIMIT: u64 = 1 << 20;
+const SHARD_STAMP_SHIFT: u64 = 24;
+const EPOCH_SHIFT: u64 = 32;
+
+/// Compose an orchestrator-side stamp: `(epoch << 32) | k`, `k < 2^20`.
+pub(crate) fn orch_stamp(epoch: u64, k: u64) -> u64 {
+    debug_assert!(k < ORCH_STAMP_LIMIT, "orchestrator stamp counter overflow");
+    (epoch << EPOCH_SHIFT) | k
+}
+
+fn shard_stamp(epoch: u64, shard: usize, c: u64) -> u64 {
+    debug_assert!(c < 1 << SHARD_STAMP_SHIFT, "shard stamp counter overflow");
+    debug_assert!(shard < 255, "stamp scheme supports at most 254 shards");
+    (epoch << EPOCH_SHIFT) | ((shard as u64 + 1) << SHARD_STAMP_SHIFT) | c
+}
+
+/// Total event-order key: `(time, stamp)` with the same ordering the
+/// event queues use internally. Times are finite (the queues assert on
+/// push), so `total_cmp` agrees with numeric order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct Key(pub SimTime, pub u64);
+
+impl Eq for Key {}
+
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Shard-local physics events. All indices are shard-local
+/// (`global - range.start`).
+#[derive(Debug, Clone, Copy)]
+enum LocalEv {
+    /// Earliest upload completion on link (generation-stamped).
+    LinkDone { link: usize, gen: u64 },
+    /// Upload finished + RTT elapsed: flow `slot` reaches the server.
+    ComputeArrive { slot: usize, server: usize },
+    /// Earliest batch completion on server (generation-stamped).
+    ServerDone { server: usize, gen: u64 },
+    /// Apply a pre-drawn bandwidth fluctuation multiplier.
+    FluctTick { link: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum FlowPhase {
+    Uploading,
+    Computing,
+}
+
+/// One dispatched request resident on this shard. Slots are recycled via
+/// a free list; the slot index doubles as the PS-queue job id (both
+/// service models order completions by admission, never by id, so local
+/// ids are safe).
+#[derive(Debug, Clone)]
+struct FlowSlot {
+    live: bool,
+    /// Global dense service index (the orchestrator's request table).
+    svc: u64,
+    /// Local server the flow was dispatched toward.
+    server: usize,
+    req: ServiceRequest,
+    phase: FlowPhase,
+    dispatched_at: SimTime,
+    upload_done_at: SimTime,
+    compute_started_at: SimTime,
+    first_token_at: SimTime,
+    tx_energy_j: f64,
+}
+
+/// Reschedule guard state, one per local link / server — a field-for-field
+/// copy of the sequential engine's private cache (`sim::engine` keeps its
+/// own so the sequential path stays untouched).
+#[derive(Debug, Clone, Copy, Default)]
+struct SchedCache {
+    live: bool,
+    fw: f64,
+    rate: f64,
+    at: SimTime,
+}
+
+/// Per-server fault depth, mirroring the sequential engine's bookkeeping.
+#[derive(Debug, Clone, Copy)]
+struct ServerFault {
+    down: u32,
+    crash: u32,
+    degrade: u32,
+    degrade_factor: f64,
+}
+
+impl Default for ServerFault {
+    fn default() -> Self {
+        ServerFault {
+            down: 0,
+            crash: 0,
+            degrade: 0,
+            degrade_factor: 1.0,
+        }
+    }
+}
+
+/// Everything the orchestrator needs to finish a completed request — the
+/// inputs of the sequential engine's `complete()` outcome literal.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct CompletionRec {
+    pub svc: u64,
+    pub dispatched_at: SimTime,
+    pub upload_done_at: SimTime,
+    pub compute_started_at: SimTime,
+    pub first_token_at: SimTime,
+    pub tx_energy_j: f64,
+    pub infer_energy_j: f64,
+}
+
+/// Everything the orchestrator needs to fail (or requeue) a request whose
+/// upload was already paid for — the inputs of the sequential `fail()`.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct FailRec {
+    pub svc: u64,
+    pub dispatched_at: SimTime,
+    pub upload_done_at: SimTime,
+    pub tx_energy_j: f64,
+}
+
+/// Why a boundary `ComputeArrive` could not be admitted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum LandKind {
+    /// Hard-crashed server: the crash policy decides fail vs requeue.
+    Crashed,
+    /// Departed (not accepting) server: counted as failed-in-flight.
+    Departed,
+    /// Bounded queue full: a plain admission-shed failure.
+    Dropped,
+}
+
+/// Result of executing one boundary event at the merge barrier.
+#[derive(Debug)]
+pub(crate) enum BoundaryOut {
+    /// The event resolved locally after all (stale pop, or a fault window
+    /// cleared between classification and execution): nothing to merge.
+    None,
+    /// A `ServerDone` reap: completions in reap order on local `server`.
+    Completions { server: usize, recs: Vec<CompletionRec> },
+    /// A failed `ComputeArrive` landing on local `server`.
+    Landed {
+        server: usize,
+        kind: LandKind,
+        rec: FailRec,
+    },
+}
+
+/// Crash/recovery side-channel from `ApplyFault`.
+#[derive(Debug, Default)]
+pub(crate) struct FaultOut {
+    /// The action put the server under its first covering down window.
+    pub newly_down: bool,
+    /// The action lifted the server's last covering down window.
+    pub recovered: bool,
+    /// Hard-crash casualties in ascending global-svc order (the
+    /// sequential victim-scan order). The flows are already torn down
+    /// locally; the orchestrator applies the crash policy.
+    pub victims: Vec<FailRec>,
+}
+
+/// Queue/boundary status a shard reports after every queue-changing
+/// command; the orchestrator's settle loop runs on these.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ShardStatus {
+    /// Head event key + boundary classification (`None`: queue empty).
+    pub head: Option<(Key, bool)>,
+    /// Conservative lower bound on this shard's next *revealable* barrier
+    /// (`None` = never). See the module docs' grant rule.
+    pub bound: Option<Key>,
+    /// Local queue clock (time of the last local pop) — feeds the run-end
+    /// clock when every queue drains.
+    pub now: SimTime,
+    /// Local event-queue accounting for the merged report.
+    pub processed: u64,
+    pub stale: u64,
+    pub peak: usize,
+}
+
+/// Per-server / per-link accounting returned once at `Finish`, in local
+/// index order, so the orchestrator can fold energy in global server
+/// order (float-sum order is part of the bit-identity contract).
+#[derive(Debug)]
+pub(crate) struct ShardFinish {
+    pub infer_j: Vec<f64>,
+    pub idle_j: Vec<f64>,
+    pub bytes_moved: Vec<f64>,
+    /// Tokens fully served on this shard (integer, order-free sum).
+    pub tokens: u64,
+    /// Flows still resident at run end: `(svc, first_token_at,
+    /// tx_energy_j)` — feeds the horizon-stranded outcome pass.
+    pub live_flows: Vec<(u64, SimTime, f64)>,
+}
+
+/// Orchestrator → shard commands. Index arguments are shard-local; `now`
+/// is the barrier instant; `epoch` the barrier epoch for stamping.
+#[derive(Debug)]
+pub(crate) enum Cmd {
+    /// Process local events with key strictly below `limit`, stopping at
+    /// boundaries. `fluct` ships newly pre-drawn `(local link,
+    /// multiplier)` values, appended to per-link FIFOs before processing.
+    Grant {
+        limit: Key,
+        epoch: u64,
+        fluct: Vec<(u32, f64)>,
+    },
+    /// Pop and execute the boundary event at the queue head.
+    ExecuteBoundary { now: SimTime, epoch: u64 },
+    /// Mirror of the sequential `ClusterSim::advance_all` call sites.
+    AdvanceTo { now: SimTime },
+    /// Fill per-server scheduler views + admissibility flags for the
+    /// global snapshot (buffers are recycled round-trip).
+    FillView {
+        req: ServiceRequest,
+        views: Vec<ServerView>,
+        admissible: Vec<bool>,
+    },
+    /// Start an upload: the scheduler assigned `svc` to local `server`.
+    Dispatch {
+        svc: u64,
+        req: ServiceRequest,
+        server: usize,
+        now: SimTime,
+        epoch: u64,
+    },
+    /// Replay one fault-plan action (indices already localized).
+    ApplyFault {
+        action: FaultAction,
+        now: SimTime,
+        epoch: u64,
+    },
+    /// Snapshot ground-truth health (`accepting ? rate_mult : 0`) into
+    /// `buf` in local server order.
+    ProbeHealth { buf: Vec<f64> },
+    /// Install the lagged monitor's published values for this shard's
+    /// servers (local order); no-op without a monitor.
+    PublishObserved { observed: Vec<f64> },
+    /// Final accounting; the worker replies and exits.
+    Finish { now: SimTime },
+}
+
+/// Shard → orchestrator replies, 1:1 with [`Cmd`].
+#[derive(Debug)]
+pub(crate) enum Reply {
+    Granted {
+        status: ShardStatus,
+        fluct: Vec<(u32, f64)>,
+    },
+    Boundary {
+        out: BoundaryOut,
+        status: ShardStatus,
+    },
+    Advanced,
+    View {
+        views: Vec<ServerView>,
+        admissible: Vec<bool>,
+        n_admissible: usize,
+    },
+    Dispatched {
+        status: ShardStatus,
+    },
+    Fault {
+        out: FaultOut,
+        status: ShardStatus,
+    },
+    Health {
+        buf: Vec<f64>,
+    },
+    Published {
+        observed: Vec<f64>,
+    },
+    Finished(Box<ShardFinish>),
+}
+
+/// One engine shard: a sub-cluster serving a contiguous global server
+/// range, its calendar queue, and its resident flows.
+pub(crate) struct ShardSim {
+    shard: usize,
+    cluster: ClusterSim,
+    events: EventQueue<LocalEv>,
+    flows: Vec<FlowSlot>,
+    free: Vec<usize>,
+    link_sched: Vec<SchedCache>,
+    server_sched: Vec<SchedCache>,
+    fault: Vec<ServerFault>,
+    link_flap: Vec<u32>,
+    /// Pre-drawn fluctuation multipliers per local link, FIFO.
+    fluct_pending: Vec<VecDeque<f64>>,
+    /// Lagged health values for local servers (`Some` iff a monitor is
+    /// configured; initialized to 1.0 like `HealthMonitor`).
+    observed: Option<Vec<f64>>,
+    reap_buf: Vec<PsJob>,
+    /// Keys of queued `ComputeArrive` events (min-heap): every one is a
+    /// potential boundary until classified at the head.
+    pending_ca: BinaryHeap<std::cmp::Reverse<Key>>,
+    /// Keys of queued `ServerDone` events, stale or not (conservative).
+    pending_sd: BinaryHeap<std::cmp::Reverse<Key>>,
+    /// Minimum RTT over local links: the shard's lookahead.
+    lookahead_s: f64,
+    churn_guard: bool,
+    epoch: u64,
+    stamp_c: u64,
+}
+
+impl ShardSim {
+    /// Build a shard over `sub` (the global config sliced to this shard's
+    /// server range, outages stripped — outage and fault events replay
+    /// through the orchestrator's global queue). `init_ticks` seeds
+    /// construction-epoch fluctuation ticks as `(time, stamp, local
+    /// link)` stamped in global construction order.
+    pub(crate) fn new(
+        sub: &ClusterConfig,
+        shard: usize,
+        lookahead_s: f64,
+        init_ticks: &[(SimTime, u64, usize)],
+        monitored: bool,
+    ) -> Self {
+        let n = sub.servers.len();
+        let n_links = sub.links.len();
+        let mut events = EventQueue::new();
+        for &(at, stamp, link) in init_ticks {
+            events.push_at_stamped(at, stamp, LocalEv::FluctTick { link });
+        }
+        ShardSim {
+            shard,
+            cluster: ClusterSim::new(sub),
+            events,
+            flows: Vec::new(),
+            free: Vec::new(),
+            link_sched: vec![SchedCache::default(); n],
+            server_sched: vec![SchedCache::default(); n],
+            fault: vec![ServerFault::default(); n],
+            link_flap: vec![0; n_links],
+            fluct_pending: vec![VecDeque::new(); n_links],
+            observed: monitored.then(|| vec![1.0; n]),
+            reap_buf: Vec::new(),
+            pending_ca: BinaryHeap::new(),
+            pending_sd: BinaryHeap::new(),
+            lookahead_s,
+            churn_guard: sub.churn_guard,
+            epoch: 0,
+            stamp_c: 0,
+        }
+    }
+
+    fn set_epoch(&mut self, epoch: u64) {
+        if epoch != self.epoch {
+            debug_assert!(epoch > self.epoch, "barrier epochs are monotone");
+            self.epoch = epoch;
+            self.stamp_c = 0;
+        }
+    }
+
+    /// Would executing `ev` require the merge barrier? (See the module
+    /// docs' classification table.)
+    fn is_boundary(&self, ev: LocalEv) -> bool {
+        match ev {
+            LocalEv::LinkDone { .. } | LocalEv::FluctTick { .. } => false,
+            LocalEv::ServerDone { server, gen } => self.cluster.servers[server].gen.is_current(gen),
+            LocalEv::ComputeArrive { slot: _, server } => {
+                self.fault[server].crash > 0
+                    || !self.cluster.accepting[server]
+                    || self.cluster.servers[server].would_drop()
+            }
+        }
+    }
+
+    pub(crate) fn status(&self) -> ShardStatus {
+        let head = self
+            .events
+            .peek()
+            .map(|(t, stamp, &ev)| (Key(t, stamp), self.is_boundary(ev)));
+        let mut bound = match (self.pending_ca.peek(), self.pending_sd.peek()) {
+            (Some(a), Some(b)) => Some(a.0.min(b.0)),
+            (Some(a), None) => Some(a.0),
+            (None, Some(b)) => Some(b.0),
+            (None, None) => None,
+        };
+        if let Some((hk, boundary)) = head {
+            if !boundary {
+                // Uploads reaped while granted land no earlier than
+                // head.time + min-RTT over local links.
+                let ahead = Key(hk.0 + self.lookahead_s, 0);
+                bound = Some(match bound {
+                    Some(b) if b < ahead => b,
+                    _ => ahead,
+                });
+            }
+        }
+        ShardStatus {
+            head,
+            bound,
+            now: self.events.now(),
+            processed: self.events.processed(),
+            stale: self.events.stale(),
+            peak: self.events.peak_len(),
+        }
+    }
+
+    /// Drop a popped CA/SD key from the conservative-bound heaps. Pops
+    /// happen in key order, so the popped key is always the heap minimum.
+    fn note_popped(&mut self, ev: LocalEv, key: Key) {
+        match ev {
+            LocalEv::ComputeArrive { .. } => {
+                let top = self.pending_ca.pop();
+                debug_assert_eq!(top, Some(std::cmp::Reverse(key)));
+            }
+            LocalEv::ServerDone { .. } => {
+                let top = self.pending_sd.pop();
+                debug_assert_eq!(top, Some(std::cmp::Reverse(key)));
+            }
+            _ => {}
+        }
+    }
+
+    /// Process local events with key strictly below `limit`, stopping at
+    /// the first boundary.
+    fn run_granted(&mut self, limit: Key, epoch: u64, fluct: &mut Vec<(u32, f64)>) -> ShardStatus {
+        self.set_epoch(epoch);
+        for (li, v) in fluct.drain(..) {
+            self.fluct_pending[li as usize].push_back(v);
+        }
+        // lint: no-alloc per-shard hot loop: grant windows execute O(events) against recycled buffers
+        loop {
+            let Some((t, stamp, &ev)) = self.events.peek() else {
+                break;
+            };
+            let key = Key(t, stamp);
+            if !(key < limit) || self.is_boundary(ev) {
+                break;
+            }
+            let popped = self.events.pop();
+            debug_assert!(popped.is_some());
+            self.note_popped(ev, key);
+            self.cluster.now = t;
+            self.exec_local(t, ev);
+        }
+        // lint: end-no-alloc
+        self.status()
+    }
+
+    /// Execute one *local* event — a transcription of the sequential
+    /// engine's `LinkDone` / `FluctTick` arms (plus the stale half of
+    /// `ServerDone` and the admit path of `ComputeArrive`), against
+    /// shard-local state.
+    fn exec_local(&mut self, now: SimTime, ev: LocalEv) {
+        match ev {
+            LocalEv::LinkDone { link, gen } => {
+                if !self.cluster.links[link].gen.is_current(gen) {
+                    self.events.note_stale();
+                    return;
+                }
+                self.link_sched[link].live = false;
+                self.cluster.links[link].advance_to(now);
+                let rate = self.cluster.links[link].per_flow_rate();
+                let mut done = std::mem::take(&mut self.reap_buf);
+                self.cluster.links[link].queue.reap_into(now, rate, &mut done);
+                let rtt = self.cluster.links[link].spec.rtt_s;
+                for job in &done {
+                    let slot = job.id as usize;
+                    self.flows[slot].upload_done_at = now + rtt;
+                    let stamp = shard_stamp(self.epoch, self.shard, self.stamp_c);
+                    self.stamp_c += 1;
+                    self.pending_ca.push(std::cmp::Reverse(Key(now + rtt, stamp)));
+                    self.events
+                        .push_at_stamped(now + rtt, stamp, LocalEv::ComputeArrive { slot, server: link });
+                }
+                self.reap_buf = done;
+                self.reschedule_link(now, link);
+            }
+            LocalEv::ComputeArrive { slot, server } => {
+                // Classified local: the landing admits (not crashed, not
+                // departed, queue has room).
+                self.cluster.land_in_flight(server, &self.flows[slot].req);
+                let srv = &mut self.cluster.servers[server];
+                srv.advance_to(now);
+                let ttft_s = srv.predict(&self.flows[slot].req, 0, 0.0).ttft_s;
+                self.flows[slot].first_token_at = now + ttft_s;
+                self.cluster.servers[server].admit(slot as u64, &self.flows[slot].req, now);
+                self.cluster.refresh_admissibility(server);
+                self.flows[slot].phase = FlowPhase::Computing;
+                self.flows[slot].compute_started_at = now;
+                self.reschedule_server(now, server);
+            }
+            LocalEv::ServerDone { server, gen } => {
+                // Only stale `ServerDone`s classify local; current ones
+                // are boundaries.
+                debug_assert!(!self.cluster.servers[server].gen.is_current(gen));
+                let _ = (server, gen);
+                self.events.note_stale();
+            }
+            LocalEv::FluctTick { link } => {
+                let l = &mut self.cluster.links[link];
+                l.advance_to(now);
+                // Pre-drawn by the orchestrator in sequential stream
+                // order; flap windows still consume the value.
+                debug_assert!(
+                    !self.fluct_pending[link].is_empty(),
+                    "fluct value underflow on link {link}: grant outran the drawn stream"
+                );
+                let m = self.fluct_pending[link].pop_front().unwrap_or(1.0);
+                let l = &mut self.cluster.links[link];
+                if self.link_flap[link] == 0 {
+                    l.mult = m;
+                }
+                let period = l.spec.fluct_period;
+                self.reschedule_link(now, link);
+                let stamp = shard_stamp(self.epoch, self.shard, self.stamp_c);
+                self.stamp_c += 1;
+                self.events
+                    .push_at_stamped(now + period, stamp, LocalEv::FluctTick { link });
+            }
+        }
+    }
+
+    /// Pop and execute the boundary event at the head.
+    fn execute_boundary(&mut self, now: SimTime, epoch: u64) -> BoundaryOut {
+        self.set_epoch(epoch);
+        let Some((t, stamp, &ev)) = self.events.peek() else {
+            debug_assert!(false, "ExecuteBoundary on an empty shard queue");
+            return BoundaryOut::None;
+        };
+        debug_assert_eq!(t, now, "boundary executes at its own key time");
+        let key = Key(t, stamp);
+        let popped = self.events.pop();
+        debug_assert!(popped.is_some());
+        self.note_popped(ev, key);
+        self.cluster.now = now;
+        match ev {
+            LocalEv::ServerDone { server, gen } => {
+                if !self.cluster.servers[server].gen.is_current(gen) {
+                    self.events.note_stale();
+                    return BoundaryOut::None;
+                }
+                self.server_sched[server].live = false;
+                self.cluster.servers[server].advance_to(now);
+                let mut done = std::mem::take(&mut self.reap_buf);
+                self.cluster.servers[server].reap_into(now, &mut done);
+                self.cluster.refresh_admissibility(server);
+                let mut recs = Vec::with_capacity(done.len());
+                for job in &done {
+                    recs.push(self.complete_rec(job.id as usize, server, job.energy_j));
+                }
+                self.reap_buf = done;
+                self.reschedule_server(now, server);
+                BoundaryOut::Completions { server, recs }
+            }
+            LocalEv::ComputeArrive { slot, server } => {
+                self.cluster.land_in_flight(server, &self.flows[slot].req);
+                if self.fault[server].crash > 0 || !self.cluster.accepting[server] {
+                    self.cluster.servers[server].advance_to(now);
+                    let kind = if self.fault[server].crash > 0 {
+                        LandKind::Crashed
+                    } else {
+                        LandKind::Departed
+                    };
+                    let rec = self.fail_rec(slot);
+                    return BoundaryOut::Landed { server, kind, rec };
+                }
+                let srv = &mut self.cluster.servers[server];
+                srv.advance_to(now);
+                if srv.would_drop() {
+                    let rec = self.fail_rec(slot);
+                    return BoundaryOut::Landed {
+                        server,
+                        kind: LandKind::Dropped,
+                        rec,
+                    };
+                }
+                // Classified boundary at peek but admitting now: cannot
+                // happen without an interleaved state change (the
+                // orchestrator re-reads status after every one), kept as a
+                // defensive local admit.
+                let ttft_s = srv.predict(&self.flows[slot].req, 0, 0.0).ttft_s;
+                self.flows[slot].first_token_at = now + ttft_s;
+                self.cluster.servers[server].admit(slot as u64, &self.flows[slot].req, now);
+                self.cluster.refresh_admissibility(server);
+                self.flows[slot].phase = FlowPhase::Computing;
+                self.flows[slot].compute_started_at = now;
+                self.reschedule_server(now, server);
+                BoundaryOut::None
+            }
+            LocalEv::LinkDone { .. } | LocalEv::FluctTick { .. } => {
+                debug_assert!(false, "local event executed as boundary");
+                self.exec_local(now, ev);
+                BoundaryOut::None
+            }
+        }
+    }
+
+    /// Start an upload — the sequential `dispatch()` against a fresh
+    /// flow slot.
+    fn dispatch(&mut self, now: SimTime, epoch: u64, svc: u64, req: ServiceRequest, server: usize) {
+        self.set_epoch(epoch);
+        self.cluster.now = now;
+        let slot = self.alloc_flow(svc, server, req);
+        self.cluster.dispatch_in_flight(server, &self.flows[slot].req);
+        let payload = self.flows[slot].req.payload_bytes;
+        let link = &mut self.cluster.links[server];
+        link.advance_to(now);
+        link.queue.push(slot as u64, payload as f64, now);
+        let tx_energy_j = link.spec.tx_energy(payload);
+        let fl = &mut self.flows[slot];
+        fl.dispatched_at = now;
+        fl.tx_energy_j = tx_energy_j;
+        self.reschedule_link(now, server);
+    }
+
+    /// Replay one localized fault action — the sequential `apply_fault`
+    /// arms minus the orchestrator-side incident/fleet accounting, which
+    /// is reconstructed from the returned [`FaultOut`].
+    fn apply_fault(&mut self, now: SimTime, epoch: u64, action: FaultAction) -> FaultOut {
+        self.set_epoch(epoch);
+        self.cluster.now = now;
+        let mut out = FaultOut::default();
+        match action {
+            FaultAction::Down { server, crash } => {
+                self.fault_down(now, server, crash, &mut out);
+            }
+            FaultAction::Up { server, crash } => {
+                self.fault_up(now, server, crash, &mut out);
+            }
+            FaultAction::DegradeStart { server, factor } => {
+                self.cluster.servers[server].advance_to(now);
+                let f = &mut self.fault[server];
+                f.degrade += 1;
+                f.degrade_factor *= factor;
+                self.apply_rate(server);
+                self.reschedule_server(now, server);
+            }
+            FaultAction::DegradeEnd { server, factor } => {
+                self.cluster.servers[server].advance_to(now);
+                let f = &mut self.fault[server];
+                f.degrade -= 1;
+                if f.degrade == 0 {
+                    // Snap back to exactly 1.0 (no float residue).
+                    f.degrade_factor = 1.0;
+                } else {
+                    f.degrade_factor /= factor;
+                }
+                self.apply_rate(server);
+                self.reschedule_server(now, server);
+            }
+            FaultAction::FlapStart { link, factor } => {
+                self.link_flap[link] += 1;
+                let l = &mut self.cluster.links[link];
+                l.advance_to(now);
+                l.mult = factor;
+                self.reschedule_link(now, link);
+            }
+            FaultAction::FlapEnd { link } => {
+                self.link_flap[link] -= 1;
+                if self.link_flap[link] == 0 {
+                    let l = &mut self.cluster.links[link];
+                    l.advance_to(now);
+                    l.mult = 1.0;
+                    self.reschedule_link(now, link);
+                }
+            }
+            FaultAction::Leave { server } => {
+                self.cluster.accepting[server] = false;
+                self.cluster.refresh_admissibility(server);
+            }
+            FaultAction::Join { server } => {
+                self.cluster.accepting[server] = true;
+                self.cluster.refresh_admissibility(server);
+            }
+        }
+        out
+    }
+
+    fn apply_rate(&mut self, server: usize) {
+        let f = self.fault[server];
+        self.cluster.servers[server].rate_mult = if f.down > 0 { 0.0 } else { f.degrade_factor };
+    }
+
+    fn fault_down(&mut self, now: SimTime, server: usize, crash: bool, out: &mut FaultOut) {
+        self.cluster.servers[server].advance_to(now);
+        self.fault[server].down += 1;
+        if crash {
+            self.fault[server].crash += 1;
+        }
+        self.apply_rate(server);
+        self.reschedule_server(now, server);
+        if crash {
+            self.crash_in_flight(now, server, out);
+        }
+        if self.fault[server].down == 1 {
+            out.newly_down = true;
+        }
+    }
+
+    fn fault_up(&mut self, now: SimTime, server: usize, crash: bool, out: &mut FaultOut) {
+        self.cluster.servers[server].advance_to(now);
+        let f = &mut self.fault[server];
+        debug_assert!(f.down > 0, "Up without covering Down on local server {server}");
+        f.down = f.down.saturating_sub(1);
+        if crash {
+            f.crash = f.crash.saturating_sub(1);
+        }
+        self.apply_rate(server);
+        self.reschedule_server(now, server);
+        if self.fault[server].down == 0 {
+            out.recovered = true;
+        }
+    }
+
+    /// Tear down every flow computing on a hard-crashed server, in
+    /// ascending global-svc order (the sequential victim-scan order: svc
+    /// indices are assigned in arrival order).
+    fn crash_in_flight(&mut self, now: SimTime, server: usize, out: &mut FaultOut) {
+        let mut victims: Vec<usize> = (0..self.flows.len())
+            .filter(|&s| {
+                self.flows[s].live
+                    && self.flows[s].phase == FlowPhase::Computing
+                    && self.flows[s].server == server
+            })
+            .collect();
+        victims.sort_unstable_by_key(|&s| self.flows[s].svc);
+        self.cluster.servers[server].crash_reset(now);
+        self.reschedule_server(now, server);
+        self.cluster.refresh_admissibility(server);
+        for slot in victims {
+            let rec = self.fail_rec(slot);
+            out.victims.push(rec);
+        }
+    }
+
+    /// Fill scheduler views + admissibility flags for the global
+    /// snapshot; returns the shard's admissible-server count.
+    fn fill_view(&self, req: &ServiceRequest, views: &mut Vec<ServerView>, adm: &mut Vec<bool>) -> usize {
+        views.clear();
+        adm.clear();
+        for i in 0..self.cluster.servers.len() {
+            let observed = self.observed.as_ref().map(|o| o[i]);
+            views.push(fill_server_view(
+                &self.cluster.servers[i],
+                &self.cluster.links[i],
+                &self.cluster.in_flight[i],
+                observed,
+                req,
+            ));
+        }
+        adm.extend_from_slice(self.cluster.admissible_flags());
+        self.cluster.n_admissible()
+    }
+
+    /// Ground-truth health snapshot in local server order (the sequential
+    /// `health_probe` scrape).
+    fn probe_health(&self, buf: &mut Vec<f64>) {
+        buf.clear();
+        for (i, srv) in self.cluster.servers.iter().enumerate() {
+            buf.push(if self.cluster.accepting[i] { srv.rate_mult } else { 0.0 });
+        }
+    }
+
+    fn publish_observed(&mut self, observed: &[f64]) {
+        if let Some(o) = self.observed.as_mut() {
+            o.copy_from_slice(observed);
+        }
+    }
+
+    fn finish(&mut self, now: SimTime) -> ShardFinish {
+        self.cluster.advance_all(now);
+        let mut fin = ShardFinish {
+            infer_j: Vec::with_capacity(self.cluster.servers.len()),
+            idle_j: Vec::with_capacity(self.cluster.servers.len()),
+            bytes_moved: Vec::with_capacity(self.cluster.links.len()),
+            tokens: self.cluster.tokens_served(),
+            live_flows: Vec::new(),
+        };
+        for s in &self.cluster.servers {
+            fin.infer_j.push(s.energy_infer_j);
+            fin.idle_j.push(s.energy_idle_j);
+        }
+        for l in &self.cluster.links {
+            fin.bytes_moved.push(l.bytes_moved);
+        }
+        for fl in &self.flows {
+            if fl.live {
+                fin.live_flows.push((fl.svc, fl.first_token_at, fl.tx_energy_j));
+            }
+        }
+        fin
+    }
+
+    fn alloc_flow(&mut self, svc: u64, server: usize, req: ServiceRequest) -> usize {
+        let fl = FlowSlot {
+            live: true,
+            svc,
+            server,
+            req,
+            phase: FlowPhase::Uploading,
+            dispatched_at: 0.0,
+            upload_done_at: 0.0,
+            compute_started_at: 0.0,
+            first_token_at: f64::INFINITY,
+            tx_energy_j: 0.0,
+        };
+        match self.free.pop() {
+            Some(slot) => {
+                self.flows[slot] = fl;
+                slot
+            }
+            None => {
+                self.flows.push(fl);
+                self.flows.len() - 1
+            }
+        }
+    }
+
+    /// Resolve a flow into its fail/requeue record and recycle the slot.
+    fn fail_rec(&mut self, slot: usize) -> FailRec {
+        let fl = &mut self.flows[slot];
+        fl.live = false;
+        let rec = FailRec {
+            svc: fl.svc,
+            dispatched_at: fl.dispatched_at,
+            upload_done_at: fl.upload_done_at,
+            tx_energy_j: fl.tx_energy_j,
+        };
+        self.free.push(slot);
+        rec
+    }
+
+    fn complete_rec(&mut self, slot: usize, server: usize, infer_energy_j: f64) -> CompletionRec {
+        let fl = &mut self.flows[slot];
+        fl.live = false;
+        let tokens = fl.req.total_tokens();
+        let rec = CompletionRec {
+            svc: fl.svc,
+            dispatched_at: fl.dispatched_at,
+            upload_done_at: fl.upload_done_at,
+            compute_started_at: fl.compute_started_at,
+            first_token_at: fl.first_token_at,
+            tx_energy_j: fl.tx_energy_j,
+            infer_energy_j,
+        };
+        self.cluster.servers[server].tokens_served += tokens;
+        self.free.push(slot);
+        rec
+    }
+
+    /// Transcription of the sequential `reschedule_link`, with the
+    /// barrier clock passed explicitly (the local queue clock lags
+    /// barrier-driven touches).
+    fn reschedule_link(&mut self, now: SimTime, li: usize) {
+        let link = &mut self.cluster.links[li];
+        let rate = link.per_flow_rate();
+        let cache = &mut self.link_sched[li];
+        match link.queue.peek_finish_work() {
+            Some(fw) if rate > 0.0 => {
+                if cache.live && cache.fw == fw && cache.rate == rate {
+                    if self.churn_guard {
+                        return;
+                    }
+                    let gen = link.gen.invalidate();
+                    let stamp = shard_stamp(self.epoch, self.shard, self.stamp_c);
+                    self.stamp_c += 1;
+                    self.events
+                        .push_at_stamped(cache.at, stamp, LocalEv::LinkDone { link: li, gen });
+                    return;
+                }
+                let gen = link.gen.invalidate();
+                let dt = (fw - link.queue.attained()).max(0.0) / rate;
+                let at = now + dt;
+                let stamp = shard_stamp(self.epoch, self.shard, self.stamp_c);
+                self.stamp_c += 1;
+                self.events
+                    .push_at_stamped(at, stamp, LocalEv::LinkDone { link: li, gen });
+                *cache = SchedCache {
+                    live: true,
+                    fw,
+                    rate,
+                    at,
+                };
+            }
+            _ => {
+                link.gen.invalidate();
+                cache.live = false;
+            }
+        }
+    }
+
+    /// Transcription of the sequential `reschedule_server` (same explicit
+    /// clock); every completion it schedules is tracked as a potential
+    /// boundary in `pending_sd`.
+    fn reschedule_server(&mut self, now: SimTime, si: usize) {
+        let srv = &mut self.cluster.servers[si];
+        let cache = &mut self.server_sched[si];
+        match srv.completion_key() {
+            Some((fw, rate)) => {
+                if cache.live && cache.fw == fw && cache.rate == rate {
+                    if self.churn_guard {
+                        return;
+                    }
+                    let gen = srv.gen.invalidate();
+                    let stamp = shard_stamp(self.epoch, self.shard, self.stamp_c);
+                    self.stamp_c += 1;
+                    self.pending_sd.push(std::cmp::Reverse(Key(cache.at, stamp)));
+                    self.events
+                        .push_at_stamped(cache.at, stamp, LocalEv::ServerDone { server: si, gen });
+                    return;
+                }
+                let gen = srv.gen.invalidate();
+                let Some(dt) = srv.next_completion_in() else {
+                    log::error!("local server {si}: completion key without completion estimate");
+                    cache.live = false;
+                    return;
+                };
+                let at = now + dt;
+                let stamp = shard_stamp(self.epoch, self.shard, self.stamp_c);
+                self.stamp_c += 1;
+                self.pending_sd.push(std::cmp::Reverse(Key(at, stamp)));
+                self.events
+                    .push_at_stamped(at, stamp, LocalEv::ServerDone { server: si, gen });
+                *cache = SchedCache {
+                    live: true,
+                    fw,
+                    rate,
+                    at,
+                };
+            }
+            None => {
+                srv.gen.invalidate();
+                cache.live = false;
+            }
+        }
+    }
+}
+
+/// Shard worker: strict request/reply over bounded channels until
+/// `Finish` (or channel teardown on an orchestrator panic).
+pub(crate) fn worker(mut shard: ShardSim, rx: Receiver<Cmd>, tx: SyncSender<Reply>) {
+    while let Ok(cmd) = rx.recv() {
+        let reply = match cmd {
+            Cmd::Grant {
+                limit,
+                epoch,
+                mut fluct,
+            } => {
+                let status = shard.run_granted(limit, epoch, &mut fluct);
+                Reply::Granted { status, fluct }
+            }
+            Cmd::ExecuteBoundary { now, epoch } => {
+                let out = shard.execute_boundary(now, epoch);
+                Reply::Boundary {
+                    out,
+                    status: shard.status(),
+                }
+            }
+            Cmd::AdvanceTo { now } => {
+                shard.cluster.advance_all(now);
+                Reply::Advanced
+            }
+            Cmd::FillView {
+                req,
+                mut views,
+                mut admissible,
+            } => {
+                let n_admissible = shard.fill_view(&req, &mut views, &mut admissible);
+                Reply::View {
+                    views,
+                    admissible,
+                    n_admissible,
+                }
+            }
+            Cmd::Dispatch {
+                svc,
+                req,
+                server,
+                now,
+                epoch,
+            } => {
+                shard.dispatch(now, epoch, svc, req, server);
+                Reply::Dispatched {
+                    status: shard.status(),
+                }
+            }
+            Cmd::ApplyFault { action, now, epoch } => {
+                let out = shard.apply_fault(now, epoch, action);
+                Reply::Fault {
+                    out,
+                    status: shard.status(),
+                }
+            }
+            Cmd::ProbeHealth { mut buf } => {
+                shard.probe_health(&mut buf);
+                Reply::Health { buf }
+            }
+            Cmd::PublishObserved { observed } => {
+                shard.publish_observed(&observed);
+                Reply::Published { observed }
+            }
+            Cmd::Finish { now } => {
+                let fin = shard.finish(now);
+                let _ = tx.send(Reply::Finished(Box::new(fin)));
+                return;
+            }
+        };
+        if tx.send(reply).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cluster::BandwidthMode;
+    use crate::workload::service::{ServiceClass, SloSpec};
+
+    fn sub_cfg() -> ClusterConfig {
+        ClusterConfig::paper("llama2-7b", BandwidthMode::Stable)
+    }
+
+    fn req(id: u64) -> ServiceRequest {
+        ServiceRequest {
+            id,
+            class: ServiceClass::Chat,
+            arrival: 0.0,
+            prompt_tokens: 100,
+            output_tokens: 40,
+            slo: SloSpec::completion_only(4.0),
+            payload_bytes: 200_000,
+        }
+    }
+
+    const NO_LIMIT: Key = Key(f64::INFINITY, u64::MAX);
+
+    #[test]
+    fn key_ordering_is_time_then_stamp() {
+        assert!(Key(1.0, 5) < Key(1.0, 6));
+        assert!(Key(1.0, 99) < Key(1.5, 0));
+        assert!(Key(0.0, 0) < Key(0.0, 1));
+        let mut h = BinaryHeap::new();
+        h.push(std::cmp::Reverse(Key(2.0, 1)));
+        h.push(std::cmp::Reverse(Key(1.0, 7)));
+        h.push(std::cmp::Reverse(Key(1.0, 3)));
+        assert_eq!(h.pop(), Some(std::cmp::Reverse(Key(1.0, 3))));
+    }
+
+    #[test]
+    fn stamps_order_construction_then_barrier_then_shards() {
+        // Within one epoch: orchestrator stamps < shard 0 < shard 1.
+        let o = orch_stamp(3, 17);
+        let s0 = shard_stamp(3, 0, 0);
+        let s1 = shard_stamp(3, 1, 0);
+        assert!(o < s0 && s0 < s1);
+        // Any earlier-epoch stamp beats any later-epoch stamp.
+        assert!(shard_stamp(3, 200, (1 << 24) - 1) < orch_stamp(4, 0));
+        // Construction (epoch 0) beats everything at runtime.
+        assert!(orch_stamp(0, 5) < shard_stamp(1, 0, 0));
+    }
+
+    #[test]
+    fn dispatch_then_grant_reaches_boundary_completion() {
+        let cfg = sub_cfg();
+        let mut s = ShardSim::new(&cfg, 0, 0.005, &[], false);
+        s.dispatch(0.0, 1, 7, req(7), 0);
+        // Upload + landing are local; the completion is the boundary.
+        let mut fl = Vec::new();
+        let status = s.run_granted(NO_LIMIT, 1, &mut fl);
+        let (key, boundary) = status.head.expect("a ServerDone must be scheduled");
+        assert!(boundary, "a current-generation ServerDone is a boundary");
+        assert!(key.0 > 0.0);
+        match s.execute_boundary(key.0, 2) {
+            BoundaryOut::Completions { server, recs } => {
+                assert_eq!(server, 0);
+                assert_eq!(recs.len(), 1);
+                assert_eq!(recs[0].svc, 7);
+                assert!(recs[0].tx_energy_j > 0.0);
+                assert!(recs[0].first_token_at.is_finite());
+            }
+            other => panic!("expected a completion, got {other:?}"),
+        }
+        // Slot recycled, tokens accounted on the shard's server.
+        assert_eq!(s.free.len(), 1);
+        assert_eq!(s.cluster.tokens_served(), req(7).total_tokens());
+    }
+
+    #[test]
+    fn bound_never_exceeds_pending_compute_arrive() {
+        let cfg = sub_cfg();
+        let mut s = ShardSim::new(&cfg, 0, 0.005, &[], false);
+        s.dispatch(0.0, 1, 0, req(0), 0);
+        // Run the upload until the ComputeArrive is queued.
+        let mut fl = Vec::new();
+        let mut status = s.run_granted(Key(0.0, u64::MAX), 1, &mut fl);
+        while s.pending_ca.is_empty() {
+            let (key, boundary) = status.head.expect("upload events pending");
+            assert!(!boundary);
+            status = s.run_granted(Key(key.0 + 1e-9, u64::MAX), 1, &mut fl);
+        }
+        let ca_min = s.pending_ca.peek().expect("just checked").0;
+        let bound = status.bound.expect("pending CA implies a bound");
+        assert!(bound <= ca_min, "bound {bound:?} must cover queued CA {ca_min:?}");
+    }
+
+    #[test]
+    fn crashed_landing_classifies_as_boundary_and_fails() {
+        let cfg = sub_cfg();
+        let mut s = ShardSim::new(&cfg, 0, 0.005, &[], false);
+        s.dispatch(0.0, 1, 3, req(3), 1);
+        // Crash server 1 mid-upload (barrier-driven), then drain.
+        let out = s.apply_fault(
+            0.01,
+            2,
+            FaultAction::Down {
+                server: 1,
+                crash: true,
+            },
+        );
+        assert!(out.newly_down);
+        assert!(out.victims.is_empty(), "nothing was computing yet");
+        let mut fl = Vec::new();
+        let mut status = s.run_granted(NO_LIMIT, 2, &mut fl);
+        let key = loop {
+            match status.head {
+                Some((k, true)) => break k,
+                Some(_) | None => {
+                    status = s.run_granted(NO_LIMIT, 2, &mut fl);
+                }
+            }
+        };
+        match s.execute_boundary(key.0, 3) {
+            BoundaryOut::Landed { server, kind, rec } => {
+                assert_eq!(server, 1);
+                assert_eq!(kind, LandKind::Crashed);
+                assert_eq!(rec.svc, 3);
+                assert!(rec.tx_energy_j > 0.0);
+            }
+            other => panic!("expected a crashed landing, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn crash_tears_down_only_the_crashed_servers_flows() {
+        let cfg = sub_cfg();
+        let mut s = ShardSim::new(&cfg, 0, 0.005, &[], false);
+        s.dispatch(0.0, 1, 0, req(0), 0);
+        s.dispatch(0.0, 1, 1, req(1), 1);
+        // Drain both uploads until both flows are computing (the next
+        // head is then a boundary ServerDone).
+        let mut fl = Vec::new();
+        let mut guard = 0;
+        loop {
+            let status = s.run_granted(NO_LIMIT, 1, &mut fl);
+            match status.head {
+                Some((_, true)) => break,
+                Some(_) => {}
+                None => panic!("completions must be pending"),
+            }
+            guard += 1;
+            assert!(guard < 100, "flows never reached the servers");
+        }
+        assert_eq!(
+            s.flows.iter().filter(|f| f.live && f.phase == FlowPhase::Computing).count(),
+            2
+        );
+        let out = s.apply_fault(
+            1.0,
+            2,
+            FaultAction::Down {
+                server: 0,
+                crash: true,
+            },
+        );
+        // Only svc 0 (computing on server 0) is a casualty.
+        assert_eq!(out.victims.len(), 1);
+        assert_eq!(out.victims[0].svc, 0);
+        assert!(s.flows.iter().any(|f| f.live && f.svc == 1));
+    }
+
+    #[test]
+    fn fluct_values_apply_in_fifo_order() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Fluctuating);
+        let period = cfg.links[0].fluct_period;
+        let mut s = ShardSim::new(&cfg, 0, 0.005, &[(period, 0, 0)], false);
+        let mut fl = vec![(0u32, 0.9), (0u32, 1.1)];
+        let status = s.run_granted(Key(period + period / 2.0, u64::MAX), 1, &mut fl);
+        assert!(fl.is_empty(), "the grant drains the shipped values");
+        assert_eq!(s.cluster.links[0].mult, 0.9, "first tick applies the first value");
+        assert_eq!(s.fluct_pending[0].len(), 1, "second value waits for the next tick");
+        // The tick re-armed itself.
+        assert!(status.head.is_some());
+    }
+}

@@ -184,6 +184,38 @@ impl<E> EventQueue<E> {
         self.push_at(self.now + delay, event);
     }
 
+    /// Schedule `event` at `at` under a caller-issued ordering stamp
+    /// instead of the queue's own `seq` counter.
+    ///
+    /// This is the cross-queue tie-order primitive of the sharded engine
+    /// (sim/shard.rs): the orchestrator issues globally comparable stamps
+    /// so that `(time, stamp)` across *several* shard-local queues
+    /// reproduces the single sequential queue's `(time, seq)` total
+    /// order. The internal counter is advanced past the stamp so a later
+    /// plain `push_at` can never collide with or pre-empt a stamped
+    /// entry. Stamps must be unique per queue (the sharded stamp clock
+    /// guarantees this by construction).
+    pub fn push_at_stamped(&mut self, at: SimTime, stamp: u64, event: E) {
+        assert!(at.is_finite(), "non-finite event time {at}");
+        let t = if at < self.now { self.now } else { at };
+        self.seq = self.seq.max(stamp.saturating_add(1));
+        let vb = self.vbucket_of(t);
+        let entry = CalEntry {
+            time: t,
+            seq: stamp,
+            vb,
+            event,
+        };
+        let bucket = &mut self.buckets[(vb % self.nbuckets as u64) as usize];
+        let pos = bucket.partition_point(|e| (e.time, e.seq) > (t, stamp));
+        bucket.insert(pos, entry);
+        self.len += 1;
+        self.peak_len = self.peak_len.max(self.len);
+        if self.len > 2 * self.nbuckets && self.nbuckets < MAX_BUCKETS {
+            self.rebuild();
+        }
+    }
+
     /// Pop the earliest event, advancing the clock.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
         if self.len == 0 {
@@ -238,6 +270,18 @@ impl<E> EventQueue<E> {
 
     /// Peek at the next event time without advancing.
     pub fn peek_time(&self) -> Option<SimTime> {
+        self.peek().map(|(t, _, _)| t)
+    }
+
+    /// Peek at the head `(time, stamp, event)` without popping or
+    /// advancing the clock.
+    ///
+    /// The sharded grant protocol classifies the head (local physics vs
+    /// scheduler-coupled boundary) *before* committing to process it: a
+    /// pop would advance `now` and clamp any earlier event a concurrent
+    /// merge-barrier dispatch lands afterwards, so classification must be
+    /// possible by reference.
+    pub fn peek(&self) -> Option<(SimTime, u64, &E)> {
         self.buckets
             .iter()
             .filter_map(|b| b.last())
@@ -247,7 +291,7 @@ impl<E> EventQueue<E> {
                     // lint: allow(p1, n1) event times are asserted finite at push
                     .expect("finite times")
             })
-            .map(|e| e.time)
+            .map(|e| (e.time, e.seq, &e.event))
     }
 
     /// Re-hash every entry into a bucket array sized for the current
@@ -416,6 +460,19 @@ impl<E> HeapEventQueue<E> {
         self.push_at(self.now + delay, event);
     }
 
+    /// Stamped push — spec twin of [`EventQueue::push_at_stamped`].
+    pub fn push_at_stamped(&mut self, at: SimTime, stamp: u64, event: E) {
+        assert!(at.is_finite(), "non-finite event time {at}");
+        let t = if at < self.now { self.now } else { at };
+        self.seq = self.seq.max(stamp.saturating_add(1));
+        self.heap.push(HeapEntry {
+            time: t,
+            seq: stamp,
+            event,
+        });
+        self.peak_len = self.peak_len.max(self.heap.len());
+    }
+
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
         let e = self.heap.pop()?;
         debug_assert!(e.time >= self.now, "time went backwards");
@@ -426,6 +483,11 @@ impl<E> HeapEventQueue<E> {
 
     pub fn peek_time(&self) -> Option<SimTime> {
         self.heap.peek().map(|e| e.time)
+    }
+
+    /// Peek `(time, stamp, event)` — spec twin of [`EventQueue::peek`].
+    pub fn peek(&self) -> Option<(SimTime, u64, &E)> {
+        self.heap.peek().map(|e| (e.time, e.seq, &e.event))
     }
 }
 
@@ -632,6 +694,64 @@ mod tests {
         assert_eq!(order, vec!["a", "a2", "b", "c"]);
         assert_eq!(q.processed(), 4);
         assert_eq!(q.peak_len(), 4);
+    }
+
+    #[test]
+    fn peek_matches_next_pop() {
+        let mut q = EventQueue::new();
+        q.push_at(2.0, "b");
+        q.push_at(1.0, "a");
+        let (t, _, e) = q.peek().expect("head");
+        assert_eq!((t, *e), (1.0, "a"));
+        // Peeking is pure: clock and counters untouched.
+        assert_eq!(q.now(), 0.0);
+        assert_eq!(q.len(), 2);
+        let (t2, e2) = q.pop().unwrap();
+        assert_eq!((t2, e2), (1.0, "a"));
+        assert_eq!(q.peek().map(|(t, _, e)| (t, *e)), Some((2.0, "b")));
+    }
+
+    #[test]
+    fn stamped_pushes_order_across_plain_pushes() {
+        // Stamps are the ordering key on ties: a stamped entry slots in
+        // exactly where a plain push with that seq would have.
+        let mut q = EventQueue::new();
+        q.push_at(5.0, "seq0");
+        q.push_at_stamped(5.0, 10, "stamp10");
+        q.push_at_stamped(5.0, 3, "stamp3");
+        // Plain push after a stamp of 10 must get seq >= 11.
+        q.push_at(5.0, "seq11");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["seq0", "stamp3", "stamp10", "seq11"]);
+    }
+
+    #[test]
+    fn stamped_agrees_with_heap_spec() {
+        let mut cal = EventQueue::new();
+        let mut heap = HeapEventQueue::new();
+        let script: &[(f64, u64)] = &[
+            (1.0, 7),
+            (1.0, 2),
+            (0.5, 40),
+            (2.5, 1),
+            (1.0, 9),
+            (0.5, 41),
+        ];
+        for &(t, s) in script {
+            cal.push_at_stamped(t, s, s);
+            heap.push_at_stamped(t, s, s);
+        }
+        loop {
+            assert_eq!(
+                cal.peek().map(|(t, s, e)| (t, s, *e)),
+                heap.peek().map(|(t, s, e)| (t, s, *e))
+            );
+            let (a, b) = (cal.pop(), heap.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
     }
 
     #[test]

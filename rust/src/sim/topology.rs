@@ -300,6 +300,113 @@ impl TopologyConfig {
 
 pub const TOPOLOGY_PRESETS: [&str; 3] = ["paper", "edgeshard-10x", "edgeshard-100x"];
 
+/// Shard-count selection for the sharded DES engine (`--shards N|auto`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardCount {
+    /// One shard per tier — the natural EdgeShard decomposition: tier
+    /// boundaries are exactly where cross-shard traffic pays a
+    /// `LinkSpec` latency, so per-tier shards maximize the conservative
+    /// lookahead window.
+    Auto,
+    /// Exactly `N` shards (contiguous, server-count-balanced chunks).
+    Fixed(usize),
+}
+
+impl ShardCount {
+    /// Parse a `--shards` flag value: "auto" or a positive integer.
+    pub fn parse(s: &str) -> Option<ShardCount> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Some(ShardCount::Auto);
+        }
+        match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Some(ShardCount::Fixed(n)),
+            _ => None,
+        }
+    }
+}
+
+/// Tier→shard lowering: which contiguous server ranges each engine shard
+/// owns, plus the conservative lookahead each shard derives from its
+/// inbound links.
+///
+/// Ranges are always contiguous and cover `0..n_servers` exactly — the
+/// engine's bit-identity holds for *any* contiguous partition (the merge
+/// barrier serializes every scheduler interaction), so the partition
+/// choice is purely a load-balance / lookahead question, never a
+/// correctness one. That is pinned by `rust/tests/sharded_identity.rs`
+/// across shard counts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Half-open server ranges `[lo, hi)`, one per shard, ascending and
+    /// adjoining. Never empty; every range is non-empty.
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// `n_shards` contiguous chunks over `n_servers` servers, balanced to
+    /// within one server. Shard counts above the server count are clamped
+    /// (an empty shard has no events and only adds barrier latency).
+    pub fn contiguous(n_servers: usize, n_shards: usize) -> ShardPlan {
+        assert!(n_servers > 0, "cannot shard an empty cluster");
+        let k = n_shards.clamp(1, n_servers);
+        let ranges = (0..k)
+            .map(|i| (i * n_servers / k, (i + 1) * n_servers / k))
+            .collect();
+        ShardPlan { ranges }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Shard owning server `i`.
+    pub fn shard_of(&self, server: usize) -> usize {
+        self.ranges
+            .iter()
+            .position(|&(lo, hi)| lo <= server && server < hi)
+            // lint: allow(p1) ranges cover 0..n_servers by construction
+            .expect("server inside the plan")
+    }
+
+    /// Conservative lookahead for shard `s` (seconds): the minimum
+    /// inbound cross-shard latency, i.e. the smallest `LinkSpec::rtt_s`
+    /// among the shard's own uplinks. A merge-barrier dispatch at time τ
+    /// cannot land a compute-side event on this shard before `τ +
+    /// lookahead`, which is the window the shard may burn through local
+    /// physics without another head exchange (see sim/shard.rs docs).
+    pub fn lookahead_s(&self, links: &[LinkSpec], s: usize) -> f64 {
+        let (lo, hi) = self.ranges[s];
+        links[lo..hi]
+            .iter()
+            .map(|l| l.rtt_s)
+            // lint: allow(nan-cmp) rtt_s is a positive config constant, never NaN
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+impl TopologyConfig {
+    /// Lower this topology to a [`ShardPlan`]: `Auto` gives one shard
+    /// per tier (shard boundaries = tier boundaries), `Fixed(n)` gives
+    /// `n` balanced contiguous chunks.
+    pub fn shard_plan(&self, count: ShardCount) -> ShardPlan {
+        match count {
+            ShardCount::Fixed(n) => ShardPlan::contiguous(self.n_servers(), n),
+            ShardCount::Auto => {
+                let mut ranges = Vec::with_capacity(self.tiers.len());
+                let mut lo = 0;
+                for tier in &self.tiers {
+                    if tier.count > 0 {
+                        ranges.push((lo, lo + tier.count));
+                        lo += tier.count;
+                    }
+                }
+                assert!(!ranges.is_empty(), "topology has at least one tier");
+                ShardPlan { ranges }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -498,6 +605,65 @@ mod tests {
         assert_eq!(rep.outcomes.len(), 400);
         assert_eq!(rep.unfinished, 0);
         assert!(rep.success_rate > 0.5, "success {}", rep.success_rate);
+    }
+
+    #[test]
+    fn shard_count_parses_cli_forms() {
+        assert_eq!(ShardCount::parse("auto"), Some(ShardCount::Auto));
+        assert_eq!(ShardCount::parse("AUTO"), Some(ShardCount::Auto));
+        assert_eq!(ShardCount::parse("1"), Some(ShardCount::Fixed(1)));
+        assert_eq!(ShardCount::parse("16"), Some(ShardCount::Fixed(16)));
+        assert_eq!(ShardCount::parse("0"), None);
+        assert_eq!(ShardCount::parse("-2"), None);
+        assert_eq!(ShardCount::parse("many"), None);
+    }
+
+    #[test]
+    fn auto_plan_follows_tier_boundaries() {
+        let t10 = TopologyConfig::edgeshard_10x("yi-6b", BandwidthMode::Stable);
+        let plan = t10.shard_plan(ShardCount::Auto);
+        assert_eq!(plan.ranges, vec![(0, 48), (48, 58), (58, 60)]);
+        assert_eq!(plan.n_shards(), 3);
+        assert_eq!(plan.shard_of(0), 0);
+        assert_eq!(plan.shard_of(47), 0);
+        assert_eq!(plan.shard_of(48), 1);
+        assert_eq!(plan.shard_of(59), 2);
+    }
+
+    #[test]
+    fn fixed_plans_are_balanced_contiguous_covers() {
+        for (n_servers, n_shards) in [(6, 1), (6, 4), (60, 4), (60, 7), (600, 16), (3, 9)] {
+            let plan = ShardPlan::contiguous(n_servers, n_shards);
+            assert!(plan.n_shards() <= n_shards);
+            assert_eq!(plan.ranges[0].0, 0);
+            assert_eq!(plan.ranges.last().unwrap().1, n_servers);
+            let mut covered = 0;
+            for (i, &(lo, hi)) in plan.ranges.iter().enumerate() {
+                assert_eq!(lo, covered, "gap before shard {i}");
+                assert!(hi > lo, "empty shard {i}");
+                covered = hi;
+            }
+            // Balanced to within one server.
+            let sizes: Vec<usize> = plan.ranges.iter().map(|&(lo, hi)| hi - lo).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced: {sizes:?}");
+        }
+    }
+
+    /// Lookahead lowers from LinkSpec RTTs: per-tier shards read their
+    /// tier's RTT (edge 5 ms, hub 20 ms, cloud 80 ms); a mixed chunk
+    /// takes the min across the tiers it straddles.
+    #[test]
+    fn lookahead_derives_from_inbound_link_rtt() {
+        let topo = TopologyConfig::edgeshard_10x("yi-6b", BandwidthMode::Stable);
+        let cfg = topo.build();
+        let auto = topo.shard_plan(ShardCount::Auto);
+        assert!((auto.lookahead_s(&cfg.links, 0) - 0.005).abs() < 1e-12);
+        assert!((auto.lookahead_s(&cfg.links, 1) - 0.02).abs() < 1e-12);
+        assert!((auto.lookahead_s(&cfg.links, 2) - 0.08).abs() < 1e-12);
+        let two = topo.shard_plan(ShardCount::Fixed(2));
+        // Second chunk [30, 60) straddles edge+hub+cloud → min is edge.
+        assert!((two.lookahead_s(&cfg.links, 1) - 0.005).abs() < 1e-12);
     }
 
     /// A short streaming run on the 10x preset end to end: every layer

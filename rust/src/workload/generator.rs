@@ -76,6 +76,37 @@ pub enum ArrivalModulation {
 }
 
 impl ArrivalModulation {
+    /// Reject nonsensical parameters with a panic. A modulation is
+    /// experiment configuration; a typo should fail at construction, at
+    /// every layer that accepts one ([`WorkloadConfig::with_modulation`],
+    /// `MergedArrivals::with_modulations`).
+    pub fn validate(&self) {
+        match *self {
+            ArrivalModulation::None => {}
+            ArrivalModulation::DiurnalSine {
+                period_s,
+                amplitude,
+            } => {
+                assert!(period_s > 0.0, "diurnal period must be positive");
+                assert!(
+                    (0.0..1.0).contains(&amplitude),
+                    "diurnal amplitude must be in [0, 1) to keep intensity positive"
+                );
+            }
+            ArrivalModulation::FlashCrowd {
+                at_s,
+                duration_s,
+                factor,
+            } => {
+                assert!(at_s >= 0.0 && duration_s >= 0.0, "flash crowd window invalid");
+                assert!(
+                    factor > 0.0 && factor.is_finite(),
+                    "flash crowd factor must be positive and finite"
+                );
+            }
+        }
+    }
+
     /// Instantaneous intensity multiplier at time `t`.
     pub fn intensity(&self, t: f64) -> f64 {
         match *self {
@@ -240,30 +271,7 @@ impl WorkloadConfig {
     /// modulation is experiment configuration and a typo should fail at
     /// construction.
     pub fn with_modulation(mut self, m: ArrivalModulation) -> Self {
-        match m {
-            ArrivalModulation::None => {}
-            ArrivalModulation::DiurnalSine {
-                period_s,
-                amplitude,
-            } => {
-                assert!(period_s > 0.0, "diurnal period must be positive");
-                assert!(
-                    (0.0..1.0).contains(&amplitude),
-                    "diurnal amplitude must be in [0, 1) to keep intensity positive"
-                );
-            }
-            ArrivalModulation::FlashCrowd {
-                at_s,
-                duration_s,
-                factor,
-            } => {
-                assert!(at_s >= 0.0 && duration_s >= 0.0, "flash crowd window invalid");
-                assert!(
-                    factor > 0.0 && factor.is_finite(),
-                    "flash crowd factor must be positive and finite"
-                );
-            }
-        }
+        m.validate();
         self.modulation = m;
         self
     }
@@ -500,7 +508,7 @@ mod tests {
             .with_requests(2000)
             .with_deadline_range(2.0, 6.0);
         for r in generate(&cfg) {
-            let d = r.deadline();
+            let d = r.slo.completion.expect("scalar mode sets completion");
             assert!((2.0..=6.0).contains(&d), "d={d}");
             assert!(r.slo.is_completion_only(), "default mode is scalar");
         }

@@ -77,17 +77,95 @@ impl ArrivalSource for TraceSource<'_> {
 pub struct MergedArrivals<'a> {
     sources: Vec<&'a mut dyn ArrivalSource>,
     heads: Vec<Option<ServiceRequest>>,
+    /// Per-source intensity modulation applied to the *realized*
+    /// inter-arrival gaps of that source's stream (identity by default).
+    mods: Vec<ArrivalModulation>,
+    /// Last raw (pre-modulation) arrival time seen from each source.
+    raw_t: Vec<f64>,
+    /// Last modulated arrival time emitted for each source.
+    mod_t: Vec<f64>,
     next_id: u64,
 }
 
 impl<'a> MergedArrivals<'a> {
     pub fn new(mut sources: Vec<&'a mut dyn ArrivalSource>) -> Self {
-        let heads = sources.iter_mut().map(|s| s.next_arrival()).collect();
+        let heads: Vec<Option<ServiceRequest>> =
+            sources.iter_mut().map(|s| s.next_arrival()).collect();
+        let n = sources.len();
+        // Until a modulation is installed the raw/modulated clocks track
+        // the head verbatim.
+        let raw_t = heads
+            .iter()
+            .map(|h| h.as_ref().map_or(0.0, |r| r.arrival))
+            .collect::<Vec<_>>();
+        let mod_t = raw_t.clone();
         MergedArrivals {
             sources,
             heads,
+            mods: vec![ArrivalModulation::None; n],
+            raw_t,
+            mod_t,
             next_id: 0,
         }
+    }
+
+    /// Install one [`ArrivalModulation`] per source — the per-tier demand
+    /// shaping knob for multi-tier topologies (e.g. a flash crowd hitting
+    /// only the edge-tier population while the cloud mix stays diurnal).
+    ///
+    /// The modulation rescales each source's realized inter-arrival gaps:
+    /// `dt' = dt / m(t')` with the intensity evaluated at the source's
+    /// previous *modulated* arrival — the same first-order inhomogeneous
+    /// approximation as [`WorkloadConfig::with_modulation`]
+    /// (`generator::WorkloadConfig::with_modulation`), but applied at the
+    /// merge layer so it composes with any [`ArrivalSource`], including
+    /// replayed traces. [`ArrivalModulation::None`] entries leave that
+    /// source's stream bit-identical. Zero extra RNG draws, so request
+    /// content (classes, tokens, SLOs) is untouched by construction.
+    ///
+    /// Panics if the arity does not match the source count, if any
+    /// modulation has nonsensical parameters, or if arrivals were already
+    /// consumed (mid-stream installation would shift semantics silently).
+    pub fn with_modulations(mut self, mods: Vec<ArrivalModulation>) -> Self {
+        assert_eq!(
+            mods.len(),
+            self.sources.len(),
+            "one modulation per source required"
+        );
+        assert_eq!(
+            self.next_id, 0,
+            "modulations must be installed before consuming arrivals"
+        );
+        for m in &mods {
+            m.validate();
+        }
+        self.mods = mods;
+        // The heads were prefetched under the identity modulation from
+        // t = 0; re-derive them under the installed ones.
+        for i in 0..self.heads.len() {
+            if let Some(r) = &mut self.heads[i] {
+                if self.mods[i] != ArrivalModulation::None {
+                    let m = self.mods[i].intensity(0.0);
+                    r.arrival = self.raw_t[i] / m;
+                    self.mod_t[i] = r.arrival;
+                }
+            }
+        }
+        self
+    }
+
+    /// Pull the next head from source `i`, applying its modulation.
+    fn refill(&mut self, i: usize) {
+        self.heads[i] = self.sources[i].next_arrival().map(|mut r| {
+            let raw = r.arrival;
+            if self.mods[i] != ArrivalModulation::None {
+                let m = self.mods[i].intensity(self.mod_t[i]);
+                r.arrival = self.mod_t[i] + (raw - self.raw_t[i]) / m;
+            }
+            self.raw_t[i] = raw;
+            self.mod_t[i] = r.arrival;
+            r
+        });
     }
 }
 
@@ -104,7 +182,7 @@ impl ArrivalSource for MergedArrivals<'_> {
         }
         let (i, _) = best?;
         let mut r = self.heads[i].take().expect("selected head");
-        self.heads[i] = self.sources[i].next_arrival();
+        self.refill(i);
         r.id = self.next_id;
         self.next_id += 1;
         Some(r)
@@ -257,6 +335,127 @@ mod tests {
         assert_eq!(got.len(), 13);
         assert!(got.iter().enumerate().all(|(i, r)| r.id == i as u64));
         assert!(got.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    /// Identity modulations are the same code path as no modulations:
+    /// the merged stream is bit-identical, field for field.
+    #[test]
+    fn identity_modulations_leave_the_merge_bit_identical() {
+        let mk = |n: usize, rate: f64, seed: u64| {
+            WorkloadConfig::default()
+                .with_requests(n)
+                .with_arrivals(ArrivalProcess::Poisson { rate })
+                .with_seed(seed)
+        };
+        let (ca, cb) = (mk(80, 12.0, 7), mk(50, 3.0, 8));
+        let collect = |modulate: bool| {
+            let mut sa = WorkloadGen::new(&ca);
+            let mut sb = WorkloadGen::new(&cb);
+            let mut merged = MergedArrivals::new(vec![&mut sa, &mut sb]);
+            if modulate {
+                merged = merged
+                    .with_modulations(vec![ArrivalModulation::None, ArrivalModulation::None]);
+            }
+            let mut got = Vec::new();
+            while let Some(r) = merged.next_arrival() {
+                got.push(r);
+            }
+            got
+        };
+        let plain = collect(false);
+        let modded = collect(true);
+        assert_eq!(plain.len(), modded.len());
+        for (x, y) in plain.iter().zip(&modded) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+        }
+    }
+
+    /// A flash crowd on one source compresses only that source's gaps:
+    /// the merged stream densifies inside the window, stays nondecreasing,
+    /// keeps dense ids, and the unmodulated co-source is untouched.
+    #[test]
+    fn per_source_flash_crowd_shapes_only_its_own_stream() {
+        let edge = WorkloadConfig::default()
+            .with_requests(600)
+            .with_arrivals(ArrivalProcess::Poisson { rate: 10.0 })
+            .with_seed(41);
+        let cloud = WorkloadConfig::default()
+            .with_requests(200)
+            .with_arrivals(ArrivalProcess::Poisson { rate: 3.0 })
+            .with_seed(42);
+        let crowd = ArrivalModulation::FlashCrowd {
+            at_s: 10.0,
+            duration_s: 10.0,
+            factor: 6.0,
+        };
+        let collect = |mods: Option<Vec<ArrivalModulation>>| {
+            let mut se = WorkloadGen::new(&edge);
+            let mut sc = WorkloadGen::new(&cloud);
+            let mut merged = MergedArrivals::new(vec![&mut se, &mut sc]);
+            if let Some(m) = mods {
+                merged = merged.with_modulations(m);
+            }
+            let mut got = Vec::new();
+            while let Some(r) = merged.next_arrival() {
+                got.push(r);
+            }
+            got
+        };
+        let plain = collect(None);
+        let shaped = collect(Some(vec![crowd, ArrivalModulation::None]));
+        assert_eq!(shaped.len(), plain.len(), "requests conserved");
+        assert!(shaped.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(shaped.iter().enumerate().all(|(i, r)| r.id == i as u64));
+        let in_window =
+            |t: &[ServiceRequest]| t.iter().filter(|r| (10.0..20.0).contains(&r.arrival)).count();
+        assert!(
+            in_window(&shaped) > 2 * in_window(&plain),
+            "crowd window densified: {} vs {}",
+            in_window(&shaped),
+            in_window(&plain)
+        );
+        // The cloud source is identity-modulated: its arrivals (matched by
+        // request content, which modulation never touches) keep their raw
+        // times bit for bit.
+        let cloud_trace = generate(&cloud);
+        for want in &cloud_trace {
+            assert!(
+                shaped
+                    .iter()
+                    .any(|r| r.arrival.to_bits() == want.arrival.to_bits()
+                        && r.prompt_tokens == want.prompt_tokens),
+                "cloud arrival at {} disturbed",
+                want.arrival
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "one modulation per source")]
+    fn modulation_arity_mismatch_is_rejected() {
+        let cfg = WorkloadConfig::default().with_requests(3).with_seed(1);
+        let mut g = WorkloadGen::new(&cfg);
+        let _ = MergedArrivals::new(vec![&mut g])
+            .with_modulations(vec![ArrivalModulation::None, ArrivalModulation::None]);
+    }
+
+    #[test]
+    #[should_panic(expected = "before consuming")]
+    fn late_modulation_install_is_rejected() {
+        let cfg = WorkloadConfig::default()
+            .with_requests(5)
+            .with_arrivals(ArrivalProcess::Poisson { rate: 5.0 })
+            .with_seed(1);
+        let mut g = WorkloadGen::new(&cfg);
+        let mut merged = MergedArrivals::new(vec![&mut g]);
+        let _ = merged.next_arrival();
+        let _ = merged.with_modulations(vec![ArrivalModulation::DiurnalSine {
+            period_s: 60.0,
+            amplitude: 0.5,
+        }]);
     }
 
     #[test]

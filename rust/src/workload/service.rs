@@ -17,10 +17,11 @@
 //! attainment accounting, admission control) treats only the *present*
 //! constraints as binding.
 //!
-//! Compat: the scalar `deadline` survives as the deprecated accessor
-//! [`ServiceRequest::deadline`] over `SloSpec::completion`, and a
-//! completion-only spec reproduces the pre-PR5 pipeline bit for bit
-//! (pinned by `rust/tests/slo_identity.rs`).
+//! The scalar `deadline` accessor is gone: consumers read
+//! `SloSpec::completion` directly (`.unwrap_or(f64::INFINITY)` where an
+//! unconstrained scalar is genuinely wanted). A completion-only spec
+//! reproduces the pre-PR5 pipeline bit for bit (pinned by
+//! `rust/tests/slo_identity.rs`).
 
 use crate::sim::time::SimTime;
 
@@ -197,13 +198,6 @@ impl ServiceRequest {
     pub fn total_tokens(&self) -> u64 {
         self.prompt_tokens as u64 + self.output_tokens as u64
     }
-
-    /// Deprecated compat accessor: the scalar completion deadline
-    /// (`+inf` when the contract carries no completion bound). New code
-    /// should read `self.slo` and treat constraints individually.
-    pub fn deadline(&self) -> SimTime {
-        self.slo.completion.unwrap_or(f64::INFINITY)
-    }
 }
 
 /// Outcome of one completed (or failed) service.
@@ -261,12 +255,6 @@ impl ServiceOutcome {
             tokens: 0,
             completed_at,
         }
-    }
-
-    /// Deprecated compat accessor: the scalar completion deadline of the
-    /// contract (`+inf` when absent).
-    pub fn deadline(&self) -> SimTime {
-        self.slo.completion.unwrap_or(f64::INFINITY)
     }
 
     /// Whether the completion constraint was met, if the contract has one.
@@ -380,7 +368,7 @@ mod tests {
             payload_bytes: 1024,
         };
         assert_eq!(r.total_tokens(), 42);
-        assert_eq!(r.deadline(), 4.0);
+        assert_eq!(r.slo.completion, Some(4.0));
     }
 
     #[test]
@@ -435,7 +423,7 @@ mod tests {
         o.ttft_time = 0.4;
         assert_eq!(o.completion_met(), None);
         assert!(o.success(), "no completion constraint to violate");
-        assert_eq!(o.deadline(), f64::INFINITY);
+        assert_eq!(o.slo.completion, None);
         // compat slack falls back to the vector (ttft) slack.
         assert!((o.slack() - 0.6).abs() < 1e-12);
     }

@@ -87,6 +87,21 @@ fn fixtures_fire_and_suppress_as_documented() {
             src: include_str!("lint_fixtures/a1_good.rs"),
             expect: &[],
         },
+        // The shard grant-window pair (PR 8): the per-shard hot loop in
+        // sim/shard.rs declares a no-alloc region over grant execution;
+        // these fixtures pin that an allocating drain (fresh Vec + a
+        // collect) fires A1, and the recycled-buffer rewrite — the real
+        // Cmd/Reply buffer round-trip contract — is silent.
+        Case {
+            name: "a1_shard_bad",
+            src: include_str!("lint_fixtures/a1_shard_bad.rs"),
+            expect: &[(6, "A1"), (12, "A1")],
+        },
+        Case {
+            name: "a1_shard_good",
+            src: include_str!("lint_fixtures/a1_shard_good.rs"),
+            expect: &[],
+        },
         Case {
             name: "p1_bad",
             src: include_str!("lint_fixtures/p1_bad.rs"),

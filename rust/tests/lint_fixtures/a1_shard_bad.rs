@@ -1,0 +1,15 @@
+// Known-bad fixture modeled on the shard grant loop (sim/shard.rs): a
+// mailbox drain that allocates fresh buffers inside the per-grant
+// no-alloc region instead of recycling them through the Reply.
+pub fn run_granted(pending: &[(f64, u64)], limit: f64) -> usize {
+    // lint: no-alloc per-shard grant window
+    let mut executed = Vec::new();
+    for &(t, stamp) in pending {
+        if t < limit {
+            executed.push(stamp);
+        }
+    }
+    let keys: Vec<u64> = executed.iter().map(|s| s >> 32).collect();
+    // lint: end-no-alloc
+    keys.len()
+}

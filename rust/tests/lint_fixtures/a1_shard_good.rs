@@ -1,0 +1,15 @@
+// Known-good twin of a1_shard_bad.rs: the grant window executes against
+// buffers recycled through the orchestrator round trip (the real
+// sim/shard.rs contract — Cmd carries them in, Reply hands them back),
+// so the region itself never allocates.
+pub fn run_granted(pending: &[(f64, u64)], limit: f64, executed: &mut Vec<u64>) -> usize {
+    executed.clear();
+    // lint: no-alloc per-shard grant window
+    for &(t, stamp) in pending {
+        if t < limit {
+            executed.push(stamp);
+        }
+    }
+    // lint: end-no-alloc
+    executed.len()
+}

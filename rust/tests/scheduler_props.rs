@@ -40,6 +40,7 @@ fn random_view(g: &mut Gen, n: usize) -> ClusterView {
         .collect();
     ClusterView {
         now: 0.0,
+        epoch: 0,
         servers,
         weights: EnergyWeights::default(),
         candidates: Vec::new(),
@@ -353,7 +354,8 @@ fn prop_workload_generation_valid() {
         for r in generate(&cfg) {
             assert!(r.prompt_tokens >= 1);
             assert!(r.output_tokens >= 1);
-            assert!((2.0..=6.0).contains(&r.deadline()));
+            let completion = r.slo.completion.expect("generated workloads carry a completion bound");
+            assert!((2.0..=6.0).contains(&completion));
             assert!(r.payload_bytes > 0);
             assert!(r.arrival >= 0.0);
         }

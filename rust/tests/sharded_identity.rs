@@ -1,0 +1,365 @@
+//! Executable spec for the sharded parallel DES core (tentpole PR): the
+//! sequential engine IS the specification, and the sharded engine must
+//! reproduce it bit for bit at every shard count — outcomes, energy,
+//! diagnostics, and availability accounting, with or without fault
+//! plans. Perf counters (`events_processed`, `stale_events`,
+//! `peak_event_queue_len`, wall time) are substrate-specific and
+//! deliberately outside the identity surface.
+//!
+//! Contracts:
+//!
+//! 1. **Fault-free identity** — paper topology, both bandwidth modes
+//!    (Fluctuating exercises the orchestrator's fluctuation-calendar
+//!    replay of the engine RNG stream), shard counts {1, 2, auto},
+//!    multiple seeds, against a scheduler that exercises Assign, Defer,
+//!    and Shed actions as well as CS-UCB.
+//! 2. **Scaled-topology identity** — edgeshard-10x (60 servers, three
+//!    tiers) under fluctuating bandwidth across shard counts.
+//! 3. **Chaos identity** — crash (both `CrashPolicy` arms), degradation,
+//!    link flap, leave/join churn, and a lagged health monitor: the
+//!    merge barriers must replay incident accounting, crash teardown,
+//!    and lagged-view publication exactly.
+//! 4. **Bounded event population** — each engine's event queues stay
+//!    bounded by in-flight concurrency: the sharded run's peak queue
+//!    length never exceeds the sequential run's.
+
+use perllm::scheduler::csucb::CsUcb;
+use perllm::scheduler::{Action, ClusterView, Scheduler, ShedReason};
+use perllm::sim::cluster::{BandwidthMode, ClusterConfig};
+use perllm::sim::engine::{
+    simulate_stream, simulate_stream_faulted, simulate_stream_faulted_sharded,
+    simulate_stream_sharded, RunReport,
+};
+use perllm::sim::{CrashPolicy, FaultKind, FaultPlan, HealthConfig, ShardCount, ShardPlan, TopologyConfig};
+use perllm::workload::generator::{ArrivalProcess, WorkloadConfig, WorkloadGen};
+use perllm::workload::service::ServiceRequest;
+
+/// Bit-level equality over the pinned identity surface. Stricter than
+/// `faults_identity.rs`: every outcome float field, the full energy
+/// breakdown, the diagnostics vector, and the availability report.
+fn assert_reports_identical(a: &RunReport, b: &RunReport, label: &str) {
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{label}: outcome count");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id, "{label}: outcome order");
+        assert_eq!(x.server, y.server, "{label}: placement of {}", x.id);
+        assert_eq!(x.tokens, y.tokens, "{label}: tokens of {}", x.id);
+        for (fa, fb, what) in [
+            (x.tx_time, y.tx_time, "tx_time"),
+            (x.infer_time, y.infer_time, "infer_time"),
+            (x.processing_time, y.processing_time, "processing_time"),
+            (x.ttft_time, y.ttft_time, "ttft_time"),
+            (x.energy_j, y.energy_j, "energy_j"),
+            (x.completed_at, y.completed_at, "completed_at"),
+        ] {
+            assert_eq!(fa.to_bits(), fb.to_bits(), "{label}: {what} of {}", x.id);
+        }
+    }
+    for (fa, fb, what) in [
+        (a.energy.tran_j, b.energy.tran_j, "tran_j"),
+        (a.energy.infer_j, b.energy.infer_j, "infer_j"),
+        (a.energy.idle_j, b.energy.idle_j, "idle_j"),
+        (a.makespan_s, b.makespan_s, "makespan"),
+        (a.throughput_tok_s, b.throughput_tok_s, "throughput"),
+        (a.success_rate, b.success_rate, "success_rate"),
+        (a.mean_processing_s, b.mean_processing_s, "mean_processing"),
+        (a.p95_processing_s, b.p95_processing_s, "p95_processing"),
+        (
+            a.energy_per_success_j,
+            b.energy_per_success_j,
+            "energy_per_success",
+        ),
+    ] {
+        assert_eq!(fa.to_bits(), fb.to_bits(), "{label}: {what}");
+    }
+    assert_eq!(a.unfinished, b.unfinished, "{label}: unfinished");
+    assert_eq!(a.dropped, b.dropped, "{label}: dropped");
+    assert_eq!(
+        a.dropped_by_policy, b.dropped_by_policy,
+        "{label}: dropped_by_policy"
+    );
+    assert_eq!(a.late, b.late, "{label}: late");
+    assert_eq!(a.ttft_attainment, b.ttft_attainment, "{label}: ttft att");
+    assert_eq!(
+        a.completion_attainment, b.completion_attainment,
+        "{label}: completion att"
+    );
+    assert_eq!(
+        a.slo_ttft_violations, b.slo_ttft_violations,
+        "{label}: ttft violations"
+    );
+    assert_eq!(
+        a.slo_completion_violations, b.slo_completion_violations,
+        "{label}: completion violations"
+    );
+    assert_eq!(
+        a.slo_energy_violations, b.slo_energy_violations,
+        "{label}: energy violations"
+    );
+    assert_eq!(a.gate_sheds, b.gate_sheds, "{label}: gate sheds");
+    // Scheduler diagnostics are a pure function of the decision/feedback
+    // stream, so any drift (including bandit statistics) surfaces here.
+    assert_eq!(
+        a.diagnostics.len(),
+        b.diagnostics.len(),
+        "{label}: diagnostics arity"
+    );
+    for ((ka, va), (kb, vb)) in a.diagnostics.iter().zip(&b.diagnostics) {
+        assert_eq!(ka, kb, "{label}: diagnostics keys");
+        assert_eq!(va.to_bits(), vb.to_bits(), "{label}: diagnostic {ka}");
+    }
+    match (&a.availability, &b.availability) {
+        (None, None) => {}
+        (Some(x), Some(y)) => {
+            assert_eq!(x.incidents, y.incidents, "{label}: incidents");
+            assert_eq!(
+                x.incident_start_s.to_bits(),
+                y.incident_start_s.to_bits(),
+                "{label}: incident start"
+            );
+            assert_eq!(
+                x.incident_end_s.to_bits(),
+                y.incident_end_s.to_bits(),
+                "{label}: incident end"
+            );
+            assert_eq!(
+                x.failed_in_flight, y.failed_in_flight,
+                "{label}: failed in flight"
+            );
+            assert_eq!(
+                x.requeued_in_flight, y.requeued_in_flight,
+                "{label}: requeued in flight"
+            );
+            assert_eq!(x.leaves, y.leaves, "{label}: leaves");
+            assert_eq!(x.joins, y.joins, "{label}: joins");
+            assert_eq!(x.attainment, y.attainment, "{label}: phase attainment");
+            assert_eq!(
+                x.time_to_recover_s.to_bits(),
+                y.time_to_recover_s.to_bits(),
+                "{label}: TTR"
+            );
+            assert_eq!(
+                x.gate_sheds_by_phase, y.gate_sheds_by_phase,
+                "{label}: gate sheds by phase"
+            );
+        }
+        _ => panic!("{label}: availability presence differs"),
+    }
+}
+
+fn workload(n: usize, rate: f64, seed: u64) -> WorkloadConfig {
+    WorkloadConfig::default()
+        .with_requests(n)
+        .with_arrivals(ArrivalProcess::Poisson { rate })
+        .with_seed(seed)
+}
+
+/// Deterministic scheduler that exercises every action arm the
+/// orchestrator must mirror: round-robin `Assign`, a periodic finite
+/// `Defer` (stamped global Dispatch events), and a periodic `Shed`.
+struct Mixed {
+    n: usize,
+    i: u64,
+    fed: u64,
+}
+
+impl Scheduler for Mixed {
+    fn name(&self) -> &'static str {
+        "mixed-actions"
+    }
+
+    fn decide(&mut self, _req: &ServiceRequest, _view: &ClusterView) -> Action {
+        self.i += 1;
+        let server = (self.i as usize * 7) % self.n;
+        if self.i % 41 == 0 {
+            Action::Shed {
+                reason: ShedReason::Overloaded,
+            }
+        } else if self.i % 5 == 0 {
+            Action::Defer {
+                server,
+                delay_s: 0.05,
+            }
+        } else {
+            Action::Assign { server }
+        }
+    }
+
+    fn feedback(&mut self, _outcome: &perllm::workload::service::ServiceOutcome, view: &ClusterView) {
+        // Consume the view epoch so any versioned-view divergence between
+        // substrates changes a diagnostic, not just internal state.
+        self.fed = self.fed.wrapping_add(view.epoch);
+    }
+
+    fn diagnostics(&self) -> Vec<(String, f64)> {
+        vec![
+            ("mixed_decisions".into(), self.i as f64),
+            ("mixed_epoch_sum".into(), self.fed as f64),
+        ]
+    }
+}
+
+fn mixed(n: usize) -> Mixed {
+    Mixed { n, i: 0, fed: 0 }
+}
+
+/// Contract 1: fault-free identity on the paper topology across
+/// bandwidth modes, shard counts, seeds, and schedulers.
+#[test]
+fn sharded_runs_are_bit_identical_to_sequential_on_paper_topology() {
+    for mode in [BandwidthMode::Stable, BandwidthMode::Fluctuating] {
+        for seed in [3u64, 17] {
+            let topo = TopologyConfig::paper("llama2-7b", mode);
+            let cfg = topo.build();
+            let wl = workload(1200, 15.0, seed);
+            let mut base_sched = CsUcb::with_defaults(cfg.n_servers());
+            let mut base_src = WorkloadGen::new(&wl);
+            let base = simulate_stream(&cfg, &mut base_src, &mut base_sched);
+            for count in [ShardCount::Fixed(1), ShardCount::Fixed(2), ShardCount::Auto] {
+                let splan = topo.shard_plan(count);
+                let mut sched = CsUcb::with_defaults(cfg.n_servers());
+                let mut src = WorkloadGen::new(&wl);
+                let got = simulate_stream_sharded(&cfg, &splan, &mut src, &mut sched);
+                assert_reports_identical(
+                    &base,
+                    &got,
+                    &format!("paper csucb {mode:?} seed={seed} shards={count:?}"),
+                );
+            }
+            // The mixed-action scheduler (Defer + Shed paths).
+            let mut base_sched = mixed(cfg.n_servers());
+            let mut base_src = WorkloadGen::new(&wl);
+            let base = simulate_stream(&cfg, &mut base_src, &mut base_sched);
+            let splan = topo.shard_plan(ShardCount::Fixed(2));
+            let mut sched = mixed(cfg.n_servers());
+            let mut src = WorkloadGen::new(&wl);
+            let got = simulate_stream_sharded(&cfg, &splan, &mut src, &mut sched);
+            assert_reports_identical(
+                &base,
+                &got,
+                &format!("paper mixed {mode:?} seed={seed}"),
+            );
+            assert!(base.dropped_by_policy > 0, "Shed arm exercised");
+        }
+    }
+}
+
+/// Contract 2: identity holds on the 10x three-tier fleet, where tier
+/// boundaries give each shard a different lookahead window.
+#[test]
+fn sharded_runs_are_bit_identical_on_edgeshard_10x() {
+    let topo = TopologyConfig::edgeshard_10x("llama2-7b", BandwidthMode::Fluctuating);
+    let cfg = topo.build();
+    let wl = workload(2500, topo.scaled_rate(15.0), 29);
+    let mut base_sched = CsUcb::with_defaults(cfg.n_servers());
+    let mut base_src = WorkloadGen::new(&wl);
+    let base = simulate_stream(&cfg, &mut base_src, &mut base_sched);
+    for count in [ShardCount::Fixed(1), ShardCount::Fixed(4), ShardCount::Auto] {
+        let splan = topo.shard_plan(count);
+        let mut sched = CsUcb::with_defaults(cfg.n_servers());
+        let mut src = WorkloadGen::new(&wl);
+        let got = simulate_stream_sharded(&cfg, &splan, &mut src, &mut sched);
+        assert_reports_identical(&base, &got, &format!("10x shards={count:?}"));
+    }
+}
+
+/// Contract 3: chaos identity. Crash with mid-run recovery, permanent
+/// crash, degradation, link flap, leave/join churn, lagged health
+/// monitor — under both crash policies and several shard counts.
+#[test]
+fn sharded_runs_are_bit_identical_under_chaos() {
+    let topo = TopologyConfig::edgeshard_10x("llama2-7b", BandwidthMode::Fluctuating);
+    let cfg = topo.build();
+    let wl = workload(2200, topo.scaled_rate(15.0), 71);
+    for policy in [CrashPolicy::Fail, CrashPolicy::Requeue] {
+        let plan = FaultPlan::default()
+            .with_event(
+                20.0,
+                FaultKind::Crash {
+                    server: 3,
+                    recover: Some(55.0),
+                },
+            )
+            .with_event(
+                25.0,
+                FaultKind::Crash {
+                    server: 50,
+                    recover: None,
+                },
+            )
+            .with_event(
+                10.0,
+                FaultKind::Degrade {
+                    server: 49,
+                    rate_factor: 0.4,
+                    until: 60.0,
+                },
+            )
+            .with_event(
+                15.0,
+                FaultKind::LinkFlap {
+                    link: 2,
+                    rate_factor: 0.2,
+                    until: 45.0,
+                },
+            )
+            .with_event(30.0, FaultKind::Leave { server: 10 })
+            .with_event(70.0, FaultKind::Join { server: 10 })
+            .with_health(HealthConfig {
+                period_s: 1.0,
+                lag_s: 5.0,
+            })
+            .with_crash_policy(policy);
+        let mut base_sched = CsUcb::with_defaults(cfg.n_servers());
+        let mut base_src = WorkloadGen::new(&wl);
+        let base = simulate_stream_faulted(&cfg, &plan, &mut base_src, &mut base_sched);
+        let av = base.availability.as_ref().expect("chaos run reports");
+        assert!(av.incidents >= 2, "both crash windows fired");
+        if policy == CrashPolicy::Requeue {
+            assert!(av.requeued_in_flight > 0, "requeue path exercised");
+        } else {
+            assert!(av.failed_in_flight > 0, "fail path exercised");
+        }
+        for count in [ShardCount::Fixed(2), ShardCount::Auto] {
+            let splan = topo.shard_plan(count);
+            let mut sched = CsUcb::with_defaults(cfg.n_servers());
+            let mut src = WorkloadGen::new(&wl);
+            let got = simulate_stream_faulted_sharded(&cfg, &plan, &splan, &mut src, &mut sched);
+            assert_reports_identical(
+                &base,
+                &got,
+                &format!("chaos {policy:?} shards={count:?}"),
+            );
+        }
+    }
+}
+
+/// Contract 4: per-queue event populations stay bounded. Every shard
+/// queue holds a subset of the sequential queue's physics events and the
+/// global calendar holds the (single) prefetched arrival + control
+/// events, so the sharded peak can never exceed the sequential peak.
+#[test]
+fn sharded_event_population_is_bounded_by_the_sequential_one() {
+    let topo = TopologyConfig::edgeshard_10x("llama2-7b", BandwidthMode::Fluctuating);
+    let cfg = topo.build();
+    let wl = workload(1500, topo.scaled_rate(15.0), 5);
+    let mut base_sched = CsUcb::with_defaults(cfg.n_servers());
+    let mut base_src = WorkloadGen::new(&wl);
+    let base = simulate_stream(&cfg, &mut base_src, &mut base_sched);
+    for shards in [2usize, 3, 6] {
+        let splan = ShardPlan::contiguous(cfg.n_servers(), shards);
+        let mut sched = CsUcb::with_defaults(cfg.n_servers());
+        let mut src = WorkloadGen::new(&wl);
+        let got = simulate_stream_sharded(&cfg, &splan, &mut src, &mut sched);
+        assert!(got.peak_event_queue_len > 0, "peak tracked");
+        assert!(
+            got.peak_event_queue_len <= base.peak_event_queue_len,
+            "sharded peak {} exceeds sequential peak {} at {shards} shards",
+            got.peak_event_queue_len,
+            base.peak_event_queue_len
+        );
+        // Event conservation sanity: both substrates process the same
+        // physics; the sharded total differs only by control/boundary
+        // bookkeeping, so it stays within a small factor.
+        assert!(got.events_processed > 0);
+    }
+}

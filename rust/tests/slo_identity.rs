@@ -63,7 +63,7 @@ impl ReferenceScalarCsUcb {
     /// compute and bandwidth terms, `d.min(c).min(b)`.
     fn scalar_fy(view: &ClusterView, req: &ServiceRequest, j: usize) -> f64 {
         let sv = &view.servers[j];
-        let deadline = req.deadline();
+        let deadline = req.slo.completion.unwrap_or(f64::INFINITY);
         let d = (deadline - sv.predicted_time) / deadline;
         let c = if sv.compute_headroom > 0.0 {
             (sv.compute_headroom - sv.compute_demand) / sv.compute_headroom.max(1e-9)
@@ -163,7 +163,7 @@ impl Scheduler for ReferenceScalarCsUcb {
         let penalty = self.pending.remove(&outcome.id).unwrap_or(0.0);
         // Pre-PR5 Eq. 4: completion slack only.
         let energy_term = outcome.energy_j / 1000.0;
-        let deadline = outcome.deadline();
+        let deadline = outcome.slo.completion.unwrap_or(f64::INFINITY);
         let fy = ((deadline - outcome.processing_time) / deadline).clamp(-2.0, 1.0);
         let mut r = -energy_term + self.params.lambda * fy;
         if penalty < 0.0 {
