@@ -26,7 +26,8 @@
 //!                                 cs-ucb-sw,cs-ucb-disc]
 //!                   [--modes stable|fluctuating|both]
 //!                   [--faults off|crash|generative] [--mttf S] [--mttr S]
-//!                   [--shards N|auto]
+//!                   [--scenario none|regional-failover]
+//!                   [--shards N|auto|weighted|weighted:N]
 //!                   [--min-success F] [--min-events-per-sec F]
 //!                   [--min-gate-sheds N] [--min-recovered-attainment F]
 //!
@@ -83,12 +84,24 @@
 //! attainment (pre/during/post), time-to-recover, in-flight casualties,
 //! and gate sheds by phase.
 //!
-//! `--shards N|auto` runs the **sharded parallel DES engine** instead of
-//! the sequential one: N per-range engine shards (or `auto` = one shard
-//! per topology tier) synchronized by conservative link-lookahead, bit-
-//! identical to the sequential engine at every shard count (pinned by
-//! `rust/tests/sharded_identity.rs`) — only the DES perf row (events/s,
-//! wall) legitimately changes. The fleet-scale scaling run:
+//! `--scenario regional-failover` (tiered mix only, ≥ 2 tiers) scripts a
+//! regional incident: the first (edge) tier's arrival stream drains to
+//! 10% of its rate for `--mttr` seconds starting at the horizon midpoint
+//! (`MergedArrivals::with_modulations`, PR 8 machinery) while every
+//! server in that tier crashes for the same window — the surviving tiers
+//! absorb the failover traffic and the availability row reports the
+//! pre/during/post attainment split.
+//!
+//! `--shards N|auto|weighted[:N]` runs the **sharded parallel DES
+//! engine** instead of the sequential one: N per-range engine shards,
+//! `auto` = one shard per topology tier **rebalanced by event volume**
+//! when the tier split is lopsided, or `weighted[:N]` = the volume-
+//! weighted partitioner at tier-count (or N) shards — all synchronized
+//! by conservative link-lookahead, bit-identical to the sequential
+//! engine at every shard count and plan (pinned by
+//! `rust/tests/sharded_identity.rs`) — only the DES perf rows (events/s,
+//! wall, the per-shard `shard-perf` telemetry) legitimately change. The
+//! fleet-scale scaling run:
 //!
 //! ```text
 //! cargo run --release --example paper_scale_sim -- \
@@ -113,7 +126,9 @@ use perllm::sim::cluster::BandwidthMode;
 use perllm::sim::engine::{simulate_stream_faulted, simulate_stream_faulted_sharded};
 use perllm::sim::topology::TopologyConfig;
 use perllm::sim::{FaultKind, FaultPlan, GenerativeFaults, HealthConfig, ShardCount};
-use perllm::workload::generator::{ArrivalProcess, SloSampling, WorkloadConfig, WorkloadGen};
+use perllm::workload::generator::{
+    ArrivalModulation, ArrivalProcess, SloSampling, WorkloadConfig, WorkloadGen,
+};
 use perllm::workload::{ArrivalSource, MergedArrivals};
 
 /// Locality-shaped class weights per tier (`--mix tiered`), in
@@ -232,15 +247,30 @@ fn main() {
     let mttr: f64 = get("--mttr", "30").parse().expect("bad --mttr");
     let shards: Option<ShardCount> = match get("--shards", "").as_str() {
         "" => None,
-        s => Some(ShardCount::parse(s).unwrap_or_else(|| panic!("bad --shards {s} (N|auto)"))),
+        s => Some(
+            ShardCount::parse(s)
+                .unwrap_or_else(|| panic!("bad --shards {s} (N|auto|weighted|weighted:N)")),
+        ),
     };
+    let scenario = get("--scenario", "none");
+    assert!(
+        scenario == "none" || scenario == "regional-failover",
+        "bad --scenario {scenario} (none|regional-failover)"
+    );
+    if scenario == "regional-failover" {
+        assert!(
+            mix == "tiered",
+            "--scenario regional-failover needs --mix tiered (it drains one tier's stream)"
+        );
+    }
 
     // Arrival rate: the paper's 15 req/s scaled by topology capacity
     // unless pinned explicitly — a 60-server fleet at paper load would
-    // just idle.
-    let capacity_scale = TopologyConfig::by_name(&topology, &model, BandwidthMode::Stable)
-        .unwrap_or_else(|| panic!("unknown --topology {topology}"))
-        .capacity_scale();
+    // just idle. The Stable-mode instance doubles as the mode-independent
+    // tier-layout reference the failover scenario scripts against.
+    let ref_topo = TopologyConfig::by_name(&topology, &model, BandwidthMode::Stable)
+        .unwrap_or_else(|| panic!("unknown --topology {topology}"));
+    let capacity_scale = ref_topo.capacity_scale();
     let rate: f64 = match get("--rate", "").as_str() {
         "" => 15.0 * capacity_scale,
         r => r.parse().expect("bad --rate"),
@@ -286,6 +316,29 @@ fn main() {
             .with_health(HealthConfig::default()),
         other => panic!("bad --faults {other} (off|crash|generative)"),
     };
+    // Regional failover: every server of the drained (first) tier crashes
+    // for the drain window; the paired arrival drain installs per-run
+    // below, on the tier's merged stream. Composes with --faults.
+    let fail_at = 0.5 * horizon;
+    let plan = if scenario == "regional-failover" {
+        assert!(
+            ref_topo.tiers.len() >= 2,
+            "--scenario regional-failover needs >= 2 tiers (somewhere to fail over to)"
+        );
+        let mut p = plan;
+        for server in 0..ref_topo.tiers[0].count {
+            p = p.with_event(
+                fail_at,
+                FaultKind::Crash {
+                    server,
+                    recover: Some(fail_at + mttr),
+                },
+            );
+        }
+        p.with_health(HealthConfig::default())
+    } else {
+        plan
+    };
 
     let mut floor_violations = 0usize;
     for mode in modes {
@@ -308,9 +361,22 @@ fn main() {
                     format!(", sharded engine: auto = {} shards", topo.tiers.len())
                 }
                 Some(ShardCount::Fixed(k)) => format!(", sharded engine: {k} shards"),
+                Some(ShardCount::Weighted(k)) => format!(
+                    ", sharded engine: {} volume-weighted shards",
+                    if k == 0 { topo.tiers.len() } else { k }
+                ),
                 None => String::new(),
             },
         );
+        if scenario == "regional-failover" {
+            println!(
+                "    scenario regional-failover: tier '{}' ({} servers) drains to 10% and \
+                 crashes over [{fail_at:.1}s, {:.1}s)",
+                topo.tiers[0].name,
+                topo.tiers[0].count,
+                fail_at + mttr,
+            );
+        }
         let cloud = cfg.cloud_index();
         let ns = cfg.n_servers();
 
@@ -353,6 +419,18 @@ fn main() {
                     .map(|g| g as &mut dyn ArrivalSource)
                     .collect();
                 let mut source = MergedArrivals::new(sources);
+                if scenario == "regional-failover" {
+                    // Drain the first tier to 10% of its rate for the
+                    // crash window; every other tier keeps its stream
+                    // bit-identical (ArrivalModulation::None).
+                    let mut mods = vec![ArrivalModulation::None; topo.tiers.len()];
+                    mods[0] = ArrivalModulation::FlashCrowd {
+                        at_s: fail_at,
+                        duration_s: mttr,
+                        factor: 0.1,
+                    };
+                    source = source.with_modulations(mods);
+                }
                 run(&mut source, s.as_mut())
             } else {
                 let mut source = WorkloadGen::new(&workload);
@@ -379,6 +457,11 @@ fn main() {
                 rep.stale_events,
                 rep.peak_event_queue_len
             );
+            if let Some(sp) = &rep.shard_perf {
+                for line in sp.rows().lines() {
+                    println!("    {line}");
+                }
+            }
             if min_success > 0.0 && rep.success_rate < min_success {
                 eprintln!(
                     "FLOOR VIOLATION: {name} success {:.3} < {min_success}",

@@ -252,6 +252,10 @@ pub struct RunReport {
     /// High-water mark of the event heap. With streaming arrivals this is
     /// bounded by in-flight concurrency (≪ number of requests).
     pub peak_event_queue_len: usize,
+    /// Per-shard execution/sync telemetry; `None` on the sequential
+    /// engine. Substrate-specific like the perf counters above, so it is
+    /// excluded from the bit-identity comparison by design.
+    pub shard_perf: Option<ShardPerfReport>,
 }
 
 impl RunReport {
@@ -308,6 +312,94 @@ impl RunReport {
             self.slo_energy_violations,
             self.gate_sheds,
         )
+    }
+}
+
+/// One shard's execution and sync-protocol counters for a sharded run.
+///
+/// `events` is the shard's processed-event count (stale pops included,
+/// matching `events_processed` semantics); `grants` counts `Grant`
+/// commands received, `events_per_grant` is their ratio, `stall_wall_s`
+/// is the orchestrator's cumulative wall-clock time blocked on this
+/// shard's replies (barrier stall + mailbox latency), and `round_trips`
+/// counts every command/reply exchange (grants, boundary pops, view
+/// snapshots, dispatches, faults, finish).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardPerf {
+    /// Global `[lo, hi)` server range this shard owned.
+    pub range: (usize, usize),
+    pub events: u64,
+    pub grants: u64,
+    pub events_per_grant: f64,
+    pub stall_wall_s: f64,
+    pub round_trips: u64,
+}
+
+impl ShardPerf {
+    /// One renderable row per shard; the fixed `shard-perf` prefix is
+    /// what CI greps for (and filters out of identity diffs).
+    pub fn row(&self, shard: usize) -> String {
+        format!(
+            "shard-perf[{shard}] servers [{:>4},{:>4})  events {:>10}  grants {:>8}  \
+             ev/grant {:>8.1}  stall {:>7.3}s  round-trips {:>8}",
+            self.range.0,
+            self.range.1,
+            self.events,
+            self.grants,
+            self.events_per_grant,
+            self.stall_wall_s,
+            self.round_trips,
+        )
+    }
+}
+
+/// Aggregated shard telemetry attached to a sharded [`RunReport`].
+///
+/// `imbalance` is max/min *measured* per-shard event volume — the
+/// lowering-quality number the volume-weighted partitioner optimizes
+/// (1.0 = perfectly balanced; the tier-`Auto` plan on `edgeshard-100x`
+/// sits near the edge-tier share ratio without rebalancing).
+#[derive(Debug, Clone)]
+pub struct ShardPerfReport {
+    pub shards: Vec<ShardPerf>,
+    pub imbalance: f64,
+}
+
+impl ShardPerfReport {
+    fn from_parts(parts: Vec<ShardPerf>) -> Self {
+        let mut max = 0u64;
+        let mut min = u64::MAX;
+        for p in &parts {
+            if p.events > max {
+                max = p.events;
+            }
+            if p.events < min {
+                min = p.events;
+            }
+        }
+        let imbalance = if parts.is_empty() || max == 0 {
+            1.0
+        } else if min == 0 {
+            f64::INFINITY
+        } else {
+            max as f64 / min as f64
+        };
+        ShardPerfReport { shards: parts, imbalance }
+    }
+
+    /// All per-shard rows plus the imbalance summary line.
+    pub fn rows(&self) -> String {
+        let mut out = String::new();
+        for (s, p) in self.shards.iter().enumerate() {
+            out.push_str(&p.row(s));
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "shard-perf imbalance (max/min events) {:.3} over {} shards",
+            self.imbalance,
+            self.shards.len()
+        ));
+        out
     }
 }
 
@@ -1363,6 +1455,7 @@ fn assemble_report(
         stale_events: q.stale,
         stale_ratio: q.stale_ratio,
         peak_event_queue_len: q.peak,
+        shard_perf: None,
         outcomes,
     }
 }
@@ -1458,23 +1551,39 @@ struct GSvc {
     tx_energy_j: f64,
 }
 
-/// One worker thread's command/reply endpoints plus its server range.
+/// One worker thread's command/reply endpoints plus its server range and
+/// sync-protocol counters (the raw inputs of [`ShardPerf`]). Counters
+/// live in `Cell`s so the shared-ref send/recv paths stay untouched.
 struct ShardHandle {
     tx: SyncSender<Cmd>,
     rx: Receiver<Reply>,
     lo: usize,
     hi: usize,
+    /// `Grant` commands sent to this shard.
+    grants: std::cell::Cell<u64>,
+    /// Every command/reply round trip (send+recv pairs; the protocol is
+    /// strictly 1-in-flight, so counting sends counts exchanges).
+    round_trips: std::cell::Cell<u64>,
+    /// Orchestrator wall time spent blocked in `recv` on this shard.
+    stall_s: std::cell::Cell<f64>,
 }
 
 impl ShardHandle {
     fn send(&self, cmd: Cmd) {
+        if matches!(cmd, Cmd::Grant { .. }) {
+            self.grants.set(self.grants.get() + 1);
+        }
+        self.round_trips.set(self.round_trips.get() + 1);
         // lint: allow(p1) a dead worker already panicked with the root cause; propagate
         self.tx.send(cmd).expect("shard worker hung up");
     }
 
     fn recv(&self) -> Reply {
+        let t = Instant::now(); // lint: allow(wall-clock) measures barrier stall only; no sim behavior reads it
         // lint: allow(p1) a dead worker already panicked with the root cause; propagate
-        self.rx.recv().expect("shard worker hung up")
+        let reply = self.rx.recv().expect("shard worker hung up");
+        self.stall_s.set(self.stall_s.get() + t.elapsed().as_secs_f64());
+        reply
     }
 }
 
@@ -2250,7 +2359,26 @@ impl<'a> ShardedEngine<'a> {
             stale_ratio: stale as f64 / processed.max(1) as f64,
             peak,
         };
-        assemble_report(
+        // Shard telemetry from the final statuses + handle counters.
+        // Pure perf instrumentation: excluded from the identity surface
+        // like the other substrate-specific counters.
+        let parts: Vec<ShardPerf> = self
+            .shards
+            .iter()
+            .zip(&self.statuses)
+            .map(|(h, st)| {
+                let grants = h.grants.get();
+                ShardPerf {
+                    range: (h.lo, h.hi),
+                    events: st.processed,
+                    grants,
+                    events_per_grant: st.processed as f64 / grants.max(1) as f64,
+                    stall_wall_s: h.stall_s.get(),
+                    round_trips: h.round_trips.get(),
+                }
+            })
+            .collect();
+        let mut rep = assemble_report(
             self.scheduler.name(),
             self.outcomes,
             energy,
@@ -2265,7 +2393,9 @@ impl<'a> ShardedEngine<'a> {
             &self.inc,
             wall,
             q,
-        )
+        );
+        rep.shard_perf = Some(ShardPerfReport::from_parts(parts));
+        rep
     }
 }
 
@@ -2356,7 +2486,7 @@ fn run_sharded(
         let sim = ShardSim::new(
             &sub,
             s,
-            splan.lookahead_s(&cfg.links, s),
+            splan.lookahead_classes(&cfg.links, s),
             &init_ticks[s],
             plan.health.is_some(),
         );
@@ -2383,7 +2513,15 @@ fn run_sharded(
             let (ctx, crx) = sync_channel::<Cmd>(4);
             let (rtx, rrx) = sync_channel::<Reply>(4);
             scope.spawn(move || worker(sim, crx, rtx));
-            shards.push(ShardHandle { tx: ctx, rx: rrx, lo, hi });
+            shards.push(ShardHandle {
+                tx: ctx,
+                rx: rrx,
+                lo,
+                hi,
+                grants: std::cell::Cell::new(0),
+                round_trips: std::cell::Cell::new(0),
+                stall_s: std::cell::Cell::new(0.0),
+            });
         }
         let mut eng = ShardedEngine {
             cfg,

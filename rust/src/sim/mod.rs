@@ -21,7 +21,7 @@ pub use energy::{EnergyBreakdown, EnergyWeights};
 pub use engine::{
     simulate, simulate_faulted, simulate_faulted_sharded, simulate_sharded, simulate_stream,
     simulate_stream_faulted, simulate_stream_faulted_sharded, simulate_stream_sharded,
-    AvailabilityReport, Engine, RunReport,
+    AvailabilityReport, Engine, RunReport, ShardPerf, ShardPerfReport,
 };
 pub use faults::{
     CrashPolicy, FaultEvent, FaultKind, FaultPlan, GenerativeFaults, HealthConfig, HealthMonitor,
@@ -29,4 +29,7 @@ pub use faults::{
 pub use server::{ServerKind, ServerSpec, EDGE_MODELS};
 pub use service_model::{PsServiceModel, ServiceModel, ServiceModelKind, ServicePrediction};
 pub use token_batch::TokenBatchModel;
-pub use topology::{ShardCount, ShardPlan, TierSpec, TopologyConfig, TOPOLOGY_PRESETS};
+pub use topology::{
+    EventVolumeModel, LookaheadClasses, ShardCount, ShardPlan, TierSpec, TopologyConfig,
+    TOPOLOGY_PRESETS,
+};

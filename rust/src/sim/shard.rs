@@ -29,7 +29,7 @@
 //! orchestrator's merge barrier (`ExecuteBoundary`), which re-creates the
 //! sequential engine's advance + snapshot + feedback sequence exactly.
 //!
-//! # Conservative grant rule (link-lookahead sync)
+//! # Conservative grant rule (active-feed lookahead sync)
 //!
 //! The orchestrator may let a shard process local events strictly below a
 //! `limit` key only if no *other* shard (and no global event) can reveal a
@@ -39,23 +39,40 @@
 //! ```text
 //! bound = min( earliest queued ComputeArrive key,   -- may classify as a drop
 //!              earliest queued ServerDone key,       -- may be a completion
-//!              head.time + lookahead )               -- uploads still draining:
-//!                                                    -- a reap at t lands at
-//!                                                    -- t + rtt >= t + lookahead
+//!              head.time + min draining RTT )        -- only while some uplink
+//!                                                    -- is draining an upload;
+//!                                                    -- omitted entirely when
+//!                                                    -- every local queue is dry
 //! ```
 //!
-//! where `lookahead` is the minimum RTT over the shard's links
-//! ([`crate::sim::topology::ShardPlan::lookahead_s`]). New `ServerDone`s
-//! can only appear by admitting a queued `ComputeArrive`, so they are
-//! always later than the `ComputeArrive` minimum already in the bound. A
-//! shard's grant limit is the minimum over the *other* shards' bounds (its
-//! own pending events never gate itself — this self-exclusion keeps the
-//! globally-earliest shard runnable and the protocol deadlock-free), the
-//! global queue head, and the horizon. Processing below such a limit can
-//! never create a barrier inside a window another shard was granted, which
-//! is the bit-identity argument: every advance/feedback interleaving the
-//! sequential engine performs at barriers is replayed at the same
-//! simulated instants in the same order.
+//! The third term covers `ComputeArrive`s that do not exist yet: a reap of
+//! link *l* at time `t >= head.time` mints a CA at `t + rtt(l)`. Reaps can
+//! only happen on links whose upload queue is non-empty, and uploads start
+//! exclusively at merge barriers (`Dispatch` never interleaves a grant), so
+//! the *draining set can only shrink inside a grant window*. That makes
+//! `head.time + min RTT over currently-draining links` a sound bound — and
+//! when **no** local uplink is draining, no future CA (and hence no future
+//! current `ServerDone`, which requires admitting a CA) can appear at all,
+//! so the term vanishes and the shard reports only its queued CA/SD minima
+//! (possibly no bound). PR 8 instead applied the unconditional floor
+//! `head.time + min RTT over all local links`
+//! ([`crate::sim::topology::ShardPlan::lookahead_s`]); the per-class
+//! refinement ([`crate::sim::topology::LookaheadClasses`], PR 9) widens
+//! grant windows exactly when a shard's fastest links are idle — the
+//! common case on mixed chunks whose 5 ms edge links are dry while a 20–80
+//! ms hub/cloud upload drains. Flap-to-zero links stay counted as draining
+//! (no reap can fire, so the bound is merely conservative, never unsafe).
+//!
+//! New `ServerDone`s can only appear by admitting a queued or covered
+//! `ComputeArrive`, so they are always later than the `ComputeArrive`
+//! minimum already in the bound. A shard's grant limit is the minimum over
+//! the *other* shards' bounds (its own pending events never gate itself —
+//! this self-exclusion keeps the globally-earliest shard runnable and the
+//! protocol deadlock-free), the global queue head, and the horizon.
+//! Processing below such a limit can never create a barrier inside a
+//! window another shard was granted, which is the bit-identity argument:
+//! every advance/feedback interleaving the sequential engine performs at
+//! barriers is replayed at the same simulated instants in the same order.
 //!
 //! # Deterministic stamps
 //!
@@ -88,6 +105,7 @@ use super::cluster::{fill_server_view, ClusterConfig, ClusterSim};
 use super::faults::FaultAction;
 use super::ps::PsJob;
 use super::time::{EventQueue, SimTime};
+use super::topology::LookaheadClasses;
 use crate::scheduler::ServerView;
 use crate::workload::service::ServiceRequest;
 
@@ -400,8 +418,14 @@ pub(crate) struct ShardSim {
     pending_ca: BinaryHeap<std::cmp::Reverse<Key>>,
     /// Keys of queued `ServerDone` events, stale or not (conservative).
     pending_sd: BinaryHeap<std::cmp::Reverse<Key>>,
-    /// Minimum RTT over local links: the shard's lookahead.
-    lookahead_s: f64,
+    /// Inbound-RTT class decomposition: the shard's lookahead table.
+    la: LookaheadClasses,
+    /// Per RTT class, how many local links currently drain an upload.
+    /// Indexed by `la` class (ascending RTT); maintained at dispatch and
+    /// reap so `status()` can bound by the smallest *active* feed.
+    draining: Vec<u32>,
+    /// Jobs resident in each local link's upload queue.
+    link_jobs: Vec<u32>,
     churn_guard: bool,
     epoch: u64,
     stamp_c: u64,
@@ -416,12 +440,14 @@ impl ShardSim {
     pub(crate) fn new(
         sub: &ClusterConfig,
         shard: usize,
-        lookahead_s: f64,
+        la: LookaheadClasses,
         init_ticks: &[(SimTime, u64, usize)],
         monitored: bool,
     ) -> Self {
         let n = sub.servers.len();
         let n_links = sub.links.len();
+        debug_assert_eq!(la.link_class.len(), n_links, "one RTT class per local link");
+        let n_classes = la.n_classes();
         let mut events = EventQueue::new();
         for &(at, stamp, link) in init_ticks {
             events.push_at_stamped(at, stamp, LocalEv::FluctTick { link });
@@ -441,7 +467,9 @@ impl ShardSim {
             reap_buf: Vec::new(),
             pending_ca: BinaryHeap::new(),
             pending_sd: BinaryHeap::new(),
-            lookahead_s,
+            la,
+            draining: vec![0; n_classes],
+            link_jobs: vec![0; n_links],
             churn_guard: sub.churn_guard,
             epoch: 0,
             stamp_c: 0,
@@ -483,13 +511,19 @@ impl ShardSim {
         };
         if let Some((hk, boundary)) = head {
             if !boundary {
-                // Uploads reaped while granted land no earlier than
-                // head.time + min-RTT over local links.
-                let ahead = Key(hk.0 + self.lookahead_s, 0);
-                bound = Some(match bound {
-                    Some(b) if b < ahead => b,
-                    _ => ahead,
-                });
+                // Only reaps of *currently draining* uplinks can mint new
+                // ComputeArrives during a grant (uploads start at barriers
+                // only, so the draining set cannot grow mid-window): bound
+                // by the smallest draining RTT class, or not at all when
+                // every local upload queue is dry — see the module docs'
+                // grant-rule derivation.
+                if let Some(c) = self.draining.iter().position(|&n| n > 0) {
+                    let ahead = Key(hk.0 + self.la.rtts[c], 0);
+                    bound = Some(match bound {
+                        Some(b) if b < ahead => b,
+                        _ => ahead,
+                    });
+                }
             }
         }
         ShardStatus {
@@ -560,6 +594,12 @@ impl ShardSim {
                 let rate = self.cluster.links[link].per_flow_rate();
                 let mut done = std::mem::take(&mut self.reap_buf);
                 self.cluster.links[link].queue.reap_into(now, rate, &mut done);
+                if !done.is_empty() {
+                    self.link_jobs[link] -= done.len() as u32;
+                    if self.link_jobs[link] == 0 {
+                        self.draining[self.la.link_class[link]] -= 1;
+                    }
+                }
                 let rtt = self.cluster.links[link].spec.rtt_s;
                 for job in &done {
                     let slot = job.id as usize;
@@ -705,6 +745,10 @@ impl ShardSim {
         link.advance_to(now);
         link.queue.push(slot as u64, payload as f64, now);
         let tx_energy_j = link.spec.tx_energy(payload);
+        if self.link_jobs[server] == 0 {
+            self.draining[self.la.link_class[server]] += 1;
+        }
+        self.link_jobs[server] += 1;
         let fl = &mut self.flows[slot];
         fl.dispatched_at = now;
         fl.tx_energy_j = tx_energy_j;
@@ -1161,7 +1205,7 @@ mod tests {
     #[test]
     fn dispatch_then_grant_reaches_boundary_completion() {
         let cfg = sub_cfg();
-        let mut s = ShardSim::new(&cfg, 0, 0.005, &[], false);
+        let mut s = ShardSim::new(&cfg, 0, LookaheadClasses::of(&cfg.links), &[], false);
         s.dispatch(0.0, 1, 7, req(7), 0);
         // Upload + landing are local; the completion is the boundary.
         let mut fl = Vec::new();
@@ -1187,7 +1231,7 @@ mod tests {
     #[test]
     fn bound_never_exceeds_pending_compute_arrive() {
         let cfg = sub_cfg();
-        let mut s = ShardSim::new(&cfg, 0, 0.005, &[], false);
+        let mut s = ShardSim::new(&cfg, 0, LookaheadClasses::of(&cfg.links), &[], false);
         s.dispatch(0.0, 1, 0, req(0), 0);
         // Run the upload until the ComputeArrive is queued.
         let mut fl = Vec::new();
@@ -1205,7 +1249,7 @@ mod tests {
     #[test]
     fn crashed_landing_classifies_as_boundary_and_fails() {
         let cfg = sub_cfg();
-        let mut s = ShardSim::new(&cfg, 0, 0.005, &[], false);
+        let mut s = ShardSim::new(&cfg, 0, LookaheadClasses::of(&cfg.links), &[], false);
         s.dispatch(0.0, 1, 3, req(3), 1);
         // Crash server 1 mid-upload (barrier-driven), then drain.
         let out = s.apply_fault(
@@ -1242,7 +1286,7 @@ mod tests {
     #[test]
     fn crash_tears_down_only_the_crashed_servers_flows() {
         let cfg = sub_cfg();
-        let mut s = ShardSim::new(&cfg, 0, 0.005, &[], false);
+        let mut s = ShardSim::new(&cfg, 0, LookaheadClasses::of(&cfg.links), &[], false);
         s.dispatch(0.0, 1, 0, req(0), 0);
         s.dispatch(0.0, 1, 1, req(1), 1);
         // Drain both uploads until both flows are computing (the next
@@ -1277,11 +1321,86 @@ mod tests {
         assert!(s.flows.iter().any(|f| f.live && f.svc == 1));
     }
 
+    /// Active-feed lookahead: with every local upload queue dry and no
+    /// queued CA/SD, a non-boundary head (a FluctTick) yields *no* bound
+    /// at all — nothing this shard does can reveal a barrier.
+    #[test]
+    fn idle_shard_reports_no_bound() {
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Fluctuating);
+        let period = cfg.links[0].fluct_period;
+        let s = ShardSim::new(&cfg, 0, LookaheadClasses::of(&cfg.links), &[(period, 0, 0)], false);
+        let status = s.status();
+        let (_, boundary) = status.head.expect("the seeded tick is queued");
+        assert!(!boundary, "FluctTick is always local");
+        assert!(
+            status.bound.is_none(),
+            "no draining uplink and no pending CA/SD: bound must be None, got {:?}",
+            status.bound
+        );
+    }
+
+    /// The head+lookahead term reads the smallest *draining* RTT class,
+    /// not the unconditional floor: a paper shard (5 ms edge links + 80 ms
+    /// cloud link) with only the cloud uplink busy bounds at head + 80 ms.
+    #[test]
+    fn bound_uses_smallest_draining_rtt_class() {
+        let cfg = sub_cfg();
+        let la = LookaheadClasses::of(&cfg.links);
+        assert_eq!(la.rtts, vec![0.005, 0.08]);
+        let mut s = ShardSim::new(&cfg, 0, la, &[], false);
+        // Cloud-only dispatch: the 5 ms edge class is dry.
+        s.dispatch(0.0, 1, 0, req(0), 5);
+        assert_eq!(s.draining, vec![0, 1]);
+        let status = s.status();
+        let (hk, boundary) = status.head.expect("the upload's LinkDone is queued");
+        assert!(!boundary);
+        let bound = status.bound.expect("a draining uplink implies a bound");
+        assert!(
+            (bound.0 - (hk.0 + 0.08)).abs() < 1e-12,
+            "cloud-only drain must bound at head + 80 ms, got {} vs head {}",
+            bound.0,
+            hk.0
+        );
+        // An edge dispatch activates the 5 ms class and tightens it.
+        s.dispatch(0.0, 1, 1, req(1), 0);
+        assert_eq!(s.draining, vec![1, 1]);
+        let status = s.status();
+        let (hk, _) = status.head.expect("uploads queued");
+        let bound = status.bound.expect("draining uplinks imply a bound");
+        assert!((bound.0 - (hk.0 + 0.005)).abs() < 1e-12);
+    }
+
+    /// Reaps retire draining state: once both uploads reap and land, the
+    /// queues are dry again and the counters return to zero.
+    #[test]
+    fn reaps_retire_draining_counters() {
+        let cfg = sub_cfg();
+        let mut s = ShardSim::new(&cfg, 0, LookaheadClasses::of(&cfg.links), &[], false);
+        s.dispatch(0.0, 1, 0, req(0), 0);
+        s.dispatch(0.0, 1, 1, req(1), 5);
+        assert_eq!(s.link_jobs[0], 1);
+        assert_eq!(s.link_jobs[5], 1);
+        let mut fl = Vec::new();
+        let mut guard = 0;
+        loop {
+            let status = s.run_granted(NO_LIMIT, 1, &mut fl);
+            match status.head {
+                Some((_, true)) => break,
+                Some(_) => {}
+                None => panic!("completions must be pending"),
+            }
+            guard += 1;
+            assert!(guard < 100, "flows never reached the servers");
+        }
+        assert!(s.draining.iter().all(|&n| n == 0), "{:?}", s.draining);
+        assert!(s.link_jobs.iter().all(|&n| n == 0));
+    }
+
     #[test]
     fn fluct_values_apply_in_fifo_order() {
         let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Fluctuating);
         let period = cfg.links[0].fluct_period;
-        let mut s = ShardSim::new(&cfg, 0, 0.005, &[(period, 0, 0)], false);
+        let mut s = ShardSim::new(&cfg, 0, LookaheadClasses::of(&cfg.links), &[(period, 0, 0)], false);
         let mut fl = vec![(0u32, 0.9), (0u32, 1.1)];
         let status = s.run_granted(Key(period + period / 2.0, u64::MAX), 1, &mut fl);
         assert!(fl.is_empty(), "the grant drains the shipped values");

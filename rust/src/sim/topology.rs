@@ -300,28 +300,201 @@ impl TopologyConfig {
 
 pub const TOPOLOGY_PRESETS: [&str; 3] = ["paper", "edgeshard-10x", "edgeshard-100x"];
 
-/// Shard-count selection for the sharded DES engine (`--shards N|auto`).
+/// Shard-count selection for the sharded DES engine
+/// (`--shards N|auto|weighted[:N]`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardCount {
     /// One shard per tier — the natural EdgeShard decomposition: tier
     /// boundaries are exactly where cross-shard traffic pays a
     /// `LinkSpec` latency, so per-tier shards maximize the conservative
-    /// lookahead window.
+    /// lookahead window. Since PR 9 the tier plan is *volume-aware*: when
+    /// the [`EventVolumeModel`] imbalance of the raw tier partition
+    /// exceeds [`AUTO_REBALANCE_IMBALANCE`], the same shard count is
+    /// re-cut on cumulative event weight (see
+    /// [`TopologyConfig::weighted_plan`]).
     Auto,
-    /// Exactly `N` shards (contiguous, server-count-balanced chunks).
+    /// Exactly `N` shards (contiguous, server-count-balanced chunks) —
+    /// the PR-8 lowering, kept for A/B runs against the weighted plans.
     Fixed(usize),
+    /// Volume-weighted contiguous split on the [`EventVolumeModel`]:
+    /// `Weighted(n)` cuts `n` shards on cumulative event weight;
+    /// `Weighted(0)` (CLI form "weighted") uses one shard per tier as
+    /// the count, i.e. "auto's shard count, always rebalanced".
+    Weighted(usize),
 }
 
 impl ShardCount {
-    /// Parse a `--shards` flag value: "auto" or a positive integer.
+    /// Parse a `--shards` flag value: "auto", "weighted", "weighted:N",
+    /// or a positive integer.
     pub fn parse(s: &str) -> Option<ShardCount> {
         if s.eq_ignore_ascii_case("auto") {
             return Some(ShardCount::Auto);
+        }
+        if s.eq_ignore_ascii_case("weighted") {
+            return Some(ShardCount::Weighted(0));
+        }
+        if let Some(n) = s
+            .strip_prefix("weighted:")
+            .or_else(|| s.strip_prefix("WEIGHTED:"))
+        {
+            return match n.parse::<usize>() {
+                Ok(n) if n >= 1 => Some(ShardCount::Weighted(n)),
+                _ => None,
+            };
         }
         match s.parse::<usize>() {
             Ok(n) if n >= 1 => Some(ShardCount::Fixed(n)),
             _ => None,
         }
+    }
+}
+
+/// Rebalance threshold for [`ShardCount::Auto`]: when the raw one-shard-
+/// per-tier partition's [`ShardPlan::imbalance`] (max/min per-shard event
+/// weight) exceeds this, the same shard count is re-cut on cumulative
+/// volume via [`TopologyConfig::weighted_plan`]. 2.0 means "the critical
+/// shard carries at least twice the lightest shard's events" — past that
+/// point the tier plan's lookahead advantage cannot recover the wall-clock
+/// lost to the straggler.
+pub const AUTO_REBALANCE_IMBALANCE: f64 = 2.0;
+
+/// DES events per completed request under the PS fluid model: upload
+/// dispatch + link completion + compute arrival + server completion. The
+/// absolute value cancels out of every balanced-cut decision (only
+/// *ratios* between tiers matter); it is kept literal so the model's
+/// per-server weights read as events/simulated-second.
+const EVENTS_PER_REQUEST: f64 = 4.0;
+
+/// Event multiplier for token-batch servers vs PS: the discrete-iteration
+/// model reschedules per batch iteration instead of per fluid completion,
+/// roughly tripling per-request event counts at calibrated loads (see
+/// `sim/token_batch.rs`).
+const TOKEN_BATCH_EVENT_MULT: f64 = 3.0;
+
+/// The paper-calibrated arrival rate (req/s) the volume model assumes when
+/// estimating per-tier arrival shares — the same 15 req/s that
+/// `paper_scale_sim` scales by capacity. The model only consumes rate
+/// *shares*, so runs at other absolute rates still balance correctly.
+const CALIBRATED_PAPER_RATE: f64 = 15.0;
+
+/// Per-server event-volume estimate lowered from what [`TopologyConfig`]
+/// already knows — the input to [`ShardPlan::weighted`] and the
+/// volume-aware `Auto` rebalance.
+///
+/// Per server of a tier, the weight is
+/// `arrival_share · EVENTS_PER_REQUEST · model_mult + fluct_ticks_per_s`:
+///
+/// - **arrival share**: capacity-proportional per-server rate, mirroring
+///   exactly how `--mix tiered` lowers the scaled rate onto tiers
+///   (`scaled_rate(15.0) · server_slots / total_slots`);
+/// - **model mult**: 1.0 for PS fluid completions,
+///   [`TOKEN_BATCH_EVENT_MULT`] for discrete-iteration token batching;
+/// - **fluct ticks**: `1 / fluct_period` when the topology runs
+///   [`BandwidthMode::Fluctuating`] (each link re-arms a FluctTick every
+///   period), 0 in Stable mode.
+///
+/// Fault-plan and health-probe events are uniform background across
+/// servers (probes scan the whole fleet; generative MTTF/MTTR streams are
+/// per-server i.i.d.), so they shift every weight equally and barely move
+/// a balanced cut; [`Self::with_background`] adds that density when a
+/// caller wants it reflected anyway. Weights allocate at lowering time
+/// only — nothing here runs on the per-event hot path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventVolumeModel {
+    /// Estimated events/simulated-second per server, global server order.
+    pub per_server: Vec<f64>,
+}
+
+impl EventVolumeModel {
+    /// Estimate per-server event weights from the topology's tier
+    /// templates (arrival shares, service-model kinds, fluctuation
+    /// cadence).
+    pub fn from_topology(topo: &TopologyConfig) -> EventVolumeModel {
+        let total_slots = topo.total_slots() as f64;
+        let rate = topo.scaled_rate(CALIBRATED_PAPER_RATE);
+        let mut per_server = Vec::with_capacity(topo.n_servers());
+        for tier in &topo.tiers {
+            let mult = match tier.server.service_model {
+                ServiceModelKind::Ps => 1.0,
+                ServiceModelKind::TokenBatch { .. } => TOKEN_BATCH_EVENT_MULT,
+            };
+            let arrivals = if total_slots > 0.0 {
+                rate * tier.server.slots as f64 / total_slots
+            } else {
+                0.0
+            };
+            let ticks = match topo.bandwidth {
+                BandwidthMode::Fluctuating if tier.link.fluct_period > 0.0 => {
+                    1.0 / tier.link.fluct_period
+                }
+                _ => 0.0,
+            };
+            let w = arrivals * EVENTS_PER_REQUEST * mult + ticks;
+            for _ in 0..tier.count {
+                per_server.push(w);
+            }
+        }
+        EventVolumeModel { per_server }
+    }
+
+    /// Add a uniform background event density (events/s per server) for
+    /// fault-plan replay and health-probe traffic. Uniform additions
+    /// cannot *unbalance* a weighted cut, but they damp the relative
+    /// spread between tiers, so callers with probe-heavy plans may want
+    /// the honesty.
+    pub fn with_background(mut self, events_per_s: f64) -> Self {
+        for w in &mut self.per_server {
+            *w += events_per_s;
+        }
+        self
+    }
+}
+
+/// The per-shard lookahead decomposition (PR 9): the distinct inbound
+/// `LinkSpec::rtt_s` values among a shard's own uplinks, ascending, plus
+/// each local link's index into that table.
+///
+/// PR 8 collapsed this to one number — the min RTT — and applied it
+/// unconditionally to every non-boundary head. But the only events the
+/// `head + lookahead` grant-bound term must cover are compute arrivals
+/// produced by reaps of the shard's own *currently draining* uplinks
+/// (uploads start only at merge barriers, so the draining set can only
+/// shrink inside a grant window — see `sim/shard.rs` docs). Keeping the
+/// RTTs per class lets the shard bound by the smallest RTT among links
+/// that are *actually draining* — typically no bound at all on an idle
+/// shard, and the hub/cloud RTT instead of the 5 ms edge floor on a mixed
+/// chunk whose edge links are dry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LookaheadClasses {
+    /// Distinct inbound RTTs (seconds), strictly ascending. Never empty
+    /// for a non-empty shard.
+    pub rtts: Vec<f64>,
+    /// For each local link (shard-relative index), the index of its RTT
+    /// in `rtts`.
+    pub link_class: Vec<usize>,
+}
+
+impl LookaheadClasses {
+    /// Decompose a shard's link slice into RTT classes.
+    pub fn of(links: &[LinkSpec]) -> LookaheadClasses {
+        let mut rtts: Vec<f64> = links.iter().map(|l| l.rtt_s).collect();
+        rtts.sort_by(|a, b| a.total_cmp(b));
+        rtts.dedup();
+        let link_class = links
+            .iter()
+            .map(|l| rtts.partition_point(|r| *r < l.rtt_s))
+            .collect();
+        LookaheadClasses { rtts, link_class }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.rtts.len()
+    }
+
+    /// The PR-8 scalar lookahead: the smallest inbound RTT. Still the
+    /// unconditional safe floor (equals `ShardPlan::lookahead_s`).
+    pub fn floor_s(&self) -> f64 {
+        self.rtts.first().copied().unwrap_or(f64::INFINITY)
     }
 }
 
@@ -344,8 +517,10 @@ pub struct ShardPlan {
 
 impl ShardPlan {
     /// `n_shards` contiguous chunks over `n_servers` servers, balanced to
-    /// within one server. Shard counts above the server count are clamped
-    /// (an empty shard has no events and only adds barrier latency).
+    /// within one server. Degenerate requests clamp instead of producing
+    /// empty shards (an empty shard is a worker that can never advance the
+    /// global bound): `n_shards == 0` becomes 1, counts above the server
+    /// count become one shard per server.
     pub fn contiguous(n_servers: usize, n_shards: usize) -> ShardPlan {
         assert!(n_servers > 0, "cannot shard an empty cluster");
         let k = n_shards.clamp(1, n_servers);
@@ -353,6 +528,83 @@ impl ShardPlan {
             .map(|i| (i * n_servers / k, (i + 1) * n_servers / k))
             .collect();
         ShardPlan { ranges }
+    }
+
+    /// `n_shards` contiguous chunks balanced on *cumulative weight*
+    /// instead of server count: cut points sit where the weight prefix
+    /// sum crosses each `j/k` share of the total, refined to the nearer
+    /// neighboring server boundary. The same degenerate clamps as
+    /// [`Self::contiguous`] apply (`n_shards == 0` → 1; `n_shards >
+    /// n_servers` → one per server; every range non-empty by
+    /// construction). An all-zero weight vector falls back to the
+    /// server-count split — there is nothing to balance.
+    ///
+    /// Weights must be finite and non-negative; this runs at lowering
+    /// time only (allocation here is fine, per the shard-path no-alloc
+    /// contract).
+    pub fn weighted(n_servers: usize, weights: &[f64], n_shards: usize) -> ShardPlan {
+        assert!(n_servers > 0, "cannot shard an empty cluster");
+        assert_eq!(weights.len(), n_servers, "one weight per server");
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "event weights must be finite and non-negative"
+        );
+        let k = n_shards.clamp(1, n_servers);
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return Self::contiguous(n_servers, k);
+        }
+        // Prefix sums: pre[i] = weight of servers [0, i).
+        let mut pre = Vec::with_capacity(n_servers + 1);
+        let mut acc = 0.0;
+        pre.push(0.0);
+        for w in weights {
+            acc += *w;
+            pre.push(acc);
+        }
+        let mut ranges = Vec::with_capacity(k);
+        let mut lo = 0usize;
+        for j in 1..k {
+            let target = total * j as f64 / k as f64;
+            // First boundary whose prefix reaches the share...
+            let mut cut = pre.partition_point(|p| *p < target);
+            // ...or the one just before it, whichever lands closer.
+            if cut > 0 && cut <= n_servers && target - pre[cut - 1] < pre[cut] - target {
+                cut -= 1;
+            }
+            // Clamp so this range and every remaining one stay non-empty.
+            let hi = cut.clamp(lo + 1, n_servers - (k - j));
+            ranges.push((lo, hi));
+            lo = hi;
+        }
+        ranges.push((lo, n_servers));
+        ShardPlan { ranges }
+    }
+
+    /// Max/min per-shard weight ratio under this plan — the balance
+    /// metric `paper_scale_sim`/`micro_hotpath` report (1.0 = perfectly
+    /// balanced; `sharded_100x_imbalance` in BENCH). A zero-weight shard
+    /// under positive total weight reads as infinite imbalance; an
+    /// all-zero fleet reads as 1.0 (nothing to balance).
+    pub fn imbalance(&self, weights: &[f64]) -> f64 {
+        let mut min_w = f64::INFINITY;
+        let mut max_w = 0.0f64;
+        for &(lo, hi) in &self.ranges {
+            let w: f64 = weights[lo..hi].iter().sum();
+            if w < min_w {
+                min_w = w;
+            }
+            if w > max_w {
+                max_w = w;
+            }
+        }
+        if max_w <= 0.0 {
+            1.0
+        } else if min_w <= 0.0 {
+            f64::INFINITY
+        } else {
+            max_w / min_w
+        }
     }
 
     pub fn n_shards(&self) -> usize {
@@ -382,28 +634,119 @@ impl ShardPlan {
             // lint: allow(nan-cmp) rtt_s is a positive config constant, never NaN
             .fold(f64::INFINITY, f64::min)
     }
+
+    /// The per-class lookahead decomposition for shard `s`: distinct
+    /// inbound RTTs plus each local link's class index. The shard bounds
+    /// its head by the smallest RTT among classes with a *draining*
+    /// uplink instead of the unconditional floor — see
+    /// [`LookaheadClasses`] and the grant-rule derivation in
+    /// `sim/shard.rs`.
+    pub fn lookahead_classes(&self, links: &[LinkSpec], s: usize) -> LookaheadClasses {
+        let (lo, hi) = self.ranges[s];
+        LookaheadClasses::of(&links[lo..hi])
+    }
 }
 
 impl TopologyConfig {
-    /// Lower this topology to a [`ShardPlan`]: `Auto` gives one shard
-    /// per tier (shard boundaries = tier boundaries), `Fixed(n)` gives
-    /// `n` balanced contiguous chunks.
+    /// Lower this topology to a [`ShardPlan`]:
+    ///
+    /// - `Fixed(n)` — `n` balanced contiguous chunks by *server count*
+    ///   (the PR-8 lowering, kept for A/B runs);
+    /// - `Auto` — one shard per tier, **rebalanced** on cumulative event
+    ///   weight (same shard count) when the tier partition's
+    ///   [`ShardPlan::imbalance`] exceeds [`AUTO_REBALANCE_IMBALANCE`];
+    /// - `Weighted(n)` — always the volume-weighted cut ([`n` shards, or
+    ///   the tier count for `Weighted(0)`).
     pub fn shard_plan(&self, count: ShardCount) -> ShardPlan {
         match count {
             ShardCount::Fixed(n) => ShardPlan::contiguous(self.n_servers(), n),
+            ShardCount::Weighted(n) => {
+                let model = EventVolumeModel::from_topology(self);
+                let k = if n == 0 {
+                    self.tier_shard_plan().n_shards()
+                } else {
+                    n
+                };
+                self.weighted_plan(k, &model)
+            }
             ShardCount::Auto => {
-                let mut ranges = Vec::with_capacity(self.tiers.len());
-                let mut lo = 0;
-                for tier in &self.tiers {
-                    if tier.count > 0 {
-                        ranges.push((lo, lo + tier.count));
-                        lo += tier.count;
-                    }
+                let tiers = self.tier_shard_plan();
+                let model = EventVolumeModel::from_topology(self);
+                if tiers.imbalance(&model.per_server) > AUTO_REBALANCE_IMBALANCE {
+                    self.weighted_plan(tiers.n_shards(), &model)
+                } else {
+                    tiers
                 }
-                assert!(!ranges.is_empty(), "topology has at least one tier");
-                ShardPlan { ranges }
             }
         }
+    }
+
+    /// One shard per non-empty tier — the raw PR-8 `auto` partition,
+    /// kept public so A/B runs can measure its imbalance against the
+    /// volume-weighted rebalance ([`ShardPlan::imbalance`]).
+    pub fn tier_shard_plan(&self) -> ShardPlan {
+        let mut ranges = Vec::with_capacity(self.tiers.len());
+        let mut lo = 0;
+        for tier in &self.tiers {
+            if tier.count > 0 {
+                ranges.push((lo, lo + tier.count));
+                lo += tier.count;
+            }
+        }
+        assert!(!ranges.is_empty(), "topology has at least one tier");
+        ShardPlan { ranges }
+    }
+
+    /// Tier-atomic volume-weighted plan: cut `n_shards` contiguous
+    /// ranges on the model's cumulative weight, treating each tier as an
+    /// unsplittable atom *unless* that tier alone exceeds a `1/k` share
+    /// of total weight (then its servers become individual atoms — the
+    /// only way any cut can balance). This preserves a tier's intra-range
+    /// locality (and thus its homogeneous lookahead classes) whenever
+    /// balance allows.
+    pub fn weighted_plan(&self, n_shards: usize, model: &EventVolumeModel) -> ShardPlan {
+        let n = self.n_servers();
+        assert!(n > 0, "cannot shard an empty cluster");
+        assert_eq!(model.per_server.len(), n, "one weight per server");
+        let k = n_shards.clamp(1, n);
+        let total: f64 = model.per_server.iter().sum();
+        if total <= 0.0 {
+            return ShardPlan::contiguous(n, k);
+        }
+        let share = total / k as f64;
+        // Atom list: (end server index, atom weight) — whole tiers when
+        // they fit a balanced share, per-server atoms when one doesn't.
+        let mut atom_end: Vec<usize> = Vec::new();
+        let mut atom_w: Vec<f64> = Vec::new();
+        let mut lo = 0usize;
+        for tier in &self.tiers {
+            if tier.count == 0 {
+                continue;
+            }
+            let hi = lo + tier.count;
+            let tier_w: f64 = model.per_server[lo..hi].iter().sum();
+            if tier_w > share {
+                for s in lo..hi {
+                    atom_end.push(s + 1);
+                    atom_w.push(model.per_server[s]);
+                }
+            } else {
+                atom_end.push(hi);
+                atom_w.push(tier_w);
+            }
+            lo = hi;
+        }
+        let atoms = atom_w.len();
+        let inner = ShardPlan::weighted(atoms, &atom_w, k.min(atoms));
+        let ranges = inner
+            .ranges
+            .iter()
+            .map(|&(alo, ahi)| {
+                let s_lo = if alo == 0 { 0 } else { atom_end[alo - 1] };
+                (s_lo, atom_end[ahi - 1])
+            })
+            .collect();
+        ShardPlan { ranges }
     }
 }
 
@@ -613,21 +956,109 @@ mod tests {
         assert_eq!(ShardCount::parse("AUTO"), Some(ShardCount::Auto));
         assert_eq!(ShardCount::parse("1"), Some(ShardCount::Fixed(1)));
         assert_eq!(ShardCount::parse("16"), Some(ShardCount::Fixed(16)));
+        assert_eq!(ShardCount::parse("weighted"), Some(ShardCount::Weighted(0)));
+        assert_eq!(ShardCount::parse("WEIGHTED"), Some(ShardCount::Weighted(0)));
+        assert_eq!(
+            ShardCount::parse("weighted:4"),
+            Some(ShardCount::Weighted(4))
+        );
+        assert_eq!(ShardCount::parse("weighted:0"), None);
+        assert_eq!(ShardCount::parse("weighted:x"), None);
         assert_eq!(ShardCount::parse("0"), None);
         assert_eq!(ShardCount::parse("-2"), None);
         assert_eq!(ShardCount::parse("many"), None);
     }
 
     #[test]
-    fn auto_plan_follows_tier_boundaries() {
+    fn tier_plan_follows_tier_boundaries() {
         let t10 = TopologyConfig::edgeshard_10x("yi-6b", BandwidthMode::Stable);
-        let plan = t10.shard_plan(ShardCount::Auto);
+        let plan = t10.tier_shard_plan();
         assert_eq!(plan.ranges, vec![(0, 48), (48, 58), (58, 60)]);
         assert_eq!(plan.n_shards(), 3);
         assert_eq!(plan.shard_of(0), 0);
         assert_eq!(plan.shard_of(47), 0);
         assert_eq!(plan.shard_of(48), 1);
         assert_eq!(plan.shard_of(59), 2);
+    }
+
+    /// `Auto` rebalances the tier partition when its event-volume
+    /// imbalance exceeds the threshold. On edgeshard-10x in Stable mode
+    /// weights are slot-proportional (edge 8/server, hub 12, cloud 12 →
+    /// tier totals 384/120/24, imbalance 16), so the three tier shards
+    /// are re-cut at cumulative-weight thirds: 22 edge servers (176),
+    /// another 22 (176), and the tail 4 edge + all hubs + clouds
+    /// (32 + 120 + 24 = 176).
+    #[test]
+    fn auto_plan_rebalances_on_volume_imbalance() {
+        let t10 = TopologyConfig::edgeshard_10x("yi-6b", BandwidthMode::Stable);
+        let model = EventVolumeModel::from_topology(&t10);
+        let tiers = t10.tier_shard_plan();
+        assert!(
+            tiers.imbalance(&model.per_server) > 10.0,
+            "tier imbalance {}",
+            tiers.imbalance(&model.per_server)
+        );
+        let auto = t10.shard_plan(ShardCount::Auto);
+        assert_eq!(auto.ranges, vec![(0, 22), (22, 44), (44, 60)]);
+        let imb = auto.imbalance(&model.per_server);
+        assert!(imb < 1.01, "rebalanced imbalance {imb}");
+        // Weighted(0) (CLI "weighted") lands on the same plan here.
+        assert_eq!(t10.shard_plan(ShardCount::Weighted(0)), auto);
+    }
+
+    /// The ISSUE acceptance pin: on edgeshard-100x the weighted 3-shard
+    /// plan's max/min per-shard event volume is ≤ 1.25 while the raw
+    /// tier plan sits ≥ 3 (it is 16: 3840/1200/240 slot-weights). The
+    /// edge tier alone (3840 of 5280) exceeds a third of total weight,
+    /// so it is split internally at servers 220 and 440.
+    #[test]
+    fn weighted_plan_balances_edgeshard_100x() {
+        let t100 = TopologyConfig::edgeshard_100x("yi-6b", BandwidthMode::Stable);
+        let model = EventVolumeModel::from_topology(&t100);
+        let tiers = t100.tier_shard_plan();
+        assert!(tiers.imbalance(&model.per_server) >= 3.0);
+        let w = t100.shard_plan(ShardCount::Weighted(3));
+        assert_eq!(w.ranges, vec![(0, 220), (220, 440), (440, 600)]);
+        assert!(w.imbalance(&model.per_server) <= 1.25);
+        // More shards than tiers still covers contiguously.
+        let w8 = t100.shard_plan(ShardCount::Weighted(8));
+        assert_eq!(w8.n_shards(), 8);
+        assert_eq!(w8.ranges[0].0, 0);
+        assert_eq!(w8.ranges.last().unwrap().1, 600);
+        let mut covered = 0;
+        for &(lo, hi) in &w8.ranges {
+            assert_eq!(lo, covered);
+            assert!(hi > lo);
+            covered = hi;
+        }
+    }
+
+    /// Weight ratios, not absolute rates, drive the cut: token-batch
+    /// tiers weigh more per arrival, pulling the boundary toward them.
+    #[test]
+    fn volume_model_reflects_service_model_and_mode() {
+        let stable = TopologyConfig::edgeshard_10x("yi-6b", BandwidthMode::Stable);
+        let m = EventVolumeModel::from_topology(&stable);
+        assert_eq!(m.per_server.len(), 60);
+        // Slot-proportional in Stable mode: hub (12 slots) = 1.5x edge (8).
+        assert!((m.per_server[48] / m.per_server[0] - 1.5).abs() < 1e-9);
+        // Fluctuating mode adds 1/fluct_period = 2 ticks/s per server.
+        let fluct = TopologyConfig::edgeshard_10x("yi-6b", BandwidthMode::Fluctuating);
+        let mf = EventVolumeModel::from_topology(&fluct);
+        assert!((mf.per_server[0] - m.per_server[0] - 2.0).abs() < 1e-9);
+        // Token-batch edge triples the edge tier's arrival-event weight.
+        let tb = stable
+            .clone()
+            .with_service_model_by_name("token-batch-edge")
+            .unwrap();
+        let mtb = EventVolumeModel::from_topology(&tb);
+        assert!((mtb.per_server[0] / m.per_server[0] - 3.0).abs() < 1e-9);
+        assert!((mtb.per_server[58] - m.per_server[58]).abs() < 1e-12);
+        // Uniform background shifts every server equally.
+        let bg = mtb.clone().with_background(5.0);
+        for (a, b) in bg.per_server.iter().zip(&mtb.per_server) {
+            assert!((a - b - 5.0).abs() < 1e-12);
+        }
     }
 
     #[test]
@@ -650,6 +1081,48 @@ mod tests {
         }
     }
 
+    /// Degenerate lowerings clamp to valid non-empty covers instead of
+    /// minting empty shards (an empty shard is a worker that can never
+    /// advance the global bound).
+    #[test]
+    fn shard_plans_clamp_degenerate_lowerings() {
+        // n_shards == 0 → one shard.
+        assert_eq!(ShardPlan::contiguous(3, 0).ranges, vec![(0, 3)]);
+        assert_eq!(
+            ShardPlan::weighted(3, &[1.0, 2.0, 3.0], 0).ranges,
+            vec![(0, 3)]
+        );
+        // n_shards > n_servers → one server per shard.
+        assert_eq!(
+            ShardPlan::contiguous(2, 9).ranges,
+            vec![(0, 1), (1, 2)]
+        );
+        assert_eq!(
+            ShardPlan::weighted(2, &[5.0, 1.0], 9).ranges,
+            vec![(0, 1), (1, 2)]
+        );
+        // 1-server topology at any requested count.
+        for k in [0, 1, 4] {
+            assert_eq!(ShardPlan::contiguous(1, k).ranges, vec![(0, 1)]);
+            assert_eq!(ShardPlan::weighted(1, &[7.0], k).ranges, vec![(0, 1)]);
+        }
+        // All weight piled at one end still yields non-empty ranges.
+        let tail = ShardPlan::weighted(4, &[0.0, 0.0, 0.0, 100.0], 2);
+        assert_eq!(tail.ranges, vec![(0, 3), (3, 4)]);
+        let head = ShardPlan::weighted(3, &[100.0, 0.0, 0.0], 3);
+        assert_eq!(head.ranges, vec![(0, 1), (1, 2), (2, 3)]);
+        // Zero total weight falls back to the server-count split.
+        assert_eq!(
+            ShardPlan::weighted(4, &[0.0; 4], 2).ranges,
+            ShardPlan::contiguous(4, 2).ranges
+        );
+        // A 1-tier topology through the weighted lowering clamps too.
+        let single = TopologyConfig::paper("yi-6b", BandwidthMode::Stable);
+        let plan = single.shard_plan(ShardCount::Weighted(64));
+        assert_eq!(plan.n_shards(), 6);
+        assert_eq!(plan.ranges.last().unwrap().1, 6);
+    }
+
     /// Lookahead lowers from LinkSpec RTTs: per-tier shards read their
     /// tier's RTT (edge 5 ms, hub 20 ms, cloud 80 ms); a mixed chunk
     /// takes the min across the tiers it straddles.
@@ -657,13 +1130,49 @@ mod tests {
     fn lookahead_derives_from_inbound_link_rtt() {
         let topo = TopologyConfig::edgeshard_10x("yi-6b", BandwidthMode::Stable);
         let cfg = topo.build();
-        let auto = topo.shard_plan(ShardCount::Auto);
+        let auto = topo.tier_shard_plan();
         assert!((auto.lookahead_s(&cfg.links, 0) - 0.005).abs() < 1e-12);
         assert!((auto.lookahead_s(&cfg.links, 1) - 0.02).abs() < 1e-12);
         assert!((auto.lookahead_s(&cfg.links, 2) - 0.08).abs() < 1e-12);
         let two = topo.shard_plan(ShardCount::Fixed(2));
         // Second chunk [30, 60) straddles edge+hub+cloud → min is edge.
         assert!((two.lookahead_s(&cfg.links, 1) - 0.005).abs() < 1e-12);
+    }
+
+    /// Hand-computed class decompositions: a per-tier shard has one RTT
+    /// class; a mixed chunk keeps them all, each local link mapped to
+    /// its class, with the floor equal to the PR-8 scalar lookahead.
+    #[test]
+    fn lookahead_classes_pin_hand_computed_topologies() {
+        let topo = TopologyConfig::edgeshard_10x("yi-6b", BandwidthMode::Stable);
+        let cfg = topo.build();
+        let tiers = topo.tier_shard_plan();
+        // Homogeneous per-tier shards: exactly one class each.
+        for (s, rtt) in [(0usize, 0.005), (1, 0.02), (2, 0.08)] {
+            let la = tiers.lookahead_classes(&cfg.links, s);
+            assert_eq!(la.rtts, vec![rtt], "shard {s}");
+            assert_eq!(la.n_classes(), 1);
+            assert!(la.link_class.iter().all(|&c| c == 0));
+            assert!((la.floor_s() - rtt).abs() < 1e-12);
+            assert!((la.floor_s() - tiers.lookahead_s(&cfg.links, s)).abs() < 1e-12);
+        }
+        // Fixed(2)'s second chunk [30, 60) straddles all three tiers:
+        // three ascending classes, links mapped 18× edge, 10× hub,
+        // 2× cloud, floor = edge.
+        let two = topo.shard_plan(ShardCount::Fixed(2));
+        let la = two.lookahead_classes(&cfg.links, 1);
+        assert_eq!(la.rtts, vec![0.005, 0.02, 0.08]);
+        assert_eq!(la.link_class.len(), 30);
+        assert_eq!(la.link_class.iter().filter(|&&c| c == 0).count(), 18);
+        assert_eq!(la.link_class.iter().filter(|&&c| c == 1).count(), 10);
+        assert_eq!(la.link_class.iter().filter(|&&c| c == 2).count(), 2);
+        assert!((la.floor_s() - 0.005).abs() < 1e-12);
+        // The rebalanced Auto plan's tail shard [44, 60) mixes all
+        // three tiers too (4 edge + 10 hub + 2 cloud).
+        let auto = topo.shard_plan(ShardCount::Auto);
+        let tail = auto.lookahead_classes(&cfg.links, 2);
+        assert_eq!(tail.rtts, vec![0.005, 0.02, 0.08]);
+        assert_eq!(tail.link_class.iter().filter(|&&c| c == 0).count(), 4);
     }
 
     /// A short streaming run on the 10x preset end to end: every layer

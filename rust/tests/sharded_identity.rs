@@ -10,8 +10,9 @@
 //!
 //! 1. **Fault-free identity** — paper topology, both bandwidth modes
 //!    (Fluctuating exercises the orchestrator's fluctuation-calendar
-//!    replay of the engine RNG stream), shard counts {1, 2, auto},
-//!    multiple seeds, against a scheduler that exercises Assign, Defer,
+//!    replay of the engine RNG stream), shard plans {1, 2, auto,
+//!    weighted}, multiple seeds, against a scheduler that exercises
+//!    Assign, Defer,
 //!    and Shed actions as well as CS-UCB.
 //! 2. **Scaled-topology identity** — edgeshard-10x (60 servers, three
 //!    tiers) under fluctuating bandwidth across shard counts.
@@ -22,6 +23,10 @@
 //! 4. **Bounded event population** — each engine's event queues stay
 //!    bounded by in-flight concurrency: the sharded run's peak queue
 //!    length never exceeds the sequential run's.
+//! 5. **Any contiguous partition** — randomized split points and
+//!    randomized volume-weighted plans (`ShardPlan::weighted`) reproduce
+//!    the sequential run bit for bit, making the "correct for any
+//!    contiguous partition" claim in `sim/shard.rs` executable.
 
 use perllm::scheduler::csucb::CsUcb;
 use perllm::scheduler::{Action, ClusterView, Scheduler, ShedReason};
@@ -31,6 +36,7 @@ use perllm::sim::engine::{
     simulate_stream_sharded, RunReport,
 };
 use perllm::sim::{CrashPolicy, FaultKind, FaultPlan, HealthConfig, ShardCount, ShardPlan, TopologyConfig};
+use perllm::util::proptest::{check, Gen};
 use perllm::workload::generator::{ArrivalProcess, WorkloadConfig, WorkloadGen};
 use perllm::workload::service::ServiceRequest;
 
@@ -214,7 +220,12 @@ fn sharded_runs_are_bit_identical_to_sequential_on_paper_topology() {
             let mut base_sched = CsUcb::with_defaults(cfg.n_servers());
             let mut base_src = WorkloadGen::new(&wl);
             let base = simulate_stream(&cfg, &mut base_src, &mut base_sched);
-            for count in [ShardCount::Fixed(1), ShardCount::Fixed(2), ShardCount::Auto] {
+            for count in [
+                ShardCount::Fixed(1),
+                ShardCount::Fixed(2),
+                ShardCount::Auto,
+                ShardCount::Weighted(0),
+            ] {
                 let splan = topo.shard_plan(count);
                 let mut sched = CsUcb::with_defaults(cfg.n_servers());
                 let mut src = WorkloadGen::new(&wl);
@@ -253,7 +264,13 @@ fn sharded_runs_are_bit_identical_on_edgeshard_10x() {
     let mut base_sched = CsUcb::with_defaults(cfg.n_servers());
     let mut base_src = WorkloadGen::new(&wl);
     let base = simulate_stream(&cfg, &mut base_src, &mut base_sched);
-    for count in [ShardCount::Fixed(1), ShardCount::Fixed(4), ShardCount::Auto] {
+    for count in [
+        ShardCount::Fixed(1),
+        ShardCount::Fixed(4),
+        ShardCount::Auto,
+        ShardCount::Weighted(0),
+        ShardCount::Weighted(4),
+    ] {
         let splan = topo.shard_plan(count);
         let mut sched = CsUcb::with_defaults(cfg.n_servers());
         let mut src = WorkloadGen::new(&wl);
@@ -319,7 +336,7 @@ fn sharded_runs_are_bit_identical_under_chaos() {
         } else {
             assert!(av.failed_in_flight > 0, "fail path exercised");
         }
-        for count in [ShardCount::Fixed(2), ShardCount::Auto] {
+        for count in [ShardCount::Fixed(2), ShardCount::Auto, ShardCount::Weighted(3)] {
             let splan = topo.shard_plan(count);
             let mut sched = CsUcb::with_defaults(cfg.n_servers());
             let mut src = WorkloadGen::new(&wl);
@@ -362,4 +379,48 @@ fn sharded_event_population_is_bounded_by_the_sequential_one() {
         // bookkeeping, so it stays within a small factor.
         assert!(got.events_processed > 0);
     }
+}
+
+/// Contract 5: randomized contiguous partitions — raw split points and
+/// volume-weighted plans alike — all reproduce the sequential run bit
+/// for bit on the three-tier 10x fleet. Every case also exercises the
+/// active-feed lookahead derivation, because `run_sharded` derives each
+/// shard's RTT classes from whatever ranges the plan produced.
+#[test]
+fn randomized_contiguous_partitions_are_bit_identical() {
+    let topo = TopologyConfig::edgeshard_10x("llama2-7b", BandwidthMode::Fluctuating);
+    let cfg = topo.build();
+    let wl = workload(800, topo.scaled_rate(15.0), 113);
+    let mut base_sched = CsUcb::with_defaults(cfg.n_servers());
+    let mut base_src = WorkloadGen::new(&wl);
+    let base = simulate_stream(&cfg, &mut base_src, &mut base_sched);
+    let n = cfg.n_servers();
+    check("random contiguous partition identity", 10, |g: &mut Gen| {
+        let splan = if g.bool() {
+            // Random volume weights through the weighted splitter: the
+            // plan changes, the report must not.
+            let k = g.usize(1, 8);
+            let weights: Vec<f64> = (0..n).map(|_| g.f64(0.0, 10.0)).collect();
+            ShardPlan::weighted(n, &weights, k)
+        } else {
+            // Raw random split points, tier-oblivious on purpose —
+            // single-server ranges and tier-straddling ranges included.
+            let k = g.usize(1, 6);
+            let mut cuts: Vec<usize> = (0..k.saturating_sub(1)).map(|_| g.usize(1, n - 1)).collect();
+            cuts.sort_unstable();
+            cuts.dedup();
+            let mut ranges = Vec::new();
+            let mut lo = 0usize;
+            for c in cuts {
+                ranges.push((lo, c));
+                lo = c;
+            }
+            ranges.push((lo, n));
+            ShardPlan { ranges }
+        };
+        let mut sched = CsUcb::with_defaults(cfg.n_servers());
+        let mut src = WorkloadGen::new(&wl);
+        let got = simulate_stream_sharded(&cfg, &splan, &mut src, &mut sched);
+        assert_reports_identical(&base, &got, &format!("random plan {:?}", splan.ranges));
+    });
 }
