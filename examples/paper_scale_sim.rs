@@ -19,17 +19,18 @@
 //!                   [--model yi-6b|llama2-7b|llama3-8b|yi-9b] [--seed S]
 //!                   [--topology paper|edgeshard-10x|edgeshard-100x]
 //!                   [--service-model ps|token-batch|token-batch-edge]
-//!                   [--mix single|tiered]
+//!                   [--mix single|tiered] [--sessions]
 //!                   [--slo completion-only|per-class] [--gate]
 //!                   [--rate R]
 //!                   [--schedulers fineinfer,agod,rewardless,cs-ucb,cs-ucb-slo,
-//!                                 cs-ucb-sw,cs-ucb-disc]
+//!                                 cs-ucb-sw,cs-ucb-disc,cs-ucb-affinity]
 //!                   [--modes stable|fluctuating|both]
 //!                   [--faults off|crash|generative] [--mttf S] [--mttr S]
 //!                   [--scenario none|regional-failover]
 //!                   [--shards N|auto|weighted|weighted:N]
 //!                   [--min-success F] [--min-events-per-sec F]
 //!                   [--min-gate-sheds N] [--min-recovered-attainment F]
+//!                   [--min-cache-hit-rate F] [--require-affinity-uplift]
 //!
 //! `--topology` swaps the paper's 6-server testbed for an EdgeShard-style
 //! multi-tier preset (60 / 600 servers); the Poisson arrival rate then
@@ -109,15 +110,42 @@
 //!     --schedulers cs-ucb --modes stable --shards auto
 //! ```
 //!
+//! `--sessions` (PR 10) replaces the i.i.d. request stream with
+//! multi-turn conversation chains (`workload::sessions`): per-class turn
+//! counts and think-time gaps, monotonically growing context, and a
+//! `SessionRef` on every request. Warm follow-up turns skip the prefill
+//! of whatever prefix is still KV-resident on their server
+//! (`sim::prefix`), remote turns may instead pay a KV transfer over the
+//! link when that is cheaper than recomputing — the run prints an extra
+//! `cache:` row (per-class hit rates, prefill tokens saved, KV transfer
+//! bytes, evictions). `--requests` counts *turns*, and the session-start
+//! rate is derived from `--rate` divided by the mix's mean turn count,
+//! so offered token load stays comparable to the sessionless run.
+//! Composes with `--mix tiered` (one session stream per tier, merged).
+//! The scheduler built for this workload is `cs-ucb-affinity`
+//! (`scheduler::csucb::CsUcbAffinity`): CS-UCB with vector SLOs plus a
+//! cache-stickiness bonus that decays with the target cache's eviction
+//! pressure. The chat-heavy comparison:
+//!
+//! ```text
+//! cargo run --release --example paper_scale_sim -- \
+//!     --requests 20000 --sessions --mix tiered --slo per-class \
+//!     --schedulers cs-ucb-slo,cs-ucb-affinity --modes stable
+//! ```
+//!
 //! The `--min-*` flags turn the run into a CI gate: if any run's success
 //! rate or DES events/s lands below the floor (or the event-heap peak
 //! above the cap, or post-recovery attainment below
 //! `--min-recovered-attainment` in a faulted run), the process exits 1.
+//! With `--sessions`, `--min-cache-hit-rate` floors every run's overall
+//! prefix hit rate, and `--require-affinity-uplift` fails the run if
+//! `cs-ucb-affinity` does not reach at least `cs-ucb-slo`'s hit rate
+//! (both schedulers must be listed).
 
 use perllm::scheduler::admission::{GateParams, TokenBucketGate};
 use perllm::scheduler::{
     agod::Agod,
-    csucb::{CsUcb, CsUcbSlo},
+    csucb::{CsUcb, CsUcbAffinity, CsUcbSlo},
     fineinfer::FineInfer,
     rewardless::RewardlessGuidance,
     Scheduler,
@@ -129,6 +157,7 @@ use perllm::sim::{FaultKind, FaultPlan, GenerativeFaults, HealthConfig, ShardCou
 use perllm::workload::generator::{
     ArrivalModulation, ArrivalProcess, SloSampling, WorkloadConfig, WorkloadGen,
 };
+use perllm::workload::sessions::{SessionConfig, SessionSource};
 use perllm::workload::{ArrivalSource, MergedArrivals};
 
 /// Locality-shaped class weights per tier (`--mix tiered`), in
@@ -218,6 +247,7 @@ fn main() {
         other => panic!("bad --slo {other} (completion-only|per-class)"),
     };
     let gate = args.iter().any(|a| a == "--gate");
+    let sessions = args.iter().any(|a| a == "--sessions");
     let schedulers: Vec<String> = get("--schedulers", "fineinfer,agod,rewardless,cs-ucb")
         .split(',')
         .map(|s| s.trim().to_string())
@@ -242,6 +272,13 @@ fn main() {
     let min_recovered: f64 = get("--min-recovered-attainment", "0")
         .parse()
         .expect("bad --min-recovered-attainment");
+    let min_cache_hit: f64 = get("--min-cache-hit-rate", "0")
+        .parse()
+        .expect("bad --min-cache-hit-rate");
+    let require_uplift = args.iter().any(|a| a == "--require-affinity-uplift");
+    if (min_cache_hit > 0.0 || require_uplift) && !sessions {
+        panic!("--min-cache-hit-rate / --require-affinity-uplift need --sessions");
+    }
     let faults = get("--faults", "off");
     let mttf: f64 = get("--mttf", "300").parse().expect("bad --mttf");
     let mttr: f64 = get("--mttr", "30").parse().expect("bad --mttr");
@@ -351,10 +388,11 @@ fn main() {
         let cfg = topo.build();
         println!(
             "\n=== topology {topology} ({} servers, capacity {:.1}x paper), edge model {model}, \
-             service model {service_model}, {mix} mix, {slo:?} SLOs{}, {mode:?} bandwidth, \
+             service model {service_model}, {mix} mix{}, {slo:?} SLOs{}, {mode:?} bandwidth, \
              {n} requests at {rate:.1} req/s (streamed{}) ===",
             cfg.n_servers(),
             capacity_scale,
+            if sessions { " (multi-turn sessions)" } else { "" },
             if gate { " + admission gate" } else { "" },
             match shards {
                 Some(ShardCount::Auto) => {
@@ -381,6 +419,7 @@ fn main() {
         let ns = cfg.n_servers();
 
         let mut throughputs: Vec<(String, f64)> = Vec::new();
+        let mut hit_rates: Vec<(String, f64)> = Vec::new();
         for name in &schedulers {
             let inner: Box<dyn Scheduler> = match name.as_str() {
                 "fineinfer" => Box::new(FineInfer::new(cloud)),
@@ -390,6 +429,7 @@ fn main() {
                 "cs-ucb-slo" => Box::new(CsUcbSlo::with_defaults(ns)),
                 "cs-ucb-sw" => Box::new(CsUcb::windowed(ns, 50)),
                 "cs-ucb-disc" => Box::new(CsUcb::discounted(ns, 0.98)),
+                "cs-ucb-affinity" => Box::new(CsUcbAffinity::with_defaults(ns)),
                 other => panic!("unknown scheduler {other}"),
             };
             let mut s: Box<dyn Scheduler> = if gate {
@@ -411,13 +451,23 @@ fn main() {
             let rep = if mix == "tiered" {
                 // One locality-shaped stream per tier, k-way merged: every
                 // scheduler still sees the identical merged sequence.
+                // Under --sessions each tier's stream is a conversation
+                // chain generator derived from the same tier workload.
                 let tier_cfgs = tier_workloads(&topo, n, rate, seed, slo);
-                let mut gens: Vec<WorkloadGen> =
-                    tier_cfgs.iter().map(WorkloadGen::new).collect();
-                let sources: Vec<&mut dyn ArrivalSource> = gens
-                    .iter_mut()
-                    .map(|g| g as &mut dyn ArrivalSource)
+                let mut gens: Vec<Box<dyn ArrivalSource>> = tier_cfgs
+                    .iter()
+                    .map(|c| -> Box<dyn ArrivalSource> {
+                        if sessions {
+                            Box::new(SessionSource::new(&SessionConfig::from_workload(
+                                c.clone(),
+                            )))
+                        } else {
+                            Box::new(WorkloadGen::new(c))
+                        }
+                    })
                     .collect();
+                let sources: Vec<&mut dyn ArrivalSource> =
+                    gens.iter_mut().map(|g| g.as_mut()).collect();
                 let mut source = MergedArrivals::new(sources);
                 if scenario == "regional-failover" {
                     // Drain the first tier to 10% of its rate for the
@@ -432,6 +482,10 @@ fn main() {
                     source = source.with_modulations(mods);
                 }
                 run(&mut source, s.as_mut())
+            } else if sessions {
+                let mut source =
+                    SessionSource::new(&SessionConfig::from_workload(workload.clone()));
+                run(&mut source, s.as_mut())
             } else {
                 let mut source = WorkloadGen::new(&workload);
                 run(&mut source, s.as_mut())
@@ -443,6 +497,9 @@ fn main() {
             );
             if slo == SloSampling::PerClass || gate {
                 println!("    {}", rep.slo_summary_row());
+            }
+            if sessions {
+                println!("    {}", rep.cache_row());
             }
             if let Some(av) = &rep.availability {
                 println!("    {}", av.availability_row());
@@ -520,6 +577,17 @@ fn main() {
                 );
                 floor_violations += 1;
             }
+            if sessions {
+                let hit = rep.cache.hit_rate().unwrap_or(0.0);
+                hit_rates.push((name.clone(), hit));
+                if min_cache_hit > 0.0 && hit < min_cache_hit {
+                    eprintln!(
+                        "FLOOR VIOLATION: {name} cache hit rate {hit:.3} < {min_cache_hit} \
+                         (warm turns stopped finding their prefixes)"
+                    );
+                    floor_violations += 1;
+                }
+            }
             throughputs.push((name.clone(), rep.throughput_tok_s));
             for (k, v) in rep.diagnostics {
                 if k == "cum_regret"
@@ -543,6 +611,31 @@ fn main() {
                     println!("    {name} throughput vs FineInfer: {:.2}x", thpt / base);
                 }
             }
+        }
+        // Affinity-vs-SLO cache comparison: the point of the sticky
+        // scheduler is a higher prefix hit rate on the same stream.
+        let aff = hit_rates.iter().find(|(n, _)| n == "cs-ucb-affinity");
+        let slo_hit = hit_rates.iter().find(|(n, _)| n == "cs-ucb-slo");
+        if let (Some((_, a)), Some((_, b))) = (aff, slo_hit) {
+            println!(
+                "    cs-ucb-affinity hit rate {:.3} vs cs-ucb-slo {:.3} ({:+.1} pp)",
+                a,
+                b,
+                (a - b) * 100.0
+            );
+            if require_uplift && a + 1e-9 < *b {
+                eprintln!(
+                    "FLOOR VIOLATION: cs-ucb-affinity hit rate {a:.3} fell below \
+                     cs-ucb-slo's {b:.3} (stickiness stopped paying)"
+                );
+                floor_violations += 1;
+            }
+        } else if require_uplift {
+            eprintln!(
+                "FLOOR VIOLATION: --require-affinity-uplift needs both cs-ucb-affinity \
+                 and cs-ucb-slo in --schedulers"
+            );
+            floor_violations += 1;
         }
     }
     if floor_violations > 0 {

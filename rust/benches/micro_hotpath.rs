@@ -9,6 +9,9 @@
 //! * end-to-end simulation wall time per 1 000 / 4 000 requests
 //! * a 10x EdgeShard-style topology (60 servers) streaming run — the
 //!   calendar-queue + candidate-pruning scale scenario
+//! * a sessioned 100x run (multi-turn chains + per-server prefix caches
+//!   under the cache-affinity scheduler) — what the session machinery
+//!   costs on the hot path, and the hit rate it converts
 //!
 //! Run: cargo bench --bench micro_hotpath
 //!
@@ -17,7 +20,7 @@
 //! merge them into the committed BENCH_perllm.json when they move.
 
 use perllm::bench::{bench_fn, render_json, JsonValue};
-use perllm::scheduler::csucb::CsUcb;
+use perllm::scheduler::csucb::{CsUcb, CsUcbAffinity};
 use perllm::scheduler::{Action, ClusterView, Scheduler};
 use perllm::sim::cluster::{BandwidthMode, ClusterConfig, ClusterSim};
 use perllm::sim::engine::{simulate, simulate_stream, simulate_stream_sharded};
@@ -25,6 +28,7 @@ use perllm::sim::ps::PsQueue;
 use perllm::sim::topology::{ShardCount, TopologyConfig};
 use perllm::workload::generator::{generate, ArrivalProcess, WorkloadConfig, WorkloadGen};
 use perllm::workload::service::ServiceRequest;
+use perllm::workload::sessions::{SessionConfig, SessionSource};
 
 /// Fixed-target scheduler: isolates DES throughput from decision logic.
 struct Fixed(usize);
@@ -292,6 +296,51 @@ fn main() {
         json.push(("sharded_100x_50k_events_per_sec_weighted", JsonValue::Num(eps[3])));
         json.push(("sharded_100x_scaling_1_to_4", JsonValue::Num(scaling)));
         json.push(("sharded_100x_imbalance", JsonValue::Num(imbalance)));
+    }
+
+    // 9. Sessioned workload on the 100x fleet: 50k multi-turn conversation
+    //    turns (chat-heavy mix) streamed through the volume-weighted
+    //    sharded engine under the cache-affinity scheduler. Two signals:
+    //    `session_100x_50k_events_per_sec` is what the session machinery
+    //    (chain heap, per-server prefix caches, KV-transfer stamping)
+    //    costs on the event hot path relative to row 8's sessionless
+    //    runs, and `session_100x_50k_hit_rate` is the prefix hit rate the
+    //    affinity policy converts at fleet scale — the number that turns
+    //    into skipped prefill (acceptance: events/s within 15% of the
+    //    sessionless weighted run; hit rate > 0.2 on this mix).
+    {
+        let topo = TopologyConfig::edgeshard_100x("llama2-7b", BandwidthMode::Stable);
+        let cfg = topo.build();
+        let sessions = SessionConfig::from_workload(
+            WorkloadConfig::default()
+                .with_requests(50_000)
+                .with_arrivals(ArrivalProcess::Poisson {
+                    rate: topo.scaled_rate(15.0),
+                })
+                .with_per_class_slos()
+                .with_class_weights([6.0, 1.0, 1.0, 2.0])
+                .with_seed(42),
+        );
+        let splan = topo.shard_plan(ShardCount::Weighted(0));
+        let mut events_per_sec = 0.0;
+        let mut hit_rate = 0.0;
+        let mut saved: u64 = 0;
+        rows.push(bench_fn("simulate affinity 50k turns (100x, sessions)", 1, 3, || {
+            let mut s = CsUcbAffinity::with_defaults(cfg.n_servers());
+            let mut source = SessionSource::new(&sessions);
+            let rep = simulate_stream_sharded(&cfg, &splan, &mut source, &mut s);
+            events_per_sec = rep.events_per_sec;
+            hit_rate = rep.cache.hit_rate().unwrap_or(0.0);
+            saved = rep.cache.prefill_tokens_saved;
+            std::hint::black_box(rep.success_rate);
+        }));
+        println!(
+            "  100x sessions 50k turns: DES {events_per_sec:.0} events/s, \
+             prefix hit rate {hit_rate:.3}, prefill saved {saved} tok"
+        );
+        json.push(("session_100x_50k_events_per_sec", JsonValue::Num(events_per_sec)));
+        json.push(("session_100x_50k_hit_rate", JsonValue::Num(hit_rate)));
+        json.push(("session_100x_50k_prefill_saved_tok", JsonValue::Num(saved as f64)));
     }
 
     println!("\n== L3 hot-path micro benches ==");

@@ -184,10 +184,154 @@ impl KvPool {
     }
 }
 
+/// Live-substrate mirror of the DES prefix-cache residency signal
+/// (`sim::prefix::PrefixCache`): which worker holds how many reusable KV
+/// tokens for each conversation. The router consults it when filling
+/// `ServerView::prefix_hit_tokens` / `prefix_pressure` so the same
+/// cache-affinity scheduler (`CsUcbAffinity`) runs unchanged against live
+/// telemetry. Unlike the DES cache this is bookkeeping, not storage: the
+/// workers own the actual KV pages (via [`KvPool`]); the registry only
+/// records what `route()` placed where so follow-up turns can chase their
+/// prefix. All operations are point lookups on the session id — no map
+/// iteration anywhere (determinism lint D2 stays trivially satisfied).
+#[derive(Debug, Clone)]
+pub struct PrefixRegistry {
+    /// session id -> (worker index, resident prefix tokens).
+    resident: HashMap<u64, (usize, u64)>,
+    /// Per-worker resident-token totals — numerator of the pressure proxy.
+    per_worker: Vec<u64>,
+    /// Per-worker KV capacity in tokens — denominator of the pressure
+    /// proxy (mirrors `PrefixCache::capacity` on the DES side).
+    capacity_tokens: u64,
+}
+
+impl PrefixRegistry {
+    pub fn new(n_workers: usize, capacity_tokens: u64) -> Self {
+        PrefixRegistry {
+            resident: HashMap::new(),
+            per_worker: vec![0; n_workers],
+            capacity_tokens: capacity_tokens.max(1),
+        }
+    }
+
+    /// Record that `worker` now holds `tokens` KV tokens for the session
+    /// (the conversation context after the turn it just served). A session
+    /// lives on exactly one worker — re-recording elsewhere moves the
+    /// residency, matching the DES semantics where the turn's full context
+    /// is (re)built wherever the turn actually ran.
+    pub fn record(&mut self, session_id: u64, worker: usize, tokens: u64) {
+        if worker >= self.per_worker.len() {
+            return;
+        }
+        if let Some((old_w, old_t)) = self.resident.insert(session_id, (worker, tokens)) {
+            self.per_worker[old_w] = self.per_worker[old_w].saturating_sub(old_t);
+        }
+        self.per_worker[worker] = self.per_worker[worker].saturating_add(tokens);
+    }
+
+    /// Reusable KV tokens `worker` holds for the session (0 if the
+    /// session is resident elsewhere or unknown).
+    pub fn resident_on(&self, session_id: u64, worker: usize) -> u64 {
+        match self.resident.get(&session_id) {
+            Some(&(w, tokens)) if w == worker => tokens,
+            _ => 0,
+        }
+    }
+
+    /// Drop the session's residency (conversation ended, or the worker
+    /// reported it evicted the pages). Returns the tokens released.
+    pub fn release(&mut self, session_id: u64) -> u64 {
+        match self.resident.remove(&session_id) {
+            Some((w, tokens)) => {
+                self.per_worker[w] = self.per_worker[w].saturating_sub(tokens);
+                tokens
+            }
+            None => 0,
+        }
+    }
+
+    /// Prefix-cache occupancy proxy in [0, 1] for `worker` — the
+    /// eviction-risk signal `CsUcbAffinity` uses to decay its stickiness
+    /// bonus. Saturates at 1.0: the registry does not evict (the workers
+    /// do), so brief overshoot past nominal capacity reads as "full".
+    pub fn pressure(&self, worker: usize) -> f64 {
+        match self.per_worker.get(worker) {
+            Some(&t) => (t as f64 / self.capacity_tokens as f64).min(1.0),
+            None => 0.0,
+        }
+    }
+
+    /// Total KV tokens currently tracked for `worker`.
+    pub fn worker_tokens(&self, worker: usize) -> u64 {
+        self.per_worker.get(worker).copied().unwrap_or(0)
+    }
+
+    /// Sessions currently tracked.
+    pub fn sessions(&self) -> usize {
+        self.resident.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::proptest::{check, Gen};
+
+    #[test]
+    fn registry_records_moves_and_releases() {
+        let mut reg = PrefixRegistry::new(3, 1000);
+        reg.record(7, 1, 300);
+        assert_eq!(reg.resident_on(7, 1), 300);
+        assert_eq!(reg.resident_on(7, 0), 0, "resident elsewhere reads 0");
+        assert_eq!(reg.worker_tokens(1), 300);
+        assert!((reg.pressure(1) - 0.3).abs() < 1e-12);
+        // Turn 2 grows the context in place.
+        reg.record(7, 1, 450);
+        assert_eq!(reg.resident_on(7, 1), 450);
+        assert_eq!(reg.worker_tokens(1), 450);
+        // Turn 3 lands on a different worker: residency moves, totals follow.
+        reg.record(7, 2, 600);
+        assert_eq!(reg.resident_on(7, 1), 0);
+        assert_eq!(reg.resident_on(7, 2), 600);
+        assert_eq!(reg.worker_tokens(1), 0);
+        assert_eq!(reg.worker_tokens(2), 600);
+        assert_eq!(reg.release(7), 600);
+        assert_eq!(reg.sessions(), 0);
+        assert_eq!(reg.worker_tokens(2), 0);
+        assert_eq!(reg.release(7), 0, "double release is a no-op");
+    }
+
+    #[test]
+    fn registry_pressure_saturates_and_ignores_bad_indices() {
+        let mut reg = PrefixRegistry::new(2, 100);
+        reg.record(1, 0, 250);
+        assert_eq!(reg.pressure(0), 1.0, "overshoot saturates at full");
+        assert_eq!(reg.pressure(9), 0.0, "unknown worker reads empty");
+        reg.record(2, 9, 50); // out-of-range worker: dropped, not panicked
+        assert_eq!(reg.sessions(), 1);
+        assert_eq!(reg.resident_on(2, 9), 0);
+    }
+
+    #[test]
+    fn registry_per_worker_totals_stay_consistent() {
+        // Property: after any record/release sequence, per-worker totals
+        // equal the sum of resident sessions on that worker.
+        check("prefix registry totals", 200, |g: &mut Gen| {
+            let mut reg = PrefixRegistry::new(4, 10_000);
+            for _ in 0..g.usize(1, 40) {
+                let sid = g.u64(0, 7);
+                if g.bool() {
+                    reg.record(sid, g.usize(0, 3), g.u64(0, 500));
+                } else {
+                    reg.release(sid);
+                }
+            }
+            for w in 0..4 {
+                let sum: u64 = (0..8u64).map(|sid| reg.resident_on(sid, w)).sum();
+                assert_eq!(sum, reg.worker_tokens(w), "worker {w} total drifted");
+            }
+        });
+    }
 
     #[test]
     fn admit_extend_release_roundtrip() {

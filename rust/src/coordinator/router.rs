@@ -13,10 +13,11 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use crate::coordinator::kv::PrefixRegistry;
 use crate::scheduler::{Action, ClusterView, Scheduler, ServerView, ShedReason, ViewSource};
 use crate::sim::energy::EnergyWeights;
 use crate::sim::server::ServerKind;
-use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest, SloSpec};
+use crate::workload::service::{ServiceClass, ServiceOutcome, ServiceRequest, SessionRef, SloSpec};
 
 /// Telemetry one worker exposes to the router (all lock-free). Capacity
 /// fields are atomics because the engine loads inside the worker thread
@@ -129,6 +130,12 @@ pub struct Router {
     /// admission gate's token refill) advance it via [`Self::set_now`],
     /// e.g. from an `Instant` at the serving front door.
     now_s: f64,
+    /// Session→worker KV residency mirror (`None` until enabled via
+    /// [`Self::with_prefix_registry`]). When present, `route()` records
+    /// every session placement and the view fill prices
+    /// `prefix_hit_tokens`/`prefix_pressure` from it — the live-substrate
+    /// twin of the DES `PrefixCache` signal.
+    prefix: Option<PrefixRegistry>,
 }
 
 impl Router {
@@ -144,6 +151,31 @@ impl Router {
             sheds: 0,
             bad_assignments: 0,
             now_s: 0.0,
+            prefix: None,
+        }
+    }
+
+    /// Enable session KV-residency tracking: one [`PrefixRegistry`] slot
+    /// per worker, `capacity_tokens` of nominal KV-cache per worker (the
+    /// pressure denominator). Sessionless routers skip this and every
+    /// view reports cold caches — bit-identical to the pre-session
+    /// router.
+    pub fn with_prefix_registry(mut self, capacity_tokens: u64) -> Self {
+        self.prefix = Some(PrefixRegistry::new(self.workers.len(), capacity_tokens));
+        self
+    }
+
+    /// The residency mirror, if enabled (inspection/metrics).
+    pub fn prefix_registry(&self) -> Option<&PrefixRegistry> {
+        self.prefix.as_ref()
+    }
+
+    /// Drop a finished conversation's residency so its tokens stop
+    /// counting toward cache pressure. No-op when tracking is off or the
+    /// session is unknown.
+    pub fn end_session(&mut self, session_id: u64) {
+        if let Some(reg) = self.prefix.as_mut() {
+            reg.release(session_id);
         }
     }
 
@@ -179,8 +211,11 @@ impl Router {
 
     /// Fill `out` with the telemetry snapshot for a request expected to
     /// move `expected_tokens` tokens. This is the single fill routine
-    /// behind both the [`ViewSource`] impl and `complete()`.
-    fn fill_view(&self, expected_tokens: usize, out: &mut ClusterView) {
+    /// behind both the [`ViewSource`] impl and `complete()`. `session`
+    /// carries the request's conversation identity so per-worker
+    /// residency can be priced into the view (`None` for sessionless
+    /// requests and completion-side refills — cold caches everywhere).
+    fn fill_view(&self, expected_tokens: usize, session: Option<&SessionRef>, out: &mut ClusterView) {
         // lint: no-alloc per-request snapshot refill; `out` buffers amortize to fleet size
         out.now = self.now_s;
         out.weights = self.weights;
@@ -188,8 +223,12 @@ impl Router {
         // already O(workers) to read): empty = full-scan sentinel.
         out.candidates.clear();
         out.servers.clear();
-        out.servers
-            .extend(self.workers.iter().zip(&self.outstanding).map(|(w, &outst)| {
+        out.servers.extend(
+            self.workers
+                .iter()
+                .zip(&self.outstanding)
+                .enumerate()
+                .map(|(j, (w, &outst))| {
                 // Whichever is larger: what the worker has observed, or what
                 // we know we have sent it (telemetry lags the mailbox).
                 let queued = w.queued.load(Ordering::Relaxed);
@@ -226,8 +265,22 @@ impl Router {
                     // The live substrate has no probe pipeline yet: a
                     // worker in the telemetry list is presumed healthy.
                     observed_health: 1.0,
+                    // Residency priced through the same `usable_prefix`
+                    // composition the DES uses; cold (0.0) whenever the
+                    // registry is off or the request is sessionless.
+                    prefix_hit_tokens: match (session, self.prefix.as_ref()) {
+                        (Some(s), Some(reg)) => {
+                            s.usable_prefix(reg.resident_on(s.session_id, j)) as f64
+                        }
+                        _ => 0.0,
+                    },
+                    prefix_pressure: match self.prefix.as_ref() {
+                        Some(reg) => reg.pressure(j),
+                        None => 0.0,
+                    },
                 }
-            }));
+            }),
+        );
         // lint: end-no-alloc
     }
 
@@ -236,7 +289,7 @@ impl Router {
     /// the scratch buffer via [`ViewSource::view_into`]/`fill_view`.
     pub fn view(&self, expected_tokens: usize) -> ClusterView {
         let mut out = ClusterView::with_capacity(self.workers.len(), self.weights);
-        self.fill_view(expected_tokens, &mut out);
+        self.fill_view(expected_tokens, None, &mut out);
         out
     }
 
@@ -246,7 +299,11 @@ impl Router {
         // Take/put-back keeps the scratch view out of `self` while the
         // scheduler borrows it (no allocation: the buffer is reused).
         let mut view = std::mem::take(&mut self.scratch);
-        self.fill_view((req.prompt_tokens + req.output_tokens) as usize, &mut view);
+        self.fill_view(
+            (req.prompt_tokens + req.output_tokens) as usize,
+            req.session.as_ref(),
+            &mut view,
+        );
         let action = self.scheduler.decide(req, &view);
         let routed = match action {
             Action::Assign { server } => Routed::Assign {
@@ -268,6 +325,17 @@ impl Router {
         };
         if let Some(w) = routed.worker() {
             self.outstanding[w] += 1;
+            // Record where the conversation's KV now lives: after this
+            // turn the worker holds the full context (reused prefix plus
+            // this turn's prompt and generated tokens) — the same
+            // post-turn residency `PrefixCache::admit_turn` installs on
+            // the DES side.
+            if let (Some(s), Some(reg)) = (req.session.as_ref(), self.prefix.as_mut()) {
+                let context = s.prefix_tokens as u64
+                    + req.prompt_tokens as u64
+                    + req.output_tokens as u64;
+                reg.record(s.session_id, w, context);
+            }
         }
         self.scratch = view;
         routed
@@ -297,7 +365,7 @@ impl Router {
             *o = o.saturating_sub(1);
         }
         let mut view = std::mem::take(&mut self.scratch);
-        self.fill_view(outcome.tokens.max(1) as usize, &mut view);
+        self.fill_view(outcome.tokens.max(1) as usize, None, &mut view);
         self.scheduler.feedback(outcome, &view);
         self.scratch = view;
     }
@@ -351,6 +419,7 @@ impl Router {
             output_tokens: output_tokens as u32,
             slo,
             payload_bytes: 4096 + prompt_tokens as u64 * 64,
+            session: None,
         }
     }
 }
@@ -359,7 +428,11 @@ impl ViewSource for Router {
     /// The unified-API entry point — same signature `ClusterSim`
     /// implements, fed by live telemetry instead of simulated state.
     fn view_into(&self, req: &ServiceRequest, out: &mut ClusterView) {
-        self.fill_view((req.prompt_tokens + req.output_tokens) as usize, out);
+        self.fill_view(
+            (req.prompt_tokens + req.output_tokens) as usize,
+            req.session.as_ref(),
+            out,
+        );
     }
 }
 
@@ -565,6 +638,79 @@ mod tests {
         for _ in 0..3 {
             assert_eq!(router.route(&req).worker(), Some(0));
         }
+    }
+
+    /// The live substrate mirrors the DES prefix semantics: a routed
+    /// session turn records residency in the registry, follow-up turns
+    /// see warm `prefix_hit_tokens` on exactly that worker, and the
+    /// cache-affinity policy sticks to it while the plain SLO policy
+    /// (ties everywhere else) has no reason to.
+    #[test]
+    fn session_residency_prices_into_views_and_steers_affinity() {
+        use crate::scheduler::csucb::CsUcbAffinity;
+        let workers = vec![telemetry(ServerKind::Edge), telemetry(ServerKind::Edge)];
+        let mut router = Router::new(Box::new(CsUcbAffinity::with_defaults(2)), workers)
+            .with_prefix_registry(100_000);
+        // Warm both arms with identical outcomes so the bandit indices
+        // tie exactly — any sustained preference below must then come
+        // from the residency signal, not reward history.
+        for w in 0..2usize {
+            for _ in 0..5 {
+                router.complete(&ServiceOutcome {
+                    id: 1,
+                    class: ServiceClass::Chat,
+                    server: w,
+                    tx_time: 0.01,
+                    infer_time: 0.5,
+                    processing_time: 0.51,
+                    ttft_time: 0.05,
+                    slo: SloSpec::completion_only(10.0),
+                    energy_j: 1.0,
+                    tokens: 96,
+                    completed_at: 1.0,
+                });
+            }
+        }
+        // Turn 1: no prefix yet (cold everywhere); wherever the tie falls
+        // becomes the session's home.
+        let mut req = Router::service_request(1, ServiceClass::Chat, 64, 32, 10.0);
+        req.session = Some(SessionRef {
+            session_id: 42,
+            turn: 1,
+            prefix_tokens: 0,
+            xfer_tokens: 0,
+        });
+        let home = router.route(&req).worker().expect("turn 1 placed");
+        let reg = router.prefix_registry().expect("registry enabled");
+        assert_eq!(reg.resident_on(42, home), 96, "prefix + prompt + output");
+        // Turn 2 carries the grown context: the view prices the reusable
+        // prefix on the home worker only.
+        req.session = Some(SessionRef {
+            session_id: 42,
+            turn: 2,
+            prefix_tokens: 96,
+            xfer_tokens: 0,
+        });
+        let mut view = ClusterView::default();
+        router.view_into(&req, &mut view);
+        assert_eq!(view.servers[home].prefix_hit_tokens, 96.0);
+        assert_eq!(view.servers[1 - home].prefix_hit_tokens, 0.0);
+        assert!(view.servers[home].prefix_pressure > 0.0);
+        // Follow-up turns chase the prefix: the affinity bonus breaks the
+        // exact bandit tie toward the resident worker every time, even as
+        // the router's outstanding bookkeeping piles load on it.
+        for turn in 2..10u32 {
+            req.session.as_mut().unwrap().turn = turn;
+            assert_eq!(
+                router.route(&req).worker(),
+                Some(home),
+                "turn {turn} should chase its prefix"
+            );
+            req.session.as_mut().unwrap().prefix_tokens += 96;
+        }
+        // Ending the session releases its tokens from the pressure proxy.
+        router.end_session(42);
+        assert_eq!(router.prefix_registry().unwrap().sessions(), 0);
     }
 
     #[test]

@@ -85,6 +85,17 @@ pub struct CsUcbParams {
     /// shares little with its pre-crash statistics, and the reset turns
     /// its arms optimistic-untried so they are re-explored immediately.
     pub reset_on_rejoin: bool,
+    /// Cache-affinity stickiness weight (PR 10). At the default `0.0`
+    /// the index is exactly Eq. 6 — decision-identical to pre-sessions
+    /// builds bit for bit (the bonus is branch-gated, never computed).
+    /// Positive values add
+    /// `affinity * (prefix_hit_tokens / prompt_tokens) * (1 - prefix_pressure)`
+    /// to each candidate's index: a server already holding the session's
+    /// KV prefix wins ties (and small index gaps), scaled by how much of
+    /// the prompt the hit covers and decayed by the target cache's
+    /// eviction risk. [`CsUcbAffinity`] forces this on together with the
+    /// SLO lens.
+    pub affinity: f64,
 }
 
 impl Default for CsUcbParams {
@@ -101,6 +112,7 @@ impl Default for CsUcbParams {
             window: None,
             discount: None,
             reset_on_rejoin: false,
+            affinity: 0.0,
         }
     }
 }
@@ -360,7 +372,9 @@ impl CsUcb {
 
 impl Scheduler for CsUcb {
     fn name(&self) -> &'static str {
-        if self.params.window.is_some() {
+        if self.params.affinity > 0.0 {
+            "cs-ucb-affinity (PerLLM)"
+        } else if self.params.window.is_some() {
             "cs-ucb-sw (PerLLM)"
         } else if self.params.discount.is_some() {
             "cs-ucb-disc (PerLLM)"
@@ -408,7 +422,7 @@ impl Scheduler for CsUcb {
                 continue;
             }
             let v = self.ucb(class, j, 0.0);
-            let v = if v.is_infinite() {
+            let mut v = if v.is_infinite() {
                 // Optimistic untried arm; tie-break by energy then by
                 // current load so cold starts do not herd onto one server.
                 f64::MAX / 2.0
@@ -418,6 +432,17 @@ impl Scheduler for CsUcb {
             } else {
                 v
             };
+            // Cache-affinity stickiness (PR 10), branch-gated so the
+            // `affinity == 0.0` configurations — every pre-sessions
+            // scheduler — never touch the new view fields and stay
+            // decision-identical bit for bit. The bonus scales with the
+            // fraction of this request's prompt already KV-resident on
+            // server j and decays with that cache's occupancy (a nearly
+            // full cache is about to evict the session anyway).
+            if self.params.affinity > 0.0 && view.servers[j].prefix_hit_tokens > 0.0 {
+                let frac = view.servers[j].prefix_hit_tokens / (req.prompt_tokens.max(1) as f64);
+                v += self.params.affinity * frac * (1.0 - view.servers[j].prefix_pressure).max(0.0);
+            }
             if fy >= margin && best_margin.is_none_or(|(_, bv)| v > bv) {
                 best_margin = Some((j, v));
             }
@@ -574,6 +599,83 @@ impl Scheduler for CsUcbSlo {
 
     fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
         self.0.decide(req, view)
+    }
+
+    fn feedback(&mut self, outcome: &ServiceOutcome, view: &ClusterView) {
+        self.0.feedback(outcome, view)
+    }
+
+    fn fleet_event(&mut self, ev: &FleetEvent, now: f64) {
+        self.0.fleet_event(ev, now)
+    }
+
+    fn diagnostics(&self) -> Vec<(String, f64)> {
+        self.0.diagnostics()
+    }
+}
+
+/// Default stickiness weight for [`CsUcbAffinity`]: a full prefix hit on
+/// an unpressured cache is worth one unit of index — the same order as
+/// the λ-weighted constraint slack in the reward, so affinity wins close
+/// calls without overriding a genuinely better placement.
+pub const DEFAULT_AFFINITY: f64 = 1.0;
+
+/// Cache-affinity CS-UCB (PR 10): [`CsUcbSlo`]'s full SLO-vector lens
+/// plus a stickiness bonus from [`super::ServerView::prefix_hit_tokens`]
+/// — the per-candidate KV-prefix residency the cluster view surfaces for
+/// the request's session. A follow-up conversation turn routed back to
+/// the server that already holds its KV prefix skips that prefix's
+/// prefill (the view's `predicted_time`/`predicted_ttft` already price
+/// this), and the explicit bonus keeps the bandit from scattering a
+/// session across the fleet during exploration, which is what makes the
+/// hit rate — and interactive TTFT attainment — beat `cs-ucb-slo` on
+/// chat-heavy mixes. The bonus decays with `prefix_pressure` (eviction
+/// risk): residency on a nearly full cache is a promise the server is
+/// about to break. On session-free workloads every `prefix_hit_tokens`
+/// is 0.0 and decisions are identical to [`CsUcbSlo`].
+pub struct CsUcbAffinity(CsUcb);
+
+impl CsUcbAffinity {
+    pub fn new(n_servers: usize, params: CsUcbParams) -> Self {
+        assert!(
+            params.affinity > 0.0,
+            "CsUcbAffinity requires a positive affinity weight, got {}",
+            params.affinity
+        );
+        CsUcbAffinity(CsUcb::new(
+            n_servers,
+            CsUcbParams {
+                slo_aware: true,
+                ..params
+            },
+        ))
+    }
+
+    pub fn with_defaults(n_servers: usize) -> Self {
+        Self::new(
+            n_servers,
+            CsUcbParams {
+                affinity: DEFAULT_AFFINITY,
+                ..CsUcbParams::default()
+            },
+        )
+    }
+
+    pub fn cumulative_regret(&self) -> f64 {
+        self.0.cumulative_regret()
+    }
+}
+
+impl Scheduler for CsUcbAffinity {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn decide(&mut self, req: &ServiceRequest, view: &ClusterView) -> Action {
+        // lint: no-alloc affinity decide delegates to the fused CS-UCB scan
+        let a = self.0.decide(req, view);
+        // lint: end-no-alloc
+        a
     }
 
     fn feedback(&mut self, outcome: &ServiceOutcome, view: &ClusterView) {
@@ -958,6 +1060,59 @@ mod tests {
         let pulls_after: Vec<u64> = plain.arms.iter().map(|row| row[0].pulls).collect();
         assert_eq!(pulls_before, pulls_after, "stationary default ignores fleet events");
         assert_eq!(plain.arm_resets, 0);
+    }
+
+    /// The stickiness bonus breaks exact index ties toward the server
+    /// holding the session's KV prefix, and full cache pressure decays
+    /// it back to zero.
+    #[test]
+    fn affinity_routes_follow_up_to_resident_server() {
+        let mut view = test_view(vec![1.0, 1.0]);
+        let req = test_req(4.0);
+        let mut aff = CsUcbAffinity::with_defaults(2);
+        let mut slo = CsUcbSlo::with_defaults(2);
+        // Warm every arm with identical rewards so the Eq.-6 indices tie
+        // exactly; without affinity the first maximum (server 0) wins.
+        for s in [&mut aff as &mut dyn Scheduler, &mut slo as &mut dyn Scheduler] {
+            for j in 0..2 {
+                for _ in 0..5 {
+                    let mut o = outcome(j, 100.0, 1.0, 4.0);
+                    o.id = req.id;
+                    s.feedback(&o, &view);
+                }
+            }
+        }
+        view.servers[1].prefix_hit_tokens = 40.0; // 80% of the 50-token prompt
+        view.servers[1].prefix_pressure = 0.25;
+        assert_eq!(slo.decide(&req, &view), Action::assign(0), "tie falls to the first server");
+        assert_eq!(aff.decide(&req, &view), Action::assign(1), "stickiness wins the tie");
+        // A cache at full occupancy is about to evict the session: the
+        // bonus decays to zero and the tie falls back to server 0.
+        view.servers[1].prefix_pressure = 1.0;
+        assert_eq!(aff.decide(&req, &view), Action::assign(0));
+    }
+
+    /// With no sessions in play (every `prefix_hit_tokens` 0.0) the
+    /// affinity variant is decision-identical to `cs-ucb-slo` — the
+    /// sessions-off identity the PR-10 tests pin end to end.
+    #[test]
+    fn affinity_matches_slo_without_sessions() {
+        let view = test_view(vec![1.0, 5.0, 1.4]);
+        let req = test_req(2.0);
+        let mut aff = CsUcbAffinity::with_defaults(3);
+        let mut slo = CsUcbSlo::with_defaults(3);
+        for i in 0..60 {
+            let a = slo.decide(&req, &view);
+            let b = aff.decide(&req, &view);
+            assert_eq!(a, b, "diverged at decision {i}");
+            let j = a.server().expect("assigns");
+            let mut o = outcome(j, if j == 0 { 60.0 } else { 500.0 }, 1.0, 2.0);
+            o.id = req.id;
+            slo.feedback(&o, &view);
+            aff.feedback(&o, &view);
+        }
+        assert_eq!(aff.name(), "cs-ucb-affinity (PerLLM)");
+        assert_eq!(slo.name(), "cs-ucb-slo (PerLLM)");
     }
 
     /// The health gate: a server the (lagged) monitor reports dead is

@@ -102,6 +102,16 @@ pub struct ServerView {
     /// can route to it and pay for it. Pinned at 1.0 when no monitor is
     /// installed (every pre-fault run).
     pub observed_health: f64,
+    /// KV-prefix residency signal (PR 10): how many of this request's
+    /// conversation-prefix tokens are resident in the server's prefix
+    /// cache right now (0.0 for single-shot requests and cold servers).
+    /// `predicted_time`/`predicted_ttft` already price the reuse; this
+    /// field lets affinity-aware policies weigh stickiness explicitly.
+    pub prefix_hit_tokens: f64,
+    /// Prefix-cache occupancy in [0, 1] — the eviction-risk proxy: a
+    /// nearly full cache is likely to evict this session soon, so the
+    /// stickiness bonus should decay with it.
+    pub prefix_pressure: f64,
 }
 
 /// Cluster snapshot at decision time (the CMAB state space s of §3.2).
@@ -516,6 +526,8 @@ mod tests {
                 solo_time_est: p,
                 occupancy: 0.0,
                 observed_health: 1.0,
+                prefix_hit_tokens: 0.0,
+                prefix_pressure: 0.0,
             })
             .collect();
         ClusterView {
@@ -540,6 +552,7 @@ mod tests {
             output_tokens: 30,
             slo,
             payload_bytes: 100_000,
+            session: None,
         }
     }
 

@@ -159,6 +159,14 @@ pub fn fill_server_view(
         occupancy: (srv.n_active() + srv.n_waiting()) as f64
             / (srv.model.slot_capacity() + srv.model.queue_capacity()) as f64,
         observed_health,
+        // Session affinity signal (PR 10): how much of this request's
+        // conversation prefix is KV-resident here (0 for single-shot
+        // requests), and how full the prefix cache is (eviction risk).
+        // `predicted_time`/`predicted_ttft` above already price the
+        // reuse through `srv.predict`; these fields let affinity-aware
+        // schedulers weigh stickiness explicitly.
+        prefix_hit_tokens: srv.prefix_reuse(req) as f64,
+        prefix_pressure: srv.prefix.occupancy(),
     };
     // lint: end-no-alloc
     view
@@ -386,7 +394,45 @@ mod tests {
             output_tokens: 40,
             slo: crate::workload::service::SloSpec::completion_only(4.0),
             payload_bytes: 200_000,
+            session: None,
         }
+    }
+
+    /// Warm KV residency surfaces in the view: the server that served a
+    /// session's previous turn quotes `prefix_hit_tokens` and a faster
+    /// prediction than its cold twins; single-shot requests see zero.
+    #[test]
+    fn view_surfaces_prefix_residency() {
+        use crate::workload::service::SessionRef;
+        let cfg = ClusterConfig::paper("llama2-7b", BandwidthMode::Stable);
+        let mut sim = ClusterSim::new(&cfg);
+        let mut turn1 = req();
+        turn1.session = Some(SessionRef {
+            session_id: 42,
+            turn: 1,
+            prefix_tokens: 0,
+            xfer_tokens: 0,
+        });
+        sim.servers[2].admit(1, &turn1, 0.0);
+        let mut turn2 = req();
+        turn2.prompt_tokens = 240;
+        turn2.session = Some(SessionRef {
+            session_id: 42,
+            turn: 2,
+            prefix_tokens: 140,
+            xfer_tokens: 0,
+        });
+        let v = sim.view(&turn2, 0.0);
+        assert_eq!(v.servers[2].prefix_hit_tokens, 140.0);
+        assert!(v.servers[2].prefix_pressure > 0.0);
+        for (i, sv) in v.servers.iter().enumerate() {
+            if i != 2 {
+                assert_eq!(sv.prefix_hit_tokens, 0.0, "server {i} is cold");
+            }
+        }
+        // Single-shot request: no affinity anywhere.
+        let v2 = sim.view(&req(), 0.0);
+        assert!(v2.servers.iter().all(|sv| sv.prefix_hit_tokens == 0.0));
     }
 
     #[test]

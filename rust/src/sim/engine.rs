@@ -25,6 +25,7 @@ use std::time::Instant;
 use super::cluster::{ClusterConfig, ClusterSim, Outage};
 use super::energy::EnergyBreakdown;
 use super::faults::{CrashPolicy, FaultAction, FaultPlan, HealthMonitor};
+use super::prefix::CacheCounters;
 use super::ps::PsJob;
 use super::shard::{
     orch_stamp, worker, BoundaryOut, Cmd, CompletionRec, FailRec, Key, LandKind, Reply,
@@ -37,7 +38,7 @@ use crate::scheduler::{
 };
 use crate::util::rng::Rng;
 use crate::util::stats::{Percentiles, Running};
-use crate::workload::service::{ServiceOutcome, ServiceRequest};
+use crate::workload::service::{ServiceOutcome, ServiceRequest, SessionRef};
 use crate::workload::{ArrivalSource, TraceSource};
 
 #[derive(Debug, Clone, Copy)]
@@ -256,6 +257,12 @@ pub struct RunReport {
     /// engine. Substrate-specific like the perf counters above, so it is
     /// excluded from the bit-identity comparison by design.
     pub shard_perf: Option<ShardPerfReport>,
+    /// KV-prefix cache observability (PR 10), folded over every server
+    /// in global index order: per-class hit rates, prefill tokens saved,
+    /// KV-transfer bytes, evictions. All-zero on session-free runs.
+    /// Observability only — excluded from bit-identity comparisons like
+    /// the perf counters above (though it is in fact deterministic).
+    pub cache: CacheCounters,
 }
 
 impl RunReport {
@@ -311,6 +318,39 @@ impl RunReport {
             self.slo_completion_violations,
             self.slo_energy_violations,
             self.gate_sheds,
+        )
+    }
+
+    /// One-line KV-prefix cache summary for sessioned runs: overall and
+    /// per-class hit rates, prefill tokens skipped, KV bytes shipped over
+    /// links, and LRU evictions. Classes that saw no session turns
+    /// render "—".
+    pub fn cache_row(&self) -> String {
+        use crate::workload::service::ServiceClass;
+        let pct = |hits: u64, lookups: u64| {
+            if lookups == 0 {
+                format!("{:>5}", "—")
+            } else {
+                format!("{:4.1}%", hits as f64 / lookups as f64 * 100.0)
+            }
+        };
+        let mut per_class = String::new();
+        for c in ServiceClass::ALL {
+            per_class.push_str(&format!(
+                " {}={}",
+                c.name(),
+                pct(self.cache.hits[c.index()], self.cache.lookups[c.index()])
+            ));
+        }
+        format!(
+            "cache: hit {} ({}/{} turns) |{per_class} | prefill saved {} tok | \
+             kv xfer {:.2} MB | evictions {}",
+            pct(self.cache.total_hits(), self.cache.total_lookups()),
+            self.cache.total_hits(),
+            self.cache.total_lookups(),
+            self.cache.prefill_tokens_saved,
+            self.cache.kv_transfer_bytes as f64 / 1e6,
+            self.cache.evictions,
         )
     }
 }
@@ -701,6 +741,13 @@ impl<'a> Engine<'a> {
             stale_ratio: self.events.stale_ratio(),
             peak: self.events.peak_len(),
         };
+        // Fold per-server prefix-cache counters in global index order —
+        // the same order the sharded engine reassembles from its
+        // `ShardFinish` parts.
+        let mut cache = CacheCounters::default();
+        for srv in &self.cluster.servers {
+            cache.absorb(&srv.cache);
+        }
         assemble_report(
             self.scheduler.name(),
             self.outcomes,
@@ -716,6 +763,7 @@ impl<'a> Engine<'a> {
             &self.inc,
             wall,
             q,
+            cache,
         )
     }
 
@@ -874,11 +922,13 @@ impl<'a> Engine<'a> {
             Action::Assign { server } => {
                 let server = self.checked_server(idx, server);
                 self.svc[idx].server = server;
+                self.stamp_kv_transfer(idx, server);
                 self.dispatch(now, idx, server);
             }
             Action::Defer { server, delay_s } => {
                 let server = self.checked_server(idx, server);
                 self.svc[idx].server = server;
+                self.stamp_kv_transfer(idx, server);
                 if delay_s.is_finite() && delay_s > 0.0 {
                     self.events.push_in(delay_s, Ev::Dispatch { svc: idx, server });
                 } else {
@@ -886,6 +936,49 @@ impl<'a> Engine<'a> {
                 }
             }
             Action::Shed { reason } => self.shed_at_decision(now, idx, reason),
+        }
+    }
+
+    /// KV-transfer economics (PR 10): the decision just routed a session
+    /// turn to `server`. If some *other* server holds more of the
+    /// session's KV prefix than the target does, shipping the missing
+    /// tail over the target's link can beat re-prefilling it — take the
+    /// deal exactly when the link's solo transfer time undercuts the
+    /// prefill time it saves, and stamp the shipped token count on the
+    /// stored request so admission (`ServerSim::admit`) sees the prefix
+    /// as warm and the dispatch payload carries the extra bytes. Derived
+    /// purely from the decision-time view (`prefix_hit_tokens` is the
+    /// per-candidate usable prefix), so the sharded orchestrator makes
+    /// the identical call from its snapshot views. Single-shot requests
+    /// return on the first branch: the pre-session instruction stream is
+    /// untouched.
+    fn stamp_kv_transfer(&mut self, idx: usize, server: usize) {
+        let Some(sess) = self.svc[idx].req.session else {
+            return;
+        };
+        if sess.prefix_tokens == 0 {
+            return;
+        }
+        let local = self.view.servers[server].prefix_hit_tokens;
+        let mut remote = 0.0f64;
+        for (j, sv) in self.view.servers.iter().enumerate() {
+            if j != server && sv.prefix_hit_tokens > remote {
+                remote = sv.prefix_hit_tokens;
+            }
+        }
+        let ship = remote - local;
+        if ship < 1.0 {
+            return;
+        }
+        let ship_tokens = ship as u32;
+        let xfer_s = self.cluster.links[server]
+            .spec
+            .solo_time(SessionRef::kv_bytes(ship_tokens));
+        let saved_s = ship_tokens as f64 / self.cluster.servers[server].spec.prefill_rate;
+        if xfer_s < saved_s {
+            if let Some(s) = self.svc[idx].req.session.as_mut() {
+                s.xfer_tokens = ship_tokens;
+            }
         }
     }
 
@@ -1040,6 +1133,12 @@ impl<'a> Engine<'a> {
         self.svc[i].phase = Phase::Pending;
         self.svc[i].server = usize::MAX;
         self.svc[i].first_token_at = f64::INFINITY;
+        // Any stamped KV transfer died with the crashed placement: the
+        // fresh decision re-derives it (a stale stamp would both warm
+        // the wrong server's view and bill phantom bytes).
+        if let Some(s) = self.svc[i].req.session.as_mut() {
+            s.xfer_tokens = 0;
+        }
         self.cluster.advance_all(now);
         ViewSource::view_into(&self.cluster, &self.svc[i].req, &mut self.view);
         let action = self.scheduler.decide(&self.svc[i].req, &self.view);
@@ -1094,7 +1193,13 @@ impl<'a> Engine<'a> {
 
     fn dispatch(&mut self, now: SimTime, i: usize, server: usize) {
         self.cluster.dispatch_in_flight(server, &self.svc[i].req);
-        let payload = self.svc[i].req.payload_bytes;
+        // A stamped KV transfer rides the same upload: its bytes share
+        // the link fairly and cost tx energy like any other payload.
+        let payload = self.svc[i].req.payload_bytes
+            + match self.svc[i].req.session {
+                Some(s) => SessionRef::kv_bytes(s.xfer_tokens),
+                None => 0,
+            };
         let link = &mut self.cluster.links[server];
         link.advance_to(now);
         link.queue.push(i as u64, payload as f64, now);
@@ -1302,6 +1407,7 @@ fn assemble_report(
     inc: &IncidentCounters,
     wall: f64,
     q: QueueStats,
+    cache: CacheCounters,
 ) -> RunReport {
     let mut proc = Running::new();
     let mut pcts = Percentiles::new();
@@ -1456,6 +1562,7 @@ fn assemble_report(
         stale_ratio: q.stale_ratio,
         peak_event_queue_len: q.peak,
         shard_perf: None,
+        cache,
         outcomes,
     }
 }
@@ -1967,11 +2074,13 @@ impl<'a> ShardedEngine<'a> {
             Action::Assign { server } => {
                 let server = self.checked_server(idx, server);
                 self.svc[idx].server = server;
+                self.stamp_kv_transfer(idx, server);
                 self.dispatch(now, idx, server);
             }
             Action::Defer { server, delay_s } => {
                 let server = self.checked_server(idx, server);
                 self.svc[idx].server = server;
+                self.stamp_kv_transfer(idx, server);
                 if delay_s.is_finite() && delay_s > 0.0 {
                     let stamp = self.next_stamp();
                     self.global
@@ -1981,6 +2090,40 @@ impl<'a> ShardedEngine<'a> {
                 }
             }
             Action::Shed { reason } => self.shed_at_decision(now, idx, reason),
+        }
+    }
+
+    /// Sequential `stamp_kv_transfer` verbatim, sourcing the static rates
+    /// from the config specs: the decision-time view (assembled from the
+    /// same per-shard `fill_server_view` slices) carries identical
+    /// `prefix_hit_tokens`, and `LinkSpec::solo_time`/`prefill_rate` are
+    /// pure functions of the specs — so both substrates take the same
+    /// ship/no-ship decision on the same inputs, bit for bit.
+    fn stamp_kv_transfer(&mut self, idx: usize, server: usize) {
+        let Some(sess) = self.svc[idx].req.session else {
+            return;
+        };
+        if sess.prefix_tokens == 0 {
+            return;
+        }
+        let local = self.view.servers[server].prefix_hit_tokens;
+        let mut remote = 0.0f64;
+        for (j, sv) in self.view.servers.iter().enumerate() {
+            if j != server && sv.prefix_hit_tokens > remote {
+                remote = sv.prefix_hit_tokens;
+            }
+        }
+        let ship = remote - local;
+        if ship < 1.0 {
+            return;
+        }
+        let ship_tokens = ship as u32;
+        let xfer_s = self.cfg.links[server].solo_time(SessionRef::kv_bytes(ship_tokens));
+        let saved_s = ship_tokens as f64 / self.cfg.servers[server].prefill_rate;
+        if xfer_s < saved_s {
+            if let Some(s) = self.svc[idx].req.session.as_mut() {
+                s.xfer_tokens = ship_tokens;
+            }
         }
     }
 
@@ -2019,7 +2162,14 @@ impl<'a> ShardedEngine<'a> {
         }
         let st = &mut self.svc[i];
         st.phase = Phase::Uploading;
-        st.tx_energy_j = self.cfg.links[server].tx_energy(st.req.payload_bytes);
+        // Same payload as the shard-side upload: stamped KV-transfer
+        // bytes ride along and cost tx energy.
+        let payload = st.req.payload_bytes
+            + match st.req.session {
+                Some(s) => SessionRef::kv_bytes(s.xfer_tokens),
+                None => 0,
+            };
+        st.tx_energy_j = self.cfg.links[server].tx_energy(payload);
     }
 
     /// Sequential `apply_fault` + `fault_down`/`fault_up` incident logic:
@@ -2259,6 +2409,11 @@ impl<'a> ShardedEngine<'a> {
     fn requeue(&mut self, now: SimTime, i: usize) {
         self.svc[i].phase = Phase::Pending;
         self.svc[i].server = usize::MAX;
+        // Sequential requeue: the stamped transfer died with the crashed
+        // placement; the fresh decision re-derives it.
+        if let Some(s) = self.svc[i].req.session.as_mut() {
+            s.xfer_tokens = 0;
+        }
         self.advance_all(now);
         let req = self.svc[i].req.clone();
         self.fill_view(&req);
@@ -2310,6 +2465,14 @@ impl<'a> ShardedEngine<'a> {
             }
         }
         let tokens: u64 = fins.iter().map(|f| f.tokens).sum();
+        // Prefix-cache counters fold in global server order (shards are
+        // ordered by range) — same fold as the sequential tail.
+        let mut cache = CacheCounters::default();
+        for fin in &fins {
+            for c in &fin.cache {
+                cache.absorb(c);
+            }
+        }
         // First-token instants for flows still resident at run end.
         let mut ftk = vec![f64::INFINITY; self.svc.len()];
         for fin in &fins {
@@ -2393,6 +2556,7 @@ impl<'a> ShardedEngine<'a> {
             &self.inc,
             wall,
             q,
+            cache,
         );
         rep.shard_perf = Some(ShardPerfReport::from_parts(parts));
         rep
@@ -2878,6 +3042,7 @@ mod tests {
             output_tokens: output,
             slo: crate::workload::service::SloSpec::completion_only(100.0),
             payload_bytes: 100_000,
+            session: None,
         };
         // Ten ~8s-solo jobs each at t=0 saturate edges 0 and 1 (8 slots +
         // 2 waiting) well past the capture points; the probes arrive once
@@ -3025,6 +3190,7 @@ mod tests {
             // takes longer than 1 ms.
             slo: SloSpec::completion_only(100.0).with_ttft(0.001),
             payload_bytes: 100_000,
+            session: None,
         }];
         let mut s = Fixed(0);
         let rep = simulate(&cfg, &trace, &mut s);
@@ -3156,6 +3322,7 @@ mod tests {
             output_tokens: output,
             slo: crate::workload::service::SloSpec::completion_only(1000.0),
             payload_bytes: 100_000,
+            session: None,
         }
     }
 

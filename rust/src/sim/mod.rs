@@ -8,6 +8,7 @@ pub mod energy;
 pub mod engine;
 pub mod faults;
 pub mod net;
+pub mod prefix;
 pub mod ps;
 pub mod server;
 pub mod service_model;
@@ -26,6 +27,7 @@ pub use engine::{
 pub use faults::{
     CrashPolicy, FaultEvent, FaultKind, FaultPlan, GenerativeFaults, HealthConfig, HealthMonitor,
 };
+pub use prefix::{CacheCounters, PrefixCache, KV_CACHE_TOKENS_PER_SLOT};
 pub use server::{ServerKind, ServerSpec, EDGE_MODELS};
 pub use service_model::{PsServiceModel, ServiceModel, ServiceModelKind, ServicePrediction};
 pub use token_batch::TokenBatchModel;

@@ -1,0 +1,277 @@
+//! Per-server KV-prefix cache (PR 10): the DES-side residency model
+//! behind session affinity.
+//!
+//! A server that recently served a conversation still holds that
+//! session's KV tokens; a follow-up turn landing there skips the cached
+//! prefix's prefill entirely (`ServerSim::admit` shrinks the effective
+//! prompt). Landing anywhere else pays full prefill — unless the engine
+//! judged a KV transfer over the `LinkSpec` economical and stamped
+//! `SessionRef::xfer_tokens` at dispatch.
+//!
+//! Capacity is counted in KV tokens and evicted LRU by whole sessions —
+//! a partial prefix is still useful (reuse is `min(prefix, resident)`),
+//! but real serving stacks drop whole conversations, and whole-session
+//! eviction keeps the accounting exact. The recency list is a `BTreeMap`
+//! keyed by a monotone sequence number (deterministic iteration order;
+//! the `HashMap` alongside it is point-lookup only — D2-clean).
+
+use std::collections::{BTreeMap, HashMap};
+
+/// KV-cache tokens provisioned per batch slot: the prefix cache of a
+/// server with `slots` slots holds `slots * KV_CACHE_TOKENS_PER_SLOT`
+/// tokens. Sized so a paper-testbed edge server (8 slots) retains on the
+/// order of twenty ~1.5k-token conversations — enough for affinity to
+/// pay, small enough that a chat-heavy fleet sees real eviction
+/// pressure.
+pub const KV_CACHE_TOKENS_PER_SLOT: u64 = 4096;
+
+/// Per-session residency entry.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    /// Recency key in `lru` (monotone; larger = more recent).
+    seq: u64,
+    /// KV tokens this session occupies.
+    tokens: u64,
+}
+
+/// LRU cache of per-session KV-token residency for one server.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixCache {
+    /// Token capacity (0 = caching disabled; every lookup misses).
+    capacity: u64,
+    used: u64,
+    seq: u64,
+    /// session_id -> residency (point lookups only).
+    entries: HashMap<u64, Entry>,
+    /// recency seq -> session_id; first key is the LRU victim.
+    lru: BTreeMap<u64, u64>,
+    /// Sessions evicted under pressure (observability).
+    pub evictions: u64,
+}
+
+impl PrefixCache {
+    pub fn new(capacity_tokens: u64) -> PrefixCache {
+        PrefixCache {
+            capacity: capacity_tokens,
+            ..PrefixCache::default()
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// KV tokens currently resident.
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    /// Occupancy in [0, 1] — the eviction-risk signal surfaced to
+    /// schedulers as `ServerView::prefix_pressure`.
+    pub fn occupancy(&self) -> f64 {
+        if self.capacity == 0 {
+            1.0
+        } else {
+            self.used as f64 / self.capacity as f64
+        }
+    }
+
+    /// KV tokens resident for `session_id` (0 when absent). Read-only:
+    /// prediction and view pricing must not disturb recency.
+    pub fn resident_for(&self, session_id: u64) -> u64 {
+        self.entries.get(&session_id).map_or(0, |e| e.tokens)
+    }
+
+    /// Record that this server just served a turn of `session_id` whose
+    /// conversation now spans `tokens_after` KV tokens: the session
+    /// becomes (or stays) resident at that footprint and most-recent,
+    /// evicting least-recently-used sessions if needed. A footprint
+    /// larger than the whole cache caps at capacity (the tail of the
+    /// conversation is what stays hot).
+    pub fn admit_turn(&mut self, session_id: u64, tokens_after: u64) {
+        if self.capacity == 0 {
+            return;
+        }
+        let tokens = tokens_after.min(self.capacity);
+        if let Some(e) = self.entries.remove(&session_id) {
+            self.lru.remove(&e.seq);
+            self.used -= e.tokens;
+        }
+        while self.used + tokens > self.capacity {
+            // lint: allow(P1) tokens <= capacity, so the loop guard implies used > 0 and lru is non-empty
+            let (&seq, &victim) = self.lru.iter().next().expect("used > 0 implies entries");
+            self.lru.remove(&seq);
+            // lint: allow(P1) entries and lru are inserted/removed in lockstep (check_invariants pins it)
+            let v = self.entries.remove(&victim).expect("lru entry backed");
+            self.used -= v.tokens;
+            self.evictions += 1;
+        }
+        self.seq += 1;
+        let seq = self.seq;
+        self.entries.insert(session_id, Entry { seq, tokens });
+        self.lru.insert(seq, session_id);
+        self.used += tokens;
+    }
+
+    /// Drop everything (hard-crash restart: KV memory does not survive).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.lru.clear();
+        self.used = 0;
+    }
+
+    #[cfg(test)]
+    fn check_invariants(&self) {
+        assert_eq!(self.entries.len(), self.lru.len());
+        let sum: u64 = self.lru.values().map(|sid| self.entries[sid].tokens).sum();
+        assert_eq!(sum, self.used);
+        assert!(self.used <= self.capacity || self.capacity == 0);
+    }
+}
+
+/// Per-class cache observability counters for one server, folded into
+/// `RunReport::cache` (identity-excluded, like all perf counters).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Session-turn admissions per class (lookup opportunities).
+    pub lookups: [u64; 4],
+    /// Lookups that reused a non-empty prefix, per class.
+    pub hits: [u64; 4],
+    /// Prefill tokens skipped thanks to reuse.
+    pub prefill_tokens_saved: u64,
+    /// KV bytes shipped over links to make remote turns warm.
+    pub kv_transfer_bytes: u64,
+    /// Whole-session LRU evictions under capacity pressure.
+    pub evictions: u64,
+}
+
+impl CacheCounters {
+    pub fn absorb(&mut self, other: &CacheCounters) {
+        for c in 0..4 {
+            self.lookups[c] += other.lookups[c];
+            self.hits[c] += other.hits[c];
+        }
+        self.prefill_tokens_saved += other.prefill_tokens_saved;
+        self.kv_transfer_bytes += other.kv_transfer_bytes;
+        self.evictions += other.evictions;
+    }
+
+    pub fn total_lookups(&self) -> u64 {
+        self.lookups.iter().sum()
+    }
+
+    pub fn total_hits(&self) -> u64 {
+        self.hits.iter().sum()
+    }
+
+    /// Overall hit rate (None when no session turn was ever admitted —
+    /// the sessions-off case).
+    pub fn hit_rate(&self) -> Option<f64> {
+        let n = self.total_lookups();
+        if n == 0 {
+            None
+        } else {
+            Some(self.total_hits() as f64 / n as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resident_after_admit_turn_and_grows() {
+        let mut c = PrefixCache::new(10_000);
+        assert_eq!(c.resident_for(1), 0);
+        c.admit_turn(1, 300);
+        assert_eq!(c.resident_for(1), 300);
+        c.admit_turn(1, 900);
+        assert_eq!(c.resident_for(1), 900);
+        assert_eq!(c.used(), 900, "re-admission replaces, never double-counts");
+        c.check_invariants();
+    }
+
+    #[test]
+    fn lru_evicts_oldest_first() {
+        let mut c = PrefixCache::new(1000);
+        c.admit_turn(1, 400);
+        c.admit_turn(2, 400);
+        // Touch 1 so 2 becomes LRU.
+        c.admit_turn(1, 400);
+        c.admit_turn(3, 400); // needs 400, evicts session 2
+        assert_eq!(c.resident_for(2), 0, "LRU victim");
+        assert_eq!(c.resident_for(1), 400);
+        assert_eq!(c.resident_for(3), 400);
+        assert_eq!(c.evictions, 1);
+        c.check_invariants();
+    }
+
+    #[test]
+    fn oversized_session_caps_at_capacity() {
+        let mut c = PrefixCache::new(500);
+        c.admit_turn(1, 200);
+        c.admit_turn(2, 10_000);
+        assert_eq!(c.resident_for(2), 500);
+        assert_eq!(c.resident_for(1), 0, "everything else evicted");
+        c.check_invariants();
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let mut c = PrefixCache::new(0);
+        c.admit_turn(1, 100);
+        assert_eq!(c.resident_for(1), 0);
+        assert_eq!(c.used(), 0);
+        assert_eq!(c.occupancy(), 1.0, "no room is full, never attractive");
+    }
+
+    #[test]
+    fn clear_drops_residency_but_keeps_eviction_count() {
+        let mut c = PrefixCache::new(600);
+        c.admit_turn(1, 400);
+        c.admit_turn(2, 400); // evicts 1
+        assert_eq!(c.evictions, 1);
+        c.clear();
+        assert_eq!(c.resident_for(2), 0);
+        assert_eq!(c.used(), 0);
+        assert_eq!(c.evictions, 1, "counters survive a crash");
+        c.check_invariants();
+    }
+
+    #[test]
+    fn eviction_under_pressure_is_deterministic() {
+        // Two identical interleavings produce identical residency.
+        let run = || {
+            let mut c = PrefixCache::new(2_000);
+            for i in 0..50u64 {
+                c.admit_turn(i % 7, 100 + (i * 37) % 400);
+                c.admit_turn((i + 3) % 11, 80 + (i * 13) % 300);
+            }
+            let snapshot: Vec<(u64, u64)> =
+                (0..12u64).map(|sid| (sid, c.resident_for(sid))).collect();
+            (snapshot, c.used(), c.evictions)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn counters_absorb_and_rate() {
+        let mut a = CacheCounters::default();
+        a.lookups[0] = 10;
+        a.hits[0] = 4;
+        a.prefill_tokens_saved = 800;
+        let mut b = CacheCounters::default();
+        b.lookups[0] = 2;
+        b.hits[0] = 2;
+        b.kv_transfer_bytes = 4096;
+        b.evictions = 3;
+        a.absorb(&b);
+        assert_eq!(a.total_lookups(), 12);
+        assert_eq!(a.total_hits(), 6);
+        assert_eq!(a.hit_rate(), Some(0.5));
+        assert_eq!(a.kv_transfer_bytes, 4096);
+        assert_eq!(a.evictions, 3);
+        assert_eq!(CacheCounters::default().hit_rate(), None);
+    }
+}

@@ -31,10 +31,11 @@
 //! executable-spec run-identity test in
 //! `rust/tests/service_model_identity.rs`.
 
+use super::prefix::{CacheCounters, PrefixCache, KV_CACHE_TOKENS_PER_SLOT};
 use super::service_model::{build_model, ServiceModel, ServiceModelKind, ServicePrediction};
 use super::ps::PsJob;
 use super::time::{Generation, SimTime};
-use crate::workload::service::ServiceRequest;
+use crate::workload::service::{ServiceRequest, SessionRef};
 
 /// Server tier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -114,12 +115,19 @@ pub struct ServerSim {
     pub busy_s: f64,
     /// Tokens fully served (throughput accounting).
     pub tokens_served: u64,
+    /// KV-prefix residency for session follow-up turns (PR 10). Only
+    /// session requests ever touch it — the single-shot path is
+    /// instruction-identical to the pre-session engine.
+    pub prefix: PrefixCache,
+    /// Prefix-cache observability counters (identity-excluded).
+    pub cache: CacheCounters,
 }
 
 impl ServerSim {
     pub fn new(spec: ServerSpec) -> Self {
         ServerSim {
             model: build_model(&spec),
+            prefix: PrefixCache::new(spec.slots as u64 * KV_CACHE_TOKENS_PER_SLOT),
             spec,
             gen: Generation::new(),
             rate_mult: 1.0,
@@ -128,6 +136,7 @@ impl ServerSim {
             energy_idle_j: 0.0,
             busy_s: 0.0,
             tokens_served: 0,
+            cache: CacheCounters::default(),
         }
     }
 
@@ -165,10 +174,55 @@ impl ServerSim {
         (self.spec.p_infer - self.spec.p_idle) * dt / n as f64
     }
 
+    /// Prefill tokens a request would reuse if admitted here right now:
+    /// 0 for single-shot requests; for a session turn, the usable part
+    /// of its prefix given this server's KV residency (plus anything the
+    /// engine shipped). Read-only — prediction and view pricing share it.
+    #[inline]
+    pub fn prefix_reuse(&self, req: &ServiceRequest) -> u32 {
+        match req.session {
+            Some(s) => s.usable_prefix(self.prefix.resident_for(s.session_id)),
+            None => 0,
+        }
+    }
+
     /// Admit `req` as job `id` at `now` (the caller checked
     /// [`Self::would_drop`]).
+    ///
+    /// Session turns are where KV-prefix reuse physically happens: the
+    /// reusable prefix is subtracted from the prompt the service model
+    /// sees (its prefill was skipped), and the session's residency is
+    /// refreshed to the conversation's new footprint. Single-shot
+    /// requests take the verbatim pre-session path.
     pub fn admit(&mut self, id: u64, req: &ServiceRequest, now: SimTime) {
-        self.model.admit(id, req, now);
+        match req.session {
+            Some(s) => self.admit_session(id, req, s, now),
+            None => self.model.admit(id, req, now),
+        }
+    }
+
+    fn admit_session(&mut self, id: u64, req: &ServiceRequest, s: SessionRef, now: SimTime) {
+        let reuse = s.usable_prefix(self.prefix.resident_for(s.session_id));
+        let class = req.class.index();
+        self.cache.lookups[class] += 1;
+        if s.xfer_tokens > 0 {
+            self.cache.kv_transfer_bytes += SessionRef::kv_bytes(s.xfer_tokens);
+        }
+        if reuse > 0 {
+            self.cache.hits[class] += 1;
+            self.cache.prefill_tokens_saved += reuse as u64;
+            // ServiceRequest is all-inline data: the clone is a stack
+            // copy, no allocation on this hot path.
+            let mut eff = req.clone();
+            eff.prompt_tokens = req.prompt_tokens.saturating_sub(reuse);
+            self.model.admit(id, &eff, now);
+        } else {
+            self.model.admit(id, req, now);
+        }
+        let before = self.prefix.evictions;
+        self.prefix
+            .admit_turn(s.session_id, req.prompt_tokens as u64 + req.output_tokens as u64);
+        self.cache.evictions += self.prefix.evictions - before;
     }
 
     /// Move finished jobs into `out` (cleared first) and promote waiters.
@@ -196,8 +250,11 @@ impl ServerSim {
     }
 
     /// Full TTFT + completion prediction for a request arriving now.
+    /// Session turns are predicted at their *effective* prompt (reusable
+    /// prefix subtracted), mirroring what [`Self::admit`] will do — the
+    /// predictor and the physics must price reuse identically.
     pub fn predict(&self, req: &ServiceRequest, extra_n: usize, extra_work: f64) -> ServicePrediction {
-        self.model.predict(req, extra_n, extra_work, self.rate_mult)
+        self.predict_with_rate(req, extra_n, extra_work, self.rate_mult)
     }
 
     /// Prediction at an explicit rate multiplier instead of ground truth
@@ -212,6 +269,14 @@ impl ServerSim {
         extra_work: f64,
         rate: f64,
     ) -> ServicePrediction {
+        if req.session.is_some() {
+            let reuse = self.prefix_reuse(req);
+            if reuse > 0 {
+                let mut eff = req.clone();
+                eff.prompt_tokens = req.prompt_tokens.saturating_sub(reuse);
+                return self.model.predict(&eff, extra_n, extra_work, rate);
+            }
+        }
         self.model.predict(req, extra_n, extra_work, rate)
     }
 
@@ -223,6 +288,8 @@ impl ServerSim {
     pub fn crash_reset(&mut self, now: SimTime) {
         self.advance_to(now);
         self.model = build_model(&self.spec);
+        // KV memory dies with the process: every resident prefix is gone.
+        self.prefix.clear();
         self.gen.invalidate();
     }
 
@@ -330,7 +397,19 @@ mod tests {
             output_tokens: output,
             slo: crate::workload::service::SloSpec::completion_only(4.0),
             payload_bytes: 10_000,
+            session: None,
         }
+    }
+
+    fn session_req(sid: u64, turn: u32, prefix: u32, prompt: u32, output: u32) -> ServiceRequest {
+        let mut r = req(prompt, output);
+        r.session = Some(SessionRef {
+            session_id: sid,
+            turn,
+            prefix_tokens: prefix,
+            xfer_tokens: 0,
+        });
+        r
     }
 
     fn edge_spec() -> ServerSpec {
@@ -449,5 +528,86 @@ mod tests {
     #[should_panic]
     fn unknown_model_panics() {
         paper_testbed("gpt-5");
+    }
+
+    /// A follow-up turn on the server that served turn 1 skips its
+    /// prefix's prefill: the completion ETA shrinks by exactly
+    /// `prefix / prefill_rate` vs a cold server, and the hit counters
+    /// record the reuse.
+    #[test]
+    fn warm_follow_up_skips_prefix_prefill() {
+        let spec = edge_spec();
+        let prefill = spec.prefill_rate;
+        let mut warm = ServerSim::new(spec.clone());
+        warm.admit(1, &session_req(7, 1, 0, 100, 40), 0.0);
+        let mut drain = Vec::new();
+        warm.advance_to(100.0);
+        warm.reap_into(100.0, &mut drain);
+        assert_eq!(drain.len(), 1, "turn 1 completed");
+        assert_eq!(warm.prefix.resident_for(7), 140, "conversation resident");
+
+        // Turn 2: prefix 140 of a 200-token prompt.
+        let t2 = session_req(7, 2, 140, 200, 40);
+        let mut cold = ServerSim::new(spec);
+        let eta_warm = warm.predict(&t2, 0, 0.0).total_s;
+        let eta_cold = cold.predict(&t2, 0, 0.0).total_s;
+        let saved = eta_cold - eta_warm;
+        assert!(
+            (saved - 140.0 / prefill).abs() < 1e-9,
+            "saved {saved} != prefix prefill {}",
+            140.0 / prefill
+        );
+        // Physics matches the prediction: admit and check the ETA.
+        warm.admit(2, &t2, 100.0);
+        cold.admit(2, &t2, 100.0);
+        let warm_eta = warm.next_completion_in().unwrap();
+        let cold_eta = cold.next_completion_in().unwrap();
+        assert!((cold_eta - warm_eta - 140.0 / prefill).abs() < 1e-9);
+        assert_eq!(warm.cache.hits[0], 1);
+        assert_eq!(warm.cache.prefill_tokens_saved, 140);
+        assert_eq!(cold.cache.hits[0], 0, "cold server missed");
+        assert_eq!(cold.cache.lookups[0], 1);
+    }
+
+    /// Shipped KV tokens (`xfer_tokens`) count as residency on arrival
+    /// and are billed as transfer bytes.
+    #[test]
+    fn shipped_prefix_counts_as_warm() {
+        let mut s = ServerSim::new(edge_spec());
+        let mut t2 = session_req(9, 2, 100, 160, 40);
+        t2.session.as_mut().unwrap().xfer_tokens = 100;
+        let cold_eta = {
+            let c = ServerSim::new(edge_spec());
+            c.predict(&session_req(9, 2, 100, 160, 40), 0, 0.0).total_s
+        };
+        assert!(s.predict(&t2, 0, 0.0).total_s < cold_eta);
+        s.admit(1, &t2, 0.0);
+        assert_eq!(s.cache.hits[0], 1);
+        assert_eq!(
+            s.cache.kv_transfer_bytes,
+            crate::workload::service::SessionRef::kv_bytes(100)
+        );
+        assert_eq!(s.cache.prefill_tokens_saved, 100);
+    }
+
+    /// Crash restarts dump KV memory: the session must re-prefill.
+    #[test]
+    fn crash_reset_clears_prefix_residency() {
+        let mut s = ServerSim::new(edge_spec());
+        s.admit(1, &session_req(3, 1, 0, 80, 20), 0.0);
+        assert_eq!(s.prefix.resident_for(3), 100);
+        s.crash_reset(1.0);
+        assert_eq!(s.prefix.resident_for(3), 0);
+        assert_eq!(s.prefix_reuse(&session_req(3, 2, 100, 150, 20)), 0);
+    }
+
+    /// Single-shot requests never touch the prefix machinery.
+    #[test]
+    fn single_shot_requests_bypass_the_cache() {
+        let mut s = ServerSim::new(edge_spec());
+        s.admit(1, &req(100, 40), 0.0);
+        assert_eq!(s.cache.lookups, [0; 4]);
+        assert_eq!(s.prefix.used(), 0);
+        assert_eq!(s.prefix_reuse(&req(100, 40)), 0);
     }
 }

@@ -295,6 +295,7 @@ mod tests {
             output_tokens: output,
             slo: SloSpec::completion_only(4.0),
             payload_bytes: 10_000,
+            session: None,
         }
     }
 

@@ -313,6 +313,10 @@ pub(crate) struct ShardFinish {
     /// Flows still resident at run end: `(svc, first_token_at,
     /// tx_energy_j)` — feeds the horizon-stranded outcome pass.
     pub live_flows: Vec<(u64, SimTime, f64)>,
+    /// Per-server prefix-cache counters (PR 10), local index order, so
+    /// the orchestrator folds them in global server order — the same
+    /// fold the sequential report tail performs.
+    pub cache: Vec<crate::sim::prefix::CacheCounters>,
 }
 
 /// Orchestrator → shard commands. Index arguments are shard-local; `now`
@@ -740,7 +744,14 @@ impl ShardSim {
         self.cluster.now = now;
         let slot = self.alloc_flow(svc, server, req);
         self.cluster.dispatch_in_flight(server, &self.flows[slot].req);
-        let payload = self.flows[slot].req.payload_bytes;
+        // Same payload rule as the sequential `dispatch()`: a stamped KV
+        // transfer (the orchestrator decided before sending `Dispatch`)
+        // rides the upload and costs tx energy.
+        let payload = self.flows[slot].req.payload_bytes
+            + match self.flows[slot].req.session {
+                Some(s) => crate::workload::service::SessionRef::kv_bytes(s.xfer_tokens),
+                None => 0,
+            };
         let link = &mut self.cluster.links[server];
         link.advance_to(now);
         link.queue.push(slot as u64, payload as f64, now);
@@ -917,10 +928,12 @@ impl ShardSim {
             bytes_moved: Vec::with_capacity(self.cluster.links.len()),
             tokens: self.cluster.tokens_served(),
             live_flows: Vec::new(),
+            cache: Vec::with_capacity(self.cluster.servers.len()),
         };
         for s in &self.cluster.servers {
             fin.infer_j.push(s.energy_infer_j);
             fin.idle_j.push(s.energy_idle_j);
+            fin.cache.push(s.cache);
         }
         for l in &self.cluster.links {
             fin.bytes_moved.push(l.bytes_moved);
@@ -1172,6 +1185,7 @@ mod tests {
             output_tokens: 40,
             slo: SloSpec::completion_only(4.0),
             payload_bytes: 200_000,
+            session: None,
         }
     }
 

@@ -417,6 +417,7 @@ mod tests {
             output_tokens: output,
             slo: crate::workload::service::SloSpec::completion_only(10.0),
             payload_bytes: 10_000,
+            session: None,
         }
     }
 

@@ -429,6 +429,7 @@ impl ArrivalSource for WorkloadGen {
             slo,
             payload_bytes: self.cfg.payload_base_bytes
                 + prompt as u64 * self.cfg.payload_bytes_per_token,
+            session: None,
         })
     }
 

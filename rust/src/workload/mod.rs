@@ -11,12 +11,16 @@
 
 pub mod generator;
 pub mod service;
+pub mod sessions;
 
 pub use generator::{
     generate, ArrivalModulation, ArrivalProcess, ClassProfile, SloSampling, WorkloadConfig,
     WorkloadGen,
 };
-pub use service::{ServiceClass, ServiceOutcome, ServiceRequest, SloSpec};
+pub use service::{
+    ServiceClass, ServiceOutcome, ServiceRequest, SessionRef, SloSpec, KV_BYTES_PER_TOKEN,
+};
+pub use sessions::{SessionConfig, SessionProfile, SessionSource, SESSION_STREAM_SALT};
 
 /// Pull-based workload cursor: the engine asks for one arrival at a time.
 ///

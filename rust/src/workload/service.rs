@@ -174,6 +174,58 @@ impl SloSpec {
     }
 }
 
+/// KV bytes per cached context token: the per-token KV-cache footprint a
+/// prefix transfer ships over a [`crate::sim::cluster::LinkSpec`]. A
+/// 7B-class model at fp16 stores ~0.5 MB/token across layers; edge
+/// deployments quantize and prune, so the sim uses 8 KiB/token — the
+/// ratio (transfer vs recompute) is what matters, and it is exercised
+/// across two orders of magnitude by the prefix-cache tests.
+pub const KV_BYTES_PER_TOKEN: u64 = 8192;
+
+/// Session (multi-turn conversation) identity carried by a request.
+///
+/// `prefix_tokens` is the KV-cacheable context prefix — everything the
+/// conversation accumulated *before* this turn's new user tokens. A
+/// server holding those KV tokens (see `sim::prefix::PrefixCache`) can
+/// skip that prefix's prefill; any other server pays full prefill or a
+/// KV transfer of `xfer_tokens * KV_BYTES_PER_TOKEN` bytes stamped by
+/// the engine at dispatch time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionRef {
+    /// Stable conversation id (dense, from the session source).
+    pub session_id: u64,
+    /// 1-based turn index within the conversation.
+    pub turn: u32,
+    /// Reusable context prefix length in tokens (0 on turn 1).
+    pub prefix_tokens: u32,
+    /// KV tokens the engine decided to ship to the target server over
+    /// the link (0 unless a transfer was judged economical). Stamped by
+    /// the engine after placement; reset on requeue.
+    pub xfer_tokens: u32,
+}
+
+impl SessionRef {
+    /// Prefill tokens this turn can skip on a server holding `resident`
+    /// KV tokens for the session. Prefix caches hold *prefixes*, so the
+    /// target's resident tokens and a shipped transfer compose
+    /// additively: the engine ships exactly the contiguous tail the
+    /// target is missing, and what lands is `resident + xfer`, capped by
+    /// the turn's actual prefix. Both substrates and the view-pricing
+    /// path compute reuse through this one function so the accounting
+    /// can never drift.
+    #[inline]
+    pub fn usable_prefix(&self, resident_tokens: u64) -> u32 {
+        let avail = resident_tokens.saturating_add(self.xfer_tokens as u64);
+        (self.prefix_tokens as u64).min(avail) as u32
+    }
+
+    /// Bytes a KV transfer of `tokens` context tokens ships over a link.
+    #[inline]
+    pub fn kv_bytes(tokens: u32) -> u64 {
+        tokens as u64 * KV_BYTES_PER_TOKEN
+    }
+}
+
 /// One inference service request (one "arm pull context" for the bandit).
 #[derive(Debug, Clone)]
 pub struct ServiceRequest {
@@ -189,6 +241,9 @@ pub struct ServiceRequest {
     pub slo: SloSpec,
     /// Upload payload in bytes (prompt + conversation context).
     pub payload_bytes: u64,
+    /// Multi-turn conversation identity (`None` for single-shot
+    /// requests — the entire pre-session pipeline).
+    pub session: Option<SessionRef>,
 }
 
 impl ServiceRequest {
@@ -366,6 +421,7 @@ mod tests {
             output_tokens: 32,
             slo: SloSpec::completion_only(4.0),
             payload_bytes: 1024,
+            session: None,
         };
         assert_eq!(r.total_tokens(), 42);
         assert_eq!(r.slo.completion, Some(4.0));
@@ -447,6 +503,31 @@ mod tests {
         assert!((m - 0.2).abs() < 1e-12, "got {m}");
         // Empty contract is always satisfied.
         assert_eq!(SloSpec::default().min_slack(9.0, 9.0, 9.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn usable_prefix_caps_and_composes_sources() {
+        let s = SessionRef {
+            session_id: 7,
+            turn: 3,
+            prefix_tokens: 100,
+            xfer_tokens: 0,
+        };
+        assert_eq!(s.usable_prefix(0), 0, "nothing resident, nothing shipped");
+        assert_eq!(s.usable_prefix(60), 60, "partial residency reused as-is");
+        assert_eq!(s.usable_prefix(500), 100, "reuse capped by the prefix");
+        let shipped = SessionRef {
+            xfer_tokens: 80,
+            ..s
+        };
+        assert_eq!(shipped.usable_prefix(0), 80, "shipped tokens count");
+        assert_eq!(
+            shipped.usable_prefix(15),
+            95,
+            "resident head + shipped tail compose additively"
+        );
+        assert_eq!(shipped.usable_prefix(90), 100, "sum capped by the prefix");
+        assert_eq!(SessionRef::kv_bytes(4), 4 * KV_BYTES_PER_TOKEN);
     }
 
     #[test]

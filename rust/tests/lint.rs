@@ -77,6 +77,21 @@ fn fixtures_fire_and_suppress_as_documented() {
             src: include_str!("lint_fixtures/d3_good.rs"),
             expect: &[],
         },
+        // The session side-stream pair (PR 10): seeding a conversation
+        // generator from the workload seed directly fires D3 (that is
+        // precisely how sessions could perturb the base stream); the
+        // `seed ^ SESSION_STREAM_SALT` idiom `workload::sessions` uses
+        // is silent.
+        Case {
+            name: "d3_session_bad",
+            src: include_str!("lint_fixtures/d3_session_bad.rs"),
+            expect: &[(8, "D3")],
+        },
+        Case {
+            name: "d3_session_good",
+            src: include_str!("lint_fixtures/d3_session_good.rs"),
+            expect: &[],
+        },
         Case {
             name: "a1_bad",
             src: include_str!("lint_fixtures/a1_bad.rs"),

@@ -1,0 +1,9 @@
+// Known-bad fixture for D3 (raw-seed), session flavor: a conversation
+// generator seeding its side-stream from the workload seed directly —
+// exactly the bug that would let enabling sessions perturb (or replay)
+// the single-turn base stream.
+use crate::util::rng::Rng;
+
+pub fn session_stream(workload_seed: u64) -> Rng {
+    Rng::new(workload_seed)
+}

@@ -1,0 +1,11 @@
+// Known-good twin of d3_session_bad.rs: the salted session side-stream
+// idiom `workload::sessions` actually uses — one xor constant per
+// stream, so the conversation chains and the base workload can never
+// share (or shift) a RNG sequence.
+use crate::util::rng::Rng;
+
+pub const SESSION_STREAM_SALT: u64 = 0x5E55_10C4_57A1;
+
+pub fn session_stream(workload_seed: u64) -> Rng {
+    Rng::new(workload_seed ^ SESSION_STREAM_SALT)
+}

@@ -78,6 +78,7 @@ fn req_with_slo(g: &mut Gen, slo: SloSpec) -> ServiceRequest {
         output_tokens: g.usize(1, 512) as u32,
         slo,
         payload_bytes: g.u64(1_000, 5_000_000),
+        session: None,
     }
 }
 

@@ -1,0 +1,241 @@
+//! Executable spec for the session subsystem (PR 10): multi-turn
+//! conversations, KV-prefix reuse, and cache-affinity routing must be
+//! strictly additive.
+//!
+//! Contracts:
+//!
+//! 1. **Scheduler identity off-sessions** — on a sessionless workload,
+//!    `CsUcbAffinity` is bit-identical to `CsUcbSlo`: the stickiness
+//!    bonus is branch-gated on `prefix_hit_tokens > 0`, so every
+//!    decision, outcome float, and bandit diagnostic matches exactly.
+//! 2. **Stream independence** — the session generator draws from
+//!    `seed ^ SESSION_STREAM_SALT`, a side-stream of the workload seed:
+//!    draining a `SessionSource` can never shift `WorkloadGen`'s
+//!    sequence, and the two streams differ (the salt is real).
+//! 3. **Substrate identity with sessions ON** — sequential and sharded
+//!    runs of a sessioned workload agree bit for bit at every shard
+//!    plan, *including* the prefix-cache counters (hits, prefill tokens
+//!    saved, KV transfer bytes, evictions), which fold in global server
+//!    order on both substrates.
+//! 4. **Reuse is real** — a chat-heavy session run reports warm
+//!    follow-up turns: nonzero hit rate, nonzero prefill tokens saved,
+//!    per-class hits bounded by lookups, and hits concentrated in the
+//!    chat class that dominates the mix.
+
+use perllm::scheduler::csucb::{CsUcbAffinity, CsUcbSlo};
+use perllm::sim::cluster::BandwidthMode;
+use perllm::sim::engine::{simulate_stream, simulate_stream_sharded, RunReport};
+use perllm::sim::{ShardCount, TopologyConfig};
+use perllm::workload::generator::{ArrivalProcess, WorkloadConfig, WorkloadGen};
+use perllm::workload::sessions::{SessionConfig, SessionSource};
+use perllm::workload::service::ServiceClass;
+use perllm::workload::ArrivalSource;
+
+/// Bit-level equality over the identity surface, cache counters
+/// included. Perf counters (`events_processed`, `stale_events`,
+/// `peak_event_queue_len`, wall time, `shard_perf`) stay outside it —
+/// same contract as `sharded_identity.rs`.
+fn assert_reports_identical(a: &RunReport, b: &RunReport, label: &str) {
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{label}: outcome count");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id, "{label}: outcome order");
+        assert_eq!(x.server, y.server, "{label}: placement of {}", x.id);
+        assert_eq!(x.tokens, y.tokens, "{label}: tokens of {}", x.id);
+        for (fa, fb, what) in [
+            (x.tx_time, y.tx_time, "tx_time"),
+            (x.infer_time, y.infer_time, "infer_time"),
+            (x.processing_time, y.processing_time, "processing_time"),
+            (x.ttft_time, y.ttft_time, "ttft_time"),
+            (x.energy_j, y.energy_j, "energy_j"),
+            (x.completed_at, y.completed_at, "completed_at"),
+        ] {
+            assert_eq!(fa.to_bits(), fb.to_bits(), "{label}: {what} of {}", x.id);
+        }
+    }
+    for (fa, fb, what) in [
+        (a.energy.tran_j, b.energy.tran_j, "tran_j"),
+        (a.energy.infer_j, b.energy.infer_j, "infer_j"),
+        (a.energy.idle_j, b.energy.idle_j, "idle_j"),
+        (a.makespan_s, b.makespan_s, "makespan"),
+        (a.throughput_tok_s, b.throughput_tok_s, "throughput"),
+        (a.success_rate, b.success_rate, "success_rate"),
+        (a.mean_processing_s, b.mean_processing_s, "mean_processing"),
+        (a.p95_processing_s, b.p95_processing_s, "p95_processing"),
+    ] {
+        assert_eq!(fa.to_bits(), fb.to_bits(), "{label}: {what}");
+    }
+    assert_eq!(a.unfinished, b.unfinished, "{label}: unfinished");
+    assert_eq!(a.dropped, b.dropped, "{label}: dropped");
+    assert_eq!(a.late, b.late, "{label}: late");
+    assert_eq!(
+        a.slo_ttft_violations, b.slo_ttft_violations,
+        "{label}: ttft violations"
+    );
+    assert_eq!(
+        a.slo_completion_violations, b.slo_completion_violations,
+        "{label}: completion violations"
+    );
+    // The session surface itself: every cache counter matches.
+    assert_eq!(a.cache.lookups, b.cache.lookups, "{label}: cache lookups");
+    assert_eq!(a.cache.hits, b.cache.hits, "{label}: cache hits");
+    assert_eq!(
+        a.cache.prefill_tokens_saved, b.cache.prefill_tokens_saved,
+        "{label}: prefill saved"
+    );
+    assert_eq!(
+        a.cache.kv_transfer_bytes, b.cache.kv_transfer_bytes,
+        "{label}: kv transfer bytes"
+    );
+    assert_eq!(a.cache.evictions, b.cache.evictions, "{label}: evictions");
+    assert_eq!(
+        a.diagnostics.len(),
+        b.diagnostics.len(),
+        "{label}: diagnostics arity"
+    );
+    for ((ka, va), (kb, vb)) in a.diagnostics.iter().zip(&b.diagnostics) {
+        assert_eq!(ka, kb, "{label}: diagnostics keys");
+        assert_eq!(va.to_bits(), vb.to_bits(), "{label}: diagnostic {ka}");
+    }
+}
+
+fn sessionless_workload(n: usize, seed: u64) -> WorkloadConfig {
+    WorkloadConfig::default()
+        .with_requests(n)
+        .with_arrivals(ArrivalProcess::Poisson { rate: 15.0 })
+        .with_seed(seed)
+        .with_per_class_slos()
+}
+
+/// Chat-heavy sessioned workload: the mix PerLLM's "millions of users"
+/// framing implies, and the one where prefix reuse should pay.
+fn chat_heavy_sessions(n: usize, seed: u64, rate: f64) -> SessionConfig {
+    SessionConfig::from_workload(
+        WorkloadConfig::default()
+            .with_requests(n)
+            .with_arrivals(ArrivalProcess::Poisson { rate })
+            .with_seed(seed)
+            .with_per_class_slos()
+            .with_class_weights([6.0, 1.0, 1.0, 2.0]),
+    )
+}
+
+/// Contract 1: without sessions the affinity scheduler IS the SLO
+/// scheduler — no view field it reads is ever nonzero, so the whole
+/// report (outcomes, energy, bandit diagnostics) matches bit for bit.
+#[test]
+fn affinity_without_sessions_is_bit_identical_to_slo() {
+    for seed in [11u64, 47] {
+        let topo = TopologyConfig::paper("llama2-7b", BandwidthMode::Fluctuating);
+        let cfg = topo.build();
+        let wl = sessionless_workload(1500, seed);
+        let mut slo = CsUcbSlo::with_defaults(cfg.n_servers());
+        let mut src = WorkloadGen::new(&wl);
+        let base = simulate_stream(&cfg, &mut src, &mut slo);
+        let mut aff = CsUcbAffinity::with_defaults(cfg.n_servers());
+        let mut src = WorkloadGen::new(&wl);
+        let got = simulate_stream(&cfg, &mut src, &mut aff);
+        assert_reports_identical(&base, &got, &format!("affinity-off seed={seed}"));
+        // A sessionless run never touches any cache.
+        assert_eq!(base.cache.total_lookups(), 0);
+        assert_eq!(got.cache.prefill_tokens_saved, 0);
+        assert_eq!(got.cache.kv_transfer_bytes, 0);
+    }
+}
+
+/// Contract 2: the session side-stream cannot perturb the single-turn
+/// generator, and the salt genuinely decorrelates the two streams.
+#[test]
+fn session_stream_is_salted_and_leaves_base_stream_untouched() {
+    let wl = WorkloadConfig::default().with_requests(300).with_seed(42);
+    let drain = |src: &mut dyn ArrivalSource| {
+        let mut out = Vec::new();
+        while let Some(r) = src.next_arrival() {
+            out.push(r);
+        }
+        out
+    };
+    let mut gen = WorkloadGen::new(&wl);
+    let before = drain(&mut gen);
+    // Interleave a full session generation between two base-stream runs.
+    let sc = SessionConfig::from_workload(wl.clone());
+    let mut sessions = SessionSource::new(&sc);
+    let chained = drain(&mut sessions);
+    let mut gen = WorkloadGen::new(&wl);
+    let after = drain(&mut gen);
+    assert_eq!(before.len(), after.len());
+    for (x, y) in before.iter().zip(&after) {
+        assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+        assert_eq!(x.prompt_tokens, y.prompt_tokens);
+        assert_eq!(x.output_tokens, y.output_tokens);
+        assert!(x.session.is_none(), "base stream stays sessionless");
+    }
+    // Same seed, different stream: the salt must shift the arrivals.
+    assert!(chained.iter().all(|r| r.session.is_some()));
+    assert!(
+        before
+            .iter()
+            .zip(&chained)
+            .any(|(x, y)| x.arrival.to_bits() != y.arrival.to_bits()),
+        "session stream must not replay the base stream"
+    );
+}
+
+/// Contract 3: sessions ride the versioned-view contract unchanged —
+/// sharded runs (1 shard, 4 shards, volume-weighted) reproduce the
+/// sequential sessioned run bit for bit, cache counters included.
+#[test]
+fn sessioned_runs_are_bit_identical_across_substrates() {
+    let topo = TopologyConfig::edgeshard_10x("llama2-7b", BandwidthMode::Fluctuating);
+    let cfg = topo.build();
+    let sc = chat_heavy_sessions(1800, 23, topo.scaled_rate(15.0));
+    let mut sched = CsUcbAffinity::with_defaults(cfg.n_servers());
+    let mut src = SessionSource::new(&sc);
+    let base = simulate_stream(&cfg, &mut src, &mut sched);
+    assert!(
+        base.cache.total_hits() > 0,
+        "sessioned run must exercise the cache"
+    );
+    for count in [ShardCount::Fixed(1), ShardCount::Fixed(4), ShardCount::Weighted(0)] {
+        let splan = topo.shard_plan(count);
+        let mut sched = CsUcbAffinity::with_defaults(cfg.n_servers());
+        let mut src = SessionSource::new(&sc);
+        let got = simulate_stream_sharded(&cfg, &splan, &mut src, &mut sched);
+        assert_reports_identical(&base, &got, &format!("sessions shards={count:?}"));
+    }
+}
+
+/// Contract 4: reuse is real and sanely accounted on the paper fleet.
+#[test]
+fn warm_turns_save_prefill_with_consistent_counters() {
+    let topo = TopologyConfig::paper("llama2-7b", BandwidthMode::Stable);
+    let cfg = topo.build();
+    let sc = chat_heavy_sessions(2500, 7, 15.0);
+    let mut sched = CsUcbAffinity::with_defaults(cfg.n_servers());
+    let mut src = SessionSource::new(&sc);
+    let rep = simulate_stream(&cfg, &mut src, &mut sched);
+    let cache = rep.cache;
+    for c in 0..4 {
+        assert!(
+            cache.hits[c] <= cache.lookups[c],
+            "class {c}: hits {} exceed lookups {}",
+            cache.hits[c],
+            cache.lookups[c]
+        );
+    }
+    assert!(cache.total_lookups() > 0, "every admitted turn is a lookup");
+    let hit_rate = cache.hit_rate().expect("lookups happened");
+    assert!(
+        hit_rate > 0.0,
+        "chat-heavy sessions must find warm prefixes (rate {hit_rate})"
+    );
+    assert!(
+        cache.prefill_tokens_saved > 0,
+        "warm turns must skip prefill"
+    );
+    // The mix is chat-dominated, so reuse should be too.
+    let chat = ServiceClass::Chat.index();
+    assert!(
+        cache.hits[chat] > 0,
+        "chat drives the session mix, it must see hits"
+    );
+}
